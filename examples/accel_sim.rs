@@ -1,0 +1,85 @@
+//! Accelerator simulation walkthrough: maps the paper-scale pruned
+//! 2s-AGCN onto the XCKU-115 model and prints Tables II & IV plus
+//! Fig. 11, then a per-stage pipeline breakdown.
+//!
+//! ```bash
+//! cargo run --release --example accel_sim [-- --table2 --table4 --fig11]
+//! ```
+
+use rfc_hypgcn::meta::Manifest;
+use rfc_hypgcn::model::ModelConfig;
+use rfc_hypgcn::sim::pipeline::{map_chip, workloads};
+use rfc_hypgcn::sim::reports;
+use rfc_hypgcn::sim::resource::XCKU115;
+use rfc_hypgcn::util::rng::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let all = args.is_empty();
+    let has = |k: &str| all || args.iter().any(|a| a == k);
+    let manifest = Manifest::load(&Manifest::default_dir()).ok();
+    if manifest.is_none() {
+        eprintln!("(artifacts not built -- paper-default sparsity used)\n");
+    }
+
+    if has("--table2") {
+        println!("{}", reports::table2(manifest.as_ref()));
+    }
+    if has("--fig11") {
+        println!("{}", reports::fig11(manifest.as_ref()));
+    }
+    if has("--table4") {
+        println!("{}", reports::table4(manifest.as_ref()));
+    }
+
+    // per-stage breakdown of the mapped chip
+    let cfg = ModelConfig::paper_full();
+    let specs = cfg.block_specs();
+    let kept_in: Vec<usize> = specs
+        .iter()
+        .enumerate()
+        .map(|(l, s)| if l == 0 { 3 } else { s.in_channels / 2 })
+        .collect();
+    let kept_f: Vec<usize> = (0..specs.len())
+        .map(|l| {
+            if l + 1 < specs.len() {
+                kept_in[l + 1]
+            } else {
+                specs[l].out_channels
+            }
+        })
+        .collect();
+    let sparsities = reports::block_sparsities(manifest.as_ref(), 10);
+    let works = workloads(&cfg, &kept_in, &kept_f, &sparsities);
+    let mut rng = Rng::new(3);
+    let plan = map_chip(
+        &works,
+        &manifest
+            .as_ref()
+            .map(|m| m.cavity.clone())
+            .unwrap_or_else(reports::default_cavity),
+        &XCKU115,
+        3500,
+        &mut rng,
+    );
+    println!("pipeline stages (paper-scale mapping):");
+    println!("block  scm_pes  tcm_pes  dsp   scm_cyc   tcm_cyc   II");
+    for s in &plan.stages {
+        println!(
+            "{:5}  {:7}  {:7}  {:4}  {:8}  {:8}  {:8}",
+            s.block, s.scm_pes, s.tcm_pes, s.dsp, s.scm_cycles,
+            s.tcm_cycles, s.ii()
+        );
+    }
+    println!(
+        "\nII = {} cycles @ {:.0} MHz -> {:.2} fps; {:.1} GOP/s executed, \
+         {:.1} GOP/s dense-equivalent; {} DSP ({:.3} GOP/s/DSP)",
+        plan.ii_cycles(),
+        plan.clock_hz / 1e6,
+        plan.fps(),
+        plan.gops(),
+        plan.effective_gops(),
+        plan.usage.dsp,
+        plan.dsp_efficiency(),
+    );
+}

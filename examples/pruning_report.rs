@@ -1,0 +1,120 @@
+//! Pruning-experiment report: renders Figs. 8-10 and Tables I/III from
+//! the JSON traces written by `python -m compile.experiments all`,
+//! checking the paper's relational claims as it goes.
+//!
+//! ```bash
+//! cargo run --release --example pruning_report
+//! ```
+
+use anyhow::{Context, Result};
+
+use rfc_hypgcn::meta::Manifest;
+use rfc_hypgcn::util::json::Json;
+
+fn bar(frac: f64, width: usize) -> String {
+    let n = (frac.clamp(0.0, 1.0) * width as f64).round() as usize;
+    format!("{}{}", "#".repeat(n), ".".repeat(width - n))
+}
+
+fn main() -> Result<()> {
+    let dir = Manifest::default_dir().join("experiments");
+
+    // ---- Fig. 8: hybrid vs unstructured at matched compression ----
+    let fig8 = Json::from_file(&dir.join("fig8.json"))
+        .context("fig8.json (run `python -m compile.experiments fig8`)")?;
+    let dense_acc = fig8.get("dense_acc")?.as_f64()?;
+    println!("Fig. 8 -- hybrid vs unstructured pruning (dense acc {:.2}%)",
+             dense_acc * 100.0);
+    println!("reduction  hybrid     unstructured  hybrid+quant");
+    let mut hybrid_wins = 0;
+    let mut rows = 0;
+    for p in fig8.get("points")?.as_arr()? {
+        let red = p.get("param_reduction")?.as_f64()?;
+        let h = p.get("hybrid_acc")?.as_f64()?;
+        let u = p.get("unstructured_acc")?.as_f64()?;
+        let q = p.get("hybrid_quant_acc")?.as_f64()?;
+        println!(
+            "{:>8.1}%  {:>6.2}%    {:>6.2}%       {:>6.2}%   {}",
+            red * 100.0,
+            h * 100.0,
+            u * 100.0,
+            q * 100.0,
+            p.get("schedule")?.as_str()?,
+        );
+        hybrid_wins += usize::from(h >= u - 0.01);
+        rows += 1;
+    }
+    println!(
+        "hybrid >= unstructured (within 1pt) in {hybrid_wins}/{rows} \
+         settings (paper: 'better in most cases')\n"
+    );
+
+    // ---- Fig. 9: channel dropping ----
+    let fig9 = Json::from_file(&dir.join("fig9.json"))?;
+    println!("Fig. 9 -- channel-drop exploration");
+    println!("schedule  acc      graph_skip  param_red");
+    for r in fig9.get("rows")?.as_arr()? {
+        println!(
+            "{:<8}  {:>6.2}%  {:>8.1}%  {:>8.1}%",
+            r.get("schedule")?.as_str()?,
+            r.get("test_acc")?.as_f64()? * 100.0,
+            r.get("graph_skip_ratio")?.as_f64()? * 100.0,
+            r.get("param_reduction")?.as_f64()? * 100.0,
+        );
+    }
+    println!();
+
+    // ---- Fig. 10: cavity schemes ----
+    let fig10 = Json::from_file(&dir.join("fig10.json"))?;
+    println!("Fig. 10 -- fine-grained cavity schemes (on drop-1)");
+    println!("scheme     prune   spread  acc");
+    let mut acc_of = std::collections::BTreeMap::new();
+    for r in fig10.get("rows")?.as_arr()? {
+        let name = r.get("scheme")?.as_str()?.to_string();
+        let acc = r.get("test_acc")?.as_f64()?;
+        println!(
+            "{:<9}  {:>5.1}%  {:>6}  {:>6.2}%  {}",
+            name,
+            r.get("prune_ratio")?.as_f64()? * 100.0,
+            r.get("balance_spread")?.as_usize()?,
+            acc * 100.0,
+            bar(acc, 30),
+        );
+        acc_of.insert(name, acc);
+    }
+    if let (Some(b), Some(u)) = (acc_of.get("cav-70-1"), acc_of.get("cav-70-2")) {
+        println!(
+            "balanced cav-70-1 vs unbalanced cav-70-2: {:+.2} pts \
+             (paper: balanced wins)",
+            (b - u) * 100.0
+        );
+    }
+    println!();
+
+    // ---- Table I accuracy ----
+    if let Ok(t1) = Json::from_file(&dir.join("table1_acc.json")) {
+        println!(
+            "Table I (accuracy): w/C {:.2}%  w/o C {:.2}%  (paper: 93.70 vs 93.40)",
+            t1.get("acc_with_ck")?.as_f64()? * 100.0,
+            t1.get("acc_without_ck")?.as_f64()? * 100.0
+        );
+    }
+
+    // ---- Table III sparsity ----
+    if let Ok(t3) = Json::from_file(&dir.join("table3_sparsity.json")) {
+        println!("\nTable III -- feature sparsity distribution (buckets I-IV)");
+        for (name, s) in t3.get("layers")?.as_obj()? {
+            let b = s.get("buckets_I_II_III_IV")?.f64_vec()?;
+            println!(
+                "{:<10} mean {:>5.1}%   I {:>5.1}%  II {:>5.1}%  III {:>5.1}%  IV {:>5.1}%",
+                name,
+                s.get("mean_sparsity")?.as_f64()? * 100.0,
+                b[0] * 100.0,
+                b[1] * 100.0,
+                b[2] * 100.0,
+                b[3] * 100.0,
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Quickstart: load the AOT-compiled pruned 2s-AGCN and classify one
+//! batch of synthetic skeleton clips -- the 30-second tour of the API.
+//!
+//! ```bash
+//! make artifacts            # once: python AOT export
+//! cargo run --release --example quickstart
+//! ```
+
+use rfc_hypgcn::data::{GenConfig, SkeletonGen};
+use rfc_hypgcn::meta::Manifest;
+use rfc_hypgcn::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    // 1. the manifest describes every artifact the Python side exported
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    println!(
+        "model: {} blocks, {:.2}x compressed, {:.1}% graph work skipped",
+        manifest.blocks.len(),
+        manifest.compression_ratio,
+        manifest.graph_skip_ratio * 100.0
+    );
+
+    // 2. one PJRT CPU engine per process; executables are cached
+    let engine = Engine::cpu()?;
+    let model = engine.load_hlo(
+        &manifest.hlo_path(&manifest.model_pruned.hlo),
+    )?;
+
+    // 3. make a batch of synthetic skeleton clips (N, 3, T, 25)
+    let mut gen = SkeletonGen::new(
+        GenConfig {
+            num_classes: manifest.num_classes,
+            seq_len: manifest.seq_len,
+            noise: 0.02,
+        },
+        42,
+    );
+    let (batch, labels) = gen.batch(manifest.batch);
+
+    // 4. run and read logits
+    let logits = model.run1(&[batch])?;
+    println!("logits: {:?}", logits.shape);
+    let classes = manifest.num_classes;
+    let mut correct = 0;
+    for (i, &label) in labels.iter().enumerate() {
+        let row = &logits.data[i * classes..(i + 1) * classes];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(c, _)| c)
+            .unwrap();
+        println!(
+            "  clip {i}: predicted class {pred:2}  (generated as {label:2})"
+        );
+        correct += usize::from(pred == label);
+    }
+    println!(
+        "{correct}/{} match the generator's labels",
+        labels.len()
+    );
+    Ok(())
+}

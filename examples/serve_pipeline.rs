@@ -1,0 +1,80 @@
+//! Serving demo: the full coordinator (dynamic batcher -> 11-stage layer
+//! pipeline -> delivery) under an open-loop request stream, reporting
+//! throughput, latency percentiles and batching efficiency.
+//!
+//! ```bash
+//! cargo run --release --example serve_pipeline -- [requests] [rate_fps]
+//! ```
+
+use std::time::{Duration, Instant};
+
+use rfc_hypgcn::coordinator::{BatchPolicy, Server};
+use rfc_hypgcn::data::{GenConfig, SkeletonGen};
+use rfc_hypgcn::meta::Manifest;
+use rfc_hypgcn::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let requests: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(96);
+    let rate_fps: f64 = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(0.0);
+
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let engine = Engine::cpu()?;
+    println!(
+        "compiling 11 pipeline stages (batch {}, T {})...",
+        manifest.batch, manifest.seq_len
+    );
+    let t0 = Instant::now();
+    let server = Server::start(
+        &engine,
+        &manifest,
+        BatchPolicy {
+            batch_size: manifest.batch,
+            max_wait: Duration::from_millis(25),
+            seq_len: manifest.seq_len,
+        },
+    )?;
+    println!("up in {:.2}s", t0.elapsed().as_secs_f64());
+
+    let mut gen = SkeletonGen::new(
+        GenConfig {
+            num_classes: manifest.num_classes,
+            seq_len: manifest.seq_len,
+            noise: 0.02,
+        },
+        7,
+    );
+    // open-loop arrivals at `rate_fps` (0 = as fast as possible)
+    let gap = if rate_fps > 0.0 {
+        Duration::from_secs_f64(1.0 / rate_fps)
+    } else {
+        Duration::ZERO
+    };
+    let mut rxs = Vec::with_capacity(requests);
+    let t_sub = Instant::now();
+    for i in 0..requests {
+        rxs.push(server.submit(gen.sample().0));
+        if !gap.is_zero() {
+            let target = t_sub + gap * (i as u32 + 1);
+            if let Some(d) = target.checked_duration_since(Instant::now()) {
+                std::thread::sleep(d);
+            }
+        }
+    }
+    let mut class_histogram = vec![0usize; manifest.num_classes];
+    for rx in rxs {
+        let resp = rx.recv()?;
+        class_histogram[resp.predicted] += 1;
+    }
+    let wall = t_sub.elapsed().as_secs_f64();
+    println!(
+        "\n{} responses in {:.2}s = {:.2} fps sustained",
+        requests,
+        wall,
+        requests as f64 / wall
+    );
+    println!("{}", server.metrics.report());
+    println!("prediction histogram: {class_histogram:?}");
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,7 @@
+"""RFC-HyPGCN build-time Python package (Layers 1 and 2).
+
+Everything in here runs only at *compile* time (``make artifacts``): model
+definition, hybrid pruning, quantization, training for the accuracy
+experiments, and AOT lowering to HLO text.  Nothing in this package is on
+the Rust request path.
+"""

@@ -1,0 +1,19 @@
+"""2s-AGCN model components (JAX, build-time only).
+
+The package mirrors the structure of the published 2s-AGCN network
+(Shi et al., CVPR 2019) that RFC-HyPGCN accelerates:
+
+- :mod:`graph`   -- the NTU-RGB+D 25-joint skeleton graph and its
+  three-partition (k_v = 3) normalized adjacency stack ``A_k``.
+- :mod:`layers`  -- primitive layers: graph+spatial convolution (with the
+  paper's reorganized dataflow, eq. 5), 9x1 temporal convolution with
+  cavity masks, batch-norm, shortcut projections.
+- :mod:`block`   -- one convolutional block (graph conv -> spatial conv ->
+  temporal conv -> shortcut), ten of which form the network.
+- :mod:`model`   -- the full network, its pruned / quantized / input-skipped
+  variants and parameter initialisation.
+"""
+
+from . import graph, layers, block, model  # noqa: F401
+
+__all__ = ["graph", "layers", "block", "model"]

@@ -1,0 +1,146 @@
+"""One 2s-AGCN convolutional block (paper Fig. 1, left).
+
+Per block: graph computation + spatial conv (fused, reorganized dataflow)
+-> BN -> ReLU -> 9x1 temporal conv -> BN -> (+ shortcut) -> ReLU.
+
+The block supports four execution variants, combinable:
+
+- ``with_ck``      -- add the self-similarity graph ``C_k`` (eq. 1);
+- pruned           -- apply a :class:`..pruning.PruningPlan`: kept input
+  channels are *gathered* before the fused gconv (graph skip!), kept
+  temporal filters computed and *scattered* back to full width, so block
+  I/O stays full-width and exactly matches mask-based semantics;
+- ``use_kernels``  -- route the heavy math through the Pallas kernels;
+- ``folded_bn``    -- use affine (calibration-folded) normalization, the
+  hardware/AOT path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .. import pruning
+from . import layers
+
+
+@dataclass(frozen=True)
+class BlockSpec:
+    """Static per-block hyperparameters."""
+
+    in_channels: int
+    out_channels: int
+    stride: int = 1
+
+    @property
+    def has_projection(self) -> bool:
+        return self.in_channels != self.out_channels or self.stride != 1
+
+
+def init_block(rng: np.random.Generator, spec: BlockSpec, k_v: int = 3,
+               embed_dim: Optional[int] = None) -> dict:
+    """He-style init for one block's parameters (numpy, converted lazily)."""
+    ic, oc = spec.in_channels, spec.out_channels
+    e = embed_dim or max(4, oc // 4)
+
+    def he(*shape, fan):
+        return (rng.standard_normal(shape) * np.sqrt(2.0 / fan)
+                ).astype(np.float32)
+
+    p = {
+        "bk": np.zeros((k_v, 25, 25), dtype=np.float32),  # learnable graph
+        "w_spatial": he(k_v, ic, oc, fan=ic * k_v),
+        "bn_s": {"scale": np.ones(oc, np.float32),
+                 "bias": np.zeros(oc, np.float32)},
+        "w_temporal": he(pruning.TEMPORAL_K, oc, oc,
+                         fan=oc * pruning.TEMPORAL_K),
+        "bn_t": {"scale": np.ones(oc, np.float32),
+                 "bias": np.zeros(oc, np.float32)},
+        "w_theta": he(ic, e, fan=ic),
+        "w_phi": he(ic, e, fan=ic),
+    }
+    if spec.has_projection:
+        p["w_short"] = he(ic, oc, fan=ic)
+        p["bn_sc"] = {"scale": np.ones(oc, np.float32),
+                      "bias": np.zeros(oc, np.float32)}
+    return p
+
+
+def block_forward(
+    params: dict,
+    x,
+    spec: BlockSpec,
+    a_stack,
+    *,
+    with_ck: bool = False,
+    kept_in: Optional[np.ndarray] = None,
+    kept_t_out: Optional[np.ndarray] = None,
+    cavity: pruning.CavityScheme = pruning.DENSE_SCHEME,
+    use_kernels: bool = False,
+    folded_bn: bool = False,
+    collect: Optional[list] = None,
+    norm_fn=None,
+):
+    """Run one block. ``x``: ``(N, T, V, IC)`` -> ``(N, T', V, OC)``.
+
+    ``kept_in`` / ``kept_t_out``: kept spatial input channels and kept
+    temporal output filters (from a PruningPlan).  ``None`` = dense.
+    ``collect``: if given, the post-ReLU spatial-conv activation and the
+    block output are appended as ("sconv", y) / ("tconv", out) -- the
+    traces behind Table III and the RFC mini-bank sizing.
+    """
+    norm = norm_fn or (layers.affine if folded_bn else layers.batch_norm)
+    g = a_stack + jnp.asarray(params["bk"])          # (K, V, V)
+
+    w_s = jnp.asarray(params["w_spatial"])
+    xin = x
+    if kept_in is not None:
+        # dataflow reorganization: dropped channels never enter the graph
+        # contraction -- this is the paper's graph-skipping.
+        xin = layers.gather_channels(x, kept_in)
+        w_s = jnp.take(w_s, jnp.asarray(kept_in), axis=1)
+
+    if with_ck:
+        ck = layers.self_similarity(xin, jnp.asarray(params["w_theta"]),
+                                    jnp.asarray(params["w_phi"]))
+        g_full = g[None, :, :, :] + ck[:, None, :, :]
+        y = layers.gconv(xin, g_full, w_s)
+    else:
+        y = layers.gconv(xin, g, w_s, use_kernels=use_kernels)
+
+    y = norm(y, jnp.asarray(params["bn_s"]["scale"]),
+             jnp.asarray(params["bn_s"]["bias"]))
+    y = layers.relu(y)
+    if collect is not None:
+        collect.append(("sconv", y))
+
+    w_t = jnp.asarray(params["w_temporal"])
+    if kept_t_out is not None:
+        w_t = jnp.take(w_t, jnp.asarray(kept_t_out), axis=2)
+        # kernel path needs OC % 8 == 0: pad filters up, scatter back after
+        pad = (-len(kept_t_out)) % pruning.LOOP
+        if pad and use_kernels:
+            w_t = jnp.pad(w_t, ((0, 0), (0, 0), (0, pad)))
+    yt = layers.tconv(y, w_t, cavity, stride=spec.stride,
+                      use_kernels=use_kernels)
+    if kept_t_out is not None:
+        if use_kernels and (-len(kept_t_out)) % pruning.LOOP:
+            yt = yt[..., : len(kept_t_out)]
+        yt = layers.scatter_channels(yt, kept_t_out, spec.out_channels)
+    yt = norm(yt, jnp.asarray(params["bn_t"]["scale"]),
+              jnp.asarray(params["bn_t"]["bias"]))
+
+    if spec.has_projection:
+        sc = layers.shortcut(x, jnp.asarray(params["w_short"]),
+                             stride=spec.stride)
+        sc = norm(sc, jnp.asarray(params["bn_sc"]["scale"]),
+                  jnp.asarray(params["bn_sc"]["bias"]))
+    else:
+        sc = layers.shortcut(x, stride=spec.stride)
+    out = layers.relu(yt + sc)
+    if collect is not None:
+        collect.append(("tconv", out))
+    return out

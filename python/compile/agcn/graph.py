@@ -1,0 +1,94 @@
+"""NTU-RGB+D 25-joint skeleton graph.
+
+Builds the three-partition adjacency stack ``A_k`` (k_v = 3) used by
+ST-GCN / 2s-AGCN: identity (root), centripetal (towards the body centre)
+and centrifugal (away from the centre) subsets, each D^-1-normalized.
+
+The paper's eq. (2) computes ``sum_k f_in (A_k + B_k + C_k) (x) W_k``;
+``A_k`` here is the static, unchangeable skeleton part. ``B_k`` (learnable,
+dense) is a model parameter initialised to zero; ``C_k`` (self-similarity)
+is computed at runtime by the model when the ``with_ck`` variant is chosen.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+NUM_JOINTS = 25
+K_V = 3  # neighbour partition count, fixed to 3 in 2s-AGCN
+CENTER = 21 - 1  # joint 21 (spine mid, "21" in 1-based NTU labelling)
+
+# NTU-RGB+D bone list, 1-based as published with the dataset.
+_NTU_EDGES_1BASED = [
+    (1, 2), (2, 21), (3, 21), (4, 3), (5, 21), (6, 5), (7, 6), (8, 7),
+    (9, 21), (10, 9), (11, 10), (12, 11), (13, 1), (14, 13), (15, 14),
+    (16, 15), (17, 1), (18, 17), (19, 18), (20, 19), (22, 23), (23, 8),
+    (24, 25), (25, 12),
+]
+
+EDGES = [(i - 1, j - 1) for i, j in _NTU_EDGES_1BASED]
+
+
+def adjacency() -> np.ndarray:
+    """Symmetric 0/1 adjacency with self-loops, shape ``(V, V)``."""
+    a = np.zeros((NUM_JOINTS, NUM_JOINTS), dtype=np.float64)
+    for i, j in EDGES:
+        a[i, j] = 1.0
+        a[j, i] = 1.0
+    np.fill_diagonal(a, 1.0)
+    return a
+
+
+def hop_distance(max_hop: int = NUM_JOINTS) -> np.ndarray:
+    """All-pairs hop distance on the skeleton (inf where unreachable)."""
+    a = adjacency()
+    v = NUM_JOINTS
+    dist = np.full((v, v), np.inf)
+    power = np.eye(v)
+    reach = np.zeros((v, v), dtype=bool)
+    for d in range(max_hop + 1):
+        newly = (power > 0) & ~reach
+        dist[newly] = d
+        reach |= power > 0
+        power = power @ a
+    return dist
+
+
+def _normalize_digraph(a: np.ndarray) -> np.ndarray:
+    """Column-normalize: ``a @ D^-1`` with D the column-sum degree."""
+    deg = a.sum(axis=0)
+    dn = np.zeros_like(a)
+    idx = deg > 0
+    dn[idx, idx] = 1.0 / deg[idx]
+    return a @ dn
+
+
+def spatial_partitions() -> np.ndarray:
+    """The ``A_k`` stack, shape ``(K_V, V, V)``, float32.
+
+    Partition follows the ST-GCN "spatial configuration": for each edge
+    (i, j) with hop(i, j) <= 1, the contribution lands in
+      - subset 0 if hop(j, center) == hop(i, center)  (root / same ring)
+      - subset 1 if hop(j, center) >  hop(i, center)  (centripetal)
+      - subset 2 otherwise                            (centrifugal)
+    computed on the D^-1-normalized one-hop adjacency.
+    """
+    dist = hop_distance()
+    a_norm = _normalize_digraph(adjacency())
+    center_d = dist[:, CENTER]
+    stack = np.zeros((K_V, NUM_JOINTS, NUM_JOINTS), dtype=np.float64)
+    for i in range(NUM_JOINTS):
+        for j in range(NUM_JOINTS):
+            if dist[i, j] <= 1:  # one-hop neighbourhood incl. self
+                if center_d[j] == center_d[i]:
+                    stack[0, i, j] = a_norm[i, j]
+                elif center_d[j] > center_d[i]:
+                    stack[1, i, j] = a_norm[i, j]
+                else:
+                    stack[2, i, j] = a_norm[i, j]
+    return stack.astype(np.float32)
+
+
+def bone_pairs() -> list[tuple[int, int]]:
+    """(joint, parent) pairs used to derive the bone-stream input."""
+    return list(EDGES)

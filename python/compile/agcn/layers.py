@@ -1,0 +1,189 @@
+"""Primitive layers for 2s-AGCN (functional JAX).
+
+Internal layout is ``(N, T, V, C)`` (time-major, channels-last) so the
+graph axis ``V`` and channel axes line up with the Pallas kernels.  The
+public dataset layout ``(N, C, T, V)`` is converted at the model boundary.
+
+Two execution paths exist for the heavy ops:
+
+- **jnp path** (default for training) -- the pure-jnp oracles from
+  :mod:`..kernels.ref`, fast under jit on CPU.
+- **kernel path** (``use_kernels=True``, used for AOT export and
+  kernel-equivalence tests) -- the Pallas kernels in interpret mode, which
+  lower into the exported HLO.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import pruning
+from ..kernels.fused_gconv import fused_gconv as _fused_gconv
+from ..kernels.temporal_conv import temporal_conv as _temporal_conv
+from ..kernels import ref as kref
+
+EPS = 1e-5
+
+
+# --------------------------------------------------------------------------
+# Normalization / activation
+# --------------------------------------------------------------------------
+
+def batch_norm(x, scale, bias):
+    """Batch-stat batch-norm over all axes but the channel (last) axis."""
+    mean = x.mean(axis=(0, 1, 2), keepdims=True)
+    var = x.var(axis=(0, 1, 2), keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + EPS) * scale + bias
+
+
+def affine(x, scale, bias):
+    """Folded batch-norm (inference/AOT path): ``x * scale + bias``."""
+    return x * scale + bias
+
+
+def fold_bn(scale, bias, mean, var, dead_var: float = 1e-8):
+    """Fold calibration statistics into an affine (scale', bias').
+
+    Channels with ~zero calibration variance (dead/pruned channels) would
+    fold into huge gains (scale / sqrt(eps)) that explode on any runtime
+    deviation from the calibration constant; batch-norm itself maps a
+    constant channel to plain ``bias``, so the fold pins those channels to
+    (scale'=0, bias'=bias).
+    """
+    var = np.asarray(var)
+    s = scale / np.sqrt(var + EPS)
+    dead = var < dead_var
+    s = np.where(dead, 0.0, s)
+    b = np.where(dead, bias, bias - mean * s)
+    return s, b
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+# --------------------------------------------------------------------------
+# Graph + spatial convolution (reorganized dataflow, eq. 5)
+# --------------------------------------------------------------------------
+
+def gconv(x, g_stack, w_spatial, *, use_kernels: bool = False,
+          block_t: int = 32):
+    """Graph contraction + 1x1 spatial conv, summed over the K_V subsets.
+
+    Args:
+      x: ``(N, T, V, IC)``.
+      g_stack: ``(K, V, V)`` -- ``A_k + B_k`` (plus ``C_k`` already added by
+        the caller for the with-C variant, in which case g_stack is
+        ``(N, K, V, V)``).
+      w_spatial: ``(K, IC, OC)``.
+
+    Returns ``(N, T, V, OC)``.
+    """
+    n, t, v, ic = x.shape
+    if g_stack.ndim == 4:
+        # per-sample graphs (C_k variant): jnp path only
+        return jnp.einsum("ntpi,nkpw,kio->ntwo", x, g_stack, w_spatial)
+    if use_kernels:
+        flat = x.reshape(n * t, v, ic)
+        pad = (-flat.shape[0]) % block_t
+        if pad:
+            flat = jnp.pad(flat, ((0, pad), (0, 0), (0, 0)))
+        out = _fused_gconv(flat, g_stack, w_spatial,
+                                           block_t=block_t)
+        if pad:
+            out = out[: n * t]
+        return out.reshape(n, t, v, -1)
+    return jnp.einsum("ntpi,kpw,kio->ntwo", x, g_stack, w_spatial)
+
+
+def self_similarity(x, w_theta, w_phi):
+    """The data-dependent graph ``C_k`` (paper eq. 1, 2s-AGCN style).
+
+    Args:
+      x: ``(N, T, V, C)``.
+      w_theta, w_phi: ``(C, Ce)`` embedding projections.
+
+    Returns ``(N, V, V)`` row-softmax similarity.
+    """
+    th = jnp.einsum("ntvc,ce->ntve", x, w_theta)
+    ph = jnp.einsum("ntvc,ce->ntve", x, w_phi)
+    n, t, v, e = th.shape
+    a = jnp.einsum("ntve,ntwe->nvw", th, ph) / (t * e)
+    return jax.nn.softmax(a, axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Temporal convolution (9x1, cavity-masked)
+# --------------------------------------------------------------------------
+
+def tconv(x, w_temporal, scheme: pruning.CavityScheme, *, stride: int = 1,
+          use_kernels: bool = False, block_t: int = 16):
+    """Cavity-masked 9x1 temporal conv over the T axis.
+
+    Args:
+      x: ``(N, T, V, IC)``.
+      w_temporal: ``(9, IC, OC)``; OC must be a multiple of 8 on the
+        kernel path.
+
+    Returns ``(N, ceil(T/stride), V, OC)``.
+    """
+    if use_kernels:
+        t_out = -(-x.shape[1] // stride)
+        bt = block_t
+        while t_out % bt:
+            bt //= 2  # T is a power-of-two multiple in all our configs
+        fn = lambda f: _temporal_conv(
+            f, w_temporal, scheme, stride=stride, block_t=max(1, bt))
+        return jax.vmap(fn)(x)
+    # jnp path: mask the taps, then let XLA's native conv do the work
+    # (~3x faster than 9 tap einsums on CPU; equivalence is tested).
+    oc = w_temporal.shape[2]
+    masks = jnp.asarray(scheme.as_array(), dtype=w_temporal.dtype)
+    reps = (oc + pruning.LOOP - 1) // pruning.LOOP
+    tap_mask = jnp.tile(masks, (reps, 1))[:oc]           # (OC, 9)
+    w_masked = w_temporal * tap_mask.T[:, None, :]       # (9, IC, OC)
+    # explicit padding: pad_lo = 4 always (matches ref/kernel indexing);
+    # XLA's SAME would split (3, 4) for even T at stride 2.
+    t = x.shape[1]
+    t_out = -(-t // stride)
+    pad_hi = (t_out - 1) * stride + pruning.TEMPORAL_K - 4 - t
+    return jax.lax.conv_general_dilated(
+        x, w_masked[:, None], (stride, 1), ((4, pad_hi), (0, 0)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+# --------------------------------------------------------------------------
+# Shortcut path
+# --------------------------------------------------------------------------
+
+def shortcut(x, w=None, *, stride: int = 1):
+    """Residual branch: identity, or strided 1x1 projection when the block
+    changes width/stride (``w``: ``(IC, OC)``)."""
+    if stride != 1:
+        x = x[:, ::stride]
+    if w is not None:
+        x = jnp.einsum("ntvi,io->ntvo", x, w)
+    return x
+
+
+# --------------------------------------------------------------------------
+# Channel gather/scatter for the pruned (compacted) forward
+# --------------------------------------------------------------------------
+
+def gather_channels(x, kept: np.ndarray):
+    """Select kept input channels (the dataflow-reorganization skip).
+
+    ``mode="clip"``: indices are statically in-bounds; jnp.take's default
+    ``fill`` mode emits a NaN-fill gather that the AOT consumer
+    (xla_extension 0.5.1 via HLO text) mis-executes.
+    """
+    return jnp.take(x, jnp.asarray(kept), axis=-1, mode="clip")
+
+
+def scatter_channels(x_kept, kept: np.ndarray, full: int):
+    """Scatter kept-channel results back to full width (zeros elsewhere)."""
+    n, t, v, _ = x_kept.shape
+    out = jnp.zeros((n, t, v, full), dtype=x_kept.dtype)
+    return out.at[..., jnp.asarray(kept)].set(x_kept, mode="drop")

@@ -1,0 +1,262 @@
+"""The full 2s-AGCN network and its variants.
+
+Ten convolutional blocks + global pooling + FC (paper SSII).  The full-size
+channel plan is 3 -> 64x4 -> 128x3 -> 256x3 with temporal strides 2 at the
+width changes; ``width_mult`` scales every width (multiples of 8 preserved
+for the cavity loop) so the testbed model trains in seconds on CPU.
+
+Variant axes (all combinable):
+
+==============  ==========================================================
+``with_ck``     add the self-similarity graph (Table I's w/C row)
+``plan``        a :class:`..pruning.PruningPlan` -- hybrid-pruned forward
+``use_kernels`` route heavy math through the Pallas kernels (AOT path)
+``folded_bn``   affine normalization with calibration-folded statistics
+==============  ==========================================================
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import pruning
+from . import block as block_mod
+from . import graph, layers
+
+FULL_CHANNELS = [64, 64, 64, 64, 128, 128, 128, 256, 256, 256]
+FULL_STRIDES = [1, 1, 1, 1, 2, 1, 1, 2, 1, 1]
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static network hyperparameters."""
+
+    num_classes: int = 8
+    seq_len: int = 64
+    width_mult: float = 0.25
+    in_channels: int = 3
+    num_blocks: int = 10
+
+    def block_specs(self) -> list[block_mod.BlockSpec]:
+        widths = [max(8, int(c * self.width_mult) // 8 * 8)
+                  for c in FULL_CHANNELS[: self.num_blocks]]
+        specs = []
+        ic = self.in_channels
+        for w, s in zip(widths, FULL_STRIDES[: self.num_blocks]):
+            specs.append(block_mod.BlockSpec(ic, w, s))
+            ic = w
+        return specs
+
+    def out_seq_len(self) -> int:
+        t = self.seq_len
+        for s in FULL_STRIDES[: self.num_blocks]:
+            t = -(-t // s)
+        return t
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    """Initialise all parameters (numpy arrays; jit converts lazily)."""
+    rng = np.random.default_rng(seed)
+    specs = cfg.block_specs()
+    blocks = [block_mod.init_block(rng, s) for s in specs]
+    c_last = specs[-1].out_channels
+    fc_w = (rng.standard_normal((c_last, cfg.num_classes))
+            * np.sqrt(1.0 / c_last)).astype(np.float32)
+    fc_b = np.zeros(cfg.num_classes, np.float32)
+    return {
+        "input_bn": {"scale": np.ones(cfg.in_channels, np.float32),
+                     "bias": np.zeros(cfg.in_channels, np.float32)},
+        "blocks": blocks,
+        "fc": {"w": fc_w, "b": fc_b},
+    }
+
+
+def forward(
+    params: dict,
+    x,
+    cfg: ModelConfig,
+    *,
+    with_ck: bool = False,
+    plan: Optional[pruning.PruningPlan] = None,
+    use_kernels: bool = False,
+    folded_bn: bool = False,
+    norm_fn=None,
+):
+    """Full-network forward. ``x``: ``(N, C, T, V)`` -> logits ``(N, cls)``."""
+    a_stack = jnp.asarray(graph.spatial_partitions())
+    norm = norm_fn or (layers.affine if folded_bn else layers.batch_norm)
+    h = jnp.transpose(jnp.asarray(x), (0, 2, 3, 1))  # (N, T, V, C)
+    h = norm(h, jnp.asarray(params["input_bn"]["scale"]),
+             jnp.asarray(params["input_bn"]["bias"]))
+    specs = cfg.block_specs()
+    for l, (p, spec) in enumerate(zip(params["blocks"], specs)):
+        kept_in = plan.kept_spatial_in[l] if plan else None
+        kept_t = plan.kept_temporal_out[l] if plan else None
+        cavity = plan.cavity if plan else pruning.DENSE_SCHEME
+        # never prune block 1 (3 input channels) nor the last temporal
+        # filters feeding FC -- build_plan already guarantees both.
+        h = block_mod.block_forward(
+            p, h, spec, a_stack,
+            with_ck=with_ck, kept_in=kept_in, kept_t_out=kept_t,
+            cavity=cavity, use_kernels=use_kernels, folded_bn=folded_bn,
+            norm_fn=norm_fn)
+    pooled = h.mean(axis=(1, 2))                     # (N, C_last)
+    return pooled @ jnp.asarray(params["fc"]["w"]) + jnp.asarray(
+        params["fc"]["b"])
+
+
+def forward_collect(params, x, cfg: ModelConfig, *,
+                    plan: Optional[pruning.PruningPlan] = None,
+                    with_ck: bool = False):
+    """Like :func:`forward` but also returns per-layer post-ReLU
+    activations ``[("b{l}.sconv", act), ("b{l}.tconv", act), ...]`` --
+    the traces behind Table III / Fig. 9 / RFC sizing."""
+    a_stack = jnp.asarray(graph.spatial_partitions())
+    h = jnp.transpose(jnp.asarray(x), (0, 2, 3, 1))
+    h = layers.batch_norm(h, jnp.asarray(params["input_bn"]["scale"]),
+                          jnp.asarray(params["input_bn"]["bias"]))
+    acts: list = []
+    specs = cfg.block_specs()
+    for l, (p, spec) in enumerate(zip(params["blocks"], specs)):
+        coll: list = []
+        h = block_mod.block_forward(
+            p, h, spec, a_stack,
+            with_ck=with_ck,
+            kept_in=plan.kept_spatial_in[l] if plan else None,
+            kept_t_out=plan.kept_temporal_out[l] if plan else None,
+            cavity=plan.cavity if plan else pruning.DENSE_SCHEME,
+            collect=coll)
+        acts.extend((f"b{l + 1}.{name}", a) for name, a in coll)
+    pooled = h.mean(axis=(1, 2))
+    logits = pooled @ jnp.asarray(params["fc"]["w"]) + jnp.asarray(
+        params["fc"]["b"])
+    return logits, acts
+
+
+def calibrate_fold(params: dict, x, cfg: ModelConfig, *,
+                   plan: Optional[pruning.PruningPlan] = None) -> dict:
+    """Fold batch-norm into affine (scale, bias) using calibration data.
+
+    Runs one eager forward over calibration batch ``x`` capturing the
+    batch statistics at every norm site in call order (input_bn, then per
+    block bn_s, bn_t, [bn_sc]), then returns a parameter tree where each
+    bn dict holds the *folded* scale/bias -- the deterministic
+    inference-time normalization the hardware uses (use with
+    ``folded_bn=True``).
+    """
+    stats: list[tuple[np.ndarray, np.ndarray]] = []
+
+    def capture(h, scale, bias):
+        mean = h.mean(axis=(0, 1, 2))
+        var = h.var(axis=(0, 1, 2))
+        stats.append((np.asarray(mean), np.asarray(var)))
+        return (h - mean) * jax.lax.rsqrt(var + layers.EPS) * scale + bias
+
+    forward(params, x, cfg, plan=plan, norm_fn=capture)
+
+    folded = jax.tree_util.tree_map(np.asarray, params)
+    order = iter(stats)
+
+    def fold(bn):
+        mean, var = next(order)
+        s, b = layers.fold_bn(np.asarray(bn["scale"]),
+                              np.asarray(bn["bias"]), mean, var)
+        return {"scale": s.astype(np.float32), "bias": b.astype(np.float32)}
+
+    folded["input_bn"] = fold(folded["input_bn"])
+    for bp, spec in zip(folded["blocks"], cfg.block_specs()):
+        bp["bn_s"] = fold(bp["bn_s"])
+        bp["bn_t"] = fold(bp["bn_t"])
+        if spec.has_projection:
+            bp["bn_sc"] = fold(bp["bn_sc"])
+    remaining = len(list(order))
+    if remaining:
+        raise RuntimeError(f"unconsumed calibration stats: {remaining}")
+    return folded
+
+
+def save_params(path: str, params: dict) -> None:
+    """Flatten the parameter pytree into an .npz keyed by tree paths."""
+    flat = {}
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(f"{prefix}/{k}", v)
+        elif isinstance(node, list):
+            for i, v in enumerate(node):
+                walk(f"{prefix}/{i}", v)
+        else:
+            flat[prefix] = np.asarray(node)
+
+    walk("p", params)
+    np.savez(path, **flat)
+
+
+def load_params(path: str, cfg: ModelConfig) -> dict:
+    """Inverse of :func:`save_params` (structure from ``init_params``)."""
+    flat = dict(np.load(path))
+    template = init_params(cfg)
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            return {k: walk(f"{prefix}/{k}", v) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(f"{prefix}/{i}", v) for i, v in enumerate(node)]
+        return flat[prefix]
+
+    return walk("p", template)
+
+
+def block_io_shapes(cfg: ModelConfig, batch: int) -> list[tuple]:
+    """(in_shape, out_shape) per block in (N, T, V, C) layout -- consumed
+    by aot.py and mirrored in artifacts/meta.json for the Rust pipeline."""
+    shapes = []
+    t = cfg.seq_len
+    for spec in cfg.block_specs():
+        t_out = -(-t // spec.stride)
+        shapes.append(((batch, t, graph.NUM_JOINTS, spec.in_channels),
+                       (batch, t_out, graph.NUM_JOINTS, spec.out_channels)))
+        t = t_out
+    return shapes
+
+
+def spatial_weights(params: dict) -> list[np.ndarray]:
+    """Per-block spatial weights ``(K, IC, OC)`` for pruning selection."""
+    return [np.asarray(b["w_spatial"]) for b in params["blocks"]]
+
+
+def make_plan(params: dict, cfg: ModelConfig, schedule: str = "drop-1",
+              cavity: pruning.CavityScheme = pruning.CAV_70_1
+              ) -> pruning.PruningPlan:
+    """Build a hybrid-pruning plan from this model's trained weights."""
+    specs = cfg.block_specs()
+    rates = pruning.DROP_SCHEDULES[schedule][: cfg.num_blocks]
+    if len(rates) < cfg.num_blocks:
+        rates = rates + [rates[-1]] * (cfg.num_blocks - len(rates))
+    saved = pruning.DROP_SCHEDULES.get("__tmp__")
+    pruning.DROP_SCHEDULES["__tmp__"] = rates
+    try:
+        plan = pruning.build_plan(
+            spatial_weights(params),
+            [s.out_channels for s in specs],
+            schedule="__tmp__", cavity=cavity)
+        plan.schedule = schedule
+    finally:
+        if saved is None:
+            pruning.DROP_SCHEDULES.pop("__tmp__", None)
+        else:
+            pruning.DROP_SCHEDULES["__tmp__"] = saved
+    return plan
+
+
+def compression_ratio(cfg: ModelConfig, plan: pruning.PruningPlan) -> float:
+    specs = cfg.block_specs()
+    return pruning.model_compression_ratio(
+        [s.in_channels for s in specs], [s.out_channels for s in specs],
+        plan)

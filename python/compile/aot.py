@@ -1,0 +1,295 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the Rust runtime.
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Exports (under ``artifacts/``):
+
+==========================  ================================================
+``blocks/block{01..10}.hlo.txt``  one pruned+BN-folded conv block each,
+                                  Pallas-kernel path -- the units the Rust
+                                  layer-pipeline coordinator chains
+``head.hlo.txt``            global pool + FC
+``model_dense.hlo.txt``     original full model (Table V "original")
+``model_ck.hlo.txt``        full model incl. self-similarity C_k (Table I)
+``model_pruned.hlo.txt``    hybrid-pruned full model (w/o C)
+``model_skip.hlo.txt``      pruned + input-skipping (Table V "skip")
+``quant_demo.hlo.txt``      Q8.8 quantized matmul kernel (int16 path)
+``meta.json``               shapes, pruning plan, cavity masks, FLOP
+                            accounting and sparsity stats for Rust
+==========================  ================================================
+
+Python runs once at build time (``make artifacts``); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import pruning
+from .agcn import graph, model as model_mod
+from .kernels.quant_matmul import quant_matmul as _quant_matmul
+
+ART_DEFAULT = os.path.join(os.path.dirname(__file__), "..", "..",
+                           "artifacts")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe format).
+
+    ``as_hlo_text(True)`` = print_large_constants: the default printer
+    ELIDES big weight constants as ``constant({...})``, which the HLO text
+    parser on the Rust side silently reads back as zeros -- the model
+    "runs" and returns all-zero logits.  Always print in full.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text(True)
+
+
+def export(fn, example_args, path: str) -> dict:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    return {"path": os.path.relpath(path, os.path.dirname(path) + "/.."),
+            "bytes": len(text)}
+
+
+# --------------------------------------------------------------------------
+# FLOP accounting (feeds GOP/s rows in Tables IV/V)
+# --------------------------------------------------------------------------
+
+def block_flops(spec, t_in: int, kept_in: int, kept_t_out_counts: list[int],
+                v: int = graph.NUM_JOINTS, k_v: int = graph.K_V) -> dict:
+    """Multiply-accumulate counts (x2 for MAC->FLOP) for one block."""
+    t_out = -(-t_in // spec.stride)
+    graph_f = 2 * k_v * t_in * v * v * kept_in
+    spatial_f = 2 * k_v * t_in * v * kept_in * spec.out_channels
+    temporal_f = 2 * t_out * v * spec.out_channels * sum(kept_t_out_counts)
+    short_f = (2 * t_out * v * spec.in_channels * spec.out_channels
+               if spec.has_projection else 0)
+    return {"graph": graph_f, "spatial": spatial_f,
+            "temporal": temporal_f, "shortcut": short_f,
+            "total": graph_f + spatial_f + temporal_f + short_f}
+
+
+def flops_table(cfg: model_mod.ModelConfig,
+                plan: pruning.PruningPlan | None) -> list[dict]:
+    out = []
+    t = cfg.seq_len
+    for l, spec in enumerate(cfg.block_specs()):
+        if plan is None:
+            kept_in = spec.in_channels
+            taps = [pruning.TEMPORAL_K] * spec.out_channels
+        else:
+            kept_in = len(plan.kept_spatial_in[l])
+            taps = [len(plan.cavity.kept_taps(j))
+                    for j in range(len(plan.kept_temporal_out[l]))]
+        out.append(block_flops(spec, t, kept_in, taps))
+        t = -(-t // spec.stride)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Sparsity statistics (RFC mini-bank sizing; Table III on the export model)
+# --------------------------------------------------------------------------
+
+def sparsity_stats(params, cfg, plan, batch: int = 32) -> dict:
+    x, _ = data_mod.generate(
+        data_mod.DataConfig(num_classes=cfg.num_classes,
+                            seq_len=cfg.seq_len), batch, seed=7)
+    _, acts = model_mod.forward_collect(params, jnp.asarray(x), cfg,
+                                        plan=plan)
+    out = {}
+    for name, a in acts:
+        a = np.asarray(a)
+        vecs = a.reshape(-1, a.shape[-1])
+        s = (vecs == 0).mean(axis=1)
+        out[name] = {
+            "mean_sparsity": float(s.mean()),
+            "buckets_I_II_III_IV": [
+                float(((s >= lo) & (s < hi)).mean())
+                for lo, hi in ((0.75, 1.01), (0.5, 0.75),
+                               (0.25, 0.5), (-0.01, 0.25))],
+            "channels": int(a.shape[-1]),
+        }
+    return out
+
+
+# --------------------------------------------------------------------------
+# Main export
+# --------------------------------------------------------------------------
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=ART_DEFAULT)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--width", type=float, default=0.25)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--classes", type=int, default=16)
+    ap.add_argument("--schedule", default="drop-1")
+    ap.add_argument("--cavity", default="cav-70-1")
+    ap.add_argument(
+        "--params",
+        default=os.path.join(ART_DEFAULT, "experiments",
+                             "params_dense.npz"),
+        help=".npz from train/experiments; random init if absent")
+    args = ap.parse_args()
+    art = os.path.abspath(args.out)
+    os.makedirs(art, exist_ok=True)
+
+    cfg = model_mod.ModelConfig(num_classes=args.classes,
+                                seq_len=args.seq_len,
+                                width_mult=args.width)
+    if args.params and os.path.exists(args.params):
+        params = model_mod.load_params(args.params, cfg)
+        params_src = args.params
+    else:
+        params = model_mod.init_params(cfg, seed=0)
+        params_src = "random-init (throughput artifacts are weight-agnostic)"
+
+    cavity = pruning.CAVITY_SCHEMES[args.cavity]
+    plan = model_mod.make_plan(params, cfg, args.schedule, cavity)
+
+    # calibration batch for BN folding
+    xcal, _ = data_mod.generate(
+        data_mod.DataConfig(num_classes=cfg.num_classes,
+                            seq_len=cfg.seq_len), 32, seed=3)
+    folded = model_mod.calibrate_fold(params, jnp.asarray(xcal), cfg,
+                                      plan=plan)
+    folded_dense = model_mod.calibrate_fold(params, jnp.asarray(xcal), cfg)
+
+    n = args.batch
+    manifest: dict = {
+        "batch": n, "seq_len": cfg.seq_len, "width_mult": cfg.width_mult,
+        "num_classes": cfg.num_classes, "num_joints": graph.NUM_JOINTS,
+        "params_source": params_src,
+        "schedule": args.schedule,
+        "cavity": {"name": cavity.name,
+                   "masks": ["".join("1" if b else "0" for b in row)
+                             for row in cavity.masks]},
+        "artifacts": {}, "blocks": [], }
+
+    # ---- per-block executables (the Rust pipeline's stages) ----
+    specs = cfg.block_specs()
+    a_stack = jnp.asarray(graph.spatial_partitions())
+    io = model_mod.block_io_shapes(cfg, n)
+    from .agcn import block as block_mod
+    for l, spec in enumerate(specs):
+        bp = jax.tree_util.tree_map(jnp.asarray, folded["blocks"][l])
+        blk = functools.partial(
+            block_mod.block_forward, bp,
+            spec=spec, a_stack=a_stack,
+            kept_in=plan.kept_spatial_in[l],
+            kept_t_out=plan.kept_temporal_out[l],
+            cavity=cavity, use_kernels=True, folded_bn=True)
+        if l == 0:
+            # block 1 swallows the (folded) input normalization so the
+            # Rust pipeline can chain raw (N,T,V,3) clips end to end
+            in_s = jnp.asarray(folded["input_bn"]["scale"])
+            in_b = jnp.asarray(folded["input_bn"]["bias"])
+            fn = (lambda blk_, s_, b_: lambda x: blk_(x * s_ + b_))(
+                blk, in_s, in_b)
+        else:
+            fn = blk
+        in_shape, out_shape = io[l]
+        info = export(
+            lambda x: (fn(x),),
+            (jax.ShapeDtypeStruct(in_shape, jnp.float32),),
+            os.path.join(art, "blocks", f"block{l + 1:02d}.hlo.txt"))
+        manifest["blocks"].append({
+            "hlo": f"blocks/block{l + 1:02d}.hlo.txt",
+            "in_shape": list(in_shape), "out_shape": list(out_shape),
+            "in_channels": spec.in_channels,
+            "out_channels": spec.out_channels, "stride": spec.stride,
+            "kept_in": [int(i) for i in plan.kept_spatial_in[l]],
+            "kept_t_out": [int(i) for i in plan.kept_temporal_out[l]],
+            "bytes": info["bytes"],
+        })
+
+    # ---- head: global pool + FC ----
+    c_last = specs[-1].out_channels
+    t_last = manifest["blocks"][-1]["out_shape"][1]
+    fcw = jnp.asarray(folded["fc"]["w"])
+    fcb = jnp.asarray(folded["fc"]["b"])
+    head_in = (n, t_last, graph.NUM_JOINTS, c_last)
+    export(lambda h: (h.mean(axis=(1, 2)) @ fcw + fcb,),
+           (jax.ShapeDtypeStruct(head_in, jnp.float32),),
+           os.path.join(art, "head.hlo.txt"))
+    manifest["artifacts"]["head"] = {"hlo": "head.hlo.txt",
+                                     "in_shape": list(head_in),
+                                     "out_shape": [n, cfg.num_classes]}
+
+    # ---- full-model variants ----
+    xin = jax.ShapeDtypeStruct((n, 3, cfg.seq_len, graph.NUM_JOINTS),
+                               jnp.float32)
+    fd = jax.tree_util.tree_map(jnp.asarray, folded_dense)
+    fp = jax.tree_util.tree_map(jnp.asarray, folded)
+    variants = {
+        "model_dense": (lambda x: (model_mod.forward(
+            fd, x, cfg, folded_bn=True),), xin),
+        "model_ck": (lambda x: (model_mod.forward(
+            fd, x, cfg, with_ck=True, folded_bn=True),), xin),
+        "model_pruned": (lambda x: (model_mod.forward(
+            fp, x, cfg, plan=plan, folded_bn=True),), xin),
+    }
+    skip_len = cfg.seq_len // 2
+    cfg_skip = model_mod.ModelConfig(
+        num_classes=cfg.num_classes, seq_len=skip_len,
+        width_mult=cfg.width_mult)
+    xin_skip = jax.ShapeDtypeStruct((n, 3, skip_len, graph.NUM_JOINTS),
+                                    jnp.float32)
+    variants["model_skip"] = (lambda x: (model_mod.forward(
+        fp, x, cfg_skip, plan=plan, folded_bn=True),), xin_skip)
+    for name, (fn, spec_in) in variants.items():
+        info = export(fn, (spec_in,), os.path.join(art, f"{name}.hlo.txt"))
+        manifest["artifacts"][name] = {
+            "hlo": f"{name}.hlo.txt", "in_shape": list(spec_in.shape),
+            "out_shape": [spec_in.shape[0], cfg.num_classes],
+            "bytes": info["bytes"]}
+
+    # ---- quantized kernel demo (int16 Q8.8 path) ----
+    export(lambda x, w: (_quant_matmul(x, w),),
+           (jax.ShapeDtypeStruct((64, 32), jnp.int16),
+            jax.ShapeDtypeStruct((32, 32), jnp.int16)),
+           os.path.join(art, "quant_demo.hlo.txt"))
+    manifest["artifacts"]["quant_demo"] = {
+        "hlo": "quant_demo.hlo.txt", "in_shape": [64, 32],
+        "rhs_shape": [32, 32], "out_shape": [64, 32], "dtype": "s16"}
+
+    # ---- FLOPs + sparsity for the Rust benches / simulator ----
+    manifest["flops"] = {
+        "dense_per_sample": flops_table(cfg, None),
+        "pruned_per_sample": flops_table(cfg, plan),
+    }
+    manifest["graph_skip_ratio"] = plan.graph_skip_ratio(
+        [s.in_channels for s in specs])
+    manifest["compression_ratio"] = model_mod.compression_ratio(cfg, plan)
+    manifest["sparsity"] = sparsity_stats(params, cfg, plan)
+
+    with open(os.path.join(art, "meta.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    total = sum(b["bytes"] for b in manifest["blocks"])
+    print(f"exported {len(manifest['blocks'])} blocks "
+          f"({total} bytes HLO), 4 model variants, head, quant demo")
+    print(f"compression_ratio={manifest['compression_ratio']:.2f}x "
+          f"graph_skip={manifest['graph_skip_ratio']:.2%}")
+
+
+if __name__ == "__main__":
+    main()

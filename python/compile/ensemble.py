@@ -1,0 +1,102 @@
+"""Two-stream ensemble (the "2s" in 2s-AGCN).
+
+2s-AGCN runs two identical AGCN networks -- one on joint coordinates, one
+on bone vectors (child - parent along the skeleton) -- and sums their
+softmax scores.  The accelerator paper prunes and maps a single stream;
+this module provides the second stream so the reproduction covers the
+complete published model: train both streams, fuse, and measure the
+ensemble gain.
+
+Run: ``python -m compile.ensemble [--steps N]``
+Writes ``artifacts/experiments/ensemble.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import train as train_mod
+from .agcn import model as model_mod
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts",
+                   "experiments")
+
+
+def fuse_logits(logits_joint, logits_bone, alpha: float = 0.5):
+    """Score-level fusion: weighted sum of per-stream softmax scores."""
+    pj = jax.nn.softmax(jnp.asarray(logits_joint), axis=-1)
+    pb = jax.nn.softmax(jnp.asarray(logits_bone), axis=-1)
+    return alpha * pj + (1.0 - alpha) * pb
+
+
+def evaluate_ensemble(params_j, params_b, cfg, xte, yte, alpha=0.5,
+                      batch=128):
+    """Accuracy of joint-only, bone-only and the fused two-stream model."""
+    fn = jax.jit(lambda p, x: model_mod.forward(p, x, cfg))
+    xb = data_mod.bone_stream(xte)
+    accs = {"joint": 0.0, "bone": 0.0, "fused": 0.0}
+    n = 0
+    for i in range(0, len(xte), batch):
+        xj = jnp.asarray(xte[i:i + batch])
+        xbn = jnp.asarray(xb[i:i + batch])
+        y = jnp.asarray(yte[i:i + batch])
+        lj = fn(params_j, xj)
+        lb = fn(params_b, xbn)
+        k = len(y)
+        accs["joint"] += train_mod.accuracy(lj, y) * k
+        accs["bone"] += train_mod.accuracy(lb, y) * k
+        fused = fuse_logits(lj, lb, alpha)
+        accs["fused"] += float((jnp.argmax(fused, 1) == y).mean()) * k
+        n += k
+    return {k: v / n for k, v in accs.items()}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--classes", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--noise", type=float, default=0.22)
+    args = ap.parse_args()
+
+    cfg = model_mod.ModelConfig(num_classes=args.classes,
+                                seq_len=args.seq_len, width_mult=0.25)
+    dcfg = data_mod.DataConfig(num_classes=args.classes,
+                               seq_len=args.seq_len, noise=args.noise)
+    xtr, ytr = data_mod.generate(dcfg, 512, seed=0)
+    xte, yte = data_mod.generate(dcfg, 256, seed=10_000)
+    tcfg = train_mod.TrainConfig(steps=args.steps, batch=32,
+                                 num_train=len(xtr))
+
+    print("training joint stream...")
+    pj, hj = train_mod.train(cfg, tcfg, dataset=(xtr, ytr, xte, yte),
+                             verbose=False)
+    print(f"  joint acc {hj['test_acc']:.4f}")
+    print("training bone stream...")
+    xtr_b = data_mod.bone_stream(xtr)
+    pb, hb = train_mod.train(cfg, tcfg,
+                             dataset=(xtr_b, ytr,
+                                      data_mod.bone_stream(xte), yte),
+                             verbose=False)
+    print(f"  bone acc {hb['test_acc']:.4f}")
+
+    accs = evaluate_ensemble(pj, pb, cfg, xte, yte)
+    print(f"ensemble: {accs}")
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "ensemble.json"), "w") as f:
+        json.dump({"accuracy": accs,
+                   "config": {"classes": args.classes,
+                              "seq_len": args.seq_len,
+                              "steps": args.steps}}, f, indent=2)
+    print("wrote ensemble.json")
+
+
+if __name__ == "__main__":
+    main()

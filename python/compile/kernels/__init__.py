@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels for RFC-HyPGCN.
+
+- :mod:`fused_gconv`    -- reorganized graph + spatial conv (paper eq. 5),
+  the dataflow that makes channel pruning skip graph work.
+- :mod:`temporal_conv`  -- 9x1 temporal conv with recurrent cavity masks
+  (paper Fig. 3), static tap skipping.
+- :mod:`quant_matmul`   -- Q8.8 fixed-point matmul (paper's quantization).
+- :mod:`ref`            -- pure-jnp oracles for all of the above.
+
+All kernels run with ``interpret=True`` so they lower to plain HLO the CPU
+PJRT client (and therefore the Rust runtime) can execute.
+"""
+
+from .fused_gconv import fused_gconv  # noqa: F401
+from .temporal_conv import temporal_conv  # noqa: F401
+from .quant_matmul import quant_matmul  # noqa: F401
+from . import ref  # noqa: F401
+
+__all__ = ["fused_gconv", "temporal_conv", "quant_matmul", "ref"]

@@ -1,0 +1,91 @@
+"""Pallas kernel: reorganized graph + spatial convolution (paper eq. 5).
+
+The paper's dataflow-reorganization insight is that the graph contraction
+``f_in . G_k`` and the 1x1 spatial convolution ``. W_k`` commute per input
+channel, so pruning input channel *i* of ``W_k`` removes the *graph*
+workload for that channel too.  On the FPGA this is realised by never
+sending dropped channels to the feature buffer; on a TPU-style core the
+same insight turns the sparse problem dense: the kept channels are
+compacted, and the kernel below runs two *dense* MXU contractions on the
+compacted operands
+
+    tmp(t, w, i) = sum_p G_k(p, w) * f(t, p, i)      (graph, VMEM-resident)
+    X(t, w, oc) += sum_i tmp(t, w, i) * W_k(i, oc)   (spatial 1x1)
+
+summed over the K = 3 partition subsets inside one kernel invocation so the
+intermediate ``tmp`` never leaves VMEM.
+
+Blocking: the grid tiles the folded batchxtime axis; the joint axis (25) and
+channel axes stay resident per block.  VMEM per step =
+``Tb*V*IC + K*V*V + K*IC*OC + Tb*V*OC`` floats -- see DESIGN.md SSPerf for
+the per-layer budget.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same module runs
+under the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_T = 32
+
+
+def _kernel(f_ref, g_ref, w_ref, o_ref, *, k_v: int):
+    f = f_ref[...]                      # (Tb, V, IC)
+    acc = jnp.zeros(o_ref.shape, dtype=jnp.float32)
+    for k in range(k_v):                # static unroll over the 3 subsets
+        g = g_ref[k]                    # (V, V)
+        w = w_ref[k]                    # (IC, OC)
+        # graph contraction: tmp(t, w, i) = sum_p f(t, p, i) g(p, w)
+        tmp = jax.lax.dot_general(
+            f, g,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                               # (Tb, IC, Vw): tmp(t,i,w) = sum_p f(t,p,i) g(p,w)
+        # spatial 1x1: out(t, v, oc) = sum_i tmp(t, i, v) w(i, oc)
+        acc = acc + jax.lax.dot_general(
+            tmp, w,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                               # (Tb, Vw, OC)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def fused_gconv(f, g, w, *, block_t: int = DEFAULT_BLOCK_T,
+                interpret: bool = True):
+    """Fused graph + pruned spatial convolution.
+
+    Args:
+      f: ``(T, V, IC)`` float32 features; ``T`` must be a multiple of
+         ``block_t`` (callers pad; the model folds batch into ``T``).
+      g: ``(K, V, V)`` graph stack (``A_k + B_k``).
+      w: ``(K, IC, OC)`` spatial weights compacted to kept channels.
+      block_t: time-axis tile size per grid step.
+      interpret: run the kernel in interpret mode (required on CPU).
+
+    Returns:
+      ``(T, V, OC)`` float32.
+    """
+    t, v, ic = f.shape
+    k_v, _, oc = w.shape
+    if t % block_t != 0:
+        raise ValueError(f"T={t} not a multiple of block_t={block_t}")
+    grid = (t // block_t,)
+    return pl.pallas_call(
+        functools.partial(_kernel, k_v=k_v),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, v, ic), lambda i: (i, 0, 0)),
+            pl.BlockSpec((k_v, v, v), lambda i: (0, 0, 0)),
+            pl.BlockSpec((k_v, ic, oc), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_t, v, oc), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, v, oc), f.dtype),
+        interpret=interpret,
+    )(f, g, w)

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written
+with plain ``jax.numpy`` ops only.  ``python/tests`` asserts
+``assert_allclose(kernel(...), ref(...))`` over hypothesis-generated shapes;
+this is the core correctness signal for Layer 1.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import pruning
+
+
+def fused_gconv(f, g, w):
+    """Reorganized graph + spatial convolution (paper eq. 5).
+
+    Args:
+      f: features ``(T, V, IC)`` -- time (with batch folded in), joints,
+         kept input channels.
+      g: graph stack ``(K, V, V)`` (``A_k + B_k`` per subset).
+      w: spatial 1x1 weights ``(K, IC, OC)``, rows already compacted to the
+         kept input channels.
+
+    Returns:
+      ``(T, V, OC)`` output ``X`` of eq. (4)/(5) summed over the K subsets.
+    """
+    # X(t, w, oc) = sum_k sum_i sum_p f(t, p, i) G_k(p, w) W_k(i, oc)
+    return jnp.einsum("tpi,kpw,kio->two", f, g, w)
+
+
+def temporal_conv(f, w, masks, stride: int = 1):
+    """9x1 temporal convolution with recurrent cavity masks.
+
+    Args:
+      f: features ``(T, V, IC)``; ``T`` is *unpadded* -- the reference pads
+         SAME (4 each side).
+      w: dense temporal weights ``(9, IC, OC)``.
+      masks: cavity masks -- either recurrent ``(8, 9)`` (filter ``oc``
+         uses row ``oc % 8``) or explicit per-channel ``(OC, 9)``.
+      stride: temporal stride (1 or 2).
+
+    Returns:
+      ``(ceil(T / stride), V, OC)``.
+    """
+    k = w.shape[0]
+    masks = jnp.asarray(masks, dtype=w.dtype)
+    oc = w.shape[2]
+    if masks.shape[0] == oc and oc != pruning.LOOP:
+        tap_mask = masks                                 # explicit (OC, 9)
+    else:
+        reps = (oc + pruning.LOOP - 1) // pruning.LOOP
+        tap_mask = jnp.tile(masks, (reps, 1))[:oc]       # recurrent (OC, 9)
+    w_masked = w * tap_mask.T[:, None, :]               # (9, IC, OC)
+    pad = (k - 1) // 2
+    fp = jnp.pad(f, ((pad, pad), (0, 0), (0, 0)))
+    t_out = -(-f.shape[0] // stride)
+    out = jnp.zeros((t_out, f.shape[1], oc), dtype=f.dtype)
+    for tap in range(k):
+        sl = fp[tap : tap + (t_out - 1) * stride + 1 : stride]
+        out = out + jnp.einsum("tvi,io->tvo", sl, w_masked[tap])
+    return out
+
+
+def quant_matmul(xq, wq, frac_bits: int = 8):
+    """Q(16-frac).frac fixed-point matmul with int32 accumulation.
+
+    Args:
+      xq: ``(M, K)`` int16 quantized activations.
+      wq: ``(K, N)`` int16 quantized weights.
+      frac_bits: fractional bits (paper: 8 integer + 8 decimal).
+
+    Returns:
+      ``(M, N)`` int16, product rescaled by an arithmetic right shift of
+      ``frac_bits`` (rounding toward -inf, matching hardware) and saturated
+      to int16.
+    """
+    acc = jnp.matmul(xq.astype(jnp.int32), wq.astype(jnp.int32))
+    scaled = acc >> frac_bits
+    return jnp.clip(scaled, -32768, 32767).astype(jnp.int16)

@@ -1,0 +1,115 @@
+"""Pallas kernel: 9x1 temporal convolution with recurrent cavity masks.
+
+The paper's fine-grained pruning treats zero temporal-tap weights as "not
+sampling" a time step (Fig. 3).  Because the cavity schemes recur over
+loops of 8 filters and are fixed at compile time, the kernel specialises on
+them *statically*: output channels are processed in 8 pattern groups, and
+for group ``gidx`` only its kept taps are touched -- a pruned tap costs
+nothing, exactly like the FPGA's Dyn-Mult-PE never enqueueing a dropped
+weight.  The per-tap work is a dense (Tb*V, IC) x (IC, OCg) contraction on
+the MXU.
+
+The time axis is tiled by the grid; the input block carries an 8-element
+halo (kernel size 9, SAME padding) by mapping the *padded* input array with
+overlapping reads via ``pl.dslice`` on a whole-array block.
+
+Hardware adaptation note (DESIGN.md SSHardware-Adaptation): the FPGA's
+waiting queues + dynamic DSP dispatch exploit *feature* zeros at runtime;
+a systolic MXU cannot skip individual zero elements, so runtime feature
+sparsity is exploited by the L3 cycle simulator instead, while this kernel
+realises the *static* cavity sparsity as compacted dense compute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import pruning
+
+DEFAULT_BLOCK_T = 32
+
+
+def _kernel(fp_ref, w_ref, o_ref, *, kept_taps, ocg, stride, block_t):
+    """One time-tile of the cavity temporal conv.
+
+    fp_ref: padded features, whole array ``(T + 8, V, IC)``.
+    w_ref:  dense weights ``(9, IC, OC)`` (masked taps are never read).
+    o_ref:  output tile ``(block_t, V, OC)``.
+    """
+    t0 = pl.program_id(0) * (block_t * stride)
+    v = o_ref.shape[1]
+    loop = len(kept_taps)
+    accs = []
+    for gidx, taps in enumerate(kept_taps):     # 8 static pattern groups
+        acc = jnp.zeros((block_t, v, ocg), dtype=jnp.float32)
+        for tap in taps:                        # static kept taps only
+            # rows t0+tap, t0+tap+stride, ... (block_t rows)
+            if stride == 1:
+                x = fp_ref[pl.dslice(t0 + tap, block_t)]
+            else:
+                x = fp_ref[pl.dslice(t0 + tap, block_t * stride)]
+                x = x[::stride]
+            # channels of group g are oc with oc % 8 == g (interleaved)
+            wk = w_ref[tap][:, gidx::loop]      # (IC, OCg)
+            acc = acc + jax.lax.dot_general(
+                x, wk,
+                dimension_numbers=(((2,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+        accs.append(acc)
+    # interleave groups back: channel j*8+g comes from group g column j
+    out = jnp.stack(accs, axis=-1)              # (Tb, V, OCg, 8)
+    o_ref[...] = out.reshape(block_t, v, ocg * loop).astype(o_ref.dtype)
+
+
+def temporal_conv(f, w, scheme: pruning.CavityScheme, *, stride: int = 1,
+                  block_t: int = DEFAULT_BLOCK_T, interpret: bool = True):
+    """Cavity-pruned 9x1 temporal convolution, SAME padding.
+
+    Args:
+      f: ``(T, V, IC)`` float32 (batch folded into T is NOT allowed here --
+         the 9-tap window must not straddle samples; the model vmaps/maps
+         over batch instead).
+      w: ``(9, IC, OC)`` dense weights; taps pruned by ``scheme`` are
+         ignored (callers may keep them zero or arbitrary).
+      scheme: cavity scheme; output channel ``oc`` uses mask ``oc % 8``.
+      stride: 1 or 2.
+      block_t: output-tile size along time.
+
+    Returns:
+      ``(ceil(T / stride), V, OC)`` float32.
+
+    Requires ``OC % 8 == 0`` and ``ceil(T / stride) % block_t == 0``.
+    """
+    t, v, ic = f.shape
+    k, _, oc = w.shape
+    if k != pruning.TEMPORAL_K:
+        raise ValueError(f"kernel size must be 9, got {k}")
+    if oc % pruning.LOOP != 0:
+        raise ValueError(f"OC={oc} must be a multiple of {pruning.LOOP}")
+    t_out = -(-t // stride)
+    if t_out % block_t != 0:
+        raise ValueError(
+            f"ceil(T/stride)={t_out} not a multiple of block_t={block_t}")
+    pad = (k - 1) // 2
+    fp = jnp.pad(f, ((pad, pad + (stride - 1)), (0, 0), (0, 0)))
+    kept_taps = tuple(tuple(scheme.kept_taps(i)) for i in range(pruning.LOOP))
+    ocg = oc // pruning.LOOP
+    grid = (t_out // block_t,)
+    return pl.pallas_call(
+        functools.partial(_kernel, kept_taps=kept_taps, ocg=ocg,
+                          stride=stride, block_t=block_t),
+        grid=grid,
+        in_specs=[
+            # whole padded array visible each step; halo handled by dslice
+            pl.BlockSpec(fp.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec((k, ic, oc), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_t, v, oc), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t_out, v, oc), f.dtype),
+        interpret=interpret,
+    )(fp, w)

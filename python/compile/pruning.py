@@ -1,0 +1,318 @@
+"""Hybrid pruning for 2s-AGCN (paper §IV).
+
+Three cooperating mechanisms:
+
+1. **Dataflow reorganization** (§IV-A, eq. 4 -> eq. 5): pruning an entire
+   *input channel* of the 1x1 spatial-conv weight lets the accelerator skip
+   the matching *graph* contraction too.  Channel selection drops the input
+   channels with the least mean absolute weight
+   (:func:`select_kept_channels`).  Per-layer drop-rate schedules Drop-1/2/3
+   reproduce Fig. 9.
+
+2. **Coarse-grained temporal pruning** (§IV-B, Fig. 2): a spatial input
+   channel of block *l* is fed by temporal filter *ic* of block *l-1*;
+   dropping the former makes the latter dead weight, so its whole 9x1xC
+   filter is removed with zero extra accuracy cost
+   (:func:`coarse_temporal_kept`).
+
+3. **Fine-grained "cavity" pruning** (§IV-B, Fig. 3): recurrent sampling
+   patterns over the 9 temporal taps, one 9-bit mask per filter in a loop of
+   8 filters.  Balanced patterns (every tap row kept 2-3 times across the
+   loop, e.g. ``cav-70-1``) keep accuracy and hardware balance; unbalanced
+   ones (``cav-70-2``) are included as the paper's negative control.
+
+Also provided: an **unstructured magnitude-pruning baseline** (Fig. 8's
+comparator) and compression-ratio accounting used by Figs. 8-10 and the
+Rust resource model.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+TEMPORAL_K = 9   # 9x1 temporal kernel
+LOOP = 8         # cavity patterns recur over loops of 8 filters
+
+
+# --------------------------------------------------------------------------
+# Cavity (fine-grained temporal) patterns
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CavityScheme:
+    """A recurrent fine-grained pruning pattern for 9x1 temporal filters.
+
+    ``masks`` is an ``(8, 9)`` boolean array: row *i* is the tap-keep mask
+    applied to every filter whose output-channel index is ``i (mod 8)``.
+    """
+
+    name: str
+    masks: tuple[tuple[bool, ...], ...]
+
+    def as_array(self) -> np.ndarray:
+        return np.asarray(self.masks, dtype=bool)
+
+    @property
+    def keep_ratio(self) -> float:
+        m = self.as_array()
+        return float(m.sum()) / m.size
+
+    @property
+    def prune_ratio(self) -> float:
+        return 1.0 - self.keep_ratio
+
+    def tap_coverage(self) -> np.ndarray:
+        """How many of the 8 filters keep each of the 9 taps (Fig. 3/10)."""
+        return self.as_array().sum(axis=0)
+
+    def balance_spread(self) -> int:
+        """max - min tap coverage; 0-1 = balanced, large = unbalanced."""
+        cov = self.tap_coverage()
+        return int(cov.max() - cov.min())
+
+    def kept_taps(self, filter_index: int) -> list[int]:
+        """Static tap indices kept for filter ``filter_index``."""
+        return [t for t in range(TEMPORAL_K)
+                if self.masks[filter_index % LOOP][t]]
+
+    def max_taps(self) -> int:
+        return max(len(self.kept_taps(i)) for i in range(LOOP))
+
+
+def _masks_from_strings(rows: list[str]) -> tuple[tuple[bool, ...], ...]:
+    assert len(rows) == LOOP
+    out = []
+    for r in rows:
+        assert len(r) == TEMPORAL_K
+        out.append(tuple(c == "1" for c in r))
+    return tuple(out)
+
+
+def _interleave(interval: int, offsets: list[int]) -> list[str]:
+    """Sampling-style masks: filter i keeps taps t with (t+off_i)%interval==0."""
+    rows = []
+    for i in range(LOOP):
+        off = offsets[i % len(offsets)]
+        rows.append("".join(
+            "1" if (t + off) % interval == 0 else "0"
+            for t in range(TEMPORAL_K)))
+    return rows
+
+
+# The schemes explored in Fig. 10. Keep-counts: dense keeps all 72 positions
+# of the 9x8 loop; cav-NN keeps ~(1-NN%)*72.
+CAVITY_SCHEMES: dict[str, CavityScheme] = {}
+
+
+def _register(name: str, rows: list[str]) -> CavityScheme:
+    s = CavityScheme(name, _masks_from_strings(rows))
+    CAVITY_SCHEMES[name] = s
+    return s
+
+
+# 50% pruned: interval-2 sampling, alternating phase -> every tap kept 4x.
+CAV_50 = _register("cav-50", _interleave(2, [0, 1]))
+
+# 67% pruned: interval-3 sampling with rotating phase -> taps kept ~2-3x.
+CAV_67 = _register("cav-67", _interleave(3, [0, 1, 2]))
+
+# ~70% pruned, balanced (the paper's chosen design): 22/72 kept, each tap
+# row sampled 2-3 times across the loop ("two or three sampling chances").
+CAV_70_1 = _register("cav-70-1", [
+    "100100100",  # taps 0,3,6
+    "010010010",  # taps 1,4,7
+    "001001001",  # taps 2,5,8
+    "111000000",  # taps 0,1,2
+    "000111000",  # taps 3,4,5
+    "100000100",  # taps 0,6
+    "010100010",  # taps 1,3,7
+    "001000001",  # taps 2,8
+])
+
+# ~70% pruned, unbalanced control: same 22 kept weights, but tap rows are
+# sampled from 1 to 4 times -> worse accuracy in Fig. 10.
+CAV_70_2 = _register("cav-70-2", [
+    "111000000",
+    "110100000",
+    "110010000",
+    "110001000",
+    "001100100",
+    "001010010",
+    "000100001",
+    "001001000",
+])
+
+# 75% pruned, balanced: 18/72 kept, every tap row exactly 2x.
+CAV_75_1 = _register("cav-75-1", [
+    "100100100",
+    "010010010",
+    "001001001",
+    "110000000",
+    "000110000",
+    "001000100",
+    "000001000",
+    "000000011",
+])
+
+# 75% pruned, unbalanced control: 18/72 kept, tap coverage ranges 0-6.
+CAV_75_2 = _register("cav-75-2", [
+    "111100000",
+    "111000000",
+    "110000000",
+    "110000000",
+    "100000000",
+    "100000001",
+    "010000000",
+    "111000000",
+])
+
+DENSE_SCHEME = _register("dense", ["1" * TEMPORAL_K] * LOOP)
+
+
+# --------------------------------------------------------------------------
+# Channel dropping (dataflow reorganization)
+# --------------------------------------------------------------------------
+
+def select_kept_channels(w_spatial: np.ndarray, drop_rate: float) -> np.ndarray:
+    """Choose spatial-conv input channels to keep.
+
+    ``w_spatial`` has shape ``(K_V, IC, OC)`` (1x1 kernels).  Following the
+    paper, the input channels with the least mean |w| across all k_v subsets
+    and output channels are dropped; the survivors are returned as a sorted
+    index array.  ``drop_rate`` is the fraction of input channels removed.
+    """
+    if not 0.0 <= drop_rate < 1.0:
+        raise ValueError(f"drop_rate must be in [0, 1), got {drop_rate}")
+    ic = w_spatial.shape[1]
+    n_drop = int(round(drop_rate * ic))
+    n_keep = max(1, ic - n_drop)
+    score = np.abs(w_spatial).mean(axis=(0, 2))  # (IC,)
+    kept = np.sort(np.argsort(score)[::-1][:n_keep])
+    return kept.astype(np.int32)
+
+
+def coarse_temporal_kept(next_block_kept: np.ndarray) -> np.ndarray:
+    """Coarse-grained rule (Fig. 2): temporal filters of block *l* that feed
+    dropped spatial input channels of block *l+1* are pruned.  The kept
+    temporal filter (output-channel) indices are exactly the kept spatial
+    input channels of the next block."""
+    return np.asarray(next_block_kept, dtype=np.int32)
+
+
+# Per-layer channel-drop schedules explored in Fig. 9.  Block 1 is never
+# pruned (only 3 input channels).  Rates loosely track the per-layer feature
+# sparsity (Drop-1) and are raised progressively (Drop-2, Drop-3).
+DROP_SCHEDULES: dict[str, list[float]] = {
+    # blocks:   1     2     3     4     5     6     7     8     9    10
+    "drop-0": [0.0] * 10,
+    "drop-1": [0.0, 0.25, 0.25, 0.375, 0.375, 0.50, 0.50, 0.50, 0.625, 0.625],
+    "drop-2": [0.0, 0.375, 0.375, 0.50, 0.50, 0.625, 0.625, 0.625, 0.75, 0.75],
+    "drop-3": [0.0, 0.50, 0.50, 0.625, 0.625, 0.75, 0.75, 0.75, 0.875, 0.875],
+}
+
+
+# --------------------------------------------------------------------------
+# Whole-model pruning plan
+# --------------------------------------------------------------------------
+
+@dataclass
+class PruningPlan:
+    """Everything the hardware (and the JAX model) needs to apply hybrid
+    pruning: per-block kept input channels for the spatial conv, per-block
+    kept output filters for the temporal conv, and the cavity scheme."""
+
+    kept_spatial_in: list[np.ndarray]   # per block, kept IC indices
+    kept_temporal_out: list[np.ndarray]  # per block, kept OC indices
+    cavity: CavityScheme
+    schedule: str = "drop-1"
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def num_blocks(self) -> int:
+        return len(self.kept_spatial_in)
+
+    def graph_skip_ratio(self, in_channels: list[int]) -> float:
+        """Fraction of graph-contraction work skipped (paper: 73.20% for the
+        balanced design) = dropped input channels weighted by per-block
+        graph workload (proportional to T*V*V*IC)."""
+        total = 0.0
+        skipped = 0.0
+        for kept, ic in zip(self.kept_spatial_in, in_channels):
+            total += ic
+            skipped += ic - len(kept)
+        return skipped / total if total else 0.0
+
+
+def build_plan(
+    spatial_weights: list[np.ndarray],
+    out_channels: list[int],
+    schedule: str = "drop-1",
+    cavity: CavityScheme = CAV_70_1,
+) -> PruningPlan:
+    """Derive a :class:`PruningPlan` from trained spatial weights.
+
+    ``spatial_weights[l]`` has shape ``(K_V, IC_l, OC_l)``.  The temporal
+    filters kept in block *l* are the spatial input channels kept in block
+    *l+1* (coarse rule); the last block's temporal filters all survive
+    because they feed the FC layer directly.
+    """
+    rates = DROP_SCHEDULES[schedule]
+    if len(spatial_weights) != len(rates):
+        raise ValueError(
+            f"schedule {schedule} covers {len(rates)} blocks, "
+            f"model has {len(spatial_weights)}")
+    kept_in = [select_kept_channels(w, r)
+               for w, r in zip(spatial_weights, rates)]
+    kept_t: list[np.ndarray] = []
+    for l in range(len(spatial_weights)):
+        if l + 1 < len(spatial_weights):
+            kept_t.append(coarse_temporal_kept(kept_in[l + 1]))
+        else:
+            kept_t.append(np.arange(out_channels[l], dtype=np.int32))
+    return PruningPlan(kept_in, kept_t, cavity, schedule)
+
+
+# --------------------------------------------------------------------------
+# Compression accounting + unstructured baseline
+# --------------------------------------------------------------------------
+
+def spatial_param_count(kept_in: np.ndarray, oc: int, k_v: int = 3) -> int:
+    return k_v * len(kept_in) * oc
+
+
+def temporal_param_count(ic: int, kept_out: np.ndarray,
+                         cavity: CavityScheme) -> int:
+    """Kept temporal weights: per kept filter, only the cavity-kept taps."""
+    total = 0
+    for i, _ in enumerate(kept_out):
+        total += len(cavity.kept_taps(i)) * ic
+    return total
+
+
+def model_compression_ratio(
+    in_channels: list[int], out_channels: list[int], plan: PruningPlan,
+    k_v: int = 3,
+) -> float:
+    """dense params / pruned params over all conv blocks (paper: 3.0x-8.4x)."""
+    dense = 0
+    pruned = 0
+    for l, (ic, oc) in enumerate(zip(in_channels, out_channels)):
+        dense += k_v * ic * oc                    # spatial
+        dense += TEMPORAL_K * oc * oc             # temporal (oc -> oc)
+        pruned += spatial_param_count(plan.kept_spatial_in[l], oc, k_v)
+        pruned += temporal_param_count(oc, plan.kept_temporal_out[l],
+                                       plan.cavity)
+    return dense / max(1, pruned)
+
+
+def unstructured_prune(w: np.ndarray, rate: float) -> np.ndarray:
+    """Magnitude pruning baseline: zero the ``rate`` fraction of smallest
+    |w| entries (the Fig. 8 comparator).  Returns a 0/1 mask."""
+    flat = np.abs(w).ravel()
+    k = int(round(rate * flat.size))
+    if k == 0:
+        return np.ones_like(w)
+    thresh = np.partition(flat, k - 1)[k - 1]
+    return (np.abs(w) > thresh).astype(w.dtype)

@@ -1,0 +1,52 @@
+"""Q8.8 fixed-point quantization (paper SSVI-A).
+
+The paper converts the pruned model to 16-bit fixed point, "where eight
+bits are allocated to decimal part and eight to integer part".  That is
+symmetric Q8.8: value = q / 256, q in int16, representable range
+[-128, 128) with 1/256 resolution.
+
+Both a numpy/jnp *simulated* path (quantize -> dequantize, used to measure
+accuracy impact in Fig. 8's "+quant" points) and true int16 helpers (used
+with :mod:`kernels.quant_matmul`) are provided.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FRAC_BITS = 8
+SCALE = 1 << FRAC_BITS          # 256
+QMIN, QMAX = -32768, 32767
+
+
+def quantize(x, frac_bits: int = FRAC_BITS):
+    """float -> int16 Q(16-f).f with round-to-nearest and saturation."""
+    scale = 1 << frac_bits
+    q = jnp.round(jnp.asarray(x) * scale)
+    return jnp.clip(q, QMIN, QMAX).astype(jnp.int16)
+
+
+def dequantize(q, frac_bits: int = FRAC_BITS):
+    """int16 Q(16-f).f -> float32."""
+    return q.astype(jnp.float32) / (1 << frac_bits)
+
+
+def fake_quant(x, frac_bits: int = FRAC_BITS):
+    """Quantize-dequantize in float (straight-through in value space).
+
+    This is what the accuracy experiments apply to weights and activations
+    to measure the Q8.8 accuracy cost without running integer kernels.
+    """
+    return dequantize(quantize(x, frac_bits), frac_bits)
+
+
+def fake_quant_tree(params, frac_bits: int = FRAC_BITS):
+    """Apply :func:`fake_quant` to every leaf of a parameter pytree."""
+    return jax.tree_util.tree_map(lambda p: fake_quant(p, frac_bits), params)
+
+
+def quant_error(x, frac_bits: int = FRAC_BITS) -> float:
+    """Max |x - fake_quant(x)| -- bounded by 1/2^(f+1) within range."""
+    return float(np.max(np.abs(np.asarray(x) - np.asarray(fake_quant(x, frac_bits)))))

@@ -1,0 +1,189 @@
+"""Training / fine-tuning loop for the accuracy experiments (Figs. 8-10).
+
+A deliberately dependency-free trainer (SGD + momentum, cosine decay,
+cross-entropy) sufficient to rank pruning schemes on the synthetic NTU-like
+task.  Supports:
+
+- dense training (baseline accuracy);
+- hybrid-pruned fine-tuning: forward uses the compacted
+  :class:`.pruning.PruningPlan` path, gradients flow only through kept
+  weights;
+- unstructured-pruning fine-tuning (Fig. 8 comparator): a 0/1 mask pytree
+  is re-applied to the weights after every update (lottery-style).
+
+Run as a module for the end-to-end driver (EXPERIMENTS.md SSE2E):
+
+    python -m compile.train --steps 300 --width 0.5
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import pruning
+from .agcn import model as model_mod
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 200
+    batch: int = 64
+    lr: float = 0.05
+    momentum: float = 0.9
+    weight_decay: float = 1e-4
+    num_train: int = 1024
+    num_test: int = 256
+    seed: int = 0
+    log_every: int = 25
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+def accuracy(logits, labels) -> float:
+    return float((jnp.argmax(logits, axis=1) == labels).mean())
+
+
+def _tree_map2(f, a, b):
+    return jax.tree_util.tree_map(f, a, b)
+
+
+def make_update_fn(cfg: model_mod.ModelConfig, tcfg: TrainConfig,
+                   plan: Optional[pruning.PruningPlan] = None,
+                   with_ck: bool = False):
+    """Build a jitted SGD-momentum step closed over the model variant."""
+
+    def loss_fn(params, x, y):
+        logits = model_mod.forward(params, x, cfg, plan=plan, with_ck=with_ck)
+        return cross_entropy(logits, y), logits
+
+    @jax.jit
+    def step(params, vel, x, y, lr):
+        (loss, logits), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, x, y)
+        vel = _tree_map2(
+            lambda v, g: tcfg.momentum * v + g, vel, grads)
+        params = _tree_map2(
+            lambda p, v: p - lr * (v + tcfg.weight_decay * p), params, vel)
+        return params, vel, loss, logits
+
+    return step
+
+
+def train(
+    cfg: model_mod.ModelConfig,
+    tcfg: TrainConfig,
+    *,
+    params: Optional[dict] = None,
+    plan: Optional[pruning.PruningPlan] = None,
+    mask: Optional[dict] = None,
+    with_ck: bool = False,
+    dataset=None,
+    verbose: bool = True,
+) -> tuple[dict, dict]:
+    """Train/fine-tune; returns ``(params, history)``.
+
+    ``mask`` (a pytree of 0/1 arrays matching ``params``) implements the
+    unstructured baseline -- reapplied after each update.
+    """
+    dcfg = data_mod.DataConfig(num_classes=cfg.num_classes,
+                               seq_len=cfg.seq_len)
+    if dataset is None:
+        xtr, ytr = data_mod.generate(dcfg, tcfg.num_train, seed=tcfg.seed)
+        xte, yte = data_mod.generate(dcfg, tcfg.num_test,
+                                     seed=tcfg.seed + 10_000)
+    else:
+        xtr, ytr, xte, yte = dataset
+    if params is None:
+        params = model_mod.init_params(cfg, seed=tcfg.seed)
+    params = jax.tree_util.tree_map(jnp.asarray, params)
+    if mask is not None:
+        params = _tree_map2(lambda p, m: p * m, params, mask)
+    vel = jax.tree_util.tree_map(jnp.zeros_like, params)
+    step_fn = make_update_fn(cfg, tcfg, plan=plan, with_ck=with_ck)
+    eval_fn = jax.jit(lambda p, x: model_mod.forward(
+        p, x, cfg, plan=plan, with_ck=with_ck))
+
+    rng = np.random.default_rng(tcfg.seed)
+    history = {"loss": [], "step": [], "test_acc": None,
+               "train_acc": None, "wall_s": None}
+    t0 = time.time()
+    for it in range(tcfg.steps):
+        idx = rng.integers(0, len(xtr), size=tcfg.batch)
+        lr = tcfg.lr * 0.5 * (1 + np.cos(np.pi * it / tcfg.steps))
+        params, vel, loss, _ = step_fn(
+            params, vel, jnp.asarray(xtr[idx]), jnp.asarray(ytr[idx]),
+            jnp.float32(lr))
+        if mask is not None:
+            params = _tree_map2(lambda p, m: p * m, params, mask)
+        if it % tcfg.log_every == 0 or it == tcfg.steps - 1:
+            history["loss"].append(float(loss))
+            history["step"].append(it)
+            if verbose:
+                print(f"step {it:5d}  loss {float(loss):.4f}  lr {lr:.4f}")
+    history["wall_s"] = time.time() - t0
+
+    def batched_acc(x, y, bs=128):
+        accs, n = 0.0, 0
+        for i in range(0, len(x), bs):
+            lg = eval_fn(params, jnp.asarray(x[i:i + bs]))
+            accs += accuracy(lg, jnp.asarray(y[i:i + bs])) * len(x[i:i + bs])
+            n += len(x[i:i + bs])
+        return accs / n
+
+    history["train_acc"] = batched_acc(xtr[: len(xte)], ytr[: len(xte)])
+    history["test_acc"] = batched_acc(xte, yte)
+    if verbose:
+        print(f"train_acc {history['train_acc']:.4f}  "
+              f"test_acc {history['test_acc']:.4f}  "
+              f"wall {history['wall_s']:.1f}s")
+    return params, history
+
+
+def unstructured_mask(params: dict, rate: float) -> dict:
+    """Global magnitude mask over conv weights (Fig. 8 baseline). BN, FC
+    and graph params stay dense, matching how the paper prunes."""
+    def mk(path, p):
+        name = "/".join(str(k) for k in path)
+        if "w_spatial" in name or "w_temporal" in name:
+            return pruning.unstructured_prune(np.asarray(p), rate)
+        return np.ones_like(np.asarray(p))
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, p: jnp.asarray(mk([getattr(k, "key", getattr(k, "idx", ""))
+                                      for k in kp], p)), params)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--width", type=float, default=0.25)
+    ap.add_argument("--classes", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--out", type=str, default=None,
+                    help="write loss-curve JSON here")
+    args = ap.parse_args()
+    cfg = model_mod.ModelConfig(num_classes=args.classes,
+                                seq_len=args.seq_len,
+                                width_mult=args.width)
+    tcfg = TrainConfig(steps=args.steps, batch=args.batch)
+    _, hist = train(cfg, tcfg)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(hist, f, indent=2)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Two-stream fusion invariants (compile.ensemble)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import ensemble
+
+
+def test_fuse_is_probability_distribution():
+    lj = jnp.asarray([[2.0, 0.0, -1.0]])
+    lb = jnp.asarray([[0.0, 1.0, 0.0]])
+    f = ensemble.fuse_logits(lj, lb)
+    assert np.all(np.asarray(f) >= 0)
+    np.testing.assert_allclose(np.asarray(f).sum(axis=-1), 1.0, atol=1e-6)
+
+
+def test_alpha_one_is_joint_only():
+    lj = jnp.asarray([[5.0, 0.0]])
+    lb = jnp.asarray([[0.0, 5.0]])
+    f1 = ensemble.fuse_logits(lj, lb, alpha=1.0)
+    assert np.argmax(np.asarray(f1)) == 0
+    f0 = ensemble.fuse_logits(lj, lb, alpha=0.0)
+    assert np.argmax(np.asarray(f0)) == 1
+
+
+def test_agreeing_streams_reinforce():
+    lj = jnp.asarray([[1.0, 0.0]])
+    lb = jnp.asarray([[1.0, 0.0]])
+    f = ensemble.fuse_logits(lj, lb)
+    single = jnp.exp(1.0) / (jnp.exp(1.0) + 1.0)
+    np.testing.assert_allclose(float(f[0, 0]), float(single), atol=1e-6)
+    assert float(f[0, 0]) > 0.5

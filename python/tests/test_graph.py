@@ -1,0 +1,83 @@
+"""Skeleton-graph invariants (agcn.graph)."""
+
+import numpy as np
+import pytest
+
+from compile.agcn import graph
+
+
+def test_adjacency_shape_and_symmetry():
+    a = graph.adjacency()
+    assert a.shape == (25, 25)
+    np.testing.assert_array_equal(a, a.T)
+
+
+def test_adjacency_self_loops():
+    a = graph.adjacency()
+    assert np.all(np.diag(a) == 1.0)
+
+
+def test_edge_count():
+    # 24 bones in the 25-joint NTU skeleton
+    a = graph.adjacency()
+    off_diag = a.sum() - 25
+    assert off_diag == 2 * 24
+
+
+def test_graph_is_connected():
+    dist = graph.hop_distance()
+    assert np.all(np.isfinite(dist)), "skeleton must be one component"
+
+
+def test_hop_distance_properties():
+    dist = graph.hop_distance()
+    assert np.all(np.diag(dist) == 0)
+    # neighbours at hop 1
+    for i, j in graph.EDGES:
+        assert dist[i, j] == 1
+
+
+def test_partitions_shape_dtype():
+    p = graph.spatial_partitions()
+    assert p.shape == (graph.K_V, 25, 25)
+    assert p.dtype == np.float32
+
+
+def test_partitions_cover_normalized_adjacency():
+    """Subsets are a disjoint cover of the normalized one-hop adjacency."""
+    p = graph.spatial_partitions().astype(np.float64)
+    total = p.sum(axis=0)
+    a_norm = graph._normalize_digraph(graph.adjacency())
+    dist = graph.hop_distance()
+    expected = np.where(dist <= 1, a_norm, 0.0)
+    np.testing.assert_allclose(total, expected, atol=1e-6)
+
+
+def test_partitions_disjoint():
+    p = graph.spatial_partitions()
+    nz = (p != 0).astype(int).sum(axis=0)
+    assert nz.max() <= 1, "an entry may live in at most one subset"
+
+
+def test_root_subset_contains_self_loops():
+    p = graph.spatial_partitions()
+    assert np.all(np.diag(p[0]) > 0)
+
+
+def test_centripetal_centrifugal_antisymmetry():
+    """If (i<-j) is centripetal then (j<-i) is centrifugal (off-centre)."""
+    p = graph.spatial_partitions()
+    dist = graph.hop_distance()
+    cd = dist[:, graph.CENTER]
+    for i, j in graph.EDGES:
+        if cd[i] == cd[j]:
+            continue
+        near, far = (i, j) if cd[i] < cd[j] else (j, i)
+        # centripetal subset (1): target j farther than source i
+        assert p[1][near, far] > 0
+        assert p[2][far, near] > 0
+
+
+def test_bone_pairs_match_edges():
+    assert graph.bone_pairs() == graph.EDGES
+    assert len(graph.bone_pairs()) == 24

@@ -1,0 +1,212 @@
+"""Pallas kernels vs pure-jnp oracle -- the CORE Layer-1 correctness
+signal, plus hypothesis sweeps over shapes and values."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import pruning
+from compile.kernels import fused_gconv, temporal_conv, quant_matmul, ref
+
+RTOL = 2e-5
+ATOL = 2e-5
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+class TestFusedGconv:
+    def test_matches_ref_basic(self):
+        rng = np.random.default_rng(0)
+        f, g, w = _rand(rng, 64, 25, 16), _rand(rng, 3, 25, 25), \
+            _rand(rng, 3, 16, 24)
+        np.testing.assert_allclose(
+            fused_gconv(f, g, w, block_t=32), ref.fused_gconv(f, g, w),
+            rtol=RTOL, atol=ATOL)
+
+    def test_single_subset(self):
+        rng = np.random.default_rng(1)
+        f, g, w = _rand(rng, 32, 25, 8), _rand(rng, 1, 25, 25), \
+            _rand(rng, 1, 8, 8)
+        np.testing.assert_allclose(
+            fused_gconv(f, g, w, block_t=16), ref.fused_gconv(f, g, w),
+            rtol=RTOL, atol=ATOL)
+
+    def test_identity_graph_reduces_to_1x1_conv(self):
+        """With G = I the fused op must equal a plain 1x1 convolution."""
+        rng = np.random.default_rng(2)
+        f, w = _rand(rng, 32, 25, 8), _rand(rng, 1, 8, 16)
+        g = jnp.eye(25, dtype=jnp.float32)[None]
+        out = fused_gconv(f, g, w, block_t=32)
+        np.testing.assert_allclose(
+            out, jnp.einsum("tpi,io->tpo", f, w[0]), rtol=RTOL, atol=ATOL)
+
+    def test_channel_pruning_equivalence(self):
+        """Compacting kept channels == zeroing dropped channels (the
+        dataflow-reorganization guarantee, eq. 5)."""
+        rng = np.random.default_rng(3)
+        f, g, w = _rand(rng, 32, 25, 16), _rand(rng, 3, 25, 25), \
+            _rand(rng, 3, 16, 8)
+        kept = np.array([0, 2, 5, 9, 11, 15])
+        w_zeroed = np.zeros_like(w)
+        w_zeroed = w_zeroed.at[:, kept, :].set(w[:, kept, :]) \
+            if hasattr(w_zeroed, "at") else w_zeroed
+        wz = jnp.zeros_like(w).at[:, kept, :].set(w[:, kept, :])
+        full = fused_gconv(f, g, wz, block_t=32)
+        compact = fused_gconv(f[:, :, kept], g, w[:, kept, :], block_t=32)
+        np.testing.assert_allclose(full, compact, rtol=RTOL, atol=ATOL)
+
+    def test_rejects_bad_block(self):
+        rng = np.random.default_rng(4)
+        with pytest.raises(ValueError):
+            fused_gconv(_rand(rng, 30, 25, 4), _rand(rng, 3, 25, 25),
+                        _rand(rng, 3, 4, 4), block_t=32)
+
+    def test_jit_composes(self):
+        """Kernels are inference-path ops: they must jit cleanly (autodiff
+        is deliberately unsupported -- training uses the jnp path)."""
+        rng = np.random.default_rng(5)
+        f, g, w = _rand(rng, 32, 25, 8), _rand(rng, 3, 25, 25), \
+            _rand(rng, 3, 8, 8)
+        fn = jax.jit(lambda f: fused_gconv(f, g, w, block_t=32))
+        np.testing.assert_allclose(fn(f), ref.fused_gconv(f, g, w),
+                                   rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        tb=st.sampled_from([8, 16, 32]),
+        nblk=st.integers(1, 3),
+        ic=st.sampled_from([3, 8, 16]),
+        oc=st.sampled_from([8, 16, 24]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, tb, nblk, ic, oc, seed):
+        rng = np.random.default_rng(seed)
+        t = tb * nblk
+        f, g, w = _rand(rng, t, 25, ic), _rand(rng, 3, 25, 25), \
+            _rand(rng, 3, ic, oc)
+        np.testing.assert_allclose(
+            fused_gconv(f, g, w, block_t=tb), ref.fused_gconv(f, g, w),
+            rtol=1e-4, atol=1e-4)
+
+
+class TestTemporalConv:
+    @pytest.mark.parametrize("stride", [1, 2])
+    @pytest.mark.parametrize("scheme_name",
+                             ["dense", "cav-50", "cav-70-1", "cav-75-2"])
+    def test_matches_ref(self, stride, scheme_name):
+        rng = np.random.default_rng(0)
+        scheme = pruning.CAVITY_SCHEMES[scheme_name]
+        f = _rand(rng, 64, 25, 12)
+        w = _rand(rng, 9, 12, 16)
+        out = temporal_conv(f, w, scheme, stride=stride, block_t=16)
+        exp = ref.temporal_conv(f, w, scheme.as_array(), stride=stride)
+        np.testing.assert_allclose(out, exp, rtol=RTOL, atol=ATOL)
+
+    def test_pruned_taps_do_not_contribute(self):
+        """Corrupting weights at pruned taps must not change the output."""
+        rng = np.random.default_rng(1)
+        scheme = pruning.CAV_70_1
+        f = _rand(rng, 32, 25, 8)
+        w = np.asarray(_rand(rng, 9, 8, 16))
+        w2 = w.copy()
+        mask = scheme.as_array()
+        for oc in range(16):
+            for tap in range(9):
+                if not mask[oc % 8][tap]:
+                    w2[tap, :, oc] = 1e6  # poison pruned positions
+        o1 = temporal_conv(f, jnp.asarray(w), scheme, block_t=16)
+        o2 = temporal_conv(f, jnp.asarray(w2), scheme, block_t=16)
+        np.testing.assert_allclose(o1, o2, rtol=RTOL, atol=ATOL)
+
+    def test_mask_group_assignment(self):
+        """Filter oc uses cavity row oc % 8 (interleaved, not slabs)."""
+        rng = np.random.default_rng(2)
+        scheme = pruning.CAV_70_1
+        f = _rand(rng, 16, 25, 4)
+        w = _rand(rng, 9, 4, 16)
+        out = temporal_conv(f, w, scheme, block_t=16)
+        exp = ref.temporal_conv(f, w, scheme.as_array())
+        np.testing.assert_allclose(out, exp, rtol=RTOL, atol=ATOL)
+
+    def test_rejects_bad_oc(self):
+        rng = np.random.default_rng(3)
+        with pytest.raises(ValueError):
+            temporal_conv(_rand(rng, 16, 25, 4), _rand(rng, 9, 4, 12),
+                          pruning.CAV_70_1, block_t=16)
+
+    def test_rejects_bad_kernel_size(self):
+        rng = np.random.default_rng(4)
+        with pytest.raises(ValueError):
+            temporal_conv(_rand(rng, 16, 25, 4), _rand(rng, 5, 4, 8),
+                          pruning.CAV_70_1, block_t=16)
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        t=st.sampled_from([16, 32, 64]),
+        ic=st.sampled_from([4, 8, 12]),
+        ocg=st.sampled_from([1, 2]),
+        stride=st.sampled_from([1, 2]),
+        scheme_name=st.sampled_from(["cav-50", "cav-67", "cav-70-1"]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, t, ic, ocg, stride, scheme_name, seed):
+        rng = np.random.default_rng(seed)
+        scheme = pruning.CAVITY_SCHEMES[scheme_name]
+        f = _rand(rng, t, 25, ic)
+        w = _rand(rng, 9, ic, 8 * ocg)
+        bt = min(16, t // stride)
+        out = temporal_conv(f, w, scheme, stride=stride, block_t=bt)
+        exp = ref.temporal_conv(f, w, scheme.as_array(), stride=stride)
+        np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-4)
+
+
+class TestQuantMatmul:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(0)
+        xq = jnp.asarray(rng.integers(-3000, 3000, (128, 32)), jnp.int16)
+        wq = jnp.asarray(rng.integers(-3000, 3000, (32, 16)), jnp.int16)
+        np.testing.assert_array_equal(
+            quant_matmul(xq, wq, block_m=64), ref.quant_matmul(xq, wq))
+
+    def test_saturation(self):
+        # 8 * 10000 * 10000 = 8e8 (fits int32); >> 8 = 3.125e6 -> saturate
+        xq = jnp.full((64, 8), 10000, jnp.int16)
+        wq = jnp.full((8, 4), 10000, jnp.int16)
+        out = quant_matmul(xq, wq, block_m=64)
+        assert np.all(np.asarray(out) == 32767)
+
+    def test_negative_saturation(self):
+        xq = jnp.full((64, 8), 10000, jnp.int16)
+        wq = jnp.full((8, 4), -10000, jnp.int16)
+        out = quant_matmul(xq, wq, block_m=64)
+        assert np.all(np.asarray(out) == -32768)
+
+    def test_arithmetic_shift_semantics(self):
+        """-1 >> 8 must be -1 (arithmetic), not 0 (logical/trunc)."""
+        xq = jnp.asarray([[-1]], jnp.int16).repeat(64, 0)
+        wq = jnp.asarray([[1]], jnp.int16)
+        out = quant_matmul(xq, wq, block_m=64)
+        assert np.all(np.asarray(out) == -1)
+
+    def test_rejects_bad_m(self):
+        with pytest.raises(ValueError):
+            quant_matmul(jnp.zeros((30, 8), jnp.int16),
+                         jnp.zeros((8, 4), jnp.int16), block_m=64)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        m=st.sampled_from([64, 128]),
+        k=st.integers(1, 48),
+        n=st.integers(1, 48),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        xq = jnp.asarray(rng.integers(-32768, 32768, (m, k)), jnp.int16)
+        wq = jnp.asarray(rng.integers(-32768, 32768, (k, n)), jnp.int16)
+        np.testing.assert_array_equal(
+            quant_matmul(xq, wq, block_m=64), ref.quant_matmul(xq, wq))

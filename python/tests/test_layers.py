@@ -1,0 +1,151 @@
+"""Layer primitives (agcn.layers): norms, gconv, tconv, shortcut,
+gather/scatter."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import pruning
+from compile.agcn import layers
+from compile.kernels import ref as kref
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+class TestNorms:
+    def test_batch_norm_normalizes(self):
+        rng = np.random.default_rng(0)
+        x = _rand(rng, 8, 16, 25, 4) * 5 + 3
+        y = layers.batch_norm(x, jnp.ones(4), jnp.zeros(4))
+        np.testing.assert_allclose(np.asarray(y).mean(axis=(0, 1, 2)),
+                                   0.0, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(y).std(axis=(0, 1, 2)),
+                                   1.0, atol=1e-3)
+
+    def test_fold_bn_equivalence(self):
+        """affine(x, *fold_bn(...)) == batch_norm with those stats."""
+        rng = np.random.default_rng(1)
+        x = _rand(rng, 8, 16, 25, 4) * 2 + 1
+        scale = np.asarray(_rand(rng, 4)) + 2.0
+        bias = np.asarray(_rand(rng, 4))
+        mean = np.asarray(x).mean(axis=(0, 1, 2))
+        var = np.asarray(x).var(axis=(0, 1, 2))
+        s, b = layers.fold_bn(scale, bias, mean, var)
+        direct = (np.asarray(x) - mean) / np.sqrt(var + layers.EPS) \
+            * scale + bias
+        np.testing.assert_allclose(layers.affine(x, s, b), direct,
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_relu(self):
+        x = jnp.asarray([-1.0, 0.0, 2.0])
+        np.testing.assert_array_equal(layers.relu(x), [0.0, 0.0, 2.0])
+
+
+class TestGconv:
+    def test_matches_einsum_definition(self):
+        rng = np.random.default_rng(0)
+        x, g, w = _rand(rng, 2, 8, 25, 6), _rand(rng, 3, 25, 25), \
+            _rand(rng, 3, 6, 10)
+        out = layers.gconv(x, g, w)
+        exp = jnp.einsum("ntpi,kpw,kio->ntwo", x, g, w)
+        np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-5)
+
+    def test_kernel_path_matches(self):
+        rng = np.random.default_rng(1)
+        x, g, w = _rand(rng, 2, 16, 25, 8), _rand(rng, 3, 25, 25), \
+            _rand(rng, 3, 8, 8)
+        np.testing.assert_allclose(
+            layers.gconv(x, g, w, use_kernels=True),
+            layers.gconv(x, g, w), rtol=1e-4, atol=1e-4)
+
+    def test_kernel_path_pads_ragged_time(self):
+        rng = np.random.default_rng(2)
+        x, g, w = _rand(rng, 3, 10, 25, 4), _rand(rng, 3, 25, 25), \
+            _rand(rng, 3, 4, 4)  # 30 rows, not a multiple of 32
+        np.testing.assert_allclose(
+            layers.gconv(x, g, w, use_kernels=True),
+            layers.gconv(x, g, w), rtol=1e-4, atol=1e-4)
+
+    def test_per_sample_graph_variant(self):
+        rng = np.random.default_rng(3)
+        x, w = _rand(rng, 2, 8, 25, 6), _rand(rng, 3, 6, 10)
+        g = _rand(rng, 2, 3, 25, 25)  # per-sample graphs (C_k path)
+        out = layers.gconv(x, g, w)
+        exp = jnp.einsum("ntpi,nkpw,kio->ntwo", x, g, w)
+        np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-5)
+
+
+class TestSelfSimilarity:
+    def test_rows_softmax_normalized(self):
+        rng = np.random.default_rng(0)
+        x = _rand(rng, 2, 8, 25, 6)
+        c = layers.self_similarity(x, _rand(rng, 6, 4), _rand(rng, 6, 4))
+        assert c.shape == (2, 25, 25)
+        np.testing.assert_allclose(np.asarray(c).sum(axis=-1), 1.0,
+                                   atol=1e-5)
+        assert np.all(np.asarray(c) >= 0)
+
+
+class TestTconv:
+    @pytest.mark.parametrize("stride", [1, 2])
+    def test_conv_path_matches_ref_oracle(self, stride):
+        """layers.tconv (native conv) == kernels.ref (einsum taps)."""
+        rng = np.random.default_rng(0)
+        x = _rand(rng, 2, 32, 25, 8)
+        w = _rand(rng, 9, 8, 16)
+        scheme = pruning.CAV_70_1
+        out = layers.tconv(x, w, scheme, stride=stride)
+        exp = jax.vmap(
+            lambda f: kref.temporal_conv(f, w, scheme.as_array(),
+                                         stride=stride))(x)
+        np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-4)
+
+    def test_kernel_path_matches_conv_path(self):
+        rng = np.random.default_rng(1)
+        x = _rand(rng, 2, 32, 25, 8)
+        w = _rand(rng, 9, 8, 16)
+        np.testing.assert_allclose(
+            layers.tconv(x, w, pruning.CAV_50, use_kernels=True),
+            layers.tconv(x, w, pruning.CAV_50), rtol=1e-4, atol=1e-4)
+
+
+class TestShortcut:
+    def test_identity(self):
+        rng = np.random.default_rng(0)
+        x = _rand(rng, 2, 8, 25, 4)
+        np.testing.assert_array_equal(layers.shortcut(x), x)
+
+    def test_stride_subsamples_time(self):
+        rng = np.random.default_rng(1)
+        x = _rand(rng, 2, 8, 25, 4)
+        out = layers.shortcut(x, stride=2)
+        np.testing.assert_array_equal(out, np.asarray(x)[:, ::2])
+
+    def test_projection(self):
+        rng = np.random.default_rng(2)
+        x, w = _rand(rng, 2, 8, 25, 4), _rand(rng, 4, 6)
+        out = layers.shortcut(x, w, stride=2)
+        exp = jnp.einsum("ntvi,io->ntvo", x[:, ::2], w)
+        np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-5)
+
+
+class TestGatherScatter:
+    def test_roundtrip(self):
+        rng = np.random.default_rng(0)
+        x = _rand(rng, 2, 4, 25, 6)
+        kept = np.array([1, 3, 4])
+        g = layers.gather_channels(x, kept)
+        s = layers.scatter_channels(g, kept, 6)
+        np.testing.assert_array_equal(
+            np.asarray(s)[..., kept], np.asarray(x)[..., kept])
+        dropped = [0, 2, 5]
+        assert np.all(np.asarray(s)[..., dropped] == 0)
+
+    def test_gather_shape(self):
+        rng = np.random.default_rng(1)
+        x = _rand(rng, 2, 4, 25, 6)
+        assert layers.gather_channels(x, np.array([0, 5])).shape \
+            == (2, 4, 25, 2)

@@ -1,0 +1,181 @@
+"""Full-model invariants (agcn.model): variants, equivalences, folding,
+save/load."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, pruning
+from compile.agcn import model as M
+
+CFG = M.ModelConfig(num_classes=8, seq_len=32, width_mult=0.25)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=0)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    x, y = data.generate(
+        data.DataConfig(num_classes=8, seq_len=32), 4, seed=0)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+@pytest.fixture(scope="module")
+def plan(params):
+    return M.make_plan(params, CFG, "drop-1", pruning.CAV_70_1)
+
+
+class TestConfig:
+    def test_block_specs_chain(self):
+        specs = CFG.block_specs()
+        assert len(specs) == 10
+        assert specs[0].in_channels == 3
+        for a, b in zip(specs, specs[1:]):
+            assert a.out_channels == b.in_channels
+
+    def test_widths_are_multiples_of_8(self):
+        for s in CFG.block_specs():
+            assert s.out_channels % 8 == 0
+
+    def test_strides_follow_plan(self):
+        specs = CFG.block_specs()
+        assert [s.stride for s in specs] == [1, 1, 1, 1, 2, 1, 1, 2, 1, 1]
+
+    def test_out_seq_len(self):
+        assert CFG.out_seq_len() == 8  # 32 / 2 / 2
+
+    def test_full_width_at_mult_1(self):
+        cfg = M.ModelConfig(width_mult=1.0)
+        assert [s.out_channels for s in cfg.block_specs()] == \
+            M.FULL_CHANNELS
+
+
+class TestForward:
+    def test_logit_shape(self, params, batch):
+        logits = M.forward(params, batch[0], CFG)
+        assert logits.shape == (4, 8)
+        assert np.all(np.isfinite(np.asarray(logits)))
+
+    def test_with_ck_changes_output(self, params, batch):
+        a = M.forward(params, batch[0], CFG)
+        b = M.forward(params, batch[0], CFG, with_ck=True)
+        assert not np.allclose(np.asarray(a), np.asarray(b))
+
+    def test_pruned_forward_finite(self, params, batch, plan):
+        logits = M.forward(params, batch[0], CFG, plan=plan)
+        assert np.all(np.isfinite(np.asarray(logits)))
+
+    def test_kernel_path_equivalence_dense(self, params, batch):
+        a = M.forward(params, batch[0], CFG)
+        b = M.forward(params, batch[0], CFG, use_kernels=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_kernel_path_equivalence_pruned(self, params, batch, plan):
+        a = M.forward(params, batch[0], CFG, plan=plan)
+        b = M.forward(params, batch[0], CFG, plan=plan, use_kernels=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_forward_collect_names_and_shapes(self, params, batch):
+        logits, acts = M.forward_collect(params, batch[0], CFG)
+        assert logits.shape == (4, 8)
+        assert len(acts) == 20  # sconv + tconv per block
+        assert acts[0][0] == "b1.sconv"
+        assert acts[-1][0] == "b10.tconv"
+        for name, a in acts:
+            assert np.all(np.asarray(a) >= 0), "post-ReLU must be >= 0"
+
+    def test_pruned_channels_are_dead(self, params, batch, plan):
+        """Outputs on dropped temporal channels must be exactly zero
+        before the shortcut -- verified via the sconv gather: dropped
+        input channels never affect the result."""
+        x = np.asarray(batch[0]).copy()
+        logits_a = M.forward(params, jnp.asarray(x), CFG, plan=plan)
+        # poison the dropped input channels of block 2 by scaling the
+        # corresponding temporal filters of block 1: they are pruned, so
+        # nothing may change
+        p2 = jax.tree_util.tree_map(np.asarray, params)
+        kept = set(plan.kept_temporal_out[0].tolist())
+        dropped = [c for c in range(CFG.block_specs()[0].out_channels)
+                   if c not in kept]
+        if dropped:
+            p2["blocks"][0]["w_temporal"][:, :, dropped] *= 123.0
+            logits_b = M.forward(p2, jnp.asarray(x), CFG, plan=plan)
+            np.testing.assert_allclose(np.asarray(logits_a),
+                                       np.asarray(logits_b),
+                                       rtol=1e-4, atol=1e-4)
+
+
+class TestCalibrationFold:
+    def test_folded_matches_batchnorm_on_calibration_batch(self, params):
+        x, _ = data.generate(
+            data.DataConfig(num_classes=8, seq_len=32), 16, seed=3)
+        x = jnp.asarray(x)
+        folded = M.calibrate_fold(params, x, CFG)
+        a = M.forward(params, x, CFG)
+        b = M.forward(folded, x, CFG, folded_bn=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-2, atol=5e-2)
+
+    def test_folded_is_deterministic_per_sample(self, params, batch):
+        """Folded BN must not mix batch statistics: single-sample results
+        equal batched results."""
+        x, _ = data.generate(
+            data.DataConfig(num_classes=8, seq_len=32), 8, seed=3)
+        folded = M.calibrate_fold(params, jnp.asarray(x), CFG)
+        full = M.forward(folded, jnp.asarray(x), CFG, folded_bn=True)
+        single = M.forward(folded, jnp.asarray(x[:1]), CFG, folded_bn=True)
+        np.testing.assert_allclose(np.asarray(full)[:1], np.asarray(single),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_fold_with_plan(self, params, plan):
+        x, _ = data.generate(
+            data.DataConfig(num_classes=8, seq_len=32), 8, seed=4)
+        folded = M.calibrate_fold(params, jnp.asarray(x), CFG, plan=plan)
+        out = M.forward(folded, jnp.asarray(x), CFG, plan=plan,
+                        folded_bn=True)
+        assert np.all(np.isfinite(np.asarray(out)))
+
+
+class TestSaveLoad:
+    def test_roundtrip(self, params):
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "p.npz")
+            M.save_params(path, params)
+            loaded = M.load_params(path, CFG)
+        la, lb = jax.tree_util.tree_leaves(params), \
+            jax.tree_util.tree_leaves(loaded)
+        assert len(la) == len(lb)
+        for a, b in zip(la, lb):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestPlanHelpers:
+    def test_make_plan_respects_schedule(self, params):
+        p1 = M.make_plan(params, CFG, "drop-1")
+        p3 = M.make_plan(params, CFG, "drop-3")
+        k1 = sum(len(k) for k in p1.kept_spatial_in)
+        k3 = sum(len(k) for k in p3.kept_spatial_in)
+        assert k3 < k1
+
+    def test_compression_in_paper_band(self, params):
+        """Paper reports 3.0x-8.4x across its design points."""
+        lo = M.compression_ratio(CFG, M.make_plan(params, CFG, "drop-1",
+                                                  pruning.CAV_50))
+        hi = M.compression_ratio(CFG, M.make_plan(params, CFG, "drop-3",
+                                                  pruning.CAV_75_1))
+        assert 2.0 < lo < hi < 12.0
+
+    def test_block_io_shapes_chain(self):
+        io = M.block_io_shapes(CFG, 4)
+        assert io[0][0] == (4, 32, 25, 3)
+        for a, b in zip(io, io[1:]):
+            assert a[1] == b[0]

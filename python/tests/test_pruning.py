@@ -1,0 +1,189 @@
+"""Hybrid-pruning invariants (compile.pruning)."""
+
+import numpy as np
+import pytest
+
+from compile import pruning
+
+
+class TestCavitySchemes:
+    def test_registry_contains_paper_schemes(self):
+        for name in ("cav-50", "cav-67", "cav-70-1", "cav-70-2",
+                     "cav-75-1", "cav-75-2", "dense"):
+            assert name in pruning.CAVITY_SCHEMES
+
+    def test_shapes(self):
+        for s in pruning.CAVITY_SCHEMES.values():
+            assert s.as_array().shape == (8, 9)
+
+    def test_prune_ratios(self):
+        assert pruning.CAV_50.prune_ratio == pytest.approx(0.5)
+        assert pruning.CAV_67.prune_ratio == pytest.approx(2 / 3, abs=0.01)
+        assert pruning.CAV_70_1.prune_ratio == pytest.approx(0.70, abs=0.01)
+        assert pruning.CAV_75_1.prune_ratio == pytest.approx(0.75)
+        assert pruning.DENSE_SCHEME.prune_ratio == 0.0
+
+    def test_matched_compression_pairs(self):
+        """-1/-2 scheme pairs must keep the same weight count so Fig. 10
+        isolates *balance*, not compression."""
+        assert pruning.CAV_70_1.as_array().sum() == \
+            pruning.CAV_70_2.as_array().sum()
+        assert pruning.CAV_75_1.as_array().sum() == \
+            pruning.CAV_75_2.as_array().sum()
+
+    def test_balanced_schemes_have_small_spread(self):
+        # "every weight line in cav-70-1 has two or three sampling chances"
+        cov = pruning.CAV_70_1.tap_coverage()
+        assert set(cov.tolist()) <= {2, 3}
+        assert pruning.CAV_70_1.balance_spread() <= 1
+        assert pruning.CAV_75_1.balance_spread() == 0
+
+    def test_unbalanced_controls_have_larger_spread(self):
+        assert pruning.CAV_70_2.balance_spread() > \
+            pruning.CAV_70_1.balance_spread()
+        assert pruning.CAV_75_2.balance_spread() > \
+            pruning.CAV_75_1.balance_spread()
+
+    def test_kept_taps_consistent_with_masks(self):
+        s = pruning.CAV_70_1
+        for i in range(16):  # wraps mod 8
+            taps = s.kept_taps(i)
+            row = s.masks[i % 8]
+            assert taps == [t for t in range(9) if row[t]]
+
+    def test_every_filter_keeps_at_least_one_tap_in_balanced(self):
+        for s in (pruning.CAV_50, pruning.CAV_67, pruning.CAV_70_1,
+                  pruning.CAV_75_1):
+            for i in range(8):
+                assert len(s.kept_taps(i)) >= 1
+
+    def test_max_taps(self):
+        assert pruning.CAV_70_1.max_taps() == 3
+        assert pruning.DENSE_SCHEME.max_taps() == 9
+
+
+class TestChannelSelection:
+    def test_keeps_largest_magnitude_channels(self):
+        rng = np.random.default_rng(0)
+        w = rng.normal(size=(3, 16, 32)).astype(np.float32)
+        w[:, 3, :] *= 100  # make channel 3 dominant
+        w[:, 7, :] *= 0.001
+        kept = pruning.select_kept_channels(w, 0.25)
+        assert 3 in kept
+        assert 7 not in kept
+        assert len(kept) == 12
+
+    def test_sorted_and_unique(self):
+        rng = np.random.default_rng(1)
+        w = rng.normal(size=(3, 32, 32))
+        kept = pruning.select_kept_channels(w, 0.5)
+        assert np.all(np.diff(kept) > 0)
+
+    def test_zero_drop_keeps_all(self):
+        w = np.ones((3, 8, 8))
+        kept = pruning.select_kept_channels(w, 0.0)
+        np.testing.assert_array_equal(kept, np.arange(8))
+
+    def test_never_drops_everything(self):
+        w = np.ones((3, 4, 4))
+        kept = pruning.select_kept_channels(w, 0.99)
+        assert len(kept) >= 1
+
+    def test_invalid_rate_raises(self):
+        w = np.ones((3, 4, 4))
+        with pytest.raises(ValueError):
+            pruning.select_kept_channels(w, 1.0)
+        with pytest.raises(ValueError):
+            pruning.select_kept_channels(w, -0.1)
+
+
+class TestPlan:
+    def _weights(self, widths, k_v=3, seed=0):
+        rng = np.random.default_rng(seed)
+        ws, ic = [], 3
+        for oc in widths:
+            ws.append(rng.normal(size=(k_v, ic, oc)).astype(np.float32))
+            ic = oc
+        return ws
+
+    def test_coarse_rule_couples_blocks(self):
+        """Temporal filters kept in block l == spatial in-channels kept in
+        block l+1 (paper Fig. 2)."""
+        widths = [16] * 10
+        ws = self._weights(widths)
+        plan = pruning.build_plan(ws, widths, "drop-1")
+        for l in range(9):
+            np.testing.assert_array_equal(
+                plan.kept_temporal_out[l], plan.kept_spatial_in[l + 1])
+
+    def test_block1_never_pruned(self):
+        widths = [16] * 10
+        plan = pruning.build_plan(self._weights(widths), widths, "drop-1")
+        assert len(plan.kept_spatial_in[0]) == 3
+
+    def test_last_temporal_unpruned(self):
+        widths = [16] * 10
+        plan = pruning.build_plan(self._weights(widths), widths, "drop-1")
+        assert len(plan.kept_temporal_out[-1]) == 16
+
+    def test_schedule_mismatch_raises(self):
+        widths = [16] * 3
+        with pytest.raises(ValueError):
+            pruning.build_plan(self._weights(widths), widths, "drop-1")
+
+    def test_graph_skip_ratio_monotone_in_schedule(self):
+        widths = [16] * 10
+        ws = self._weights(widths)
+        ics = [3] + widths[:-1]
+        r = [pruning.build_plan(ws, widths, s).graph_skip_ratio(ics)
+             for s in ("drop-1", "drop-2", "drop-3")]
+        assert r[0] < r[1] < r[2]
+
+    def test_compression_ratio_monotone(self):
+        widths = [16] * 10
+        ws = self._weights(widths)
+        ics = [3] + widths[:-1]
+        ratios = []
+        for s in ("drop-0", "drop-1", "drop-2", "drop-3"):
+            plan = pruning.build_plan(ws, widths, s)
+            ratios.append(pruning.model_compression_ratio(ics, widths, plan))
+        assert ratios[0] < ratios[1] < ratios[2] < ratios[3]
+
+    def test_dense_plan_compression_from_cavity_only(self):
+        widths = [16] * 10
+        ws = self._weights(widths)
+        ics = [3] + widths[:-1]
+        plan = pruning.build_plan(ws, widths, "drop-0",
+                                  cavity=pruning.DENSE_SCHEME)
+        ratio = pruning.model_compression_ratio(ics, widths, plan)
+        assert ratio == pytest.approx(1.0)
+
+
+class TestUnstructured:
+    def test_mask_rate(self):
+        rng = np.random.default_rng(0)
+        w = rng.normal(size=(64, 64))
+        m = pruning.unstructured_prune(w, 0.7)
+        assert (m == 0).mean() == pytest.approx(0.7, abs=0.02)
+
+    def test_keeps_largest(self):
+        w = np.array([[0.1, -5.0], [0.01, 2.0]])
+        m = pruning.unstructured_prune(w, 0.5)
+        assert m[0, 1] == 1 and m[1, 1] == 1
+        assert m[0, 0] == 0 and m[1, 0] == 0
+
+    def test_zero_rate_identity(self):
+        w = np.ones((4, 4))
+        np.testing.assert_array_equal(
+            pruning.unstructured_prune(w, 0.0), np.ones((4, 4)))
+
+
+class TestParamCounts:
+    def test_temporal_param_count_cavity(self):
+        kept = np.arange(16)
+        n = pruning.temporal_param_count(8, kept, pruning.CAV_70_1)
+        # 2 loops of 8 filters, 22 taps per loop, x8 input channels
+        assert n == 22 * 2 * 8
+
+    def test_spatial_param_count(self):
+        assert pruning.spatial_param_count(np.arange(10), 32) == 3 * 10 * 32

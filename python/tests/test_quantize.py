@@ -1,0 +1,60 @@
+"""Q8.8 quantization invariants (compile.quantize)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize as Q
+
+
+def test_roundtrip_exact_on_grid():
+    """Values on the 1/256 grid survive quantization exactly."""
+    x = jnp.asarray([0.0, 1.0, -1.0, 0.5, 127.99609375, -128.0])
+    np.testing.assert_array_equal(Q.dequantize(Q.quantize(x)), x)
+
+
+def test_error_bound_in_range():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(-100, 100, 1000), jnp.float32)
+    err = Q.quant_error(x)
+    assert err <= 0.5 / Q.SCALE + 1e-7
+
+
+def test_saturation():
+    x = jnp.asarray([1e6, -1e6])
+    q = Q.quantize(x)
+    np.testing.assert_array_equal(q, [Q.QMAX, Q.QMIN])
+
+
+def test_fake_quant_idempotent():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.uniform(-10, 10, 100), jnp.float32)
+    once = Q.fake_quant(x)
+    twice = Q.fake_quant(once)
+    np.testing.assert_array_equal(once, twice)
+
+
+def test_fake_quant_tree():
+    tree = {"a": jnp.asarray([0.12345]), "b": [jnp.asarray([1.5])]}
+    out = Q.fake_quant_tree(tree)
+    assert float(out["b"][0][0]) == 1.5           # on-grid survives
+    assert abs(float(out["a"][0]) - 0.12345) <= 0.5 / Q.SCALE
+
+
+def test_dtype():
+    assert Q.quantize(jnp.asarray([1.0])).dtype == jnp.int16
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(-128.0, 127.9, allow_nan=False))
+def test_hypothesis_error_bound(v):
+    err = Q.quant_error(jnp.asarray([v], jnp.float32))
+    assert err <= 0.5 / Q.SCALE + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(Q.QMIN, Q.QMAX))
+def test_hypothesis_int_roundtrip(q):
+    x = Q.dequantize(jnp.asarray([q], jnp.int16))
+    assert int(Q.quantize(x)[0]) == q

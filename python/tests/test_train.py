@@ -1,0 +1,88 @@
+"""Trainer sanity (compile.train): loss decreases, masks hold, pruned
+fine-tune path runs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, pruning, train as T
+from compile.agcn import model as M
+
+CFG = M.ModelConfig(num_classes=4, seq_len=16, width_mult=0.25)
+DCFG = data.DataConfig(num_classes=4, seq_len=16)
+
+
+def _tiny_dataset():
+    xtr, ytr = data.generate(DCFG, 96, seed=0)
+    xte, yte = data.generate(DCFG, 48, seed=1)
+    return xtr, ytr, xte, yte
+
+
+@pytest.fixture(scope="module")
+def trained():
+    tcfg = T.TrainConfig(steps=30, batch=24, log_every=10)
+    return T.train(CFG, tcfg, dataset=_tiny_dataset(), verbose=False)
+
+
+def test_loss_decreases(trained):
+    _, hist = trained
+    assert hist["loss"][-1] < hist["loss"][0]
+
+
+def test_accuracy_above_chance(trained):
+    _, hist = trained
+    assert hist["test_acc"] > 1.5 / CFG.num_classes
+
+
+def test_cross_entropy_matches_manual():
+    logits = jnp.asarray([[2.0, 0.0], [0.0, 3.0]])
+    labels = jnp.asarray([0, 1])
+    expected = -np.mean([
+        2.0 - np.log(np.exp(2.0) + 1.0),
+        3.0 - np.log(np.exp(3.0) + 1.0),
+    ])
+    assert float(T.cross_entropy(logits, labels)) == pytest.approx(
+        expected, abs=1e-5)
+
+
+def test_accuracy_fn():
+    logits = jnp.asarray([[1.0, 0.0], [0.0, 1.0], [1.0, 0.0]])
+    labels = jnp.asarray([0, 1, 1])
+    assert T.accuracy(logits, labels) == pytest.approx(2 / 3)
+
+
+def test_unstructured_mask_rate_and_scope(trained):
+    params, _ = trained
+    mask = T.unstructured_mask(params, 0.6)
+    flat_conv = np.concatenate(
+        [np.asarray(b["w_spatial"]).ravel() for b in mask["blocks"]]
+        + [np.asarray(b["w_temporal"]).ravel() for b in mask["blocks"]])
+    assert (flat_conv == 0).mean() == pytest.approx(0.6, abs=0.05)
+    # graph params stay dense
+    assert np.all(np.asarray(mask["blocks"][0]["bk"]) == 1)
+    # BN/FC leaves stay dense
+    m_fc = np.asarray(mask["fc"]["w"])
+    assert np.all(m_fc == 1)
+
+
+def test_masked_finetune_preserves_zeros(trained):
+    params, _ = trained
+    mask = T.unstructured_mask(params, 0.5)
+    tcfg = T.TrainConfig(steps=5, batch=16, log_every=10)
+    tuned, _ = T.train(CFG, tcfg, params=jax.tree_util.tree_map(
+        np.asarray, params), mask=mask, dataset=_tiny_dataset(),
+        verbose=False)
+    w = np.asarray(tuned["blocks"][3]["w_spatial"])
+    m = np.asarray(mask["blocks"][3]["w_spatial"])
+    assert np.all(w[m == 0] == 0)
+
+
+def test_pruned_finetune_runs(trained):
+    params, _ = trained
+    plan = M.make_plan(params, CFG, "drop-1", pruning.CAV_70_1)
+    tcfg = T.TrainConfig(steps=5, batch=16, log_every=10)
+    _, hist = T.train(CFG, tcfg, params=jax.tree_util.tree_map(
+        np.asarray, params), plan=plan, dataset=_tiny_dataset(),
+        verbose=False)
+    assert np.isfinite(hist["loss"][-1])

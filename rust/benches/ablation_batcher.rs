@@ -1,0 +1,75 @@
+//! Ablation: coordinator batching policy -- latency/throughput/padding
+//! trade-off of the size-or-timeout batcher across wait budgets and
+//! arrival rates.  (The paper's pipeline assumes saturating input; a
+//! deployed system does not, and this quantifies the gap.)
+
+mod common;
+
+use std::time::{Duration, Instant};
+
+use rfc_hypgcn::coordinator::{BatchPolicy, Server};
+use rfc_hypgcn::data::{GenConfig, SkeletonGen};
+use rfc_hypgcn::runtime::Engine;
+
+fn main() {
+    let m = common::manifest_or_exit();
+    let engine = Engine::cpu().expect("engine");
+    println!("== ablation: batch-wait vs latency/throughput/padding ==");
+    println!("wait_ms  rate_fps  fps_out   p50_ms   p99_ms  padding");
+    for (wait_ms, rate) in [
+        (5u64, 40.0f64),
+        (25, 40.0),
+        (100, 40.0),
+        (25, 10.0),
+        (25, 120.0),
+    ] {
+        let server = Server::start(
+            &engine,
+            &m,
+            BatchPolicy {
+                batch_size: m.batch,
+                max_wait: Duration::from_millis(wait_ms),
+                seq_len: m.seq_len,
+            },
+        )
+        .expect("server");
+        let mut gen = SkeletonGen::new(
+            GenConfig {
+                num_classes: m.num_classes,
+                seq_len: m.seq_len,
+                noise: 0.02,
+            },
+            9,
+        );
+        let n = 48;
+        let gap = Duration::from_secs_f64(1.0 / rate);
+        let t0 = Instant::now();
+        let mut rxs = Vec::new();
+        for i in 0..n {
+            rxs.push(server.submit(gen.sample().0));
+            let target = t0 + gap * (i as u32 + 1);
+            if let Some(d) = target.checked_duration_since(Instant::now()) {
+                std::thread::sleep(d);
+            }
+        }
+        for rx in rxs {
+            rx.recv().expect("response");
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let lat = server.metrics.latency_summary();
+        println!(
+            "{:>7}  {:>8.0}  {:>7.2}  {:>7.1}  {:>7.1}  {:>6.1}%",
+            wait_ms,
+            rate,
+            n as f64 / wall,
+            lat.p50_s * 1e3,
+            lat.p99_s * 1e3,
+            server.metrics.padding_fraction() * 100.0,
+        );
+        server.shutdown();
+    }
+    println!(
+        "\nexpected shape: longer waits -> fuller batches (less padding), \
+         higher p50; slow arrivals -> padding dominates"
+    );
+}

@@ -1,0 +1,88 @@
+//! Ablation: RFC design choices (DESIGN.md SSExperiment-index extension).
+//!
+//! Sweeps (a) mini-bank sizing headroom via bucket mixes, (b) bank width
+//! sensitivity through the trace replayer, and (c) dynamic-vs-static
+//! Dyn-Mult-PE sizing across feature sparsity -- quantifying the design
+//! margins the paper fixes by fiat (16-wide banks, 4 mini-banks, eq. 6
+//! DSP allocation).
+
+mod common;
+
+use rfc_hypgcn::runtime::Tensor;
+use rfc_hypgcn::sim::dyn_pe;
+use rfc_hypgcn::sim::trace::{measure_bank_buckets, replay};
+use rfc_hypgcn::util::rng::Rng;
+
+fn sparse_tensor(n: usize, c: usize, sparsity: f64, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let data: Vec<f32> = (0..n * c)
+        .map(|_| {
+            if rng.chance(sparsity) {
+                0.0
+            } else {
+                rng.f32() + 0.01
+            }
+        })
+        .collect();
+    Tensor::new(vec![n, c], data).unwrap()
+}
+
+fn main() {
+    println!("== ablation: RFC storage across trace sparsity ==");
+    println!("sparsity  save_vs_dense  trunc  lossless  rfc_cyc/csc_cyc");
+    for s10 in [2u64, 4, 5, 6, 8] {
+        let s = s10 as f64 / 10.0;
+        let x = sparse_tensor(2048, 64, s, 42 + s10);
+        let r = replay(&x, measure_bank_buckets(&x)).unwrap();
+        println!(
+            "{:>7.1}%  {:>12.2}%  {:>5}  {:>8}  {:>6.3}",
+            s * 100.0,
+            r.saving_vs_dense() * 100.0,
+            r.truncated_lines,
+            r.lossless,
+            r.rfc_cycles as f64 / r.csc_cycles as f64,
+        );
+    }
+
+    println!("\n== ablation: sizing headroom (mis-specified buckets) ==");
+    let x = sparse_tensor(2048, 64, 0.5, 7);
+    let honest = measure_bank_buckets(&x);
+    let optimistic = [0.8, 0.15, 0.05, 0.0];
+    let pessimistic = [0.0, 0.0, 0.0, 1.0];
+    for (name, b) in [
+        ("measured", honest),
+        ("optimistic", optimistic),
+        ("worst-case", pessimistic),
+    ] {
+        let r = replay(&x, b).unwrap();
+        println!(
+            "{:<10} save {:>6.2}%  trunc {:>4}  lossless {}",
+            name,
+            r.saving_vs_dense() * 100.0,
+            r.truncated_lines,
+            r.lossless
+        );
+    }
+
+    println!("\n== ablation: eq.6 DSP sizing vs fixed allocations ==");
+    println!("sparsity  d=eq6   eff_dyn  delay   d=q(static-like)  d=1");
+    let mut rng = Rng::new(11);
+    for s10 in [2u64, 4, 5, 6, 8] {
+        let s = s10 as f64 / 10.0;
+        let q = 3usize;
+        let d6 = dyn_pe::dsp_allocation(q, s).min(q);
+        let a = dyn_pe::simulate(q, d6, 4096, s, 8, &mut rng);
+        let b = dyn_pe::simulate(q, q, 4096, s, 8, &mut rng);
+        let c = dyn_pe::simulate(q, 1, 4096, s, 8, &mut rng);
+        println!(
+            "{:>7.1}%  d={}    {:>6.2}%  {:>5.2}%  eff {:>6.2}%        eff {:>6.2}% delay {:>6.2}%",
+            s * 100.0,
+            d6,
+            a.efficiency() * 100.0,
+            a.delay() * 100.0,
+            b.efficiency() * 100.0,
+            c.efficiency() * 100.0,
+            c.delay() * 100.0,
+        );
+    }
+}

@@ -1,0 +1,69 @@
+//! Shared helpers for the hand-rolled bench harness (offline build: no
+//! criterion in the vendor set; each bench is a `harness = false` binary
+//! that prints the corresponding paper table).
+
+use std::time::Instant;
+
+use rfc_hypgcn::data::{GenConfig, SkeletonGen};
+use rfc_hypgcn::meta::Manifest;
+use rfc_hypgcn::runtime::{Engine, Executable, Tensor};
+use rfc_hypgcn::util::stats::Summary;
+
+/// Load the manifest or explain how to build it.
+pub fn manifest_or_exit() -> Manifest {
+    let dir = Manifest::default_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!(
+                "cannot load artifacts from {}: {e:#}\nrun `make artifacts` first",
+                dir.display()
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Generate a deterministic input batch for a variant.
+pub fn batch_for(m: &Manifest, seq_len: usize, seed: u64) -> Tensor {
+    SkeletonGen::new(
+        GenConfig {
+            num_classes: m.num_classes,
+            seq_len,
+            noise: 0.02,
+        },
+        seed,
+    )
+    .batch(m.batch)
+    .0
+}
+
+/// Time `iters` executions after `warmup` runs; returns per-call summary.
+pub fn time_exe(
+    exe: &Executable,
+    input: &Tensor,
+    warmup: usize,
+    iters: usize,
+) -> Summary {
+    for _ in 0..warmup {
+        exe.run1(&[input.clone()]).expect("warmup run");
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let out = exe.run1(&[input.clone()]).expect("bench run");
+        samples.push(t0.elapsed().as_secs_f64());
+        std::hint::black_box(out);
+    }
+    Summary::of(&samples)
+}
+
+/// Samples/second given a per-batch summary.
+pub fn fps(batch: usize, s: &Summary) -> f64 {
+    batch as f64 / s.mean_s
+}
+
+#[allow(dead_code)]
+pub fn engine() -> Engine {
+    Engine::cpu().expect("PJRT cpu engine")
+}

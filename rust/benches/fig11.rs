@@ -1,0 +1,12 @@
+//! Fig. 11 -- storage cost of three data formats (dense / CSC / RFC)
+//! over the traced per-layer sparsity distributions.
+
+mod common;
+
+use rfc_hypgcn::meta::Manifest;
+use rfc_hypgcn::sim::reports;
+
+fn main() {
+    let m = Manifest::load(&Manifest::default_dir()).ok();
+    print!("{}", reports::fig11(m.as_ref()));
+}

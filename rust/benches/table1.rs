@@ -1,0 +1,60 @@
+//! Table I -- cost of the self-similarity graph C_k: accuracy (from the
+//! Python experiment trace) and measured throughput / power efficiency of
+//! the with-C vs without-C model variants on this testbed.
+
+mod common;
+
+use rfc_hypgcn::util::json::Json;
+
+fn main() {
+    let m = common::manifest_or_exit();
+    let engine = common::engine();
+
+    // accuracy side: written by `python -m compile.experiments table1`
+    let acc = Json::from_file(
+        &m.dir.join("experiments").join("table1_acc.json"),
+    )
+    .ok();
+    let (acc_ck, acc_plain) = match &acc {
+        Some(v) => (
+            v.get("acc_with_ck").and_then(|x| x.as_f64()).unwrap_or(f64::NAN),
+            v.get("acc_without_ck")
+                .and_then(|x| x.as_f64())
+                .unwrap_or(f64::NAN),
+        ),
+        None => (f64::NAN, f64::NAN),
+    };
+
+    let x = common::batch_for(&m, m.seq_len, 42);
+    let ck = engine.load_hlo(&m.hlo_path(&m.model_ck.hlo)).unwrap();
+    let dense = engine.load_hlo(&m.hlo_path(&m.model_dense.hlo)).unwrap();
+    let s_ck = common::time_exe(&ck, &x, 2, 10);
+    let s_plain = common::time_exe(&dense, &x, 2, 10);
+    let fps_ck = common::fps(m.batch, &s_ck);
+    let fps_plain = common::fps(m.batch, &s_plain);
+    // testbed "power efficiency": fps per assumed 65 W CPU package
+    const CPU_W: f64 = 65.0;
+
+    println!("Table I -- computing cost of self-similarity graph C_k");
+    println!("variant          accuracy   throughput      fps/W");
+    println!(
+        "2sAGCN(w/C)      {:>7.2}%   {:>8.2} fps   {:>7.4}",
+        acc_ck * 100.0,
+        fps_ck,
+        fps_ck / CPU_W
+    );
+    println!(
+        "2sAGCN(w/o C)    {:>7.2}%   {:>8.2} fps   {:>7.4}",
+        acc_plain * 100.0,
+        fps_plain,
+        fps_plain / CPU_W
+    );
+    println!(
+        "\nw/o-C speedup: {:.2}x (paper: 98.87/69.38 = 1.43x); \
+         accuracy cost: {:+.2} pts (paper: -0.30)",
+        fps_plain / fps_ck,
+        (acc_plain - acc_ck) * 100.0
+    );
+    println!("timing w/C  : {s_ck}");
+    println!("timing w/o C: {s_plain}");
+}

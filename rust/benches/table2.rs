@@ -1,0 +1,15 @@
+//! Table II -- Dyn-MultPE DSP utilization, working efficiency and max
+//! delay, dynamic vs static scheduling (cycle simulation, eq. 6 sizing).
+
+mod common;
+
+use rfc_hypgcn::meta::Manifest;
+use rfc_hypgcn::sim::reports;
+
+fn main() {
+    let m = Manifest::load(&Manifest::default_dir()).ok();
+    if m.is_none() {
+        eprintln!("(no artifacts: using paper-default sparsity)");
+    }
+    print!("{}", reports::table2(m.as_ref()));
+}

@@ -1,0 +1,12 @@
+//! Table IV -- resource utilization & performance of the mapped
+//! accelerator vs Ding et al. [10] (chip mapping + resource model).
+
+mod common;
+
+use rfc_hypgcn::meta::Manifest;
+use rfc_hypgcn::sim::reports;
+
+fn main() {
+    let m = Manifest::load(&Manifest::default_dir()).ok();
+    print!("{}", reports::table4(m.as_ref()));
+}

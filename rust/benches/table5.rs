@@ -1,0 +1,121 @@
+//! Table V -- throughput comparison: ours vs 2080Ti vs V100 across the
+//! three model variants (original w/C, w/o C, input-skip).
+//!
+//! Three measurement sources, labelled in the output:
+//!  * `ours(sim)`   -- the chip-mapped cycle simulator at paper scale;
+//!  * `ours(cpu)`   -- the real AOT artifacts on this testbed's XLA-CPU
+//!    runtime (shape check: variant ratios must match the paper's);
+//!  * GPU columns   -- roofline models fitted to the paper's measured
+//!    original-model fps (DESIGN.md SSSubstitutions).
+
+mod common;
+
+use rfc_hypgcn::baseline::{paper_gpus, VariantFlops};
+use rfc_hypgcn::meta::Manifest;
+use rfc_hypgcn::model::{dense_macs, ModelConfig};
+use rfc_hypgcn::sim::pipeline::{map_chip, workloads};
+use rfc_hypgcn::sim::reports;
+use rfc_hypgcn::sim::resource::XCKU115;
+use rfc_hypgcn::util::rng::Rng;
+
+fn main() {
+    // ---- paper-scale simulation + rooflines ----
+    let cfg = ModelConfig::paper_full();
+    let dense_flops: u64 =
+        dense_macs(&cfg).iter().map(|m| m.flops()).sum();
+    let flops = VariantFlops::from_dense(dense_flops as f64);
+    let (g2080, v100) = paper_gpus(&flops);
+
+    let specs = cfg.block_specs();
+    let kept_in: Vec<usize> = specs
+        .iter()
+        .enumerate()
+        .map(|(l, s)| if l == 0 { 3 } else { s.in_channels / 2 })
+        .collect();
+    let kept_f: Vec<usize> = (0..specs.len())
+        .map(|l| {
+            if l + 1 < specs.len() {
+                kept_in[l + 1]
+            } else {
+                specs[l].out_channels
+            }
+        })
+        .collect();
+    let manifest = Manifest::load(&Manifest::default_dir()).ok();
+    let sparsities = reports::block_sparsities(manifest.as_ref(), 10);
+    let works = workloads(&cfg, &kept_in, &kept_f, &sparsities);
+    let mut rng = Rng::new(5);
+    let plan = map_chip(
+        &works,
+        &manifest
+            .as_ref()
+            .map(|m| m.cavity.clone())
+            .unwrap_or_else(reports::default_cavity),
+        &XCKU115,
+        3500,
+        &mut rng,
+    );
+    // input-skip halves every stage's work -> ~2x fps
+    let ours = plan.fps() * 2.0; // skip variant is the shipped design
+
+    println!("Table V -- throughput (fps) vs high-end GPUs, paper scale");
+    println!(
+        "           ours(sim)  2080Ti-orig  V100-orig  2080Ti(w/oC)  V100(w/oC)  2080Ti-skip  V100-skip"
+    );
+    println!(
+        "throughput {:>9.2}  {:>11.2}  {:>9.2}  {:>12.2}  {:>10.2}  {:>11.2}  {:>9.2}",
+        ours,
+        g2080.fps(flops.with_ck),
+        v100.fps(flops.with_ck),
+        g2080.fps(flops.without_ck),
+        v100.fps(flops.without_ck),
+        g2080.fps(flops.skip),
+        v100.fps(flops.skip),
+    );
+    println!(
+        "speed-up   {:>9}  {:>11.2}  {:>9.2}  {:>12.2}  {:>10.2}  {:>11.2}  {:>9.2}",
+        "--",
+        ours / g2080.fps(flops.with_ck),
+        ours / v100.fps(flops.with_ck),
+        ours / g2080.fps(flops.without_ck),
+        ours / v100.fps(flops.without_ck),
+        ours / g2080.fps(flops.skip),
+        ours / v100.fps(flops.skip),
+    );
+    println!(
+        "(paper:      271.25        29.53      69.38         45.42       98.87       104.00     199.09)"
+    );
+    println!(
+        "(paper x:                   9.19       3.91          5.97        2.74         2.61       1.36)"
+    );
+
+    // ---- testbed measurement: variant ratio shape check ----
+    if let Some(m) = manifest {
+        let engine = common::engine();
+        println!("\ntestbed (XLA-CPU, batch {}):", m.batch);
+        let mut fps_of = |hlo: &str, seq: usize, label: &str| -> f64 {
+            let exe = engine
+                .load_hlo(&m.hlo_path(hlo))
+                .expect("load variant");
+            let x = common::batch_for(&m, seq, 7);
+            let s = common::time_exe(&exe, &x, 2, 8);
+            let f = common::fps(m.batch, &s);
+            println!("  {label:<14} {f:>8.2} fps   ({s})");
+            f
+        };
+        let f_ck = fps_of(&m.model_ck.hlo.clone(), m.seq_len, "original(w/C)");
+        let f_plain =
+            fps_of(&m.model_dense.hlo.clone(), m.seq_len, "w/o C");
+        let f_pruned =
+            fps_of(&m.model_pruned.hlo.clone(), m.seq_len, "pruned");
+        let f_skip =
+            fps_of(&m.model_skip.hlo.clone(), m.seq_len / 2, "pruned+skip");
+        println!(
+            "  ratios: w/oC vs w/C {:.2}x (paper 1.43x); skip vs w/C {:.2}x \
+             (paper 3.52x); pruned vs w/oC {:.2}x",
+            f_plain / f_ck,
+            f_skip / f_ck,
+            f_pruned / f_plain
+        );
+    }
+}

@@ -1,0 +1,54 @@
+//! Ding et al. [10] comparator (ASICON'19 ST-GCN FPGA accelerator) --
+//! the published Table IV row, plus a single-PE analytical model used for
+//! the speedup sanity check.
+
+/// The published implementation numbers used in the paper's Table IV.
+#[derive(Debug, Clone, Copy)]
+pub struct DingPublished {
+    pub dsp: u32,
+    pub bram: u32,
+    pub lut: u32,
+    pub peak_gops: f64,
+    pub frequency_mhz: f64,
+    pub fps: f64,
+}
+
+pub const DING: DingPublished = DingPublished {
+    dsp: 228,
+    bram: 151,
+    lut: 44_457,
+    peak_gops: 46.0,
+    frequency_mhz: 188.0,
+    fps: 11.99,
+};
+
+impl DingPublished {
+    pub fn dsp_efficiency(&self) -> f64 {
+        self.peak_gops / self.dsp as f64
+    }
+}
+
+/// Single-PE throughput model: one processing element computing the
+/// whole network serially (the design point the paper criticises) --
+/// fps = clock * dsp * 1 MAC / macs_per_sample.
+pub fn single_pe_fps(clock_hz: f64, dsp: u32, macs_per_sample: f64) -> f64 {
+    clock_hz * dsp as f64 / macs_per_sample
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn published_efficiency() {
+        assert!((DING.dsp_efficiency() - 0.2017).abs() < 1e-3);
+    }
+
+    #[test]
+    fn single_pe_is_slow() {
+        // ST-GCN ~ 4 GMAC/sample: 228 DSPs at 188 MHz serial => ~10 fps,
+        // same magnitude as the published 11.99 fps
+        let fps = single_pe_fps(188e6, 228, 4.0e9);
+        assert!((5.0..25.0).contains(&fps), "fps {fps}");
+    }
+}

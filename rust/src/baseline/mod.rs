@@ -1,0 +1,8 @@
+//! Comparator baselines: GPU rooflines (Table V) and the Ding et al. [10]
+//! accelerator (Table IV).
+
+pub mod ding;
+pub mod gpu;
+
+pub use ding::{DingPublished, DING};
+pub use gpu::{paper_gpus, Gpu, VariantFlops};

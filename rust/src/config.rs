@@ -1,0 +1,216 @@
+//! Runtime configuration: layered `key = value` config files (TOML-like
+//! scalars; the offline vendor set has no toml crate), environment
+//! overrides (`RFC_*`), and CLI overrides -- the launcher-grade config
+//! system the serving binary uses.
+//!
+//! Precedence: defaults < config file < environment < CLI flags.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+/// Raw parsed key/value view of a config source.
+#[derive(Debug, Clone, Default)]
+pub struct KvConfig {
+    values: BTreeMap<String, String>,
+}
+
+impl KvConfig {
+    /// Parse a `key = value` file: comments (`#`, `;`), blank lines and
+    /// `[section]` headers (flattened to `section.key`) are supported.
+    pub fn parse(text: &str) -> Result<KvConfig> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected key = value, got {line:?}", lineno + 1);
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let val = v.trim().trim_matches('"').to_string();
+            values.insert(key, val);
+        }
+        Ok(KvConfig { values })
+    }
+
+    pub fn from_file(path: &Path) -> Result<KvConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    /// Merge `other` on top of `self` (other wins).
+    pub fn overlay(&mut self, other: &KvConfig) {
+        for (k, v) in &other.values {
+            self.values.insert(k.clone(), v.clone());
+        }
+    }
+
+    /// Pull `RFC_SECTION_KEY=value` environment overrides: the variable
+    /// `RFC_SERVE_BATCH_WAIT_MS` maps to key `serve.batch_wait_ms`.
+    pub fn overlay_env(&mut self) {
+        for (k, v) in std::env::vars() {
+            if let Some(rest) = k.strip_prefix("RFC_") {
+                let parts: Vec<&str> =
+                    rest.splitn(2, '_').collect();
+                if parts.len() == 2 {
+                    let key = format!(
+                        "{}.{}",
+                        parts[0].to_lowercase(),
+                        parts[1].to_lowercase()
+                    );
+                    self.values.insert(key, v);
+                }
+            }
+        }
+    }
+
+    fn typed<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("config {key} = {v:?}: {e}")),
+        }
+    }
+}
+
+/// Fully-resolved serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub artifacts: PathBuf,
+    pub batch_wait: Duration,
+    pub pipeline_depth: usize,
+    pub variant: String,
+    pub request_noise: f64,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            artifacts: PathBuf::from("artifacts"),
+            batch_wait: Duration::from_millis(20),
+            pipeline_depth: 2,
+            variant: "pruned".into(),
+            request_noise: 0.02,
+            seed: 7,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Resolve from an optional config file + environment.
+    pub fn resolve(path: Option<&Path>) -> Result<ServeConfig> {
+        let mut kv = KvConfig::default();
+        if let Some(p) = path {
+            kv.overlay(&KvConfig::from_file(p)?);
+        }
+        kv.overlay_env();
+        let d = ServeConfig::default();
+        Ok(ServeConfig {
+            artifacts: kv
+                .get("serve.artifacts")
+                .map(PathBuf::from)
+                .unwrap_or(d.artifacts),
+            batch_wait: Duration::from_millis(
+                kv.typed("serve.batch_wait_ms", 20u64)?,
+            ),
+            pipeline_depth: kv.typed("serve.pipeline_depth", d.pipeline_depth)?,
+            variant: kv
+                .get("serve.variant")
+                .unwrap_or(&d.variant)
+                .to_string(),
+            request_noise: kv.typed("serve.request_noise", d.request_noise)?,
+            seed: kv.typed("serve.seed", d.seed)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_comments() {
+        let kv = KvConfig::parse(
+            "# top\nname = base\n[serve]\nbatch_wait_ms = 35\n; c\nvariant = \"skip\"\n",
+        )
+        .unwrap();
+        assert_eq!(kv.get("name"), Some("base"));
+        assert_eq!(kv.get("serve.batch_wait_ms"), Some("35"));
+        assert_eq!(kv.get("serve.variant"), Some("skip"));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(KvConfig::parse("no equals here").is_err());
+        assert!(KvConfig::parse("[unterminated").is_err());
+    }
+
+    #[test]
+    fn overlay_precedence() {
+        let mut base = KvConfig::parse("a = 1\nb = 2").unwrap();
+        let over = KvConfig::parse("b = 3\nc = 4").unwrap();
+        base.overlay(&over);
+        assert_eq!(base.get("a"), Some("1"));
+        assert_eq!(base.get("b"), Some("3"));
+        assert_eq!(base.get("c"), Some("4"));
+    }
+
+    #[test]
+    fn typed_parsing_and_errors() {
+        let kv = KvConfig::parse("x = 12\ny = oops").unwrap();
+        assert_eq!(kv.typed("x", 0usize).unwrap(), 12);
+        assert_eq!(kv.typed("missing", 7usize).unwrap(), 7);
+        assert!(kv.typed::<usize>("y", 0).is_err());
+    }
+
+    #[test]
+    fn serve_config_resolution() {
+        let dir = std::env::temp_dir().join("rfc_cfg_test.conf");
+        std::fs::write(
+            &dir,
+            "[serve]\nbatch_wait_ms = 50\nvariant = skip\nseed = 99\n",
+        )
+        .unwrap();
+        let c = ServeConfig::resolve(Some(&dir)).unwrap();
+        assert_eq!(c.batch_wait, Duration::from_millis(50));
+        assert_eq!(c.variant, "skip");
+        assert_eq!(c.seed, 99);
+        assert_eq!(c.pipeline_depth, 2); // default preserved
+    }
+
+    #[test]
+    fn defaults_without_file() {
+        let c = ServeConfig::resolve(None).unwrap();
+        assert_eq!(c.variant, "pruned");
+    }
+}

@@ -1,0 +1,234 @@
+//! Dynamic batcher: groups incoming requests into fixed-shape batches.
+//!
+//! The AOT artifacts are compiled for a fixed batch size `n`, so the
+//! batcher's policy is: release a batch as soon as `n` requests are
+//! waiting, or when the oldest waiting request has been queued for
+//! `max_wait` (zero-padding the tail) -- the same size-or-timeout policy
+//! vLLM-style routers use, adapted to static shapes.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::model::NUM_JOINTS;
+use crate::runtime::Tensor;
+
+use super::request::{Batch, Request};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// artifact batch size (rows per executable invocation)
+    pub batch_size: usize,
+    /// max time the oldest request may wait before a partial batch ships
+    pub max_wait: Duration,
+    pub seq_len: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            batch_size: 8,
+            max_wait: Duration::from_millis(20),
+            seq_len: 64,
+        }
+    }
+}
+
+/// Pulls requests off `rx` and forms batches; runs on its own thread.
+pub struct Batcher {
+    policy: BatchPolicy,
+    pending: Vec<Request>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher {
+            policy,
+            pending: Vec::new(),
+        }
+    }
+
+    /// Blocking: returns the next batch, or `None` when the channel closed
+    /// and no pending requests remain.
+    pub fn next_batch(&mut self, rx: &Receiver<Request>) -> Option<Batch> {
+        loop {
+            if self.pending.len() >= self.policy.batch_size {
+                return Some(self.form());
+            }
+            let wait = if self.pending.is_empty() {
+                // nothing pending: block until a request shows up
+                match rx.recv() {
+                    Ok(r) => {
+                        self.validate(&r);
+                        self.pending.push(r);
+                        continue;
+                    }
+                    Err(_) => return None,
+                }
+            } else {
+                let oldest = self.pending[0].arrived;
+                let deadline = oldest + self.policy.max_wait;
+                deadline.saturating_duration_since(Instant::now())
+            };
+            if wait.is_zero() {
+                return Some(self.form());
+            }
+            match rx.recv_timeout(wait) {
+                Ok(r) => {
+                    self.validate(&r);
+                    self.pending.push(r);
+                }
+                Err(RecvTimeoutError::Timeout) => return Some(self.form()),
+                Err(RecvTimeoutError::Disconnected) => {
+                    return if self.pending.is_empty() {
+                        None
+                    } else {
+                        Some(self.form())
+                    };
+                }
+            }
+        }
+    }
+
+    fn validate(&self, r: &Request) {
+        debug_assert_eq!(
+            r.clip.len(),
+            3 * self.policy.seq_len * NUM_JOINTS,
+            "request {} clip length mismatch",
+            r.id
+        );
+    }
+
+    fn form(&mut self) -> Batch {
+        let n = self.policy.batch_size;
+        let take = self.pending.len().min(n);
+        let requests: Vec<Request> = self.pending.drain(..take).collect();
+        let row = 3 * self.policy.seq_len * NUM_JOINTS;
+        let mut data = vec![0f32; n * row];
+        for (i, r) in requests.iter().enumerate() {
+            data[i * row..(i + 1) * row].copy_from_slice(&r.clip);
+        }
+        Batch {
+            real: requests.len(),
+            requests,
+            input: Tensor::new(
+                vec![n, 3, self.policy.seq_len, NUM_JOINTS],
+                data,
+            )
+            .expect("batch shape"),
+            formed: Instant::now(),
+        }
+    }
+
+    /// Build one batch directly from requests (test/bench path).
+    pub fn form_from(policy: &BatchPolicy, requests: Vec<Request>) -> Result<Batch> {
+        anyhow::ensure!(
+            requests.len() <= policy.batch_size,
+            "too many requests for one batch"
+        );
+        let mut b = Batcher::new(policy.clone());
+        b.pending = requests;
+        Ok(b.form())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn req(id: u64, seq_len: usize) -> (Request, Receiver<super::super::request::Response>) {
+        let (tx, rx) = channel();
+        (
+            Request {
+                id,
+                clip: vec![id as f32; 3 * seq_len * NUM_JOINTS],
+                seq_len,
+                arrived: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn full_batch_released_immediately() {
+        let policy = BatchPolicy {
+            batch_size: 2,
+            max_wait: Duration::from_secs(10),
+            seq_len: 8,
+        };
+        let (tx, rx) = channel();
+        let mut keep = Vec::new();
+        for i in 0..2 {
+            let (r, rr) = req(i, 8);
+            keep.push(rr);
+            tx.send(r).unwrap();
+        }
+        let mut b = Batcher::new(policy);
+        let start = Instant::now();
+        let batch = b.next_batch(&rx).unwrap();
+        assert!(start.elapsed() < Duration::from_secs(1));
+        assert_eq!(batch.real, 2);
+        assert_eq!(batch.input.shape, vec![2, 3, 8, NUM_JOINTS]);
+    }
+
+    #[test]
+    fn timeout_ships_partial_batch_padded() {
+        let policy = BatchPolicy {
+            batch_size: 4,
+            max_wait: Duration::from_millis(10),
+            seq_len: 8,
+        };
+        let (tx, rx) = channel();
+        let (r, _rr) = req(7, 8);
+        tx.send(r).unwrap();
+        let mut b = Batcher::new(policy);
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.real, 1);
+        assert_eq!(batch.input.shape[0], 4); // padded to artifact batch
+        let row = 3 * 8 * NUM_JOINTS;
+        assert!(batch.input.data[row..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn closed_channel_flushes_then_ends() {
+        let policy = BatchPolicy {
+            batch_size: 4,
+            max_wait: Duration::from_secs(10),
+            seq_len: 8,
+        };
+        let (tx, rx) = channel();
+        let (r, _rr) = req(1, 8);
+        tx.send(r).unwrap();
+        drop(tx);
+        let mut b = Batcher::new(policy);
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.real, 1);
+        assert!(b.next_batch(&rx).is_none());
+    }
+
+    #[test]
+    fn rows_preserve_request_payloads() {
+        let policy = BatchPolicy {
+            batch_size: 3,
+            max_wait: Duration::from_millis(1),
+            seq_len: 4,
+        };
+        let reqs: Vec<Request> = (0..3)
+            .map(|i| {
+                let (r, _rx) = req(i, 4);
+                r
+            })
+            .collect();
+        let batch = Batcher::form_from(&policy, reqs).unwrap();
+        let row = 3 * 4 * NUM_JOINTS;
+        for i in 0..3 {
+            assert!(batch.input.data[i * row..(i + 1) * row]
+                .iter()
+                .all(|&v| v == i as f32));
+        }
+    }
+}

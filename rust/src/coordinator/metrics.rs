@@ -1,0 +1,119 @@
+//! Serving metrics: counters + latency reservoir.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::{percentile, Summary};
+
+/// Shared metrics sink (cheap atomics on the hot path, a mutex-guarded
+/// latency reservoir sampled per response).
+#[derive(Debug)]
+pub struct Metrics {
+    pub requests_in: AtomicU64,
+    pub responses_out: AtomicU64,
+    pub batches: AtomicU64,
+    pub padded_rows: AtomicU64,
+    latencies_s: Mutex<Vec<f64>>,
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            requests_in: AtomicU64::new(0),
+            responses_out: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            padded_rows: AtomicU64::new(0),
+            latencies_s: Mutex::new(Vec::new()),
+            started: Instant::now(),
+        }
+    }
+}
+
+impl Metrics {
+    pub fn record_request(&self) {
+        self.requests_in.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, real: usize, padded_to: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.padded_rows
+            .fetch_add((padded_to - real) as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_response(&self, latency_s: f64) {
+        self.responses_out.fetch_add(1, Ordering::Relaxed);
+        self.latencies_s.lock().unwrap().push(latency_s);
+    }
+
+    /// Completed responses per second since start.
+    pub fn throughput_fps(&self) -> f64 {
+        let n = self.responses_out.load(Ordering::Relaxed) as f64;
+        let dt = self.started.elapsed().as_secs_f64();
+        if dt > 0.0 {
+            n / dt
+        } else {
+            0.0
+        }
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        Summary::of(&self.latencies_s.lock().unwrap())
+    }
+
+    pub fn latency_p99_s(&self) -> f64 {
+        percentile(&self.latencies_s.lock().unwrap(), 99.0)
+    }
+
+    /// Fraction of executed rows that were padding (batching efficiency).
+    pub fn padding_fraction(&self) -> f64 {
+        let pads = self.padded_rows.load(Ordering::Relaxed) as f64;
+        let real = self.responses_out.load(Ordering::Relaxed) as f64;
+        if pads + real > 0.0 {
+            pads / (pads + real)
+        } else {
+            0.0
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} responses={} batches={} fps={:.2} pad={:.1}% lat[{}]",
+            self.requests_in.load(Ordering::Relaxed),
+            self.responses_out.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.throughput_fps(),
+            self.padding_fraction() * 100.0,
+            self.latency_summary(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters() {
+        let m = Metrics::default();
+        m.record_request();
+        m.record_request();
+        m.record_batch(2, 4);
+        m.record_response(0.010);
+        m.record_response(0.020);
+        assert_eq!(m.requests_in.load(Ordering::Relaxed), 2);
+        assert_eq!(m.padded_rows.load(Ordering::Relaxed), 2);
+        assert!((m.padding_fraction() - 0.5).abs() < 1e-12);
+        let s = m.latency_summary();
+        assert_eq!(s.n, 2);
+        assert!((s.mean_s - 0.015).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_smoke() {
+        let m = Metrics::default();
+        m.record_response(0.005);
+        assert!(m.report().contains("responses=1"));
+    }
+}

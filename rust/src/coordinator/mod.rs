@@ -1,0 +1,23 @@
+//! Layer-3 coordinator: the serving-side contribution.
+//!
+//! * [`request`] -- request/response/batch types;
+//! * [`batcher`] -- size-or-timeout dynamic batching to the artifacts'
+//!   fixed batch shape;
+//! * [`pipeline`] -- the layer-pipelined executor over the ten AOT conv
+//!   blocks + head (the software mirror of the paper's on-chip pipeline);
+//! * [`server`] -- intake/delivery threads wiring it together;
+//! * [`metrics`] -- throughput/latency accounting.
+
+pub mod batcher;
+pub mod metrics;
+pub mod pipeline;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::Metrics;
+pub use pipeline::{Pipeline, PipelineHandle};
+pub use request::{Batch, Request, Response};
+pub use router::{RouteInfo, Router, RouterConfig, Variant};
+pub use server::Server;

@@ -1,0 +1,227 @@
+//! The layer-pipelined executor: ten conv-block executables + head,
+//! chained stage-to-stage -- the software analog of the paper's
+//! "all convolutional layers mapped on chip" design.
+//!
+//! Two execution modes:
+//! * [`Pipeline::run_sync`] -- one batch through all stages in the caller's
+//!   thread (equivalence tests, simple CLI inference);
+//! * [`Pipeline::spawn`]    -- one OS thread per stage connected by
+//!   channels, so consecutive batches overlap exactly like the FPGA's
+//!   block pipeline; throughput is set by the slowest stage.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::meta::Manifest;
+use crate::runtime::{Engine, Executable, Tensor};
+
+/// Compiled pipeline stages (10 blocks + head).
+pub struct Pipeline {
+    pub stages: Vec<Arc<Executable>>,
+    pub head: Arc<Executable>,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub num_classes: usize,
+}
+
+/// A unit of work travelling the pipeline with its provenance.
+pub struct Job<Ctx: Send> {
+    pub ctx: Ctx,
+    pub tensor: Tensor,
+    pub entered: Instant,
+}
+
+/// Handle to a spawned pipeline.
+pub struct PipelineHandle<Ctx: Send + 'static> {
+    pub input: SyncSender<Job<Ctx>>,
+    pub output: Receiver<Job<Ctx>>,
+    pub threads: Vec<JoinHandle<()>>,
+}
+
+impl Pipeline {
+    /// Compile every block + the head from the manifest.
+    pub fn load(engine: &Engine, manifest: &Manifest) -> Result<Pipeline> {
+        let mut stages = Vec::with_capacity(manifest.blocks.len());
+        for b in &manifest.blocks {
+            stages.push(
+                engine
+                    .load_hlo(&manifest.hlo_path(&b.hlo))
+                    .with_context(|| format!("loading stage {}", b.hlo))?,
+            );
+        }
+        let head = engine.load_hlo(&manifest.hlo_path(&manifest.head.hlo))?;
+        Ok(Pipeline {
+            stages,
+            head,
+            batch: manifest.batch,
+            seq_len: manifest.seq_len,
+            num_classes: manifest.num_classes,
+        })
+    }
+
+    /// Run one `(N, 3, T, V)` batch through all stages synchronously and
+    /// return `(N, num_classes)` logits.
+    ///
+    /// Block artifacts take `(N, T, V, C)` activations; the first stage's
+    /// input is produced here by transposing the NCHW-ish request layout
+    /// (the full-model artifacts do this inside their HLO instead).
+    pub fn run_sync(&self, input: &Tensor) -> Result<Tensor> {
+        // chain XLA literals stage-to-stage: no host Vec materialization
+        // between blocks (SSPerf L3: two copies saved per boundary)
+        let mut lit = nctv_to_ntvc(input)?.to_literal()?;
+        for (i, stage) in self.stages.iter().enumerate() {
+            lit = stage
+                .run_literal1(&lit)
+                .with_context(|| format!("stage {} failed", i + 1))?;
+        }
+        let out = self.head.run_literal1(&lit).context("head failed")?;
+        Tensor::from_literal(&out)
+    }
+
+    /// Per-stage wall times for one batch (profiling / Table V shape).
+    pub fn time_stages(&self, input: &Tensor) -> Result<Vec<f64>> {
+        let mut times = Vec::with_capacity(self.stages.len() + 1);
+        let mut h = nctv_to_ntvc(input)?;
+        for stage in &self.stages {
+            let t0 = Instant::now();
+            h = stage.run1(&[h])?;
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let t0 = Instant::now();
+        let _ = self.head.run1(&[h])?;
+        times.push(t0.elapsed().as_secs_f64());
+        Ok(times)
+    }
+
+    /// Spawn one thread per stage (10 blocks + head = 11 compute stages);
+    /// returns the input sender and output receiver.  `depth` bounds
+    /// in-flight batches per stage edge (backpressure, mirroring the
+    /// bounded inter-layer buffers the RFC storage provides on chip).
+    pub fn spawn<Ctx: Send + 'static>(
+        self: &Arc<Self>,
+        depth: usize,
+    ) -> PipelineHandle<Ctx> {
+        let n_compute = self.stages.len() + 1; // blocks + head
+        // channel j feeds compute stage j; stage j writes channel j+1.
+        let mut txs: Vec<SyncSender<Job<Ctx>>> = Vec::new();
+        let mut rxs: Vec<Option<Receiver<Job<Ctx>>>> = Vec::new();
+        for _ in 0..=n_compute {
+            let (tx, rx) = sync_channel::<Job<Ctx>>(depth.max(1));
+            txs.push(tx);
+            rxs.push(Some(rx));
+        }
+        let input = txs[0].clone();
+        let output = rxs[n_compute].take().unwrap();
+        let mut threads = Vec::new();
+        for j in 0..n_compute {
+            let rx = rxs[j].take().unwrap();
+            let tx = txs[j + 1].clone();
+            let is_first = j == 0;
+            let is_head = j == n_compute - 1;
+            let exe = if is_head {
+                self.head.clone()
+            } else {
+                self.stages[j].clone()
+            };
+            let label = if is_head {
+                "head".to_string()
+            } else {
+                format!("stage {}", j + 1)
+            };
+            threads.push(std::thread::spawn(move || {
+                for mut job in rx.iter() {
+                    let result = if is_first {
+                        // stage 1 also performs the layout transpose
+                        nctv_to_ntvc(&job.tensor)
+                            .and_then(|h| exe.run1(&[h]))
+                    } else {
+                        exe.run1(&[job.tensor])
+                    };
+                    match result {
+                        Ok(h) => {
+                            job.tensor = h;
+                            if tx.send(job).is_err() {
+                                break; // downstream gone
+                            }
+                        }
+                        Err(e) => eprintln!("{label} error: {e:#}"),
+                    }
+                }
+                // rx closed: dropping tx propagates shutdown downstream
+            }));
+        }
+        drop(txs); // keep only the cloned handles owned by threads/input
+        PipelineHandle {
+            input,
+            output,
+            threads,
+        }
+    }
+}
+
+/// `(N, 3, T, V)` -> `(N, T, V, 3)` layout change for the block pipeline.
+pub fn nctv_to_ntvc(x: &Tensor) -> Result<Tensor> {
+    anyhow::ensure!(x.shape.len() == 4, "expected rank-4, got {:?}", x.shape);
+    let (n, c, t, v) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let mut out = vec![0f32; x.data.len()];
+    for ni in 0..n {
+        for ci in 0..c {
+            for ti in 0..t {
+                let src = ((ni * c + ci) * t + ti) * v;
+                for vi in 0..v {
+                    out[((ni * t + ti) * v + vi) * c + ci] =
+                        x.data[src + vi];
+                }
+            }
+        }
+    }
+    Tensor::new(vec![n, t, v, c], out)
+}
+
+impl<Ctx: Send + 'static> PipelineHandle<Ctx> {
+    /// Close the input and join all stage threads.
+    pub fn shutdown(self) {
+        drop(self.input);
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transpose_layout() {
+        // (1, 2, 2, 3): c-major input
+        let x = Tensor::new(
+            vec![1, 2, 2, 3],
+            (0..12).map(|i| i as f32).collect(),
+        )
+        .unwrap();
+        let y = nctv_to_ntvc(&x).unwrap();
+        assert_eq!(y.shape, vec![1, 2, 3, 2]);
+        // x[n=0, c, t, v] = ((0*2 + c)*2 + t)*3 + v
+        // y[n=0, t, v, c] must equal x[0, c, t, v]
+        for c in 0..2 {
+            for t in 0..2 {
+                for v in 0..3 {
+                    let xi = (c * 2 + t) * 3 + v;
+                    let yi = (t * 3 + v) * 2 + c;
+                    assert_eq!(y.data[yi], x.data[xi]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_rejects_bad_rank() {
+        let x = Tensor::zeros(vec![2, 3]);
+        assert!(nctv_to_ntvc(&x).is_err());
+    }
+}

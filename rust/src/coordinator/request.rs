@@ -1,0 +1,74 @@
+//! Request/response types flowing through the coordinator.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+use crate::runtime::Tensor;
+
+/// A single inference request: one skeleton clip `(3, T, V)`.
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    /// flattened `(3, T, V)` clip
+    pub clip: Vec<f32>,
+    pub seq_len: usize,
+    pub arrived: Instant,
+    /// where to deliver the response
+    pub reply: Sender<Response>,
+}
+
+/// The answer for one request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub predicted: usize,
+    /// end-to-end latency (queue + batch + pipeline), seconds
+    pub latency_s: f64,
+}
+
+impl Response {
+    pub fn from_logits(id: u64, logits: Vec<f32>, arrived: Instant) -> Self {
+        let predicted = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        Response {
+            id,
+            logits,
+            predicted,
+            latency_s: arrived.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+/// A formed batch heading into the pipeline.
+#[derive(Debug)]
+pub struct Batch {
+    pub requests: Vec<Request>,
+    /// `(n, 3, T, V)` stacked input (n == artifact batch; short batches
+    /// are zero-padded and the padding rows discarded on reply)
+    pub input: Tensor,
+    /// number of real (non-padding) rows
+    pub real: usize,
+    pub formed: Instant,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_argmax() {
+        let r = Response::from_logits(
+            3,
+            vec![0.1, 2.0, -1.0],
+            Instant::now(),
+        );
+        assert_eq!(r.predicted, 1);
+        assert_eq!(r.id, 3);
+        assert!(r.latency_s >= 0.0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Variant router: picks which compiled model variant serves a request.
+//!
+//! The accelerated system ships several executables (pruned, pruned +
+//! input-skip, dense fallback); a vLLM-style front door routes each
+//! request by its latency budget and clip length.  Policy:
+//!
+//! * a request whose deadline is tight routes to `Skip` (half the work,
+//!   paper SSVI-A: skip keeps accuracy >= the original's);
+//! * clips already at half temporal resolution route to `Skip` directly
+//!   (the skip artifact's input shape matches them);
+//! * requests demanding reference accuracy route to `Dense`;
+//! * everything else takes the default `Pruned` path.
+
+use std::time::Duration;
+
+/// Routable model variants (mirrors the AOT artifact set).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    Pruned,
+    Skip,
+    Dense,
+}
+
+/// Routing-relevant request attributes.
+#[derive(Debug, Clone, Copy)]
+pub struct RouteInfo {
+    /// frames in the clip
+    pub seq_len: usize,
+    /// client latency budget, if any
+    pub deadline: Option<Duration>,
+    /// client requests reference (unpruned) accuracy
+    pub reference_accuracy: bool,
+}
+
+/// Router configuration.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// the full-rate artifact's expected frames
+    pub full_seq_len: usize,
+    /// deadline below which the skip variant is preferred
+    pub tight_deadline: Duration,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            full_seq_len: 64,
+            tight_deadline: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Stateless routing decision + running distribution stats.
+#[derive(Debug)]
+pub struct Router {
+    pub cfg: RouterConfig,
+    pub routed: [u64; 3],
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig) -> Router {
+        Router {
+            cfg,
+            routed: [0; 3],
+        }
+    }
+
+    pub fn route(&mut self, info: &RouteInfo) -> Variant {
+        let v = self.decide(info);
+        self.routed[match v {
+            Variant::Pruned => 0,
+            Variant::Skip => 1,
+            Variant::Dense => 2,
+        }] += 1;
+        v
+    }
+
+    fn decide(&self, info: &RouteInfo) -> Variant {
+        if info.reference_accuracy {
+            return Variant::Dense;
+        }
+        if info.seq_len <= self.cfg.full_seq_len / 2 {
+            return Variant::Skip;
+        }
+        if let Some(d) = info.deadline {
+            if d <= self.cfg.tight_deadline {
+                return Variant::Skip;
+            }
+        }
+        Variant::Pruned
+    }
+
+    /// Fraction routed to each variant (pruned, skip, dense).
+    pub fn distribution(&self) -> [f64; 3] {
+        let total: u64 = self.routed.iter().sum();
+        if total == 0 {
+            return [0.0; 3];
+        }
+        [
+            self.routed[0] as f64 / total as f64,
+            self.routed[1] as f64 / total as f64,
+            self.routed[2] as f64 / total as f64,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn info(seq: usize, ms: Option<u64>, reference: bool) -> RouteInfo {
+        RouteInfo {
+            seq_len: seq,
+            deadline: ms.map(Duration::from_millis),
+            reference_accuracy: reference,
+        }
+    }
+
+    #[test]
+    fn default_path_is_pruned() {
+        let mut r = Router::new(RouterConfig::default());
+        assert_eq!(r.route(&info(64, None, false)), Variant::Pruned);
+    }
+
+    #[test]
+    fn tight_deadline_takes_skip() {
+        let mut r = Router::new(RouterConfig::default());
+        assert_eq!(r.route(&info(64, Some(10), false)), Variant::Skip);
+        assert_eq!(r.route(&info(64, Some(500), false)), Variant::Pruned);
+    }
+
+    #[test]
+    fn half_rate_clips_take_skip() {
+        let mut r = Router::new(RouterConfig::default());
+        assert_eq!(r.route(&info(32, None, false)), Variant::Skip);
+    }
+
+    #[test]
+    fn reference_accuracy_wins_over_everything() {
+        let mut r = Router::new(RouterConfig::default());
+        assert_eq!(r.route(&info(32, Some(1), true)), Variant::Dense);
+    }
+
+    #[test]
+    fn distribution_tracks() {
+        let mut r = Router::new(RouterConfig::default());
+        r.route(&info(64, None, false));
+        r.route(&info(64, Some(10), false));
+        r.route(&info(64, None, true));
+        r.route(&info(64, None, false));
+        let d = r.distribution();
+        assert!((d[0] - 0.5).abs() < 1e-9);
+        assert!((d[1] - 0.25).abs() < 1e-9);
+        assert!((d[2] - 0.25).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,128 @@
+//! The serving coordinator: request intake -> dynamic batcher -> layer
+//! pipeline -> response delivery, all on std threads (no Python, no async
+//! runtime dependency).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::meta::Manifest;
+use crate::runtime::Engine;
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::Metrics;
+use super::pipeline::{Job, Pipeline};
+use super::request::{Batch, Request, Response};
+
+/// Handle to a running server.
+pub struct Server {
+    submit_tx: Sender<Request>,
+    pub metrics: Arc<Metrics>,
+    pub num_classes: usize,
+    seq_len: usize,
+    next_id: AtomicU64,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the full coordinator over compiled pipeline stages.
+    pub fn start(
+        engine: &Engine,
+        manifest: &Manifest,
+        policy: BatchPolicy,
+    ) -> Result<Server> {
+        let pipeline = Arc::new(Pipeline::load(engine, manifest)?);
+        let metrics = Arc::new(Metrics::default());
+        let (submit_tx, submit_rx) = channel::<Request>();
+        let handle = pipeline.spawn::<Batch>(2);
+        let mut threads = Vec::new();
+
+        // batcher thread: requests -> padded fixed-shape batches
+        {
+            let metrics = metrics.clone();
+            let pipe_in = handle.input.clone();
+            let policy = policy.clone();
+            threads.push(std::thread::spawn(move || {
+                let mut batcher = Batcher::new(policy);
+                while let Some(batch) = batcher.next_batch(&submit_rx) {
+                    metrics.record_batch(batch.real, batch.input.shape[0]);
+                    let tensor = batch.input.clone();
+                    let job = Job {
+                        ctx: batch,
+                        tensor,
+                        entered: Instant::now(),
+                    };
+                    if pipe_in.send(job).is_err() {
+                        break;
+                    }
+                }
+                // dropping pipe_in shuts the pipeline down
+            }));
+        }
+
+        // delivery thread: pipeline output -> per-request responses
+        {
+            let metrics = metrics.clone();
+            let out = handle.output;
+            let num_classes = manifest.num_classes;
+            threads.push(std::thread::spawn(move || {
+                for job in out.iter() {
+                    let batch: Batch = job.ctx;
+                    let logits = &job.tensor;
+                    debug_assert_eq!(logits.shape[1], num_classes);
+                    for (i, req) in batch.requests.into_iter().enumerate() {
+                        let row = logits.data
+                            [i * num_classes..(i + 1) * num_classes]
+                            .to_vec();
+                        let resp =
+                            Response::from_logits(req.id, row, req.arrived);
+                        metrics.record_response(resp.latency_s);
+                        let _ = req.reply.send(resp);
+                    }
+                }
+            }));
+        }
+
+        // keep the stage threads joinable through the server handle
+        threads.extend(handle.threads);
+        let _ = handle.input; // dropped here; batcher holds its own clone
+
+        Ok(Server {
+            submit_tx,
+            metrics,
+            num_classes: manifest.num_classes,
+            seq_len: manifest.seq_len,
+            next_id: AtomicU64::new(0),
+            threads,
+        })
+    }
+
+    /// Submit one clip `(3, T, V)`; returns a receiver for the response.
+    pub fn submit(&self, clip: Vec<f32>) -> Receiver<Response> {
+        let (tx, rx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.metrics.record_request();
+        let req = Request {
+            id,
+            clip,
+            seq_len: self.seq_len,
+            arrived: Instant::now(),
+            reply: tx,
+        };
+        // a closed intake only happens after shutdown(); drop silently.
+        let _ = self.submit_tx.send(req);
+        rx
+    }
+
+    /// Stop accepting requests, drain in-flight work, join all threads.
+    pub fn shutdown(self) {
+        drop(self.submit_tx);
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+}

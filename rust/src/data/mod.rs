@@ -1,0 +1,161 @@
+//! Serving-side synthetic skeleton stream (mirrors `python/compile/data.py`).
+//!
+//! The coordinator needs realistic request payloads without touching
+//! Python: class-conditioned sinusoidal limb motion over the NTU 25-joint
+//! skeleton, shaped `(C=3, T, V=25)` per sample, flattened to the
+//! `(N, 3, T, V)` batches the AOT full-model artifacts expect.
+
+use crate::model::NUM_JOINTS;
+use crate::runtime::Tensor;
+use crate::util::rng::Rng;
+
+/// Five coarse limb groups (0-based NTU joints), matching data.py.
+const LIMBS: [&[usize]; 5] = [
+    &[4, 5, 6, 7, 21, 22],     // left arm
+    &[8, 9, 10, 11, 23, 24],   // right arm
+    &[12, 13, 14, 15],         // left leg
+    &[16, 17, 18, 19],         // right leg
+    &[0, 1, 2, 3, 20],         // torso
+];
+
+/// Generator configuration.
+#[derive(Debug, Clone)]
+pub struct GenConfig {
+    pub num_classes: usize,
+    pub seq_len: usize,
+    pub noise: f64,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        GenConfig {
+            num_classes: 12,
+            seq_len: 64,
+            noise: 0.02,
+        }
+    }
+}
+
+/// Streaming skeleton-sample generator.
+pub struct SkeletonGen {
+    cfg: GenConfig,
+    rng: Rng,
+}
+
+impl SkeletonGen {
+    pub fn new(cfg: GenConfig, seed: u64) -> Self {
+        SkeletonGen {
+            cfg,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// One sample `(3, T, V)` with its class label.
+    pub fn sample(&mut self) -> (Vec<f32>, usize) {
+        let t_len = self.cfg.seq_len;
+        let label = self.rng.below(self.cfg.num_classes);
+        // deterministic per-class program (mirrors data.py's structure)
+        let mut prng = Rng::new(1234 + label as u64);
+        let limb_a = label % LIMBS.len();
+        let limb_b = (label / LIMBS.len() + 1) % LIMBS.len();
+        let freq = 0.5 + 0.35 * (label % 5) as f64 + prng.f64() * 0.1;
+        let amp = 0.10 + 0.04 * (label % 3) as f64;
+        let phase = prng.f64() * std::f64::consts::TAU;
+        let axis = [prng.f64(), prng.f64(), prng.f64()];
+        let axis_sum: f64 = axis.iter().sum();
+        let axis = [axis[0] / axis_sum, axis[1] / axis_sum, axis[2] / axis_sum];
+
+        let mut x = vec![0f32; 3 * t_len * NUM_JOINTS];
+        let theta = self.rng.range_f64(-0.4, 0.4);
+        let scale = self.rng.range_f64(0.9, 1.1);
+        let (cos_t, sin_t) = (theta.cos(), theta.sin());
+        for step in 0..t_len {
+            let tt = step as f64 / t_len as f64 * std::f64::consts::TAU;
+            for j in 0..NUM_JOINTS {
+                let mut pos = [0.02 * (j as f64), 0.01 * (j % 7) as f64, 0.0];
+                for (li, limb) in [limb_a, limb_b].iter().enumerate() {
+                    if let Some(depth) =
+                        LIMBS[*limb].iter().position(|&q| q == j)
+                    {
+                        let a = amp * (1.0 + 0.35 * depth as f64);
+                        let wave = a
+                            * (freq * tt * t_len as f64 / 16.0
+                                + phase
+                                + 0.3 * depth as f64
+                                + li as f64)
+                                .sin();
+                        for ax in 0..3 {
+                            pos[ax] += axis[ax] * wave;
+                        }
+                    }
+                }
+                // global y-rotation + scale + sensor noise
+                let rx = scale * (cos_t * pos[0] + sin_t * pos[2]);
+                let rz = scale * (-sin_t * pos[0] + cos_t * pos[2]);
+                let ry = scale * pos[1];
+                let out = [rx, ry, rz];
+                for ax in 0..3 {
+                    let noisy =
+                        out[ax] + self.rng.normal() * self.cfg.noise;
+                    x[ax * t_len * NUM_JOINTS + step * NUM_JOINTS + j] =
+                        noisy as f32;
+                }
+            }
+        }
+        (x, label)
+    }
+
+    /// A batch tensor `(n, 3, T, V)` plus labels.
+    pub fn batch(&mut self, n: usize) -> (Tensor, Vec<usize>) {
+        let t_len = self.cfg.seq_len;
+        let mut data = Vec::with_capacity(n * 3 * t_len * NUM_JOINTS);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (x, y) = self.sample();
+            data.extend_from_slice(&x);
+            labels.push(y);
+        }
+        (
+            Tensor::new(vec![n, 3, t_len, NUM_JOINTS], data).unwrap(),
+            labels,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_shape() {
+        let mut g = SkeletonGen::new(GenConfig::default(), 0);
+        let (x, y) = g.sample();
+        assert_eq!(x.len(), 3 * 64 * 25);
+        assert!(y < 12);
+    }
+
+    #[test]
+    fn batch_shape() {
+        let mut g = SkeletonGen::new(GenConfig::default(), 0);
+        let (t, labels) = g.batch(4);
+        assert_eq!(t.shape, vec![4, 3, 64, 25]);
+        assert_eq!(labels.len(), 4);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = SkeletonGen::new(GenConfig::default(), 7);
+        let mut b = SkeletonGen::new(GenConfig::default(), 7);
+        assert_eq!(a.sample().0, b.sample().0);
+    }
+
+    #[test]
+    fn motion_nontrivial() {
+        let mut g = SkeletonGen::new(GenConfig::default(), 1);
+        let (x, _) = g.sample();
+        let spread = x.iter().fold((f32::MAX, f32::MIN), |(lo, hi), &v| {
+            (lo.min(v), hi.max(v))
+        });
+        assert!(spread.1 - spread.0 > 0.05);
+    }
+}

@@ -1,0 +1,32 @@
+//! # rfc-hypgcn
+//!
+//! Production-grade reproduction of **RFC-HyPGCN** (Wen et al., 2021): a
+//! runtime sparse-feature-compress accelerator for skeleton-based GCN
+//! action recognition with hybrid pruning.
+//!
+//! Three layers (see `DESIGN.md`):
+//!
+//! 1. **Pallas kernels** (`python/compile/kernels/`, build-time) -- the
+//!    reorganized graph+spatial convolution (paper eq. 5), cavity temporal
+//!    convolution and Q8.8 matmul.
+//! 2. **JAX model** (`python/compile/`, build-time) -- the full 2s-AGCN
+//!    and its pruned/quantized variants, AOT-lowered to HLO text.
+//! 3. **This crate** (request path, no Python) --
+//!    * [`runtime`]: PJRT engine loading the AOT artifacts;
+//!    * [`coordinator`]: request router, dynamic batcher and the
+//!      layer-pipelined block executor;
+//!    * [`sim`]: cycle-level model of the paper's FPGA architecture
+//!      (Mult-PE, Dyn-Mult-PE, RFC compressed storage, resource model)
+//!      regenerating Tables II-IV and Fig. 11;
+//!    * [`baseline`]: GPU roofline + Ding et al. comparators.
+
+pub mod baseline;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod meta;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod util;

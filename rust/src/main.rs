@@ -1,0 +1,286 @@
+//! `rfc-hypgcn` CLI: inference, serving, and accelerator simulation over
+//! the AOT artifacts.  Hand-rolled argument parsing (offline build).
+//!
+//! ```text
+//! rfc-hypgcn infer    [--artifacts DIR] [--variant pruned|dense|ck|skip] [--batches N]
+//! rfc-hypgcn serve    [--artifacts DIR] [--requests N] [--rate FPS] [--batch-wait MS]
+//! rfc-hypgcn simulate [--table2] [--table4] [--fig11] [--all]
+//! rfc-hypgcn report   [--artifacts DIR]
+//! ```
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use rfc_hypgcn::coordinator::{BatchPolicy, Server};
+use rfc_hypgcn::data::{GenConfig, SkeletonGen};
+use rfc_hypgcn::meta::Manifest;
+use rfc_hypgcn::runtime::Engine;
+use rfc_hypgcn::sim;
+
+/// Tiny flag parser: `--key value` and bare `--switch` forms.
+pub struct Args {
+    pub cmd: String,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    fn parse() -> Args {
+        let mut argv = std::env::args().skip(1);
+        let cmd = argv.next().unwrap_or_else(|| "help".into());
+        let rest: Vec<String> = argv.collect();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < rest.len() {
+            let k = rest[i].trim_start_matches("--").to_string();
+            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                flags.push((k, Some(rest[i + 1].clone())));
+                i += 2;
+            } else {
+                flags.push((k, None));
+                i += 1;
+            }
+        }
+        Args { cmd, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .find(|(k, _)| k == key)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.iter().any(|(k, _)| k == key)
+    }
+
+    fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+            None => Ok(default),
+        }
+    }
+
+    fn artifacts(&self) -> PathBuf {
+        self.get("artifacts")
+            .map(PathBuf::from)
+            .unwrap_or_else(Manifest::default_dir)
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    match args.cmd.as_str() {
+        "infer" => infer(&args),
+        "serve" => serve(&args),
+        "simulate" => simulate(&args),
+        "report" => report(&args),
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{HELP}"),
+    }
+}
+
+const HELP: &str = "\
+rfc-hypgcn -- RFC-HyPGCN accelerator reproduction
+
+USAGE:
+  rfc-hypgcn infer    [--artifacts DIR] [--variant pruned|dense|ck|skip|blocks] [--batches N]
+  rfc-hypgcn serve    [--artifacts DIR] [--requests N] [--rate FPS] [--batch-wait MS]
+  rfc-hypgcn simulate [--table2|--table4|--fig11|--all]
+  rfc-hypgcn report   [--artifacts DIR]";
+
+fn infer(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&args.artifacts())?;
+    let engine = Engine::cpu()?;
+    let variant = args.get("variant").unwrap_or("pruned");
+    let batches = args.usize("batches", 4)?;
+    let seq_len = if variant == "skip" {
+        manifest.seq_len / 2
+    } else {
+        manifest.seq_len
+    };
+    let mut gen = SkeletonGen::new(
+        GenConfig {
+            num_classes: manifest.num_classes,
+            seq_len,
+            noise: 0.02,
+        },
+        42,
+    );
+
+    let t_load = Instant::now();
+    let logits = if variant == "blocks" {
+        let pipeline =
+            rfc_hypgcn::coordinator::Pipeline::load(&engine, &manifest)?;
+        println!(
+            "compiled {} stages in {:.2}s",
+            pipeline.stages.len() + 1,
+            t_load.elapsed().as_secs_f64()
+        );
+        let mut last = None;
+        let t0 = Instant::now();
+        for _ in 0..batches {
+            let (x, _) = gen.batch(manifest.batch);
+            last = Some(pipeline.run_sync(&x)?);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{} batches x {} samples in {:.3}s = {:.2} fps",
+            batches,
+            manifest.batch,
+            dt,
+            (batches * manifest.batch) as f64 / dt
+        );
+        // per-stage profile (perf pass: find the bottleneck stage)
+        let (x, _) = gen.batch(manifest.batch);
+        let times = pipeline.time_stages(&x)?;
+        for (i, t) in times.iter().enumerate() {
+            let label = if i < manifest.blocks.len() {
+                format!("block {:2}", i + 1)
+            } else {
+                "head    ".into()
+            };
+            println!("  {label}  {:8.3} ms", t * 1e3);
+        }
+        last.unwrap()
+    } else {
+        let art = match variant {
+            "pruned" => &manifest.model_pruned,
+            "dense" => &manifest.model_dense,
+            "ck" => &manifest.model_ck,
+            "skip" => &manifest.model_skip,
+            v => bail!("unknown variant {v:?}"),
+        };
+        let exe = engine.load_hlo(&manifest.hlo_path(&art.hlo))?;
+        println!(
+            "compiled {} in {:.2}s",
+            art.hlo,
+            t_load.elapsed().as_secs_f64()
+        );
+        let mut last = None;
+        let t0 = Instant::now();
+        for _ in 0..batches {
+            let (x, _) = gen.batch(manifest.batch);
+            last = Some(exe.run1(&[x])?);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{} batches x {} samples in {:.3}s = {:.2} fps",
+            batches,
+            manifest.batch,
+            dt,
+            (batches * manifest.batch) as f64 / dt
+        );
+        last.unwrap()
+    };
+    println!(
+        "logits shape {:?}; first row: {:?}",
+        logits.shape,
+        &logits.data[..logits.shape[1].min(8)]
+    );
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    // precedence: defaults < --config file < RFC_* env < CLI flags
+    let cfg = rfc_hypgcn::config::ServeConfig::resolve(
+        args.get("config").map(std::path::Path::new),
+    )?;
+    let artifacts = if args.has("artifacts") {
+        args.artifacts()
+    } else {
+        cfg.artifacts.clone()
+    };
+    let manifest = Manifest::load(&artifacts)?;
+    let engine = Engine::cpu()?;
+    let requests = args.usize("requests", 64)?;
+    let wait_ms = args.usize(
+        "batch-wait",
+        cfg.batch_wait.as_millis() as usize,
+    )?;
+    let policy = BatchPolicy {
+        batch_size: manifest.batch,
+        max_wait: std::time::Duration::from_millis(wait_ms as u64),
+        seq_len: manifest.seq_len,
+    };
+    println!("starting coordinator (batch={}, wait={}ms)...",
+             policy.batch_size, wait_ms);
+    let server = Server::start(&engine, &manifest, policy)?;
+    let mut gen = SkeletonGen::new(
+        GenConfig {
+            num_classes: manifest.num_classes,
+            seq_len: manifest.seq_len,
+            noise: 0.02,
+        },
+        7,
+    );
+    let mut rxs = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        let (clip, _) = gen.sample();
+        rxs.push(server.submit(clip));
+    }
+    let mut ok = 0;
+    for rx in rxs {
+        if rx.recv().is_ok() {
+            ok += 1;
+        }
+    }
+    println!("{ok}/{requests} answered");
+    println!("{}", server.metrics.report());
+    server.shutdown();
+    Ok(())
+}
+
+fn simulate(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&args.artifacts()).ok();
+    let all = args.has("all") || (!args.has("table2") && !args.has("table4")
+        && !args.has("fig11"));
+    if args.has("table2") || all {
+        println!("{}", sim::reports::table2(manifest.as_ref()));
+    }
+    if args.has("fig11") || all {
+        println!("{}", sim::reports::fig11(manifest.as_ref()));
+    }
+    if args.has("table4") || all {
+        println!("{}", sim::reports::table4(manifest.as_ref()));
+    }
+    Ok(())
+}
+
+fn report(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&args.artifacts())?;
+    println!("artifacts:        {}", manifest.dir.display());
+    println!("batch:            {}", manifest.batch);
+    println!("seq_len:          {}", manifest.seq_len);
+    println!("schedule:         {}", manifest.schedule);
+    println!("cavity:           {}", manifest.cavity.name);
+    println!("compression:      {:.2}x", manifest.compression_ratio);
+    println!("graph skip:       {:.2}%", manifest.graph_skip_ratio * 100.0);
+    println!(
+        "dense GFLOP/smp:  {:.4}",
+        manifest.total_flops(false) / 1e9
+    );
+    println!(
+        "pruned GFLOP/smp: {:.4}",
+        manifest.total_flops(true) / 1e9
+    );
+    println!("blocks:");
+    for (i, b) in manifest.blocks.iter().enumerate() {
+        println!(
+            "  {:2}: {:>3} -> {:<3} stride {} kept_in {:>3}/{:<3} hlo {}",
+            i + 1,
+            b.in_channels,
+            b.out_channels,
+            b.stride,
+            b.kept_in.len(),
+            b.in_channels,
+            b.hlo
+        );
+    }
+    Ok(())
+}

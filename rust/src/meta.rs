@@ -1,0 +1,266 @@
+//! Typed view of `artifacts/meta.json` -- the contract between the
+//! build-time Python (Layer 1/2) and the Rust runtime/simulator (Layer 3).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One conv block's artifact entry.
+#[derive(Debug, Clone)]
+pub struct BlockMeta {
+    pub hlo: String,
+    pub in_shape: Vec<usize>,  // (N, T, V, C_in)
+    pub out_shape: Vec<usize>, // (N, T', V, C_out)
+    pub in_channels: usize,
+    pub out_channels: usize,
+    pub stride: usize,
+    pub kept_in: Vec<usize>,
+    pub kept_t_out: Vec<usize>,
+}
+
+/// A whole-model artifact entry (dense / ck / pruned / skip / head / quant).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub hlo: String,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+}
+
+/// FLOP breakdown per block (per sample).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BlockFlops {
+    pub graph: f64,
+    pub spatial: f64,
+    pub temporal: f64,
+    pub shortcut: f64,
+    pub total: f64,
+}
+
+/// Per-layer activation sparsity stats (Table III / RFC sizing).
+#[derive(Debug, Clone)]
+pub struct LayerSparsity {
+    pub name: String,
+    pub mean_sparsity: f64,
+    /// fraction of feature vectors in sparsity buckets
+    /// I: [0.75, 1], II: [0.5, 0.75), III: [0.25, 0.5), IV: [0, 0.25)
+    pub buckets: [f64; 4],
+    pub channels: usize,
+}
+
+/// The recurrent cavity scheme (8 masks x 9 taps).
+#[derive(Debug, Clone)]
+pub struct CavityMeta {
+    pub name: String,
+    pub masks: [[bool; 9]; 8],
+}
+
+impl CavityMeta {
+    pub fn kept_taps(&self, filter: usize) -> Vec<usize> {
+        (0..9).filter(|&t| self.masks[filter % 8][t]).collect()
+    }
+
+    pub fn keep_ratio(&self) -> f64 {
+        let kept: usize = self
+            .masks
+            .iter()
+            .map(|m| m.iter().filter(|&&b| b).count())
+            .sum();
+        kept as f64 / 72.0
+    }
+}
+
+/// Everything in meta.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub num_classes: usize,
+    pub num_joints: usize,
+    pub schedule: String,
+    pub cavity: CavityMeta,
+    pub blocks: Vec<BlockMeta>,
+    pub head: ArtifactMeta,
+    pub model_dense: ArtifactMeta,
+    pub model_ck: ArtifactMeta,
+    pub model_pruned: ArtifactMeta,
+    pub model_skip: ArtifactMeta,
+    pub quant_demo: ArtifactMeta,
+    pub flops_dense: Vec<BlockFlops>,
+    pub flops_pruned: Vec<BlockFlops>,
+    pub graph_skip_ratio: f64,
+    pub compression_ratio: f64,
+    pub sparsity: Vec<LayerSparsity>,
+}
+
+fn parse_flops(v: &Json) -> Result<Vec<BlockFlops>> {
+    v.as_arr()?
+        .iter()
+        .map(|row| {
+            Ok(BlockFlops {
+                graph: row.get("graph")?.as_f64()?,
+                spatial: row.get("spatial")?.as_f64()?,
+                temporal: row.get("temporal")?.as_f64()?,
+                shortcut: row.get("shortcut")?.as_f64()?,
+                total: row.get("total")?.as_f64()?,
+            })
+        })
+        .collect()
+}
+
+fn parse_artifact(v: &Json) -> Result<ArtifactMeta> {
+    Ok(ArtifactMeta {
+        hlo: v.get("hlo")?.as_str()?.to_string(),
+        in_shape: v.get("in_shape")?.usize_vec()?,
+        out_shape: v
+            .opt("out_shape")
+            .map(|s| s.usize_vec())
+            .transpose()?
+            .unwrap_or_default(),
+    })
+}
+
+impl Manifest {
+    /// Load `<dir>/meta.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let v = Json::from_file(&dir.join("meta.json"))
+            .context("loading manifest")?;
+
+        let cav = v.get("cavity")?;
+        let mask_strs = cav.get("masks")?.as_arr()?;
+        if mask_strs.len() != 8 {
+            bail!("expected 8 cavity masks, got {}", mask_strs.len());
+        }
+        let mut masks = [[false; 9]; 8];
+        for (i, row) in mask_strs.iter().enumerate() {
+            let s = row.as_str()?;
+            if s.len() != 9 {
+                bail!("cavity mask {i} has length {}", s.len());
+            }
+            for (t, c) in s.chars().enumerate() {
+                masks[i][t] = c == '1';
+            }
+        }
+
+        let blocks = v
+            .get("blocks")?
+            .as_arr()?
+            .iter()
+            .map(|b| {
+                Ok(BlockMeta {
+                    hlo: b.get("hlo")?.as_str()?.to_string(),
+                    in_shape: b.get("in_shape")?.usize_vec()?,
+                    out_shape: b.get("out_shape")?.usize_vec()?,
+                    in_channels: b.get("in_channels")?.as_usize()?,
+                    out_channels: b.get("out_channels")?.as_usize()?,
+                    stride: b.get("stride")?.as_usize()?,
+                    kept_in: b.get("kept_in")?.usize_vec()?,
+                    kept_t_out: b.get("kept_t_out")?.usize_vec()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let arts = v.get("artifacts")?;
+        let sparsity = v
+            .get("sparsity")?
+            .as_obj()?
+            .iter()
+            .map(|(name, s)| {
+                let b = s.get("buckets_I_II_III_IV")?.f64_vec()?;
+                if b.len() != 4 {
+                    bail!("expected 4 sparsity buckets for {name}");
+                }
+                Ok(LayerSparsity {
+                    name: name.clone(),
+                    mean_sparsity: s.get("mean_sparsity")?.as_f64()?,
+                    buckets: [b[0], b[1], b[2], b[3]],
+                    channels: s.get("channels")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            batch: v.get("batch")?.as_usize()?,
+            seq_len: v.get("seq_len")?.as_usize()?,
+            num_classes: v.get("num_classes")?.as_usize()?,
+            num_joints: v.get("num_joints")?.as_usize()?,
+            schedule: v.get("schedule")?.as_str()?.to_string(),
+            cavity: CavityMeta {
+                name: cav.get("name")?.as_str()?.to_string(),
+                masks,
+            },
+            blocks,
+            head: parse_artifact(arts.get("head")?)?,
+            model_dense: parse_artifact(arts.get("model_dense")?)?,
+            model_ck: parse_artifact(arts.get("model_ck")?)?,
+            model_pruned: parse_artifact(arts.get("model_pruned")?)?,
+            model_skip: parse_artifact(arts.get("model_skip")?)?,
+            quant_demo: parse_artifact(arts.get("quant_demo")?)?,
+            flops_dense: parse_flops(v.get("flops")?.get("dense_per_sample")?)?,
+            flops_pruned: parse_flops(
+                v.get("flops")?.get("pruned_per_sample")?,
+            )?,
+            graph_skip_ratio: v.get("graph_skip_ratio")?.as_f64()?,
+            compression_ratio: v.get("compression_ratio")?.as_f64()?,
+            sparsity,
+        })
+    }
+
+    /// Absolute path of an artifact's HLO text file.
+    pub fn hlo_path(&self, rel: &str) -> PathBuf {
+        self.dir.join(rel)
+    }
+
+    /// Total dense / pruned GFLOPs per sample.
+    pub fn total_flops(&self, pruned: bool) -> f64 {
+        let t = if pruned {
+            &self.flops_pruned
+        } else {
+            &self.flops_dense
+        };
+        t.iter().map(|b| b.total).sum()
+    }
+
+    /// Default artifacts directory: `$RFC_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("RFC_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cavity_kept_taps() {
+        let mut masks = [[false; 9]; 8];
+        masks[0][0] = true;
+        masks[0][4] = true;
+        masks[1][2] = true;
+        let c = CavityMeta { name: "t".into(), masks };
+        assert_eq!(c.kept_taps(0), vec![0, 4]);
+        assert_eq!(c.kept_taps(8), vec![0, 4]); // wraps mod 8
+        assert_eq!(c.kept_taps(1), vec![2]);
+        assert!((c.keep_ratio() - 3.0 / 72.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn manifest_load_if_built() {
+        // integration-level check; unit tests must pass without artifacts
+        let dir = Manifest::default_dir();
+        if dir.join("meta.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert_eq!(m.blocks.len(), 10);
+            assert_eq!(m.num_joints, 25);
+            for (a, b) in m.blocks.iter().zip(m.blocks.iter().skip(1)) {
+                assert_eq!(a.out_shape, b.in_shape);
+                assert_eq!(a.kept_t_out, b.kept_in);
+            }
+        }
+    }
+}

@@ -1,0 +1,234 @@
+//! Topology mirror of the 2s-AGCN network: block widths, strides, and
+//! workload (MAC) accounting used by the simulator and benches.
+//!
+//! This intentionally duplicates the Python-side `ModelConfig` maths: the
+//! Rust binary must be able to reason about the network (pipeline
+//! balancing, FLOP accounting, resource mapping) without Python, and the
+//! two sides are cross-checked through `artifacts/meta.json`.
+
+/// Full-size 2s-AGCN output channels per block.
+pub const FULL_CHANNELS: [usize; 10] = [64, 64, 64, 64, 128, 128, 128, 256, 256, 256];
+/// Temporal strides per block.
+pub const FULL_STRIDES: [usize; 10] = [1, 1, 1, 1, 2, 1, 1, 2, 1, 1];
+/// NTU-RGB+D joint count.
+pub const NUM_JOINTS: usize = 25;
+/// Graph partition subsets (k_v).
+pub const K_V: usize = 3;
+/// Temporal kernel size.
+pub const TEMPORAL_K: usize = 9;
+
+/// One block's static hyper-parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockSpec {
+    pub in_channels: usize,
+    pub out_channels: usize,
+    pub stride: usize,
+}
+
+impl BlockSpec {
+    pub fn has_projection(&self) -> bool {
+        self.in_channels != self.out_channels || self.stride != 1
+    }
+}
+
+/// Network-level configuration (mirrors Python `ModelConfig`).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub num_classes: usize,
+    pub seq_len: usize,
+    pub width_mult: f64,
+    pub in_channels: usize,
+    pub num_blocks: usize,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig {
+            num_classes: 12,
+            seq_len: 64,
+            width_mult: 0.25,
+            in_channels: 3,
+            num_blocks: 10,
+        }
+    }
+}
+
+impl ModelConfig {
+    /// The paper's full-size model (T = 300 input frames).
+    pub fn paper_full() -> Self {
+        ModelConfig {
+            num_classes: 60,
+            seq_len: 300,
+            width_mult: 1.0,
+            in_channels: 3,
+            num_blocks: 10,
+        }
+    }
+
+    pub fn block_specs(&self) -> Vec<BlockSpec> {
+        let mut specs = Vec::with_capacity(self.num_blocks);
+        let mut ic = self.in_channels;
+        for i in 0..self.num_blocks {
+            let w = ((FULL_CHANNELS[i] as f64 * self.width_mult) as usize / 8
+                * 8)
+            .max(8);
+            specs.push(BlockSpec {
+                in_channels: ic,
+                out_channels: w,
+                stride: FULL_STRIDES[i],
+            });
+            ic = w;
+        }
+        specs
+    }
+
+    /// Time length entering block `l` (0-based).
+    pub fn seq_len_at(&self, l: usize) -> usize {
+        let mut t = self.seq_len;
+        for s in FULL_STRIDES.iter().take(l) {
+            t = t.div_ceil(*s);
+        }
+        t
+    }
+}
+
+/// MAC counts for one block under optional pruning.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BlockMacs {
+    pub graph: u64,
+    pub spatial: u64,
+    pub temporal: u64,
+    pub shortcut: u64,
+}
+
+impl BlockMacs {
+    pub fn total(&self) -> u64 {
+        self.graph + self.spatial + self.temporal + self.shortcut
+    }
+
+    /// FLOPs = 2 x MACs.
+    pub fn flops(&self) -> u64 {
+        2 * self.total()
+    }
+}
+
+/// MACs for one block per input sample.
+///
+/// * `kept_in`: surviving spatial input channels (dataflow reorg);
+/// * `tap_counts`: kept taps per surviving temporal filter (cavity).
+pub fn block_macs(
+    spec: &BlockSpec,
+    t_in: usize,
+    kept_in: usize,
+    tap_counts: &[usize],
+) -> BlockMacs {
+    let t_out = t_in.div_ceil(spec.stride);
+    let v = NUM_JOINTS as u64;
+    let graph = (K_V * t_in * kept_in) as u64 * v * v;
+    let spatial = (K_V * t_in * kept_in * spec.out_channels) as u64 * v;
+    let temporal = (t_out * spec.out_channels) as u64
+        * v
+        * tap_counts.iter().sum::<usize>() as u64;
+    let shortcut = if spec.has_projection() {
+        (t_out * spec.in_channels * spec.out_channels) as u64 * v
+    } else {
+        0
+    };
+    BlockMacs {
+        graph,
+        spatial,
+        temporal,
+        shortcut,
+    }
+}
+
+/// Dense (unpruned) MACs for a whole model, per sample.
+pub fn dense_macs(cfg: &ModelConfig) -> Vec<BlockMacs> {
+    cfg.block_specs()
+        .iter()
+        .enumerate()
+        .map(|(l, spec)| {
+            block_macs(
+                spec,
+                cfg.seq_len_at(l),
+                spec.in_channels,
+                &vec![TEMPORAL_K; spec.out_channels],
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_chain() {
+        let cfg = ModelConfig::default();
+        let specs = cfg.block_specs();
+        assert_eq!(specs.len(), 10);
+        assert_eq!(specs[0].in_channels, 3);
+        for w in specs.windows(2) {
+            assert_eq!(w[0].out_channels, w[1].in_channels);
+        }
+    }
+
+    #[test]
+    fn paper_full_widths() {
+        let cfg = ModelConfig::paper_full();
+        let specs = cfg.block_specs();
+        assert_eq!(specs[0].out_channels, 64);
+        assert_eq!(specs[9].out_channels, 256);
+        assert_eq!(cfg.seq_len_at(9), 75); // 300 / 2 / 2
+    }
+
+    #[test]
+    fn paper_dense_gflops_magnitude() {
+        // One AGCN stream at T=300 is ~16-17 GFLOPs/sample (ST-GCN is
+        // published at ~16.3; "2s" doubles it across the two streams).
+        let cfg = ModelConfig::paper_full();
+        let total: u64 = dense_macs(&cfg).iter().map(|m| m.flops()).sum();
+        let gflops = total as f64 / 1e9;
+        assert!(
+            (10.0..25.0).contains(&gflops),
+            "unexpected workload {gflops} GFLOP"
+        );
+    }
+
+    #[test]
+    fn graph_share_of_eq3() {
+        // Paper SSIV-A: graph computation ~49.83% of the graph+spatial
+        // workload at full width (V=25 ~ between 64 and 256 channels).
+        let cfg = ModelConfig::paper_full();
+        let macs = dense_macs(&cfg);
+        let g: u64 = macs.iter().map(|m| m.graph).sum();
+        let s: u64 = macs.iter().map(|m| m.spatial).sum();
+        let share = g as f64 / (g + s) as f64;
+        assert!(
+            (0.1..0.5).contains(&share),
+            "graph share {share} out of expected band"
+        );
+    }
+
+    #[test]
+    fn pruning_reduces_macs() {
+        let spec = BlockSpec {
+            in_channels: 64,
+            out_channels: 64,
+            stride: 1,
+        };
+        let dense = block_macs(&spec, 64, 64, &vec![9; 64]);
+        let pruned = block_macs(&spec, 64, 32, &vec![3; 32]);
+        assert!(pruned.total() < dense.total() / 2);
+        // graph work scales exactly with kept input channels
+        assert_eq!(pruned.graph * 2, dense.graph);
+    }
+
+    #[test]
+    fn projection_blocks_have_shortcut_macs() {
+        let cfg = ModelConfig::paper_full();
+        let macs = dense_macs(&cfg);
+        assert!(macs[4].shortcut > 0); // 64 -> 128 stride 2
+        assert_eq!(macs[1].shortcut, 0); // identity block
+    }
+}

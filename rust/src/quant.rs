@@ -1,0 +1,95 @@
+//! Host-side Q8.8 fixed-point helpers (mirror of `python/compile/
+//! quantize.py`), used by the quantized-inference example and benches.
+
+/// Fractional bits of the paper's format (8 integer + 8 fractional).
+pub const FRAC_BITS: u32 = 8;
+pub const SCALE: f32 = 256.0;
+
+/// float -> Q8.8 with round-to-nearest and int16 saturation.
+pub fn quantize(x: f32) -> i16 {
+    let q = (x * SCALE).round();
+    q.clamp(i16::MIN as f32, i16::MAX as f32) as i16
+}
+
+/// Q8.8 -> float.
+pub fn dequantize(q: i16) -> f32 {
+    q as f32 / SCALE
+}
+
+pub fn quantize_slice(xs: &[f32]) -> Vec<i16> {
+    xs.iter().copied().map(quantize).collect()
+}
+
+pub fn dequantize_slice(qs: &[i16]) -> Vec<f32> {
+    qs.iter().copied().map(dequantize).collect()
+}
+
+/// Reference Q8.8 matmul semantics (int32 accumulate, arithmetic shift,
+/// saturate) -- must agree with the AOT `quant_demo` kernel bit-for-bit.
+pub fn quant_matmul_ref(
+    xq: &[i16],
+    wq: &[i16],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<i16> {
+    let mut out = vec![0i16; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc: i32 = 0;
+            for l in 0..k {
+                acc = acc
+                    .wrapping_add(xq[i * k + l] as i32 * wq[l * n + j] as i32);
+            }
+            out[i * n + j] =
+                (acc >> FRAC_BITS).clamp(-32768, 32767) as i16;
+        }
+    }
+    out
+}
+
+/// Max |x - dequantize(quantize(x))| bound inside the representable range.
+pub const MAX_QUANT_ERROR: f32 = 0.5 / SCALE;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_on_grid() {
+        for v in [-128.0f32, -1.5, 0.0, 0.00390625, 1.0, 127.99609375] {
+            assert_eq!(dequantize(quantize(v)), v);
+        }
+    }
+
+    #[test]
+    fn error_bound() {
+        for i in -1000..1000 {
+            let x = i as f32 * 0.017;
+            let err = (x - dequantize(quantize(x))).abs();
+            assert!(err <= MAX_QUANT_ERROR + 1e-7, "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(quantize(1e9), i16::MAX);
+        assert_eq!(quantize(-1e9), i16::MIN);
+    }
+
+    #[test]
+    fn matmul_ref_basic() {
+        // [1.0, 2.0] . [0.5, 0.25]^T in Q8.8
+        let x = quantize_slice(&[1.0, 2.0]);
+        let w = quantize_slice(&[0.5, 0.25]);
+        let out = quant_matmul_ref(&x, &w, 1, 2, 1);
+        assert_eq!(dequantize(out[0]), 1.0);
+    }
+
+    #[test]
+    fn matmul_ref_arithmetic_shift() {
+        // -1 (raw) * 1 (raw) >> 8 must be -1, not 0
+        let out = quant_matmul_ref(&[-1], &[1], 1, 1, 1);
+        assert_eq!(out[0], -1);
+    }
+}

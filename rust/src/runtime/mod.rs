@@ -1,0 +1,148 @@
+//! PJRT runtime: load AOT-compiled HLO text, compile once, execute from
+//! the request path.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `client.compile` -> `execute`).
+//! Python never runs here: the HLO artifacts under `artifacts/` are the
+//! entire model.  One compiled executable per model variant / pipeline
+//! stage, cached for the process lifetime.
+
+pub mod tensor;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+pub use tensor::Tensor;
+
+/// Process-wide PJRT engine with an executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+/// A compiled HLO module ready to run.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+// The underlying PJRT CPU client/executables are internally synchronized;
+// the raw pointers in the xla crate wrappers are what block auto-derive.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Engine {
+    /// Create a CPU PJRT engine.
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine {
+            client: xla::PjRtClient::cpu()
+                .map_err(|e| anyhow!("PJRT cpu client: {e}"))?,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO **text** module (cached by path).
+    pub fn load_hlo(&self, path: &Path) -> Result<Arc<Executable>> {
+        let key = path.display().to_string();
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+        let exe = Arc::new(Executable {
+            exe,
+            name: key.clone(),
+        });
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled modules held in the cache.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+impl Executable {
+    /// Execute with f32 host tensors; returns the tuple elements as host
+    /// tensors (jax modules are lowered with `return_tuple=True`).
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("executing {}: {e}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {}: {e}", self.name))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result of {}: {e}", self.name))?;
+        parts
+            .iter()
+            .map(Tensor::from_literal)
+            .collect::<Result<Vec<_>>>()
+            .context("reading result tensors")
+    }
+
+    /// Single-output convenience wrapper.
+    pub fn run1(&self, inputs: &[Tensor]) -> Result<Tensor> {
+        let mut out = self.run(inputs)?;
+        if out.len() != 1 {
+            anyhow::bail!(
+                "{} returned {} outputs, expected 1",
+                self.name,
+                out.len()
+            );
+        }
+        Ok(out.pop().unwrap())
+    }
+
+    /// Execute literal -> literal without any host `Vec` round-trip:
+    /// the hot path for chaining pipeline stages (perf: saves two host
+    /// copies per stage boundary vs `run`).
+    pub fn run_literal1(&self, input: &xla::Literal) -> Result<xla::Literal> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(std::slice::from_ref(input))
+            .map_err(|e| anyhow!("executing {}: {e}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {}: {e}", self.name))?;
+        lit.to_tuple1()
+            .map_err(|e| anyhow!("untupling result of {}: {e}", self.name))
+    }
+
+    /// Execute with raw literals (e.g. the int16 quant demo).
+    pub fn run_literals(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {}: {e}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {}: {e}", self.name))?;
+        lit.to_tuple()
+            .map_err(|e| anyhow!("untupling result of {}: {e}", self.name))
+    }
+}

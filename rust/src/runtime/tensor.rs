@@ -1,0 +1,140 @@
+//! Host tensors and conversion to/from XLA `Literal`s.
+
+use anyhow::{bail, Result};
+
+/// A dense row-major host tensor of f32 (the serving datapath dtype).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!(
+                "shape {:?} wants {} elements, data has {}",
+                shape,
+                n,
+                data.len()
+            );
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Fraction of exactly-zero elements (activation sparsity).
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().filter(|&&x| x == 0.0).count() as f64
+            / self.data.len() as f64
+    }
+
+    /// Convert to an XLA literal with this tensor's shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    /// Read a literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> =
+            shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Tensor::new(dims, data)
+    }
+
+    /// Split the leading (batch) axis into chunks of at most `chunk`.
+    pub fn split_batch(&self, chunk: usize) -> Vec<Tensor> {
+        let n = self.shape[0];
+        let row: usize = self.shape[1..].iter().product();
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < n {
+            let take = chunk.min(n - i);
+            let mut shape = self.shape.clone();
+            shape[0] = take;
+            out.push(Tensor {
+                shape,
+                data: self.data[i * row..(i + take) * row].to_vec(),
+            });
+            i += take;
+        }
+        out
+    }
+
+    /// Concatenate along the leading axis (shapes must match elsewhere).
+    pub fn concat_batch(parts: &[Tensor]) -> Result<Tensor> {
+        if parts.is_empty() {
+            bail!("concat of zero tensors");
+        }
+        let tail = &parts[0].shape[1..];
+        let mut data = Vec::new();
+        let mut n = 0;
+        for p in parts {
+            if &p.shape[1..] != tail {
+                bail!("ragged concat: {:?} vs {:?}", p.shape, parts[0].shape);
+            }
+            n += p.shape[0];
+            data.extend_from_slice(&p.data);
+        }
+        let mut shape = parts[0].shape.clone();
+        shape[0] = n;
+        Tensor::new(shape, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_len() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn sparsity() {
+        let t = Tensor::new(vec![4], vec![0.0, 1.0, 0.0, 2.0]).unwrap();
+        assert_eq!(t.sparsity(), 0.5);
+    }
+
+    #[test]
+    fn split_and_concat_roundtrip() {
+        let t = Tensor::new(vec![5, 2], (0..10).map(|i| i as f32).collect())
+            .unwrap();
+        let parts = t.split_batch(2);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0].shape, vec![2, 2]);
+        assert_eq!(parts[2].shape, vec![1, 2]);
+        let back = Tensor::concat_batch(&parts).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn concat_rejects_ragged() {
+        let a = Tensor::zeros(vec![1, 2]);
+        let b = Tensor::zeros(vec![1, 3]);
+        assert!(Tensor::concat_batch(&[a, b]).is_err());
+    }
+}

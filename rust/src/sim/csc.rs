@@ -1,0 +1,160 @@
+//! Functional CSC (compressed sparse column) codec -- the baseline format
+//! the paper argues against (Fig. 11 and the access-cycle comparison).
+//!
+//! The cost model lives in [`super::formats`]; this module is the
+//! *functional* counterpart used to cross-validate that both formats are
+//! lossless while exhibiting their access patterns: CSC appends nonzeros
+//! with explicit indices and must be walked serially to reconstruct a
+//! vector, whereas RFC's bank layout loads in one cycle.
+
+/// CSC storage for a stream of fixed-width feature vectors ("columns").
+#[derive(Debug, Clone, Default)]
+pub struct CscStore {
+    pub values: Vec<f32>,
+    pub row_idx: Vec<u16>,
+    /// col_ptr[i]..col_ptr[i+1] spans vector i's nonzeros
+    pub col_ptr: Vec<u32>,
+    pub width: usize,
+}
+
+/// Cycle cost of one CSC operation under the paper's serial-port model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CscAccess {
+    pub cycles: u64,
+}
+
+impl CscStore {
+    pub fn new(width: usize) -> CscStore {
+        CscStore {
+            values: Vec::new(),
+            row_idx: Vec::new(),
+            col_ptr: vec![0],
+            width,
+        }
+    }
+
+    /// Append one vector; encoding walks it serially (one element/cycle).
+    pub fn store(&mut self, v: &[f32]) -> CscAccess {
+        assert_eq!(v.len(), self.width);
+        for (i, &x) in v.iter().enumerate() {
+            if x != 0.0 {
+                self.values.push(x);
+                self.row_idx.push(i as u16);
+            }
+        }
+        self.col_ptr.push(self.values.len() as u32);
+        CscAccess {
+            cycles: self.width as u64,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.col_ptr.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Decode vector `i`; serial: one nonzero per cycle plus pointer read.
+    pub fn load(&self, i: usize) -> Option<(Vec<f32>, CscAccess)> {
+        if i >= self.len() {
+            return None;
+        }
+        let lo = self.col_ptr[i] as usize;
+        let hi = self.col_ptr[i + 1] as usize;
+        let mut out = vec![0f32; self.width];
+        for j in lo..hi {
+            out[self.row_idx[j] as usize] = self.values[j];
+        }
+        Some((
+            out,
+            CscAccess {
+                cycles: (hi - lo) as u64 + 1,
+            },
+        ))
+    }
+
+    /// Bits held (values @16b + indices @16b + pointers @32b).
+    pub fn stored_bits(&self) -> u64 {
+        self.values.len() as u64 * 16
+            + self.row_idx.len() as u64 * 16
+            + self.col_ptr.len() as u64 * 32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::rfc::{decode_bank, encode_bank, BANK_WIDTH};
+    use crate::util::rng::Rng;
+
+    fn vec_with(width: usize, pairs: &[(usize, f32)]) -> Vec<f32> {
+        let mut v = vec![0f32; width];
+        for &(i, x) in pairs {
+            v[i] = x;
+        }
+        v
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut st = CscStore::new(8);
+        let a = vec_with(8, &[(0, 1.0), (7, 2.0)]);
+        let b = vec_with(8, &[(3, -4.0)]);
+        st.store(&a);
+        st.store(&b);
+        assert_eq!(st.load(0).unwrap().0, a);
+        assert_eq!(st.load(1).unwrap().0, b);
+        assert!(st.load(2).is_none());
+    }
+
+    #[test]
+    fn serial_access_cost_scales_with_nnz() {
+        let mut st = CscStore::new(64);
+        let dense: Vec<f32> = (1..=64).map(|i| i as f32).collect();
+        let sparse = vec_with(64, &[(5, 1.0)]);
+        st.store(&dense);
+        st.store(&sparse);
+        let (_, a_dense) = st.load(0).unwrap();
+        let (_, a_sparse) = st.load(1).unwrap();
+        assert_eq!(a_dense.cycles, 65); // paper's ~64-cycle serial decode
+        assert_eq!(a_sparse.cycles, 2);
+    }
+
+    #[test]
+    fn csc_and_rfc_agree_functionally() {
+        // both formats must be lossless over the same random banks
+        let mut rng = Rng::new(42);
+        let mut csc = CscStore::new(BANK_WIDTH);
+        let mut originals = Vec::new();
+        for _ in 0..50 {
+            let s = rng.f64();
+            let bank: Vec<f32> = (0..BANK_WIDTH)
+                .map(|_| {
+                    if rng.chance(s) {
+                        0.0
+                    } else {
+                        rng.f32() + 0.01
+                    }
+                })
+                .collect();
+            csc.store(&bank);
+            originals.push(bank);
+        }
+        for (i, orig) in originals.iter().enumerate() {
+            let (via_csc, _) = csc.load(i).unwrap();
+            let via_rfc = decode_bank(&encode_bank(orig).unwrap()).to_vec();
+            assert_eq!(&via_csc, orig);
+            assert_eq!(&via_rfc, orig);
+        }
+    }
+
+    #[test]
+    fn stored_bits_accounting() {
+        let mut st = CscStore::new(4);
+        st.store(&[1.0, 0.0, 2.0, 0.0]);
+        // 2 values*16 + 2 idx*16 + 2 ptr*32 = 128
+        assert_eq!(st.stored_bits(), 2 * 16 + 2 * 16 + 2 * 32);
+    }
+}

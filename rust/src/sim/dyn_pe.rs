@@ -1,0 +1,229 @@
+//! Dyn-Mult-PE: the TCM's compute unit with waiting queues and dynamic
+//! DSP scheduling (paper SSV-B, eq. 6, Table II).
+//!
+//! One Dyn-Mult-PE owns one *row* of sub-filters: `q` waiting queues, one
+//! per kept (non-pruned) weight of the row, and `d <= q` DSPs.  Each cycle
+//! every queue receives a candidate feature; a Logic-AND of weight mask
+//! and feature hot code drops zero features before enqueue, then the
+//! dynamic scheduler dispatches up to `d` queued MACs to DSPs.
+//! With `d < q` DSPs the PE saves hardware but can fall behind when more
+//! than `d` queues hold work -- the "max delay" column of Table II.
+//!
+//! Eq. 6 gives the expected number of *valid* (nonzero-feature) MACs per
+//! cycle; the DSP count per PE is chosen as its ceiling.
+
+use crate::util::rng::Rng;
+
+/// Expected valid MACs per cycle for a sub-filter row with `q` kept
+/// weights under feature sparsity `s` -- the binomial mean `q * (1 - s)`
+/// (the paper's eq. 6 expands this for q = 6).
+pub fn expected_valid(q: usize, s: f64) -> f64 {
+    q as f64 * (1.0 - s)
+}
+
+/// Paper eq. 6 as printed: `E(D) = 3(1-s)^3 + 3s^2(1-s) + 6s(1-s)^2`.
+/// This is the binomial expectation `sum d*p(d)` for one 3-weight half of
+/// a 6-weight sub-filter, and algebraically equals `3(1-s)` -- the tests
+/// cross-check the expansion against `expected_valid(3, s)`.
+pub fn eq6_expectation(s: f64) -> f64 {
+    3.0 * (1.0 - s).powi(3)
+        + 3.0 * s * s * (1.0 - s)
+        + 6.0 * s * (1.0 - s).powi(2)
+}
+
+/// Choose the DSP count for a PE: ceil of the expectation, at least 1.
+pub fn dsp_allocation(q: usize, s: f64) -> usize {
+    expected_valid(q, s).ceil().max(1.0) as usize
+}
+
+/// Result of simulating one Dyn-Mult-PE over a workload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PeStats {
+    /// cycles the dynamic PE needed
+    pub cycles: u64,
+    /// cycles a static PE (one DSP per queue) would need
+    pub static_cycles: u64,
+    /// valid MACs executed
+    pub macs: u64,
+    /// DSPs in this PE
+    pub dsps: usize,
+    /// queues (kept weights) in this PE
+    pub queues: usize,
+}
+
+impl PeStats {
+    /// Fraction of DSP-cycles doing useful MACs.
+    pub fn efficiency(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.macs as f64 / (self.cycles as f64 * self.dsps as f64)
+    }
+
+    /// Efficiency of the static design (q DSPs, no sharing).
+    pub fn static_efficiency(&self) -> f64 {
+        if self.static_cycles == 0 {
+            return 0.0;
+        }
+        self.macs as f64 / (self.static_cycles as f64 * self.queues as f64)
+    }
+
+    /// Extra latency of dynamic scheduling vs static (>= 0).
+    pub fn delay(&self) -> f64 {
+        if self.static_cycles == 0 {
+            return 0.0;
+        }
+        (self.cycles as f64 - self.static_cycles as f64).max(0.0)
+            / self.static_cycles as f64
+    }
+}
+
+/// Cycle-accurate simulation of one Dyn-Mult-PE.
+///
+/// * `q`: waiting queues (kept weights in the sub-filter row);
+/// * `d`: DSPs;
+/// * `steps`: input feature vectors streamed through (one per cycle of
+///   input arrival);
+/// * `sparsity`: probability a feature element is zero;
+/// * `queue_cap`: waiting-queue depth (backpressure: input stalls when a
+///   queue is full, adding cycles).
+pub fn simulate(
+    q: usize,
+    d: usize,
+    steps: u64,
+    sparsity: f64,
+    queue_cap: usize,
+    rng: &mut Rng,
+) -> PeStats {
+    assert!(q >= 1 && d >= 1 && d <= q);
+    let mut queues = vec![0usize; q]; // occupancy per queue
+    let mut macs = 0u64;
+    let mut cycles = 0u64;
+    let mut fed = 0u64;
+    // static reference: one DSP per queue, drains every cycle; its cycle
+    // count equals the number of input steps (no backlog possible).
+    let static_cycles = steps;
+    while fed < steps || queues.iter().any(|&o| o > 0) {
+        cycles += 1;
+        // feed one feature element to every queue (if input remains and
+        // no queue is saturated -- a full queue stalls the whole input
+        // row, matching a synchronous feature broadcast)
+        if fed < steps && queues.iter().all(|&o| o < queue_cap) {
+            for occ in queues.iter_mut() {
+                if !rng.chance(sparsity) {
+                    *occ += 1; // nonzero feature enqueued
+                }
+            }
+            fed += 1;
+        }
+        // dynamic dispatch: up to d MACs from the most-backlogged queues
+        let mut budget = d;
+        // simple two-pass scheduler: serve nonempty queues round-robin
+        while budget > 0 {
+            let Some(idx) = queues
+                .iter()
+                .enumerate()
+                .filter(|(_, &o)| o > 0)
+                .max_by_key(|(_, &o)| o)
+                .map(|(i, _)| i)
+            else {
+                break;
+            };
+            queues[idx] -= 1;
+            macs += 1;
+            budget -= 1;
+        }
+        // safety valve against pathological parameterizations
+        if cycles > steps * 16 + 64 {
+            break;
+        }
+    }
+    PeStats {
+        cycles,
+        static_cycles,
+        macs,
+        dsps: d,
+        queues: q,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq6_matches_binomial_mean() {
+        // the printed expansion equals the binomial mean 3(1-s) of a
+        // 3-weight half sub-filter
+        for s in [0.0, 0.25, 0.5, 0.75, 0.9] {
+            let lhs = eq6_expectation(s);
+            let rhs = expected_valid(3, s);
+            assert!(
+                (lhs - rhs).abs() < 1e-9,
+                "s={s}: eq6 {lhs} vs binomial {rhs}"
+            );
+        }
+    }
+
+    #[test]
+    fn allocation_shrinks_with_sparsity() {
+        assert_eq!(dsp_allocation(6, 0.0), 6);
+        assert!(dsp_allocation(6, 0.5) <= 3);
+        assert_eq!(dsp_allocation(6, 0.95), 1);
+    }
+
+    #[test]
+    fn dense_input_full_dsp_static() {
+        // s = 0, d = q: every DSP busy every cycle, zero delay
+        let mut rng = Rng::new(0);
+        let st = simulate(4, 4, 1000, 0.0, 8, &mut rng);
+        assert_eq!(st.macs, 4 * 1000);
+        assert!(st.efficiency() > 0.99);
+        assert!(st.delay() < 0.01);
+    }
+
+    #[test]
+    fn dynamic_beats_static_efficiency_under_sparsity() {
+        let mut rng = Rng::new(1);
+        let s = 0.5;
+        let d = dsp_allocation(6, s); // 3 DSPs
+        let dy = simulate(6, d, 4000, s, 8, &mut rng);
+        assert!(
+            dy.efficiency() > dy.static_efficiency() + 0.1,
+            "dyn {:.3} vs static {:.3}",
+            dy.efficiency(),
+            dy.static_efficiency()
+        );
+    }
+
+    #[test]
+    fn delay_small_when_sized_by_expectation() {
+        let mut rng = Rng::new(2);
+        let s = 0.5;
+        let st = simulate(6, dsp_allocation(6, s), 4000, s, 8, &mut rng);
+        assert!(st.delay() < 0.15, "delay {:.3}", st.delay());
+    }
+
+    #[test]
+    fn undersized_pe_accumulates_delay() {
+        let mut rng = Rng::new(3);
+        // 6 queues, dense input, only 2 DSPs: must run ~3x longer
+        let st = simulate(6, 2, 1000, 0.0, 64, &mut rng);
+        assert!(st.delay() > 1.5, "delay {:.3}", st.delay());
+        // but efficiency is perfect: DSPs never idle
+        assert!(st.efficiency() > 0.95);
+    }
+
+    #[test]
+    fn all_macs_eventually_execute() {
+        let mut rng = Rng::new(4);
+        let st = simulate(4, 2, 500, 0.3, 16, &mut rng);
+        // expected valid macs ~ 4 * 0.7 * 500 = 1400
+        let expect = 4.0 * 0.7 * 500.0;
+        assert!(
+            (st.macs as f64 - expect).abs() < expect * 0.1,
+            "macs {} vs {expect}",
+            st.macs
+        );
+    }
+}

@@ -1,0 +1,24 @@
+//! Cycle-level model of the RFC-HyPGCN accelerator (paper SSV):
+//!
+//! * [`resource`] -- XCKU-115 budgets, BRAM/DSP/LUT accounting;
+//! * [`scm`]      -- spatial conv module (Mult-PE array) cycle model;
+//! * [`dyn_pe`]   -- Dyn-Mult-PE waiting queues + dynamic DSP scheduling
+//!   (eq. 6, Table II);
+//! * [`tcm`]      -- temporal conv module built from Dyn-Mult-PEs;
+//! * [`rfc`]      -- runtime sparse feature compress: bank encoding,
+//!   mini-bank storage, decoding (Fig. 7);
+//! * [`formats`]  -- dense/CSC/RFC storage cost models (Fig. 11);
+//! * [`pipeline`] -- whole-chip mapping with balanced stage IIs
+//!   (Tables IV/V);
+//! * [`reports`]  -- text renderers for the paper tables.
+
+pub mod csc;
+pub mod dyn_pe;
+pub mod formats;
+pub mod pipeline;
+pub mod reports;
+pub mod resource;
+pub mod rfc;
+pub mod scm;
+pub mod tcm;
+pub mod trace;

@@ -1,0 +1,312 @@
+//! Whole-accelerator mapping: ten conv blocks resident on chip, PE counts
+//! balanced so every pipeline stage takes similar cycles (paper: "we also
+//! adjust the number of temporal convolutional PE to keep balance between
+//! pipeline stages"), then fps / GOP/s / resource totals (Table IV/V).
+
+use crate::meta::CavityMeta;
+use crate::model::{BlockSpec, ModelConfig};
+use crate::util::rng::Rng;
+
+use super::dyn_pe;
+use super::resource::{self, Budget, Usage};
+use super::scm::{self, ScmConfig};
+use super::tcm;
+
+/// Per-block mapping decision + simulated cost.
+#[derive(Debug, Clone)]
+pub struct StagePlan {
+    pub block: usize,
+    pub scm_pes: usize,
+    pub tcm_pes: usize,
+    pub scm_cycles: u64,
+    pub tcm_cycles: u64,
+    pub dsp: u32,
+    pub macs: u64,
+}
+
+impl StagePlan {
+    /// The stage's initiation interval: SCM and TCM of one block overlap
+    /// (Fig. 4), so the block's II is their max.
+    pub fn ii(&self) -> u64 {
+        self.scm_cycles.max(self.tcm_cycles)
+    }
+}
+
+/// Full-chip mapping result.
+#[derive(Debug, Clone)]
+pub struct ChipPlan {
+    pub stages: Vec<StagePlan>,
+    pub usage: Usage,
+    pub clock_hz: f64,
+    /// dense-equivalent ops per sample (for effective GOP/s)
+    pub dense_flops: f64,
+    /// actually-executed (pruned) ops per sample
+    pub pruned_flops: f64,
+}
+
+impl ChipPlan {
+    /// Pipeline initiation interval = slowest stage.
+    pub fn ii_cycles(&self) -> u64 {
+        self.stages.iter().map(|s| s.ii()).max().unwrap_or(1)
+    }
+
+    /// Sustained samples/second once the pipeline is full.
+    pub fn fps(&self) -> f64 {
+        self.clock_hz / self.ii_cycles() as f64
+    }
+
+    /// Executed GOP/s (pruned work actually performed).
+    pub fn gops(&self) -> f64 {
+        self.fps() * self.pruned_flops / 1e9
+    }
+
+    /// Dense-equivalent GOP/s (credit for skipped work, the way
+    /// sparse-accelerator papers report "effective" throughput).
+    pub fn effective_gops(&self) -> f64 {
+        self.fps() * self.dense_flops / 1e9
+    }
+
+    pub fn dsp_efficiency(&self) -> f64 {
+        resource::dsp_efficiency(self.effective_gops(), self.usage.dsp)
+    }
+}
+
+/// Inputs the mapper needs per block.
+#[derive(Debug, Clone)]
+pub struct BlockWorkload {
+    pub spec: BlockSpec,
+    pub t_in: usize,
+    pub kept_in: usize,
+    pub kept_filters: usize,
+    pub sparsity: f64,
+}
+
+/// Derive the per-block workloads from a model config + pruning summary.
+pub fn workloads(
+    cfg: &ModelConfig,
+    kept_in: &[usize],
+    kept_filters: &[usize],
+    sparsity: &[f64],
+) -> Vec<BlockWorkload> {
+    cfg.block_specs()
+        .iter()
+        .enumerate()
+        .map(|(l, spec)| BlockWorkload {
+            spec: *spec,
+            t_in: cfg.seq_len_at(l),
+            kept_in: kept_in.get(l).copied().unwrap_or(spec.in_channels),
+            kept_filters: kept_filters
+                .get(l)
+                .copied()
+                .unwrap_or(spec.out_channels),
+            sparsity: sparsity.get(l).copied().unwrap_or(0.5),
+        })
+        .collect()
+}
+
+/// Map the network onto the chip: allocate PEs per block so stage IIs are
+/// balanced under the DSP budget, then simulate.
+pub fn map_chip(
+    works: &[BlockWorkload],
+    cavity: &CavityMeta,
+    budget: &Budget,
+    dsp_target: u32,
+    rng: &mut Rng,
+) -> ChipPlan {
+    // 1) per-block MAC loads
+    let scm_loads: Vec<u64> = works
+        .iter()
+        .map(|w| scm::scm_macs(&w.spec, w.t_in, w.kept_in))
+        .collect();
+    let tcm_loads: Vec<u64> = works
+        .iter()
+        .map(|w| {
+            tcm::tcm_macs(
+                &w.spec,
+                w.t_in.div_ceil(w.spec.stride),
+                w.kept_filters,
+                cavity,
+            )
+        })
+        .collect();
+    let total_load: u64 =
+        scm_loads.iter().sum::<u64>() + tcm_loads.iter().sum::<u64>();
+
+    // 2) allocate DSPs proportional to load (balanced II), min 1 PE each
+    let mut stages = Vec::new();
+    let mut usage = Usage::default();
+    let mut dense_flops = 0f64;
+    let mut pruned_flops = 0f64;
+    for (l, w) in works.iter().enumerate() {
+        let share =
+            (scm_loads[l] + tcm_loads[l]) as f64 / total_load.max(1) as f64;
+        let dsp_block = (share * dsp_target as f64).round() as u32;
+        // split block DSPs between SCM and TCM by their loads
+        let scm_share = scm_loads[l] as f64
+            / (scm_loads[l] + tcm_loads[l]).max(1) as f64;
+        let scm_dsp = ((dsp_block as f64 * scm_share) as u32).max(4);
+        let scm_pes = (scm_dsp / 4).max(1) as usize;
+
+        // TCM: Dyn-Mult-PEs come in groups of 8 pattern rows; DSPs per
+        // group follow eq. 6 for this block's sparsity
+        let dsp_per_group: u32 = (0..8)
+            .map(|g| {
+                let q = cavity.kept_taps(g).len().max(1);
+                dyn_pe::dsp_allocation(q, w.sparsity).min(q) as u32
+            })
+            .sum();
+        let tcm_dsp_budget = dsp_block.saturating_sub(scm_pes as u32 * 4);
+        let groups = (tcm_dsp_budget / dsp_per_group.max(1)).max(1);
+        let tcm_pes = groups as usize * 8;
+
+        let scfg = ScmConfig {
+            pes: scm_pes,
+            dsp_per_pe: 4,
+        };
+        let sc = scm::scm_cycles(&w.spec, w.t_in, w.kept_in, &scfg);
+        let tcfg = tcm::TcmConfig {
+            pes: tcm_pes,
+            sparsity: w.sparsity,
+            queue_cap: 8,
+        };
+        let t_out = w.t_in.div_ceil(w.spec.stride);
+        let ts = tcm::simulate_tcm(
+            &w.spec,
+            t_out,
+            w.kept_filters,
+            cavity,
+            &tcfg,
+            rng,
+        );
+        // analytic TCM cycles at this PE count: MACs / (PEs * eff * 1 MAC)
+        let eff = ts.efficiency().max(0.05);
+        let tcm_lanes =
+            (groups * dsp_per_group) as f64 * eff;
+        let tcm_cycles =
+            (tcm_loads[l] as f64 / tcm_lanes.max(1.0)).ceil() as u64;
+
+        let dsp = scm_pes as u32 * 4 + groups * dsp_per_group;
+        usage.add(Usage {
+            dsp,
+            bram36: 0,
+            lut: 0,
+        });
+        dense_flops += 2.0
+            * (scm::scm_macs(&w.spec, w.t_in, w.spec.in_channels) as f64
+                + (t_out * 25) as f64
+                    * w.spec.out_channels as f64
+                    * w.spec.out_channels as f64
+                    * 9.0);
+        pruned_flops += 2.0 * (scm_loads[l] + tcm_loads[l]) as f64;
+        stages.push(StagePlan {
+            block: l + 1,
+            scm_pes,
+            tcm_pes,
+            scm_cycles: sc.cycles,
+            tcm_cycles,
+            dsp,
+            macs: scm_loads[l] + tcm_loads[l],
+        });
+    }
+    usage.lut = Usage::estimate_lut(usage.dsp, usage.bram36);
+    ChipPlan {
+        stages,
+        usage,
+        clock_hz: budget.clock_hz,
+        dense_flops,
+        pruned_flops,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::resource::XCKU115;
+
+    fn cav70() -> CavityMeta {
+        let rows = [
+            "100100100", "010010010", "001001001", "111000000",
+            "000111000", "100000100", "010100010", "001000001",
+        ];
+        let mut masks = [[false; 9]; 8];
+        for (i, r) in rows.iter().enumerate() {
+            for (t, c) in r.chars().enumerate() {
+                masks[i][t] = c == '1';
+            }
+        }
+        CavityMeta {
+            name: "cav-70-1".into(),
+            masks,
+        }
+    }
+
+    fn paper_works() -> Vec<BlockWorkload> {
+        let cfg = ModelConfig::paper_full();
+        let specs = cfg.block_specs();
+        let kept_in: Vec<usize> = specs
+            .iter()
+            .enumerate()
+            .map(|(l, s)| {
+                if l == 0 {
+                    3
+                } else {
+                    s.in_channels / 2
+                }
+            })
+            .collect();
+        let kept_f: Vec<usize> = specs
+            .iter()
+            .enumerate()
+            .map(|(l, s)| {
+                if l + 1 < specs.len() {
+                    specs[l + 1].in_channels / 2
+                } else {
+                    s.out_channels
+                }
+            })
+            .collect();
+        workloads(&cfg, &kept_in, &kept_f, &vec![0.5; 10])
+    }
+
+    #[test]
+    fn chip_fits_budget() {
+        let mut rng = Rng::new(0);
+        let plan = map_chip(&paper_works(), &cav70(), &XCKU115, 3500,
+                            &mut rng);
+        assert!(plan.usage.dsp <= XCKU115.dsp, "dsp {}", plan.usage.dsp);
+        assert!(plan.stages.len() == 10);
+    }
+
+    #[test]
+    fn stages_roughly_balanced() {
+        let mut rng = Rng::new(1);
+        let plan = map_chip(&paper_works(), &cav70(), &XCKU115, 3500,
+                            &mut rng);
+        let iis: Vec<u64> = plan.stages.iter().map(|s| s.ii()).collect();
+        let max = *iis.iter().max().unwrap() as f64;
+        let min = *iis.iter().min().unwrap() as f64;
+        assert!(
+            max / min < 8.0,
+            "stage imbalance {min}..{max}: {iis:?}"
+        );
+    }
+
+    #[test]
+    fn fps_positive_and_finite() {
+        let mut rng = Rng::new(2);
+        let plan = map_chip(&paper_works(), &cav70(), &XCKU115, 3500,
+                            &mut rng);
+        assert!(plan.fps() > 1.0);
+        assert!(plan.effective_gops() > plan.gops());
+    }
+
+    #[test]
+    fn more_dsps_more_fps() {
+        let mut rng = Rng::new(3);
+        let small = map_chip(&paper_works(), &cav70(), &XCKU115, 1000,
+                             &mut rng);
+        let large = map_chip(&paper_works(), &cav70(), &XCKU115, 3500,
+                             &mut rng);
+        assert!(large.fps() > small.fps());
+    }
+}

@@ -1,0 +1,351 @@
+//! Human-readable renderers for the simulator-backed paper artifacts:
+//! Table II (Dyn-MultPE), Table IV (resource/perf vs [10]), Fig. 11
+//! (storage formats).  Each takes the artifact manifest when available
+//! (for measured sparsity distributions) and falls back to the paper's
+//! own operating point otherwise.
+
+use crate::baseline::DING;
+use crate::meta::{CavityMeta, Manifest};
+use crate::model::ModelConfig;
+use crate::util::rng::Rng;
+
+use super::dyn_pe;
+use super::formats::{compare, LayerTraffic};
+use super::pipeline::{map_chip, workloads};
+use super::resource::XCKU115;
+
+/// The paper's chosen cavity scheme, used when no manifest is present.
+pub fn default_cavity() -> CavityMeta {
+    let rows = [
+        "100100100", "010010010", "001001001", "111000000",
+        "000111000", "100000100", "010100010", "001000001",
+    ];
+    let mut masks = [[false; 9]; 8];
+    for (i, r) in rows.iter().enumerate() {
+        for (t, c) in r.chars().enumerate() {
+            masks[i][t] = c == '1';
+        }
+    }
+    CavityMeta {
+        name: "cav-70-1".into(),
+        masks,
+    }
+}
+
+/// Mean sparsity per block from the manifest trace (tconv outputs feed
+/// the next block), or the paper's ~0.5 default.
+pub fn block_sparsities(manifest: Option<&Manifest>, n: usize) -> Vec<f64> {
+    match manifest {
+        Some(m) => (0..n)
+            .map(|l| {
+                m.sparsity
+                    .iter()
+                    .find(|s| s.name == format!("b{}.sconv", l + 1))
+                    .map(|s| s.mean_sparsity)
+                    .unwrap_or(0.5)
+            })
+            .collect(),
+        None => vec![0.5; n],
+    }
+}
+
+/// Table II: Dyn-MultPE utilization / efficiency / max delay per layer
+/// group, with the static (one-DSP-per-queue) comparison row.
+pub fn table2(manifest: Option<&Manifest>) -> String {
+    let cavity = manifest
+        .map(|m| m.cavity.clone())
+        .unwrap_or_else(default_cavity);
+    let sparsities = block_sparsities(manifest, 10);
+    let mut rng = Rng::new(2024);
+    let mut out = String::new();
+    out.push_str(
+        "Table II -- Dyn-MultPE utilization, efficiency, max delay\n",
+    );
+    out.push_str(
+        "layer  queues/PE  dsp/PE  total_dsp  static_dsp  efficiency  static_eff  max_delay\n",
+    );
+    // group layers like the paper's 4 representative rows: blocks
+    // (1..=2), (3..=4), (5..=7), (8..=10)
+    let groups: [(usize, std::ops::RangeInclusive<usize>); 4] = [
+        (1, 1..=2),
+        (2, 3..=4),
+        (3, 5..=7),
+        (4, 8..=10),
+    ];
+    let mut tot_macs = 0u64;
+    let mut tot_dyn_cost = 0f64;
+    let mut tot_static_cost = 0f64;
+    let mut tot_dsp = 0u32;
+    let mut tot_static_dsp = 0u32;
+    let mut worst_delay = 0f64;
+    for (gi, range) in groups {
+        let s: f64 = range.clone().map(|l| sparsities[l - 1]).sum::<f64>()
+            / range.clone().count() as f64;
+        // queue counts present in the cavity loop (e.g. 2 and 3 for
+        // cav-70-1), simulated per distinct depth
+        let mut qs: Vec<usize> =
+            (0..8).map(|g| cavity.kept_taps(g).len().max(1)).collect();
+        qs.sort_unstable();
+        qs.dedup();
+        let mut g_macs = 0u64;
+        let mut g_dyn_cost = 0f64;
+        let mut g_static_cost = 0f64;
+        let mut g_dsp = 0u32;
+        let mut g_static = 0u32;
+        let mut g_delay = 0f64;
+        for &q in &qs {
+            let d = dyn_pe::dsp_allocation(q, s).min(q);
+            let st = dyn_pe::simulate(q, d, 4096, s, 8, &mut rng);
+            g_macs += st.macs;
+            g_dyn_cost += (st.cycles * st.dsps as u64) as f64;
+            g_static_cost += (st.static_cycles * st.queues as u64) as f64;
+            g_dsp += d as u32;
+            g_static += q as u32;
+            g_delay = g_delay.max(st.delay());
+        }
+        // scale PE counts to the paper's per-layer magnitudes (range sum)
+        let reps = range.clone().count() as u32 * 21;
+        let dq: Vec<String> = qs
+            .iter()
+            .map(|&q| {
+                format!("{}/{}", dyn_pe::dsp_allocation(q, s).min(q), q)
+            })
+            .collect();
+        out.push_str(&format!(
+            "{:5}  {:9?}  {:>6}  {:9}  {:10}  {:9.2}%  {:9.2}%  {:8.2}%\n",
+            gi,
+            qs,
+            dq.join(","),
+            g_dsp * reps,
+            g_static * reps,
+            100.0 * g_macs as f64 / g_dyn_cost,
+            100.0 * g_macs as f64 / g_static_cost,
+            100.0 * g_delay,
+        ));
+        tot_macs += g_macs;
+        tot_dyn_cost += g_dyn_cost;
+        tot_static_cost += g_static_cost;
+        tot_dsp += g_dsp * reps;
+        tot_static_dsp += g_static * reps;
+        worst_delay = worst_delay.max(g_delay);
+    }
+    out.push_str(&format!(
+        "total  ------------------  {:9}  {:10}  {:9.2}%  {:9.2}%  {:8.2}%\n",
+        tot_dsp,
+        tot_static_dsp,
+        100.0 * tot_macs as f64 / tot_dyn_cost,
+        100.0 * tot_macs as f64 / tot_static_cost,
+        100.0 * worst_delay,
+    ));
+    out.push_str(&format!(
+        "DSP reduction vs static: {:.2}%  (paper: 23.24%)\n",
+        100.0 * (1.0 - tot_dsp as f64 / tot_static_dsp as f64)
+    ));
+    out
+}
+
+/// Fig. 11: storage cost of dense / CSC / RFC per traced layer.
+pub fn fig11(manifest: Option<&Manifest>) -> String {
+    let mut out = String::new();
+    out.push_str("Fig. 11 -- storage cost of three data formats\n");
+    out.push_str(
+        "layer        lines  ch   dense(bits)   csc(bits)    rfc(bits)   rfc_save  dense_br  csc_br  rfc_br\n",
+    );
+    let traffics: Vec<LayerTraffic> = match manifest {
+        Some(m) => m
+            .sparsity
+            .iter()
+            .map(|s| {
+                // lines per layer: time * joints of the traced testbed
+                let lines = m.seq_len * m.num_joints;
+                LayerTraffic {
+                    name: s.name.clone(),
+                    lines,
+                    channels: s.channels,
+                    mean_sparsity: s.mean_sparsity,
+                    buckets: s.buckets,
+                }
+            })
+            .collect(),
+        None => {
+            // paper-scale defaults: Table III's quartile mixes
+            vec![
+                LayerTraffic {
+                    name: "11.sconv".into(),
+                    lines: 75 * 25,
+                    channels: 256,
+                    mean_sparsity: 0.55,
+                    buckets: [0.0, 0.2935, 0.7064, 0.0001],
+                },
+                LayerTraffic {
+                    name: "11.tconv".into(),
+                    lines: 75 * 25,
+                    channels: 256,
+                    mean_sparsity: 0.62,
+                    buckets: [0.0002, 0.9473, 0.0525, 0.0],
+                },
+                LayerTraffic {
+                    name: "12.sconv".into(),
+                    lines: 75 * 25,
+                    channels: 256,
+                    mean_sparsity: 0.42,
+                    buckets: [0.0, 0.0073, 0.7579, 0.2348],
+                },
+                LayerTraffic {
+                    name: "12.tconv".into(),
+                    lines: 75 * 25,
+                    channels: 256,
+                    mean_sparsity: 0.52,
+                    buckets: [0.0001, 0.3424, 0.6576, 0.0],
+                },
+            ]
+        }
+    };
+    let mut dense_total = 0u64;
+    let mut csc_total = 0u64;
+    let mut rfc_total = 0u64;
+    let mut dense_br = 0u32;
+    let mut csc_br = 0u32;
+    let mut rfc_br = 0u32;
+    for t in &traffics {
+        let row = compare(t);
+        dense_total += row.dense.bits;
+        csc_total += row.csc.bits;
+        rfc_total += row.rfc.bits;
+        dense_br += row.dense.bram36;
+        csc_br += row.csc.bram36;
+        rfc_br += row.rfc.bram36;
+        out.push_str(&format!(
+            "{:<12} {:5} {:4}  {:12} {:12} {:12}  {:7.2}%  {:8} {:7} {:7}\n",
+            row.layer,
+            t.lines,
+            t.channels,
+            row.dense.bits,
+            row.csc.bits,
+            row.rfc.bits,
+            100.0 * (1.0 - row.rfc.bits as f64 / row.dense.bits as f64),
+            row.dense.bram36,
+            row.csc.bram36,
+            row.rfc.bram36,
+        ));
+    }
+    out.push_str(&format!(
+        "total: dense={dense_total}b ({dense_br} BRAM)  csc={csc_total}b ({csc_br})  rfc={rfc_total}b ({rfc_br})\n",
+    ));
+    out.push_str(&format!(
+        "RFC reduction vs dense: {:.2}%  (paper: 35.93%); \
+         access: RFC load 1 cyc / codec 4 cyc vs CSC serial ~64 cyc\n",
+        100.0 * (1.0 - rfc_total as f64 / dense_total as f64)
+    ));
+    out
+}
+
+/// Table IV: our mapped design vs Ding et al. [10].
+pub fn table4(manifest: Option<&Manifest>) -> String {
+    let cavity = manifest
+        .map(|m| m.cavity.clone())
+        .unwrap_or_else(default_cavity);
+    let cfg = ModelConfig::paper_full();
+    let specs = cfg.block_specs();
+    // paper-scale pruning summary: drop-1-like ~50% channel drop
+    let kept_in: Vec<usize> = specs
+        .iter()
+        .enumerate()
+        .map(|(l, s)| if l == 0 { 3 } else { s.in_channels / 2 })
+        .collect();
+    let kept_f: Vec<usize> = (0..specs.len())
+        .map(|l| {
+            if l + 1 < specs.len() {
+                kept_in[l + 1]
+            } else {
+                specs[l].out_channels
+            }
+        })
+        .collect();
+    let sparsities = block_sparsities(manifest, specs.len());
+    let works = workloads(&cfg, &kept_in, &kept_f, &sparsities);
+    let mut rng = Rng::new(7);
+    let mut plan = map_chip(&works, &cavity, &XCKU115, 3500, &mut rng);
+
+    // BRAM: RFC inter-layer storage + weight ROMs
+    let mut bram = 0u32;
+    for (l, s) in specs.iter().enumerate() {
+        let t = LayerTraffic {
+            name: format!("b{}", l + 1),
+            lines: cfg.seq_len_at(l).div_ceil(s.stride) * 25,
+            channels: s.out_channels,
+            mean_sparsity: sparsities[l],
+            buckets: [0.25, 0.25, 0.25, 0.25],
+        };
+        bram += super::formats::rfc_cost(&t).bram36;
+        // weight ROM: pruned parameters at 16 bit
+        let params = 3 * kept_in[l] * s.out_channels
+            + kept_f[l] * s.out_channels * 3; // avg kept taps ~2.75
+        bram += super::resource::bram36_for(params as u64 * 16, 36);
+    }
+    plan.usage.bram36 = bram;
+    plan.usage.lut =
+        super::resource::Usage::estimate_lut(plan.usage.dsp, bram);
+
+    let eff = plan.dsp_efficiency();
+    let mut out = String::new();
+    out.push_str("Table IV -- utilization & performance vs Ding [10]\n");
+    out.push_str(
+        "design  dsp   bram  lut      dsp_eff(GOP/s/DSP)  peak(GOP/s)  freq    fps\n",
+    );
+    out.push_str(&format!(
+        "ours    {:<5} {:<5} {:<8} {:<19.3} {:<12.1} {:.0}MHz {:.2}\n",
+        plan.usage.dsp,
+        plan.usage.bram36,
+        plan.usage.lut,
+        eff,
+        plan.effective_gops(),
+        plan.clock_hz / 1e6,
+        plan.fps(),
+    ));
+    out.push_str(&format!(
+        "[10]    {:<5} {:<5} {:<8} {:<19.3} {:<12.1} {:.0}MHz {:.2}\n",
+        DING.dsp,
+        DING.bram,
+        DING.lut,
+        DING.dsp_efficiency(),
+        DING.peak_gops,
+        DING.frequency_mhz,
+        DING.fps,
+    ));
+    out.push_str(&format!(
+        "speedup vs [10]: {:.1}x; dsp-eff improvement: {:.2}%  (paper: 22.9x, 28.93%+)\n",
+        plan.fps() / DING.fps,
+        100.0 * (eff - DING.dsp_efficiency()) / DING.dsp_efficiency(),
+    ));
+    out.push_str(&format!(
+        "paper's own row: dsp 3544, bram 1806, lut 176776, 0.322 GOP/s/DSP, 1142 GOP/s, 172MHz, 271.25 fps\n",
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_renders_and_reduces_dsps() {
+        let s = table2(None);
+        assert!(s.contains("total"));
+        assert!(s.contains("DSP reduction"));
+    }
+
+    #[test]
+    fn fig11_renders_with_defaults() {
+        let s = fig11(None);
+        assert!(s.contains("RFC reduction"));
+        assert!(s.contains("11.sconv"));
+    }
+
+    #[test]
+    fn table4_renders() {
+        let s = table4(None);
+        assert!(s.contains("ours"));
+        assert!(s.contains("[10]"));
+    }
+}

@@ -1,0 +1,131 @@
+//! FPGA resource model: XCKU-115 budgets, usage accounting, DSP
+//! efficiency -- the accounting behind Table IV.
+
+/// Xilinx Kintex UltraScale XCKU-115 budgets (DSP48E2 slices, BRAM36
+/// blocks, LUTs) and the paper's clock.
+#[derive(Debug, Clone, Copy)]
+pub struct Budget {
+    pub dsp: u32,
+    pub bram36: u32,
+    pub lut: u32,
+    pub clock_hz: f64,
+}
+
+pub const XCKU115: Budget = Budget {
+    dsp: 5520,
+    bram36: 2160,
+    lut: 663_360,
+    clock_hz: 172e6, // the paper's achieved frequency
+};
+
+/// Aggregated resource usage of a mapped design.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Usage {
+    pub dsp: u32,
+    pub bram36: u32,
+    pub lut: u32,
+}
+
+impl Usage {
+    pub fn add(&mut self, other: Usage) {
+        self.dsp += other.dsp;
+        self.bram36 += other.bram36;
+        self.lut += other.lut;
+    }
+
+    pub fn fits(&self, budget: &Budget) -> bool {
+        self.dsp <= budget.dsp
+            && self.bram36 <= budget.bram36
+            && self.lut <= budget.lut
+    }
+
+    /// Rough LUT estimate from datapath counts: control + muxing per DSP
+    /// and per BRAM port, calibrated to the paper's 176,776 LUTs for
+    /// 3,544 DSPs + 1,806 BRAMs (~45 LUT/DSP + ~8 LUT/BRAM + fixed).
+    pub fn estimate_lut(dsp: u32, bram36: u32) -> u32 {
+        10_000 + 45 * dsp + 8 * bram36
+    }
+}
+
+/// Peak performance of a design: 1 MAC = 2 ops per DSP per cycle.
+pub fn peak_gops(dsp_used: u32, clock_hz: f64) -> f64 {
+    2.0 * dsp_used as f64 * clock_hz / 1e9
+}
+
+/// DSP efficiency in GOP/s/DSP (the paper's comparison metric vs [10]).
+pub fn dsp_efficiency(gops: f64, dsp_used: u32) -> f64 {
+    if dsp_used == 0 {
+        0.0
+    } else {
+        gops / dsp_used as f64
+    }
+}
+
+/// BRAM36 blocks needed to hold `bits` with `width`-bit ports.
+/// A BRAM36 is 36 kbit; width > 36 requires parallel blocks; depth beyond
+/// 1024 x 36 cascades.  This mirrors the "variable grains" the paper
+/// exploits in mini-bank sizing.
+pub fn bram36_for(bits: u64, width_bits: u32) -> u32 {
+    if bits == 0 {
+        return 0;
+    }
+    let width_blocks = width_bits.div_ceil(36).max(1);
+    let depth = bits.div_ceil(width_bits as u64); // entries
+    let depth_per_block = 36 * 1024 / width_bits.min(36).max(1) as u64;
+    let depth_blocks = depth.div_ceil(depth_per_block).max(1) as u32;
+    width_blocks * depth_blocks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_matches_paper_headline() {
+        // paper: 3544 DSPs @172 MHz -> 1219 GOP/s theoretical; its 1142
+        // peak is 93.7% of that.
+        let gops = peak_gops(3544, 172e6);
+        assert!((gops - 1219.1).abs() < 1.0, "got {gops}");
+    }
+
+    #[test]
+    fn ding_efficiency_close_to_published() {
+        // [10]: 46 GOP/s on 228 DSPs -> 0.202 GOP/s/DSP
+        let e = dsp_efficiency(46.0, 228);
+        assert!((e - 0.2017).abs() < 1e-3);
+    }
+
+    #[test]
+    fn usage_fits() {
+        let u = Usage {
+            dsp: 3544,
+            bram36: 1806,
+            lut: 176_776,
+        };
+        assert!(u.fits(&XCKU115));
+        let over = Usage {
+            dsp: 6000,
+            ..u
+        };
+        assert!(!over.fits(&XCKU115));
+    }
+
+    #[test]
+    fn bram_accounting() {
+        assert_eq!(bram36_for(0, 16), 0);
+        // 36 kbit at 16-bit width: one block
+        assert_eq!(bram36_for(36 * 1024, 16), 1);
+        // 10x that: 10 blocks
+        assert_eq!(bram36_for(10 * 36 * 1024, 16), 10);
+        // wide port: 64-bit needs 2 width blocks even for small depth
+        assert_eq!(bram36_for(1024, 64), 2);
+    }
+
+    #[test]
+    fn lut_estimate_calibration() {
+        let lut = Usage::estimate_lut(3544, 1806);
+        // within ~15% of the paper's 176,776
+        assert!((lut as f64 - 176_776.0).abs() / 176_776.0 < 0.15,
+                "lut estimate {lut}");
+    }
+}

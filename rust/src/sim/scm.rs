@@ -1,0 +1,93 @@
+//! SCM -- Spatial Conv Module cycle model (paper SSV-A, Fig. 5).
+//!
+//! The SCM performs the *reorganized* graph + spatial convolution: the
+//! feature buffer holds 25-wide lines x kept-channel depth; each line is
+//! broadcast to the Mult-PE array (4 DSPs each) against one graph column,
+//! producing output channel-first.  Dropped channels never enter the
+//! buffer (the dataflow-reorganization skip), so the workload is exactly
+//! the pruned MAC count.
+
+use crate::model::{BlockSpec, K_V, NUM_JOINTS};
+
+/// One SCM instance's static configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ScmConfig {
+    /// Mult-PE count (each contributes 4 DSP MACs/cycle)
+    pub pes: usize,
+    /// DSPs per Mult-PE (fixed 4 in the paper)
+    pub dsp_per_pe: usize,
+}
+
+impl Default for ScmConfig {
+    fn default() -> Self {
+        ScmConfig {
+            pes: 8,
+            dsp_per_pe: 4,
+        }
+    }
+}
+
+/// Cycle cost of one block's SCM work for one input sample.
+#[derive(Debug, Clone, Copy)]
+pub struct ScmCycles {
+    pub macs: u64,
+    pub cycles: u64,
+    pub dsp: u32,
+}
+
+/// Graph + spatial MACs for one sample (pruned).
+pub fn scm_macs(spec: &BlockSpec, t_in: usize, kept_in: usize) -> u64 {
+    let v = NUM_JOINTS as u64;
+    let graph = (K_V * t_in * kept_in) as u64 * v * v;
+    let spatial = (K_V * t_in * kept_in * spec.out_channels) as u64 * v;
+    graph + spatial
+}
+
+/// Simulate (analytically) the SCM: the dataflow of Fig. 5 keeps every
+/// DSP busy on dense compacted work, so cycles = MACs / (PEs x 4), plus a
+/// per-row pipeline refill of one cycle per feature-buffer swap.
+pub fn scm_cycles(spec: &BlockSpec, t_in: usize, kept_in: usize, cfg: &ScmConfig) -> ScmCycles {
+    let macs = scm_macs(spec, t_in, kept_in);
+    let lanes = (cfg.pes * cfg.dsp_per_pe) as u64;
+    let refill = t_in as u64; // one bubble per tensor row (buffer swap)
+    ScmCycles {
+        macs,
+        cycles: macs.div_ceil(lanes) + refill,
+        dsp: (cfg.pes * cfg.dsp_per_pe) as u32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: BlockSpec = BlockSpec {
+        in_channels: 64,
+        out_channels: 64,
+        stride: 1,
+    };
+
+    #[test]
+    fn macs_scale_with_kept_channels() {
+        let dense = scm_macs(&SPEC, 64, 64);
+        let half = scm_macs(&SPEC, 64, 32);
+        assert_eq!(half * 2, dense);
+    }
+
+    #[test]
+    fn more_pes_fewer_cycles() {
+        let a = scm_cycles(&SPEC, 64, 32, &ScmConfig { pes: 4, dsp_per_pe: 4 });
+        let b = scm_cycles(&SPEC, 64, 32, &ScmConfig { pes: 16, dsp_per_pe: 4 });
+        assert!(b.cycles < a.cycles);
+        assert_eq!(a.macs, b.macs);
+    }
+
+    #[test]
+    fn utilization_near_one_for_large_work() {
+        let cfg = ScmConfig { pes: 8, dsp_per_pe: 4 };
+        let c = scm_cycles(&SPEC, 64, 48, &cfg);
+        let ideal = c.macs.div_ceil(32);
+        let util = ideal as f64 / c.cycles as f64;
+        assert!(util > 0.95, "util {util}");
+    }
+}

@@ -1,0 +1,212 @@
+//! TCM -- Temporal Conv Module cycle model (paper SSV-B, Fig. 6).
+//!
+//! Dyn-Mult-PEs parallelize across temporal filters; each PE owns one
+//! sub-filter row (its cavity pattern fixes the kept-weight queue count:
+//! 2 or 3 per row of cav-70-1), and dynamic scheduling shares `d < q`
+//! DSPs among the queues, exploiting runtime feature sparsity (zero
+//! features never enqueue).
+
+use crate::meta::CavityMeta;
+use crate::model::BlockSpec;
+use crate::model::NUM_JOINTS;
+use crate::util::rng::Rng;
+
+use super::dyn_pe::{self, PeStats};
+
+/// TCM configuration for one block.
+#[derive(Debug, Clone)]
+pub struct TcmConfig {
+    /// Dyn-Mult-PE count (filters processed in parallel)
+    pub pes: usize,
+    /// feature sparsity entering the TCM (from the layer trace)
+    pub sparsity: f64,
+    /// waiting-queue depth
+    pub queue_cap: usize,
+}
+
+/// Aggregated TCM simulation result for one block.
+#[derive(Debug, Clone)]
+pub struct TcmStats {
+    /// per-pattern-group PE stats (one Dyn-Mult-PE flavour per row)
+    pub per_group: Vec<PeStats>,
+    pub total_dsp: u32,
+    pub static_dsp: u32,
+    pub cycles: u64,
+    pub macs: u64,
+}
+
+impl TcmStats {
+    pub fn efficiency(&self) -> f64 {
+        let num: f64 = self.per_group.iter().map(|p| p.macs as f64).sum();
+        let den: f64 = self
+            .per_group
+            .iter()
+            .map(|p| (p.cycles * p.dsps as u64) as f64)
+            .sum();
+        if den > 0.0 {
+            num / den
+        } else {
+            0.0
+        }
+    }
+
+    pub fn static_efficiency(&self) -> f64 {
+        let num: f64 = self.per_group.iter().map(|p| p.macs as f64).sum();
+        let den: f64 = self
+            .per_group
+            .iter()
+            .map(|p| (p.static_cycles * p.queues as u64) as f64)
+            .sum();
+        if den > 0.0 {
+            num / den
+        } else {
+            0.0
+        }
+    }
+
+    pub fn max_delay(&self) -> f64 {
+        self.per_group
+            .iter()
+            .map(|p| p.delay())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Total temporal MACs for one sample: `t_out * V * IC * sum_f taps(f)`
+/// where IC is the temporal conv's input width (= spatial out channels)
+/// and f ranges over the surviving (coarse-kept) filters.
+pub fn tcm_macs(
+    spec: &BlockSpec,
+    t_out: usize,
+    kept_filters: usize,
+    cavity: &CavityMeta,
+) -> u64 {
+    let taps: u64 = (0..kept_filters)
+        .map(|f| cavity.kept_taps(f).len() as u64)
+        .sum();
+    (t_out * NUM_JOINTS) as u64 * spec.out_channels as u64 * taps
+}
+
+/// Simulate one block's TCM: one Dyn-Mult-PE per distinct cavity row
+/// (8 pattern groups), each fed `steps` feature vectors.
+pub fn simulate_tcm(
+    spec: &BlockSpec,
+    t_out: usize,
+    kept_filters: usize,
+    cavity: &CavityMeta,
+    cfg: &TcmConfig,
+    rng: &mut Rng,
+) -> TcmStats {
+    // input positions each filter processes per sample
+    let steps = (t_out * NUM_JOINTS) as u64 * spec.out_channels as u64
+        / (cfg.pes.max(1) as u64 * 64).max(1); // scaled sample for speed
+    let steps = steps.clamp(256, 4096);
+    let mut per_group = Vec::new();
+    let mut total_dsp = 0u32;
+    let mut static_dsp = 0u32;
+    let mut macs = 0u64;
+    let mut cycles = 0u64;
+    for g in 0..8usize.min(kept_filters.max(1)) {
+        let q = cavity.kept_taps(g).len().max(1);
+        let d = dyn_pe::dsp_allocation(q, cfg.sparsity).min(q);
+        let stats = dyn_pe::simulate(q, d, steps, cfg.sparsity,
+                                     cfg.queue_cap, rng);
+        total_dsp += d as u32;
+        static_dsp += q as u32;
+        macs += stats.macs;
+        cycles = cycles.max(stats.cycles);
+        per_group.push(stats);
+    }
+    // scale DSP totals by the PE count mapped to this block (groups
+    // replicate across PEs)
+    let reps = (cfg.pes as u32).div_ceil(8).max(1);
+    TcmStats {
+        per_group,
+        total_dsp: total_dsp * reps,
+        static_dsp: static_dsp * reps,
+        cycles,
+        macs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cav70() -> CavityMeta {
+        let rows = [
+            "100100100", "010010010", "001001001", "111000000",
+            "000111000", "100000100", "010100010", "001000001",
+        ];
+        let mut masks = [[false; 9]; 8];
+        for (i, r) in rows.iter().enumerate() {
+            for (t, c) in r.chars().enumerate() {
+                masks[i][t] = c == '1';
+            }
+        }
+        CavityMeta {
+            name: "cav-70-1".into(),
+            masks,
+        }
+    }
+
+    const SPEC: BlockSpec = BlockSpec {
+        in_channels: 64,
+        out_channels: 64,
+        stride: 1,
+    };
+
+    #[test]
+    fn dynamic_saves_dsps() {
+        let mut rng = Rng::new(0);
+        let cfg = TcmConfig {
+            pes: 8,
+            sparsity: 0.5,
+            queue_cap: 8,
+        };
+        let st = simulate_tcm(&SPEC, 64, 48, &cav70(), &cfg, &mut rng);
+        assert!(
+            st.total_dsp < st.static_dsp,
+            "dyn {} vs static {}",
+            st.total_dsp,
+            st.static_dsp
+        );
+    }
+
+    #[test]
+    fn efficiency_above_static() {
+        let mut rng = Rng::new(1);
+        let cfg = TcmConfig {
+            pes: 8,
+            sparsity: 0.5,
+            queue_cap: 8,
+        };
+        let st = simulate_tcm(&SPEC, 64, 48, &cav70(), &cfg, &mut rng);
+        assert!(st.efficiency() > st.static_efficiency());
+    }
+
+    #[test]
+    fn paper_band_efficiency_and_delay() {
+        // Table II: total efficiency 75.38%, max delay 6.48%, static 57.86%
+        let mut rng = Rng::new(2);
+        let cfg = TcmConfig {
+            pes: 8,
+            sparsity: 0.45,
+            queue_cap: 8,
+        };
+        let st = simulate_tcm(&SPEC, 64, 48, &cav70(), &cfg, &mut rng);
+        assert!(
+            (0.5..1.0).contains(&st.efficiency()),
+            "eff {:.3}",
+            st.efficiency()
+        );
+        assert!(st.max_delay() < 0.3, "delay {:.3}", st.max_delay());
+    }
+
+    #[test]
+    fn macs_reflect_cavity_keep_ratio() {
+        // 64 filters = 8 full loops of the 8-row pattern, 22 taps per loop
+        let m = tcm_macs(&SPEC, 64, 64, &cav70());
+        assert_eq!(m, (64u64 * 25) * 64 * (22 * 8));
+    }
+}

@@ -1,0 +1,5 @@
+//! Shared utilities: offline JSON, deterministic RNG, summary stats.
+
+pub mod json;
+pub mod rng;
+pub mod stats;

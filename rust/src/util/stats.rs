@@ -1,0 +1,119 @@
+//! Summary statistics for benches and serving metrics.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64)
+        .sqrt()
+}
+
+/// Percentile with linear interpolation, q in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (q / 100.0) * (s.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (pos - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+/// Timing summary for a set of repeated measurements (seconds).
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub n: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub max_s: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        let mut mn = f64::INFINITY;
+        let mut mx = f64::NEG_INFINITY;
+        for &x in xs {
+            mn = mn.min(x);
+            mx = mx.max(x);
+        }
+        Summary {
+            n: xs.len(),
+            mean_s: mean(xs),
+            std_s: stddev(xs),
+            min_s: if xs.is_empty() { 0.0 } else { mn },
+            p50_s: percentile(xs, 50.0),
+            p99_s: percentile(xs, 99.0),
+            max_s: if xs.is_empty() { 0.0 } else { mx },
+        }
+    }
+}
+
+impl std::fmt::Display for Summary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.3}ms ±{:.3} p50={:.3} p99={:.3} [{:.3}..{:.3}]",
+            self.n,
+            self.mean_s * 1e3,
+            self.std_s * 1e3,
+            self.p50_s * 1e3,
+            self.p99_s * 1e3,
+            self.min_s * 1e3,
+            self.max_s * 1e3
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn stddev_known() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((stddev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_fields() {
+        let s = Summary::of(&[0.001, 0.002, 0.003]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min_s, 0.001);
+        assert_eq!(s.max_s, 0.003);
+        assert!((s.mean_s - 0.002).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,131 @@
+//! Coordinator end-to-end: submit clips, get classified responses, with
+//! batching and latency accounting intact.
+
+use std::time::Duration;
+
+use rfc_hypgcn::coordinator::{BatchPolicy, Server};
+use rfc_hypgcn::data::{GenConfig, SkeletonGen};
+use rfc_hypgcn::meta::Manifest;
+use rfc_hypgcn::runtime::Engine;
+
+fn setup() -> Option<(Manifest, Engine)> {
+    let dir = Manifest::default_dir();
+    if !dir.join("meta.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some((Manifest::load(&dir).unwrap(), Engine::cpu().unwrap()))
+}
+
+#[test]
+fn serves_all_requests() {
+    let Some((m, engine)) = setup() else { return };
+    let server = Server::start(
+        &engine,
+        &m,
+        BatchPolicy {
+            batch_size: m.batch,
+            max_wait: Duration::from_millis(10),
+            seq_len: m.seq_len,
+        },
+    )
+    .unwrap();
+    let mut gen = SkeletonGen::new(
+        GenConfig {
+            num_classes: m.num_classes,
+            seq_len: m.seq_len,
+            noise: 0.02,
+        },
+        1,
+    );
+    let n = m.batch * 3 + 1; // force a padded final batch
+    let rxs: Vec<_> = (0..n)
+        .map(|_| server.submit(gen.sample().0))
+        .collect();
+    let mut answered = 0;
+    for rx in rxs {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("response within deadline");
+        assert_eq!(resp.logits.len(), m.num_classes);
+        assert!(resp.predicted < m.num_classes);
+        assert!(resp.logits.iter().all(|v| v.is_finite()));
+        assert!(resp.latency_s >= 0.0);
+        answered += 1;
+    }
+    assert_eq!(answered, n);
+    assert_eq!(
+        server
+            .metrics
+            .responses_out
+            .load(std::sync::atomic::Ordering::Relaxed),
+        n as u64
+    );
+    // at least one padded batch happened
+    assert!(server.metrics.padding_fraction() > 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn distinct_requests_get_distinct_ids_and_logits_rows() {
+    let Some((m, engine)) = setup() else { return };
+    let server = Server::start(
+        &engine,
+        &m,
+        BatchPolicy {
+            batch_size: m.batch,
+            max_wait: Duration::from_millis(5),
+            seq_len: m.seq_len,
+        },
+    )
+    .unwrap();
+    let mut gen = SkeletonGen::new(
+        GenConfig {
+            num_classes: m.num_classes,
+            seq_len: m.seq_len,
+            noise: 0.02,
+        },
+        2,
+    );
+    let a = server.submit(gen.sample().0);
+    let b = server.submit(gen.sample().0);
+    let ra = a.recv_timeout(Duration::from_secs(120)).unwrap();
+    let rb = b.recv_timeout(Duration::from_secs(120)).unwrap();
+    assert_ne!(ra.id, rb.id);
+    assert_ne!(ra.logits, rb.logits, "distinct clips, distinct logits");
+    server.shutdown();
+}
+
+#[test]
+fn throughput_metrics_populate() {
+    let Some((m, engine)) = setup() else { return };
+    let server = Server::start(
+        &engine,
+        &m,
+        BatchPolicy {
+            batch_size: m.batch,
+            max_wait: Duration::from_millis(5),
+            seq_len: m.seq_len,
+        },
+    )
+    .unwrap();
+    let mut gen = SkeletonGen::new(
+        GenConfig {
+            num_classes: m.num_classes,
+            seq_len: m.seq_len,
+            noise: 0.02,
+        },
+        3,
+    );
+    let rxs: Vec<_> = (0..m.batch * 2)
+        .map(|_| server.submit(gen.sample().0))
+        .collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(120)).unwrap();
+    }
+    assert!(server.metrics.throughput_fps() > 0.0);
+    let lat = server.metrics.latency_summary();
+    assert_eq!(lat.n, m.batch * 2);
+    assert!(lat.p99_s >= lat.p50_s);
+    server.shutdown();
+}

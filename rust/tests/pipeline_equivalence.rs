@@ -1,0 +1,156 @@
+//! The decisive composition check: chaining the ten per-block AOT
+//! executables + head through the Rust pipeline must reproduce the
+//! single-module `model_pruned` artifact's logits on identical input.
+//! (Blocks run the Pallas-kernel path, the full module the jnp path, so
+//! this also cross-validates Layer 1 vs Layer 2 *through* Layer 3.)
+
+use std::sync::Arc;
+
+use rfc_hypgcn::coordinator::pipeline::{Job, Pipeline};
+use rfc_hypgcn::data::{GenConfig, SkeletonGen};
+use rfc_hypgcn::meta::Manifest;
+use rfc_hypgcn::runtime::{Engine, Tensor};
+
+fn setup() -> Option<(Manifest, Engine)> {
+    let dir = Manifest::default_dir();
+    if !dir.join("meta.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some((Manifest::load(&dir).unwrap(), Engine::cpu().unwrap()))
+}
+
+fn input_batch(m: &Manifest, seed: u64) -> Tensor {
+    let mut gen = SkeletonGen::new(
+        GenConfig {
+            num_classes: m.num_classes,
+            seq_len: m.seq_len,
+            noise: 0.02,
+        },
+        seed,
+    );
+    gen.batch(m.batch).0
+}
+
+#[test]
+fn block_chain_matches_full_model() {
+    let Some((m, engine)) = setup() else { return };
+    let pipeline = Pipeline::load(&engine, &m).unwrap();
+    let full = engine
+        .load_hlo(&m.hlo_path(&m.model_pruned.hlo))
+        .unwrap();
+    let x = input_batch(&m, 11);
+    let chained = pipeline.run_sync(&x).unwrap();
+    let reference = full.run1(&[x]).unwrap();
+    assert_eq!(chained.shape, reference.shape);
+    let max_err = chained
+        .data
+        .iter()
+        .zip(&reference.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    let scale = reference
+        .data
+        .iter()
+        .map(|v| v.abs())
+        .fold(0f32, f32::max)
+        .max(1.0);
+    assert!(
+        max_err / scale < 2e-3,
+        "pipeline vs full model: max_err {max_err} (scale {scale})"
+    );
+}
+
+#[test]
+fn block_shapes_chain() {
+    let Some((m, engine)) = setup() else { return };
+    let pipeline = Pipeline::load(&engine, &m).unwrap();
+    let x = input_batch(&m, 3);
+    let mut h = rfc_hypgcn::coordinator::pipeline::nctv_to_ntvc(&x).unwrap();
+    for (i, stage) in pipeline.stages.iter().enumerate() {
+        h = stage.run1(&[h]).unwrap();
+        assert_eq!(
+            h.shape, m.blocks[i].out_shape,
+            "block {} output shape",
+            i + 1
+        );
+        assert!(h.data.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn threaded_pipeline_matches_sync_and_preserves_order() {
+    let Some((m, engine)) = setup() else { return };
+    let pipeline = Arc::new(Pipeline::load(&engine, &m).unwrap());
+    let handle = pipeline.spawn::<usize>(2);
+    let inputs: Vec<Tensor> =
+        (0..4).map(|i| input_batch(&m, 100 + i)).collect();
+    let expected: Vec<Tensor> = inputs
+        .iter()
+        .map(|x| pipeline.run_sync(x).unwrap())
+        .collect();
+    for (i, x) in inputs.iter().enumerate() {
+        handle
+            .input
+            .send(Job {
+                ctx: i,
+                tensor: x.clone(),
+                entered: std::time::Instant::now(),
+            })
+            .unwrap();
+    }
+    let mut got = 0;
+    for job in handle.output.iter() {
+        let exp = &expected[job.ctx];
+        assert_eq!(job.tensor.shape, exp.shape);
+        let max_err = job
+            .tensor
+            .data
+            .iter()
+            .zip(&exp.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_err < 1e-4, "job {} differs by {max_err}", job.ctx);
+        got += 1;
+        if got == 4 {
+            break;
+        }
+    }
+    handle.shutdown();
+    assert_eq!(got, 4);
+}
+
+#[test]
+fn skip_variant_runs_on_half_frames() {
+    let Some((m, engine)) = setup() else { return };
+    let exe = engine.load_hlo(&m.hlo_path(&m.model_skip.hlo)).unwrap();
+    let mut gen = SkeletonGen::new(
+        GenConfig {
+            num_classes: m.num_classes,
+            seq_len: m.seq_len / 2,
+            noise: 0.02,
+        },
+        5,
+    );
+    let (x, _) = gen.batch(m.batch);
+    let y = exe.run1(&[x]).unwrap();
+    assert_eq!(y.shape, vec![m.batch, m.num_classes]);
+    assert!(y.data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn ck_variant_differs_from_dense() {
+    let Some((m, engine)) = setup() else { return };
+    let dense = engine.load_hlo(&m.hlo_path(&m.model_dense.hlo)).unwrap();
+    let ck = engine.load_hlo(&m.hlo_path(&m.model_ck.hlo)).unwrap();
+    let x = input_batch(&m, 17);
+    let a = dense.run1(&[x.clone()]).unwrap();
+    let b = ck.run1(&[x]).unwrap();
+    let diff: f32 = a
+        .data
+        .iter()
+        .zip(&b.data)
+        .map(|(p, q)| (p - q).abs())
+        .sum();
+    assert!(diff > 1e-6, "C_k graph had no effect");
+}

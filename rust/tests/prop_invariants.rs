@@ -1,0 +1,202 @@
+//! Property-based tests (hand-rolled generator loops over the offline
+//! SplitMix64 RNG -- no proptest in the vendor set) on coordinator and
+//! simulator invariants: routing, batching, state, compression.
+
+use rfc_hypgcn::sim::dyn_pe;
+use rfc_hypgcn::sim::rfc::{
+    decode_bank, encode_bank, encode_vector, BankStorage, BANK_WIDTH,
+};
+use rfc_hypgcn::runtime::Tensor;
+use rfc_hypgcn::util::rng::Rng;
+
+const CASES: usize = 200;
+
+fn random_bank(rng: &mut Rng, sparsity: f64) -> Vec<f32> {
+    (0..BANK_WIDTH)
+        .map(|_| {
+            if rng.chance(sparsity) {
+                0.0
+            } else {
+                // strictly positive (post-ReLU) values
+                (rng.f32() + 1e-3).abs()
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_rfc_encode_decode_roundtrip() {
+    let mut rng = Rng::new(0xDECAF);
+    for case in 0..CASES {
+        let s = rng.f64();
+        let mut rng2 = Rng::new(rng.next_u64());
+        let bank = random_bank(&mut rng2, s);
+        let e = encode_bank(&bank).unwrap();
+        assert_eq!(
+            decode_bank(&e).to_vec(),
+            bank,
+            "case {case} sparsity {s:.2}"
+        );
+    }
+}
+
+#[test]
+fn prop_rfc_nnz_consistency() {
+    // hot-code popcount == packed length; mbhot covers ceil(nnz/4)
+    let mut rng = Rng::new(1);
+    for _ in 0..CASES {
+        let s = rng.f64();
+        let bank = random_bank(&mut rng, s);
+        let e = encode_bank(&bank).unwrap();
+        assert_eq!(e.hot.count_ones() as usize, e.packed.len());
+        assert_eq!(
+            e.mbhot.count_ones() as usize,
+            e.packed.len().div_ceil(4)
+        );
+        // mbhot is contiguous from the head (paper: head mini-banks first)
+        let used = e.mbhot.count_ones();
+        assert_eq!(e.mbhot, ((1u16 << used) - 1) as u8);
+    }
+}
+
+#[test]
+fn prop_storage_loads_what_it_stored() {
+    let mut rng = Rng::new(2);
+    for case in 0..40 {
+        let lines = 4 + rng.below(28);
+        let mut st = BankStorage::new([lines, lines, lines, lines]);
+        let banks: Vec<Vec<f32>> = (0..lines)
+            .map(|_| {
+                let s = rng.f64();
+                random_bank(&mut rng, s)
+            })
+            .collect();
+        for b in &banks {
+            let a = st.store(&encode_bank(b).unwrap());
+            assert!(!a.truncated, "case {case}: full-depth bank truncated");
+        }
+        // random access order must still decode correctly (pt recompute)
+        let mut order: Vec<usize> = (0..lines).collect();
+        rng.shuffle(&mut order);
+        for &i in &order {
+            let (e, _) = st.load(i).unwrap();
+            assert_eq!(decode_bank(&e).to_vec(), banks[i], "line {i}");
+        }
+    }
+}
+
+#[test]
+fn prop_encode_vector_preserves_total_nnz() {
+    let mut rng = Rng::new(3);
+    for _ in 0..CASES {
+        let banks = 1 + rng.below(8);
+        let v: Vec<f32> = (0..banks * BANK_WIDTH)
+            .map(|_| if rng.chance(0.5) { 0.0 } else { rng.f32() + 0.01 })
+            .collect();
+        let nnz = v.iter().filter(|&&x| x != 0.0).count();
+        let (encoded, cycles) = encode_vector(&v).unwrap();
+        let packed: usize = encoded.iter().map(|e| e.packed.len()).sum();
+        assert_eq!(packed, nnz);
+        assert_eq!(cycles, banks as u64 + 3);
+    }
+}
+
+#[test]
+fn prop_dyn_pe_conservation_and_bounds() {
+    // MACs executed == MACs admitted; efficiency in [0, 1]; delay >= 0
+    let mut rng = Rng::new(4);
+    for case in 0..60 {
+        let q = 1 + rng.below(6);
+        let d = 1 + rng.below(q);
+        let s = rng.f64() * 0.9;
+        let st = dyn_pe::simulate(q, d, 400, s, 4 + rng.below(12), &mut rng);
+        assert!(st.efficiency() <= 1.0 + 1e-9, "case {case}");
+        assert!(st.efficiency() >= 0.0);
+        assert!(st.delay() >= 0.0);
+        assert!(st.cycles >= st.static_cycles.min(st.cycles));
+        // admitted macs bounded by q per input step
+        assert!(st.macs <= 400 * q as u64);
+    }
+}
+
+#[test]
+fn prop_dyn_pe_monotone_in_dsps() {
+    // more DSPs never increases cycles (same seed workload statistics)
+    let mut rng = Rng::new(5);
+    for _ in 0..30 {
+        let q = 2 + rng.below(5);
+        let s = rng.f64() * 0.8;
+        let mut r1 = Rng::new(777);
+        let mut r2 = Rng::new(777);
+        let small = dyn_pe::simulate(q, 1, 300, s, 8, &mut r1);
+        let large = dyn_pe::simulate(q, q, 300, s, 8, &mut r2);
+        assert!(
+            large.cycles <= small.cycles,
+            "q={q} s={s:.2}: {} vs {}",
+            large.cycles,
+            small.cycles
+        );
+    }
+}
+
+#[test]
+fn prop_tensor_split_concat_identity() {
+    let mut rng = Rng::new(6);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(12);
+        let d = 1 + rng.below(6);
+        let data: Vec<f32> = (0..n * d).map(|_| rng.f32()).collect();
+        let t = Tensor::new(vec![n, d], data).unwrap();
+        let chunk = 1 + rng.below(n + 2);
+        let parts = t.split_batch(chunk);
+        assert!(parts.iter().all(|p| p.shape[0] <= chunk));
+        assert_eq!(
+            parts.iter().map(|p| p.shape[0]).sum::<usize>(),
+            n
+        );
+        assert_eq!(Tensor::concat_batch(&parts).unwrap(), t);
+    }
+}
+
+#[test]
+fn prop_batch_padding_rows_zero() {
+    use rfc_hypgcn::coordinator::{BatchPolicy, Batcher};
+    use rfc_hypgcn::coordinator::Request;
+    use std::time::Instant;
+    let mut rng = Rng::new(7);
+    for _ in 0..40 {
+        let batch_size = 2 + rng.below(6);
+        let seq_len = 4 + rng.below(4);
+        let real = 1 + rng.below(batch_size);
+        let policy = BatchPolicy {
+            batch_size,
+            max_wait: std::time::Duration::from_millis(1),
+            seq_len,
+        };
+        let reqs: Vec<Request> = (0..real)
+            .map(|i| {
+                let (tx, _rx) = std::sync::mpsc::channel();
+                std::mem::forget(_rx);
+                Request {
+                    id: i as u64,
+                    clip: vec![1.0; 3 * seq_len * 25],
+                    seq_len,
+                    arrived: Instant::now(),
+                    reply: tx,
+                }
+            })
+            .collect();
+        let b = Batcher::form_from(&policy, reqs).unwrap();
+        assert_eq!(b.real, real);
+        assert_eq!(b.input.shape[0], batch_size);
+        let row = 3 * seq_len * 25;
+        for r in real..batch_size {
+            assert!(
+                b.input.data[r * row..(r + 1) * row]
+                    .iter()
+                    .all(|&v| v == 0.0),
+                "padding row {r} not zero"
+            );
+        }
+    }
+}

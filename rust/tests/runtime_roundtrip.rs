@@ -1,0 +1,147 @@
+//! Runtime integration: the PJRT engine must load AOT HLO-text artifacts,
+//! execute them, and hand back numerically-correct host tensors.
+
+use std::path::Path;
+
+use rfc_hypgcn::meta::Manifest;
+use rfc_hypgcn::runtime::{Engine, Tensor};
+
+fn artifacts() -> Option<Manifest> {
+    let dir = Manifest::default_dir();
+    if dir.join("meta.json").exists() {
+        Some(Manifest::load(&dir).expect("manifest parses"))
+    } else {
+        None
+    }
+}
+
+/// A self-contained HLO module (written inline so this test runs without
+/// artifacts): y = x * 2 + 1 elementwise over f32[4], tuple-wrapped like
+/// the jax exports.
+const TINY_HLO: &str = r#"
+HloModule tiny, entry_computation_layout={(f32[4]{0})->(f32[4]{0})}
+
+ENTRY main {
+  x = f32[4]{0} parameter(0)
+  two = f32[] constant(2)
+  twob = f32[4]{0} broadcast(two), dimensions={}
+  one = f32[] constant(1)
+  oneb = f32[4]{0} broadcast(one), dimensions={}
+  mul = f32[4]{0} multiply(x, twob)
+  add = f32[4]{0} add(mul, oneb)
+  ROOT out = (f32[4]{0}) tuple(add)
+}
+"#;
+
+#[test]
+fn engine_runs_inline_hlo() {
+    let dir = std::env::temp_dir().join("rfc_tiny_hlo.txt");
+    std::fs::write(&dir, TINY_HLO).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let exe = engine.load_hlo(&dir).unwrap();
+    let x = Tensor::new(vec![4], vec![0.0, 1.0, 2.0, -3.0]).unwrap();
+    let y = exe.run1(&[x]).unwrap();
+    assert_eq!(y.shape, vec![4]);
+    assert_eq!(y.data, vec![1.0, 3.0, 5.0, -5.0]);
+}
+
+#[test]
+fn executable_cache_dedupes() {
+    let dir = std::env::temp_dir().join("rfc_tiny_hlo2.txt");
+    std::fs::write(&dir, TINY_HLO).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let a = engine.load_hlo(&dir).unwrap();
+    let b = engine.load_hlo(&dir).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+    assert_eq!(engine.cached(), 1);
+}
+
+#[test]
+fn block01_artifact_executes_finite() {
+    let Some(m) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let engine = Engine::cpu().unwrap();
+    let b = &m.blocks[0];
+    let exe = engine.load_hlo(&m.hlo_path(&b.hlo)).unwrap();
+    let n: usize = b.in_shape.iter().product();
+    // deterministic pseudo-input in a sane activation range
+    let data: Vec<f32> =
+        (0..n).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect();
+    let x = Tensor::new(b.in_shape.clone(), data).unwrap();
+    let y = exe.run1(&[x]).unwrap();
+    assert_eq!(y.shape, b.out_shape);
+    assert!(
+        y.data.iter().all(|v| v.is_finite()),
+        "block 1 produced non-finite values"
+    );
+    // ReLU output: non-negative
+    assert!(y.data.iter().all(|&v| v >= 0.0));
+}
+
+#[test]
+fn quant_demo_executes() {
+    let Some(m) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let engine = Engine::cpu().unwrap();
+    let exe = engine.load_hlo(&m.hlo_path(&m.quant_demo.hlo)).unwrap();
+    let xq: Vec<i16> = (0..64 * 32).map(|i| (i % 251) as i16 - 125).collect();
+    let wq: Vec<i16> = (0..32 * 32).map(|i| (i % 127) as i16 - 63).collect();
+    // i16 is ArrayElement but not NativeType: build via raw copy
+    let mut xl =
+        xla::Literal::create_from_shape(xla::PrimitiveType::S16, &[64, 32]);
+    xl.copy_raw_from(&xq).unwrap();
+    let mut wl =
+        xla::Literal::create_from_shape(xla::PrimitiveType::S16, &[32, 32]);
+    wl.copy_raw_from(&wq).unwrap();
+    let out = exe.run_literals(&[xl, wl]).unwrap();
+    assert_eq!(out.len(), 1);
+    let v = out[0].to_vec::<i16>().unwrap();
+    assert_eq!(v.len(), 64 * 32);
+    // spot-check one element against the Q8.8 reference semantics
+    let mut acc: i32 = 0;
+    for k in 0..32 {
+        acc += xq[k] as i32 * wq[k * 32] as i32;
+    }
+    let expect = (acc >> 8).clamp(-32768, 32767) as i16;
+    assert_eq!(v[0], expect);
+}
+
+#[test]
+fn full_model_variants_execute_finite() {
+    let Some(m) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let engine = Engine::cpu().unwrap();
+    for art in [&m.model_dense, &m.model_pruned] {
+        let exe = engine.load_hlo(&m.hlo_path(&art.hlo)).unwrap();
+        let n: usize = art.in_shape.iter().product();
+        let data: Vec<f32> =
+            (0..n).map(|i| ((i % 23) as f32 - 11.0) / 11.0).collect();
+        let x = Tensor::new(art.in_shape.clone(), data).unwrap();
+        let y = exe.run1(&[x]).unwrap();
+        assert_eq!(y.shape, art.out_shape);
+        assert!(
+            y.data.iter().all(|v| v.is_finite()),
+            "{} produced non-finite logits: {:?}",
+            art.hlo,
+            &y.data[..8.min(y.data.len())]
+        );
+    }
+}
+
+#[test]
+fn hlo_is_text_not_proto() {
+    // guardrail for the aot_recipe gotcha: artifacts must be HLO text
+    let Some(m) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let head = std::fs::read_to_string(m.hlo_path(&m.blocks[0].hlo)).unwrap();
+    assert!(head.starts_with("HloModule"), "artifact is not HLO text");
+    assert!(Path::new(&m.hlo_path(&m.head.hlo)).exists());
+}

@@ -1,0 +1,138 @@
+//! Simulator integration: chip mapping at the paper's scale reproduces
+//! the *shape* of the paper's headline results (who wins, by roughly what
+//! factor) -- Tables II/IV and Fig. 11.
+
+use rfc_hypgcn::baseline::{paper_gpus, VariantFlops, DING};
+use rfc_hypgcn::meta::Manifest;
+use rfc_hypgcn::model::{dense_macs, ModelConfig};
+use rfc_hypgcn::sim::pipeline::{map_chip, workloads};
+use rfc_hypgcn::sim::reports;
+use rfc_hypgcn::sim::resource::XCKU115;
+use rfc_hypgcn::util::rng::Rng;
+
+fn manifest() -> Option<Manifest> {
+    let dir = Manifest::default_dir();
+    dir.join("meta.json")
+        .exists()
+        .then(|| Manifest::load(&dir).unwrap())
+}
+
+fn paper_plan(dsp_target: u32) -> rfc_hypgcn::sim::pipeline::ChipPlan {
+    let cfg = ModelConfig::paper_full();
+    let specs = cfg.block_specs();
+    let kept_in: Vec<usize> = specs
+        .iter()
+        .enumerate()
+        .map(|(l, s)| if l == 0 { 3 } else { s.in_channels / 2 })
+        .collect();
+    let kept_f: Vec<usize> = (0..specs.len())
+        .map(|l| {
+            if l + 1 < specs.len() {
+                kept_in[l + 1]
+            } else {
+                specs[l].out_channels
+            }
+        })
+        .collect();
+    let works = workloads(&cfg, &kept_in, &kept_f, &vec![0.5; 10]);
+    let mut rng = Rng::new(99);
+    map_chip(
+        &works,
+        &reports::default_cavity(),
+        &XCKU115,
+        dsp_target,
+        &mut rng,
+    )
+}
+
+#[test]
+fn accelerator_beats_both_gpus_on_fps() {
+    // Table V's headline: ours > V100 > 2080Ti on the original model
+    let plan = paper_plan(3500);
+    let dense: u64 = dense_macs(&ModelConfig::paper_full())
+        .iter()
+        .map(|m| m.flops())
+        .sum();
+    let flops = VariantFlops::from_dense(dense as f64);
+    let (g2080, v100) = paper_gpus(&flops);
+    let ours = plan.fps();
+    assert!(
+        ours > v100.fps(flops.with_ck),
+        "ours {ours} vs V100 {}",
+        v100.fps(flops.with_ck)
+    );
+    assert!(v100.fps(flops.with_ck) > g2080.fps(flops.with_ck));
+    // speedup factor band: paper reports 9.19x over 2080Ti-original
+    let speedup = ours / g2080.fps(flops.with_ck);
+    assert!(
+        (2.0..40.0).contains(&speedup),
+        "speedup {speedup} out of plausible band"
+    );
+}
+
+#[test]
+fn accelerator_beats_ding_on_dsp_efficiency() {
+    // Table IV: our DSP efficiency must exceed [10]'s 0.202 GOP/s/DSP
+    let plan = paper_plan(3500);
+    assert!(
+        plan.dsp_efficiency() > DING.dsp_efficiency(),
+        "ours {} vs ding {}",
+        plan.dsp_efficiency(),
+        DING.dsp_efficiency()
+    );
+    // and the fps gap is the paper's ~22x headline (band check)
+    let speedup = plan.fps() / DING.fps;
+    assert!(speedup > 5.0, "speedup over [10] only {speedup}");
+}
+
+#[test]
+fn fps_in_paper_band() {
+    // paper: 271.25 fps at T=300 full width; the band allows for model
+    // differences but must be the same order of magnitude
+    let plan = paper_plan(3500);
+    assert!(
+        (50.0..2000.0).contains(&plan.fps()),
+        "fps {}",
+        plan.fps()
+    );
+}
+
+#[test]
+fn reports_render_with_manifest() {
+    let m = manifest();
+    let t2 = reports::table2(m.as_ref());
+    assert!(t2.contains("DSP reduction"));
+    let f11 = reports::fig11(m.as_ref());
+    assert!(f11.contains("RFC reduction"));
+    let t4 = reports::table4(m.as_ref());
+    assert!(t4.contains("speedup vs [10]"));
+}
+
+#[test]
+fn rfc_reduction_in_paper_band_on_traced_sparsity() {
+    // with the traced (manifest) sparsity distributions, RFC must cut
+    // storage vs dense by a two-digit percentage (paper: 35.93%)
+    let Some(m) = manifest() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    use rfc_hypgcn::sim::formats::{compare, LayerTraffic};
+    let mut dense = 0u64;
+    let mut rfc = 0u64;
+    for s in &m.sparsity {
+        let row = compare(&LayerTraffic {
+            name: s.name.clone(),
+            lines: m.seq_len * m.num_joints,
+            channels: s.channels,
+            mean_sparsity: s.mean_sparsity,
+            buckets: s.buckets,
+        });
+        dense += row.dense.bits;
+        rfc += row.rfc.bits;
+    }
+    let saving = 1.0 - rfc as f64 / dense as f64;
+    assert!(
+        saving > 0.10,
+        "RFC saving only {saving:.3} on traced sparsity"
+    );
+}
