@@ -2,6 +2,10 @@
 //! criterion in the vendor set; each bench is a `harness = false` binary
 //! that prints the corresponding paper table).
 
+// Each bench binary compiles its own copy of this module and uses a
+// different subset of it.
+#![allow(dead_code)]
+
 use std::time::Instant;
 
 use rfc_hypgcn::data::{GenConfig, SkeletonGen};

@@ -1,0 +1,118 @@
+//! Bench: runtime RFC codec throughput and compression ratio vs dense
+//! transport (runs without AOT artifacts).
+//!
+//! For a mid-pipeline activation shape, sweeps post-ReLU sparsity and
+//! reports (a) the wire-size ratio of compressed vs dense transport,
+//! (b) encode throughput serial and sharded, (c) decode throughput, and
+//! (d) the dense memcpy baseline the pipeline would otherwise pay per
+//! stage boundary.
+
+use std::time::Instant;
+
+use rfc_hypgcn::rfc::{self, EncoderConfig};
+use rfc_hypgcn::runtime::Tensor;
+use rfc_hypgcn::util::stats::Summary;
+
+fn sparse_tensor(shape: Vec<usize>, sparsity: f64, seed: u64) -> Tensor {
+    Tensor::random_sparse(shape, sparsity, seed)
+}
+
+fn time_it<F: FnMut()>(iters: usize, mut f: F) -> Summary {
+    // warmup
+    f();
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Summary::of(&samples)
+}
+
+fn mbps(bytes: usize, s: &Summary) -> f64 {
+    bytes as f64 / s.mean_s / 1e6
+}
+
+fn main() {
+    // (N, T, V, C): one batch of mid-pipeline activations
+    let shape = vec![8usize, 64, 25, 64];
+    let bytes: usize = shape.iter().product::<usize>() * 4;
+    let serial = EncoderConfig {
+        shards: 1,
+        min_sparsity: 0.0,
+        parallel_threshold: usize::MAX,
+    };
+    let sharded = EncoderConfig {
+        min_sparsity: 0.0,
+        parallel_threshold: 0,
+        ..EncoderConfig::default()
+    };
+    let iters = 12;
+
+    println!(
+        "RFC runtime codec vs dense transport -- shape {:?} ({:.1} MB), {} shards",
+        shape,
+        bytes as f64 / 1e6,
+        sharded.shards
+    );
+    println!(
+        "{:>8}  {:>7}  {:>6}  {:>12}  {:>12}  {:>12}  {:>12}",
+        "sparsity", "ratio", "save%", "enc(1) MB/s", "enc(N) MB/s", "dec MB/s", "memcpy MB/s"
+    );
+    for s10 in [0u64, 25, 50, 75, 90] {
+        let sparsity = s10 as f64 / 100.0;
+        let t = sparse_tensor(shape.clone(), sparsity, 42 + s10);
+
+        let ct = rfc::encode(&t, &sharded);
+        let ratio = ct.compression_ratio();
+        let save = 1.0 - ct.compressed_bits() as f64 / ct.dense_bits() as f64;
+
+        let enc1 = time_it(iters, || {
+            std::hint::black_box(rfc::encode(&t, &serial));
+        });
+        let encn = time_it(iters, || {
+            std::hint::black_box(rfc::encode(&t, &sharded));
+        });
+        let dec = time_it(iters, || {
+            std::hint::black_box(rfc::decode(&ct, &sharded));
+        });
+        let copy = time_it(iters, || {
+            std::hint::black_box(t.data.clone());
+        });
+
+        println!(
+            "{:>7.0}%  {:>6.2}x  {:>5.1}%  {:>12.1}  {:>12.1}  {:>12.1}  {:>12.1}",
+            sparsity * 100.0,
+            ratio,
+            save * 100.0,
+            mbps(bytes, &enc1),
+            mbps(bytes, &encn),
+            mbps(bytes, &dec),
+            mbps(bytes, &copy),
+        );
+    }
+
+    // batcher view: padded batches are where compression always wins
+    println!("\npadded-batch transport (batch 8, 1..8 real rows):");
+    let row = sparse_tensor(vec![1, 3, 64, 25], 0.0, 7);
+    for real in [1usize, 4, 8] {
+        let mut parts: Vec<rfc_hypgcn::rfc::CompressedTensor> =
+            (0..real).map(|_| rfc::encode(&row, &serial)).collect();
+        if real < 8 {
+            parts.push(rfc_hypgcn::rfc::CompressedTensor::zeros(vec![
+                8 - real,
+                3,
+                64,
+                25,
+            ]));
+        }
+        let batch =
+            rfc_hypgcn::rfc::CompressedTensor::concat_batch(parts).unwrap();
+        println!(
+            "  real {real}/8: ratio {:>5.2}x  ({} -> {} bits)",
+            batch.compression_ratio(),
+            batch.dense_bits(),
+            batch.compressed_bits()
+        );
+    }
+}

@@ -5,6 +5,14 @@
 //! waiting, or when the oldest waiting request has been queued for
 //! `max_wait` (zero-padding the tail) -- the same size-or-timeout policy
 //! vLLM-style routers use, adapted to static shapes.
+//!
+//! Batches form **in compressed form** whenever the batch-level gate
+//! says it pays: each request row is bank-encoded once straight from
+//! its clip buffer (no copy), rows are spliced by zero-copy segment
+//! concatenation, and padding rows are sidecar-only
+//! [`CompressedTensor::zeros`] -- a short batch never materializes its
+//! padding densely.  A full batch of dense clips fails the gate (the
+//! sidecars would cost more than they save) and ships dense.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
@@ -12,7 +20,9 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::model::NUM_JOINTS;
+use crate::rfc::{CompressedTensor, Payload, BANK_SIDECAR_BITS};
 use crate::runtime::Tensor;
+use crate::sim::rfc::{BANK_WIDTH, ELEM_BITS};
 
 use super::request::{Batch, Request};
 
@@ -39,6 +49,7 @@ impl Default for BatchPolicy {
 /// Pulls requests off `rx` and forms batches; runs on its own thread.
 pub struct Batcher {
     policy: BatchPolicy,
+    encoder: crate::rfc::EncoderConfig,
     pending: Vec<Request>,
 }
 
@@ -46,8 +57,17 @@ impl Batcher {
     pub fn new(policy: BatchPolicy) -> Self {
         Batcher {
             policy,
+            encoder: crate::rfc::EncoderConfig::default(),
             pending: Vec::new(),
         }
+    }
+
+    /// Use the same RFC transport configuration as the pipeline, so the
+    /// `min_sparsity` gate means one thing everywhere
+    /// (see [`crate::coordinator::Server::start_with`]).
+    pub fn with_encoder(mut self, encoder: crate::rfc::EncoderConfig) -> Self {
+        self.encoder = encoder;
+        self
     }
 
     /// Blocking: returns the next batch, or `None` when the channel closed
@@ -106,18 +126,77 @@ impl Batcher {
         let take = self.pending.len().min(n);
         let requests: Vec<Request> = self.pending.drain(..take).collect();
         let row = 3 * self.policy.seq_len * NUM_JOINTS;
-        let mut data = vec![0f32; n * row];
-        for (i, r) in requests.iter().enumerate() {
-            data[i * row..(i + 1) * row].copy_from_slice(&r.clip);
+        let pad_rows = n - requests.len();
+        // cheap pre-gate: under saturating load batches are full of
+        // dense coordinate clips, where encoding just to discard it
+        // would be pure waste -- a padded batch always goes the
+        // compressed route, a full batch only if a sampled prefix of
+        // each clip suggests enough zeros
+        let worth_encoding = pad_rows > 0 || {
+            let probe = row.min(256);
+            let zeros: usize = requests
+                .iter()
+                .map(|r| {
+                    r.clip.iter().take(probe).filter(|&&v| v == 0.0).count()
+                })
+                .sum();
+            probe > 0
+                && zeros as f64 / (requests.len() * probe) as f64
+                    >= self.encoder.min_sparsity
+        };
+        let mut input = None;
+        if worth_encoding {
+            // encode each request row straight from its clip, one pass
+            // per clip and no copy: the encoder counts nonzeros as it
+            // packs, so the exact gate below reads wire costs off the
+            // parts instead of re-scanning the clips
+            let row_shape = vec![1, 3, self.policy.seq_len, NUM_JOINTS];
+            let mut parts: Vec<CompressedTensor> =
+                Vec::with_capacity(requests.len() + 1);
+            for r in &requests {
+                parts.push(
+                    CompressedTensor::encode_slice(&r.clip, row_shape.clone())
+                        .expect("request clip shape"),
+                );
+            }
+            let compressed_bits: u64 = parts
+                .iter()
+                .map(|p| p.compressed_bits())
+                .sum::<u64>()
+                + (pad_rows * row.div_ceil(BANK_WIDTH)) as u64
+                    * BANK_SIDECAR_BITS;
+            let dense_bits = (n * row) as u64 * ELEM_BITS as u64;
+            let nnz: usize = parts.iter().map(|p| p.nnz()).sum();
+            let sparsity = 1.0 - nnz as f64 / (n * row) as f64;
+            // exact gate, same two-condition rule as Payload::from_tensor
+            if sparsity >= self.encoder.min_sparsity
+                && compressed_bits < dense_bits
+            {
+                if pad_rows > 0 {
+                    let mut pad_shape = row_shape.clone();
+                    pad_shape[0] = pad_rows;
+                    parts.push(CompressedTensor::zeros(pad_shape));
+                }
+                input = Some(Payload::Compressed(
+                    CompressedTensor::concat_batch(parts)
+                        .expect("batch concat"),
+                ));
+            }
         }
+        let input = input.unwrap_or_else(|| {
+            let mut data = vec![0f32; n * row];
+            for (i, r) in requests.iter().enumerate() {
+                data[i * row..(i + 1) * row].copy_from_slice(&r.clip);
+            }
+            Payload::Dense(
+                Tensor::new(vec![n, 3, self.policy.seq_len, NUM_JOINTS], data)
+                    .expect("batch shape"),
+            )
+        });
         Batch {
             real: requests.len(),
             requests,
-            input: Tensor::new(
-                vec![n, 3, self.policy.seq_len, NUM_JOINTS],
-                data,
-            )
-            .expect("batch shape"),
+            input,
             formed: Instant::now(),
         }
     }
@@ -172,7 +251,7 @@ mod tests {
         let batch = b.next_batch(&rx).unwrap();
         assert!(start.elapsed() < Duration::from_secs(1));
         assert_eq!(batch.real, 2);
-        assert_eq!(batch.input.shape, vec![2, 3, 8, NUM_JOINTS]);
+        assert_eq!(batch.input.shape().to_vec(), vec![2, 3, 8, NUM_JOINTS]);
     }
 
     #[test]
@@ -188,9 +267,18 @@ mod tests {
         let mut b = Batcher::new(policy);
         let batch = b.next_batch(&rx).unwrap();
         assert_eq!(batch.real, 1);
-        assert_eq!(batch.input.shape[0], 4); // padded to artifact batch
+        assert_eq!(batch.input.shape()[0], 4); // padded to artifact batch
+        let ct = batch
+            .input
+            .as_compressed()
+            .expect("padded batch ships compressed");
+        ct.validate().unwrap();
+        let dense = ct.to_tensor();
         let row = 3 * 8 * NUM_JOINTS;
-        assert!(batch.input.data[row..].iter().all(|&v| v == 0.0));
+        assert!(dense.data[row..].iter().all(|&v| v == 0.0));
+        // padding rows are sidecar-only: exactly the one real (all-7.0)
+        // row's values are stored, nothing for the 3 padding rows
+        assert_eq!(ct.nnz(), row);
     }
 
     #[test]
@@ -224,11 +312,60 @@ mod tests {
             })
             .collect();
         let batch = Batcher::form_from(&policy, reqs).unwrap();
+        let dense = batch
+            .input
+            .to_dense(&crate::rfc::EncoderConfig::default());
         let row = 3 * 4 * NUM_JOINTS;
         for i in 0..3 {
-            assert!(batch.input.data[i * row..(i + 1) * row]
+            assert!(dense.data[i * row..(i + 1) * row]
                 .iter()
                 .all(|&v| v == i as f32));
+        }
+    }
+
+    #[test]
+    fn compressed_batch_beats_dense_transport_when_padded() {
+        // one real request in a batch of 8: dense transport would ship
+        // 7 rows of zeros; compressed padding is sidecar-only
+        let policy = BatchPolicy {
+            batch_size: 8,
+            max_wait: Duration::from_millis(1),
+            seq_len: 8,
+        };
+        let (r, _rr) = req(1, 8);
+        let batch = Batcher::form_from(&policy, vec![r]).unwrap();
+        let ct = batch.input.as_compressed().expect("compressed");
+        assert!(ct.compression_ratio() > 4.0);
+        assert_eq!(ct.shape, vec![8, 3, 8, NUM_JOINTS]);
+    }
+
+    #[test]
+    fn full_dense_batch_fails_the_gate_and_ships_dense() {
+        // every row nonzero and no padding: sidecars would cost more
+        // than they save, so the batch-level gate keeps it dense
+        let policy = BatchPolicy {
+            batch_size: 2,
+            max_wait: Duration::from_millis(1),
+            seq_len: 8,
+        };
+        let reqs: Vec<Request> = (1..=2)
+            .map(|i| {
+                let (r, _rx) = req(i, 8);
+                std::mem::forget(_rx);
+                r
+            })
+            .collect();
+        let batch = Batcher::form_from(&policy, reqs).unwrap();
+        assert!(batch.input.as_compressed().is_none());
+        assert_eq!(batch.input.transport_bits(), batch.input.dense_bits());
+        let dense = batch
+            .input
+            .to_dense(&crate::rfc::EncoderConfig::default());
+        let row = 3 * 8 * NUM_JOINTS;
+        for i in 0..2 {
+            assert!(dense.data[i * row..(i + 1) * row]
+                .iter()
+                .all(|&v| v == (i + 1) as f32));
         }
     }
 }

@@ -14,6 +14,13 @@ pub struct Metrics {
     pub responses_out: AtomicU64,
     pub batches: AtomicU64,
     pub padded_rows: AtomicU64,
+    /// bits shipped on the batcher -> stage-1 edge (RFC compressed form).
+    /// Scope note: inter-stage payload boundaries re-encode inside the
+    /// pipeline threads and are not recorded here, so this understates
+    /// the system-wide RFC saving
+    pub transport_bits: AtomicU64,
+    /// bits dense transport of the same input batches would have shipped
+    pub transport_dense_bits: AtomicU64,
     latencies_s: Mutex<Vec<f64>>,
     started: Instant,
 }
@@ -25,6 +32,8 @@ impl Default for Metrics {
             responses_out: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             padded_rows: AtomicU64::new(0),
+            transport_bits: AtomicU64::new(0),
+            transport_dense_bits: AtomicU64::new(0),
             latencies_s: Mutex::new(Vec::new()),
             started: Instant::now(),
         }
@@ -40,6 +49,24 @@ impl Metrics {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.padded_rows
             .fetch_add((padded_to - real) as u64, Ordering::Relaxed);
+    }
+
+    /// Record one batch's wire cost vs its dense-transport baseline.
+    pub fn record_transport(&self, compressed_bits: u64, dense_bits: u64) {
+        self.transport_bits
+            .fetch_add(compressed_bits, Ordering::Relaxed);
+        self.transport_dense_bits
+            .fetch_add(dense_bits, Ordering::Relaxed);
+    }
+
+    /// Fraction of dense-transport bits saved by RFC compression on the
+    /// recorded (batcher -> stage-1) edge.
+    pub fn transport_saving(&self) -> f64 {
+        let dense = self.transport_dense_bits.load(Ordering::Relaxed);
+        if dense == 0 {
+            return 0.0;
+        }
+        1.0 - self.transport_bits.load(Ordering::Relaxed) as f64 / dense as f64
     }
 
     pub fn record_response(&self, latency_s: f64) {
@@ -79,12 +106,14 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         format!(
-            "requests={} responses={} batches={} fps={:.2} pad={:.1}% lat[{}]",
+            "requests={} responses={} batches={} fps={:.2} pad={:.1}% \
+             rfc_in_save={:.1}% lat[{}]",
             self.requests_in.load(Ordering::Relaxed),
             self.responses_out.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.throughput_fps(),
             self.padding_fraction() * 100.0,
+            self.transport_saving() * 100.0,
             self.latency_summary(),
         )
     }
@@ -108,6 +137,15 @@ mod tests {
         let s = m.latency_summary();
         assert_eq!(s.n, 2);
         assert!((s.mean_s - 0.015).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transport_saving_tracks() {
+        let m = Metrics::default();
+        assert_eq!(m.transport_saving(), 0.0);
+        m.record_transport(250, 1000);
+        m.record_transport(250, 1000);
+        assert!((m.transport_saving() - 0.75).abs() < 1e-12);
     }
 
     #[test]

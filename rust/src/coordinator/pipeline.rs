@@ -8,6 +8,12 @@
 //! * [`Pipeline::spawn`]    -- one OS thread per stage connected by
 //!   channels, so consecutive batches overlap exactly like the FPGA's
 //!   block pipeline; throughput is set by the slowest stage.
+//!
+//! Between spawned stages a [`Job`] carries an [`rfc::Payload`]: stage
+//! outputs are re-encoded into the bank-compressed form when their
+//! post-ReLU sparsity clears the gate, and each stage decodes lazily on
+//! entry (`Executable::run_payload`) -- the software mirror of the
+//! paper's RFC storage sitting between on-chip layers.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
@@ -17,6 +23,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::meta::Manifest;
+use crate::rfc::{EncoderConfig, Payload};
 use crate::runtime::{Engine, Executable, Tensor};
 
 /// Compiled pipeline stages (10 blocks + head).
@@ -31,8 +38,19 @@ pub struct Pipeline {
 /// A unit of work travelling the pipeline with its provenance.
 pub struct Job<Ctx: Send> {
     pub ctx: Ctx,
-    pub tensor: Tensor,
+    pub payload: Payload,
     pub entered: Instant,
+}
+
+impl<Ctx: Send> Job<Ctx> {
+    /// A job over a dense tensor (tests, direct submission).
+    pub fn dense(ctx: Ctx, tensor: Tensor) -> Job<Ctx> {
+        Job {
+            ctx,
+            payload: Payload::Dense(tensor),
+            entered: Instant::now(),
+        }
+    }
 }
 
 /// Handle to a spawned pipeline.
@@ -105,6 +123,16 @@ impl Pipeline {
         self: &Arc<Self>,
         depth: usize,
     ) -> PipelineHandle<Ctx> {
+        self.spawn_with(depth, EncoderConfig::default())
+    }
+
+    /// [`Pipeline::spawn`] with an explicit RFC transport configuration
+    /// (shard count, compression gate).
+    pub fn spawn_with<Ctx: Send + 'static>(
+        self: &Arc<Self>,
+        depth: usize,
+        enc: EncoderConfig,
+    ) -> PipelineHandle<Ctx> {
         let n_compute = self.stages.len() + 1; // blocks + head
         // channel j feeds compute stage j; stage j writes channel j+1.
         let mut txs: Vec<SyncSender<Job<Ctx>>> = Vec::new();
@@ -134,16 +162,24 @@ impl Pipeline {
             };
             threads.push(std::thread::spawn(move || {
                 for mut job in rx.iter() {
+                    // stage entry: lazy decode of the compressed transport
+                    let payload = job.payload.take();
                     let result = if is_first {
                         // stage 1 also performs the layout transpose
-                        nctv_to_ntvc(&job.tensor)
+                        nctv_to_ntvc(&payload.into_dense(&enc))
                             .and_then(|h| exe.run1(&[h]))
                     } else {
-                        exe.run1(&[job.tensor])
+                        exe.run_payload(payload, &enc)
                     };
                     match result {
                         Ok(h) => {
-                            job.tensor = h;
+                            // stage exit: re-compress for transport; the
+                            // head's logits are tiny and stay dense
+                            job.payload = if is_head {
+                                Payload::Dense(h)
+                            } else {
+                                Payload::from_tensor(h, &enc)
+                            };
                             if tx.send(job).is_err() {
                                 break; // downstream gone
                             }

@@ -3,7 +3,7 @@
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
-use crate::runtime::Tensor;
+use crate::rfc::Payload;
 
 /// A single inference request: one skeleton clip `(3, T, V)`.
 #[derive(Debug)]
@@ -48,9 +48,11 @@ impl Response {
 #[derive(Debug)]
 pub struct Batch {
     pub requests: Vec<Request>,
-    /// `(n, 3, T, V)` stacked input (n == artifact batch; short batches
-    /// are zero-padded and the padding rows discarded on reply)
-    pub input: Tensor,
+    /// `(n, 3, T, V)` stacked input (n == artifact batch): compressed
+    /// whenever the batch's zero content (sparse clips and/or padding
+    /// rows, which are sidecar-only) beats dense transport, dense for a
+    /// full batch of dense clips; padding rows are discarded on reply
+    pub input: Payload,
     /// number of real (non-padding) rows
     pub real: usize,
     pub formed: Instant,

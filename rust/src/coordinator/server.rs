@@ -11,6 +11,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::meta::Manifest;
+use crate::rfc::EncoderConfig;
 use crate::runtime::Engine;
 
 use super::batcher::{BatchPolicy, Batcher};
@@ -35,25 +36,42 @@ impl Server {
         manifest: &Manifest,
         policy: BatchPolicy,
     ) -> Result<Server> {
+        Self::start_with(engine, manifest, policy, EncoderConfig::default())
+    }
+
+    /// [`Server::start`] with an explicit RFC transport configuration,
+    /// applied uniformly to the batcher's gate and every pipeline stage.
+    pub fn start_with(
+        engine: &Engine,
+        manifest: &Manifest,
+        policy: BatchPolicy,
+        enc: EncoderConfig,
+    ) -> Result<Server> {
         let pipeline = Arc::new(Pipeline::load(engine, manifest)?);
         let metrics = Arc::new(Metrics::default());
         let (submit_tx, submit_rx) = channel::<Request>();
-        let handle = pipeline.spawn::<Batch>(2);
+        let handle = pipeline.spawn_with::<Batch>(2, enc);
         let mut threads = Vec::new();
 
-        // batcher thread: requests -> padded fixed-shape batches
+        // batcher thread: requests -> padded fixed-shape batches formed
+        // in compressed form; the payload moves out of the batch (no
+        // dense materialization, no copy)
         {
             let metrics = metrics.clone();
             let pipe_in = handle.input.clone();
             let policy = policy.clone();
             threads.push(std::thread::spawn(move || {
-                let mut batcher = Batcher::new(policy);
-                while let Some(batch) = batcher.next_batch(&submit_rx) {
-                    metrics.record_batch(batch.real, batch.input.shape[0]);
-                    let tensor = batch.input.clone();
+                let mut batcher = Batcher::new(policy).with_encoder(enc);
+                while let Some(mut batch) = batcher.next_batch(&submit_rx) {
+                    metrics.record_batch(batch.real, batch.input.shape()[0]);
+                    metrics.record_transport(
+                        batch.input.transport_bits(),
+                        batch.input.dense_bits(),
+                    );
+                    let payload = batch.input.take();
                     let job = Job {
                         ctx: batch,
-                        tensor,
+                        payload,
                         entered: Instant::now(),
                     };
                     if pipe_in.send(job).is_err() {
@@ -72,7 +90,7 @@ impl Server {
             threads.push(std::thread::spawn(move || {
                 for job in out.iter() {
                     let batch: Batch = job.ctx;
-                    let logits = &job.tensor;
+                    let logits = job.payload.into_dense(&enc);
                     debug_assert_eq!(logits.shape[1], num_classes);
                     for (i, req) in batch.requests.into_iter().enumerate() {
                         let row = logits.data

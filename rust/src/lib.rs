@@ -13,8 +13,14 @@
 //!    and its pruned/quantized variants, AOT-lowered to HLO text.
 //! 3. **This crate** (request path, no Python) --
 //!    * [`runtime`]: PJRT engine loading the AOT artifacts;
-//!    * [`coordinator`]: request router, dynamic batcher and the
-//!      layer-pipelined block executor;
+//!    * [`rfc`]: the production runtime sparse-feature-compress
+//!      subsystem (paper SSV-C): bank-sharded [`rfc::CompressedTensor`]
+//!      transport with a multi-threaded encoder, carried between
+//!      pipeline stages and decoded lazily on stage entry.  The sim
+//!      model below stays the bit-exact reference; the equivalence
+//!      contract is enforced by `tests/rfc_equivalence.rs`;
+//!    * [`coordinator`]: request router, dynamic batcher (batching in
+//!      compressed form) and the layer-pipelined block executor;
 //!    * [`sim`]: cycle-level model of the paper's FPGA architecture
 //!      (Mult-PE, Dyn-Mult-PE, RFC compressed storage, resource model)
 //!      regenerating Tables II-IV and Fig. 11;
@@ -27,6 +33,7 @@ pub mod data;
 pub mod meta;
 pub mod model;
 pub mod quant;
+pub mod rfc;
 pub mod runtime;
 pub mod sim;
 pub mod util;

@@ -1,0 +1,564 @@
+//! Bank-sharded compressed tensor: the serving-path realization of the
+//! paper's SSV-C runtime feature compression.
+//!
+//! The bit-exact reference for the per-bank encoding is
+//! [`crate::sim::rfc`]; this module is the production format the
+//! coordinator actually transports.  Layout:
+//!
+//! * the tensor's leading axis is the batch ("row") axis; each row's
+//!   `row_len` elements are chunked into 16-wide banks, the tail bank
+//!   logically zero-padded (padding lanes are never hot);
+//! * each bank stores exactly what the sim model stores: a 16-bit
+//!   element hot code, a mini-bank hot code (`mbhot`), and the nonzero
+//!   values packed head-first;
+//! * banks live in row-aligned [`BankSegment`]s -- one segment per
+//!   encoder shard (see [`super::encoder`]), mirroring the paper's
+//!   per-bank parallel write ports.  Because segments own their packed
+//!   storage, batch-axis concatenation moves segments without copying a
+//!   single value: the zero-copy transport property the pipeline and
+//!   batcher rely on.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::runtime::Tensor;
+use crate::sim::rfc::{EncodedBank, BANK_WIDTH, ELEM_BITS, MINI_PER_BANK};
+
+/// Sidecar bits per bank (16-bit hot code + 4-bit mini-bank hot code),
+/// matching the sim cost model's data-hot + mbhot accounting.
+pub const BANK_SIDECAR_BITS: u64 = (BANK_WIDTH + MINI_PER_BANK) as u64;
+
+/// A contiguous run of whole rows, encoded bank-by-bank.  One segment is
+/// one encoder shard's output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BankSegment {
+    /// rows covered by this segment
+    pub(crate) rows: usize,
+    /// banks per row (shared with the owning tensor)
+    pub(crate) row_banks: usize,
+    /// nonzero values, packed head-first per bank, banks in row-major order
+    pub(crate) packed: Vec<f32>,
+    /// per-bank 16-bit element hot codes
+    pub(crate) hots: Vec<u16>,
+    /// per-bank mini-bank hot codes
+    pub(crate) mbhots: Vec<u8>,
+    /// per-bank start offsets into `packed`; length `rows * row_banks + 1`
+    pub(crate) offsets: Vec<u32>,
+}
+
+impl BankSegment {
+    /// Encode `rows` dense rows of `row_len` elements each
+    /// (`data.len() == rows * row_len`).  Bit-exact with
+    /// [`crate::sim::rfc::encode_bank`] on every 16-aligned bank; the
+    /// tail bank of an unaligned row behaves as if zero-padded.
+    pub fn encode(data: &[f32], rows: usize, row_len: usize) -> BankSegment {
+        debug_assert_eq!(data.len(), rows * row_len);
+        let row_banks = row_len.div_ceil(BANK_WIDTH);
+        let n_banks = rows * row_banks;
+        let mut packed = Vec::new();
+        let mut hots = Vec::with_capacity(n_banks);
+        let mut mbhots = Vec::with_capacity(n_banks);
+        let mut offsets = Vec::with_capacity(n_banks + 1);
+        offsets.push(0u32);
+        for r in 0..rows {
+            let row = &data[r * row_len..(r + 1) * row_len];
+            for b in 0..row_banks {
+                let start = b * BANK_WIDTH;
+                let end = row_len.min(start + BANK_WIDTH);
+                let mut hot: u16 = 0;
+                for (lane, &v) in row[start..end].iter().enumerate() {
+                    if v != 0.0 {
+                        hot |= 1 << lane;
+                        packed.push(v);
+                    }
+                }
+                let nnz = hot.count_ones() as usize;
+                hots.push(hot);
+                mbhots.push(mbhot_for(nnz));
+                offsets.push(packed.len() as u32);
+            }
+        }
+        BankSegment {
+            rows,
+            row_banks,
+            packed,
+            hots,
+            mbhots,
+            offsets,
+        }
+    }
+
+    /// Scatter this segment's rows into `out`
+    /// (`out.len() == rows * row_len`, pre-zeroed by the caller).
+    pub(crate) fn decode_into(&self, out: &mut [f32], row_len: usize) {
+        for r in 0..self.rows {
+            let row = &mut out[r * row_len..(r + 1) * row_len];
+            for b in 0..self.row_banks {
+                let bank_i = r * self.row_banks + b;
+                let hot = self.hots[bank_i];
+                if hot == 0 {
+                    continue;
+                }
+                let mut next = self.offsets[bank_i] as usize;
+                let base = b * BANK_WIDTH;
+                for lane in 0..BANK_WIDTH {
+                    if hot & (1 << lane) != 0 {
+                        row[base + lane] = self.packed[next];
+                        next += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Structural validation against `row_len` (the runtime counterpart
+    /// of the sim model's hot-code/packed-length mismatch rejection).
+    pub(crate) fn validate(&self, row_len: usize) -> Result<()> {
+        let n_banks = self.rows * self.row_banks;
+        ensure!(
+            self.hots.len() == n_banks && self.mbhots.len() == n_banks,
+            "segment holds {} hot / {} mbhot codes for {n_banks} banks",
+            self.hots.len(),
+            self.mbhots.len()
+        );
+        ensure!(
+            self.offsets.len() == n_banks + 1,
+            "segment has {} offsets for {n_banks} banks",
+            self.offsets.len()
+        );
+        ensure!(
+            self.offsets.first() == Some(&0)
+                && *self.offsets.last().unwrap_or(&0) as usize == self.packed.len(),
+            "offset table does not span the packed data"
+        );
+        for i in 0..n_banks {
+            let hot = self.hots[i];
+            let nnz = hot.count_ones() as usize;
+            ensure!(
+                self.offsets[i] <= self.offsets[i + 1],
+                "bank {i}: offset table not monotonic"
+            );
+            let span = (self.offsets[i + 1] - self.offsets[i]) as usize;
+            ensure!(
+                span == nnz,
+                "bank {i}: hot code names {nnz} values but {span} are packed"
+            );
+            ensure!(
+                self.mbhots[i] == mbhot_for(nnz),
+                "bank {i}: mbhot {:#06b} inconsistent with nnz {nnz}",
+                self.mbhots[i]
+            );
+            let b = i % self.row_banks.max(1);
+            let live = row_len.saturating_sub(b * BANK_WIDTH).min(BANK_WIDTH);
+            ensure!(
+                live == BANK_WIDTH || hot >> live == 0,
+                "bank {i}: hot bits set in padding lanes"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Mini-bank hot code for `nnz` packed values -- delegated to the sim
+/// reference so the rule has exactly one definition.
+pub(crate) fn mbhot_for(nnz: usize) -> u8 {
+    EncodedBank::mbhot_for(nnz)
+}
+
+/// A tensor in bank-encoded compressed form.
+#[derive(Debug, Clone)]
+pub struct CompressedTensor {
+    /// logical dense shape
+    pub shape: Vec<usize>,
+    pub(crate) row_len: usize,
+    pub(crate) row_banks: usize,
+    pub(crate) segments: Vec<BankSegment>,
+}
+
+impl CompressedTensor {
+    /// (rows, row_len) factorization of a shape: leading axis is the
+    /// batch axis, everything else is the per-row feature extent.
+    pub(crate) fn layout(shape: &[usize]) -> (usize, usize) {
+        match shape.len() {
+            0 => (1, 1),
+            1 => (1, shape[0]),
+            _ => (shape[0], shape[1..].iter().product()),
+        }
+    }
+
+    /// All-zero tensor in compressed form (used for batch padding rows):
+    /// costs only the per-bank sidecar entries, no packed values.
+    pub fn zeros(shape: Vec<usize>) -> CompressedTensor {
+        let (rows, row_len) = Self::layout(&shape);
+        let row_banks = row_len.div_ceil(BANK_WIDTH);
+        let n_banks = rows * row_banks;
+        let segment = BankSegment {
+            rows,
+            row_banks,
+            packed: Vec::new(),
+            hots: vec![0; n_banks],
+            mbhots: vec![0; n_banks],
+            offsets: vec![0; n_banks + 1],
+        };
+        CompressedTensor {
+            shape,
+            row_len,
+            row_banks,
+            segments: vec![segment],
+        }
+    }
+
+    /// Encode borrowed dense data with the given logical shape on the
+    /// calling thread (single segment; [`super::encoder::encode`] is the
+    /// multi-threaded entry point over a [`Tensor`]).  Lets callers that
+    /// keep ownership of a flat buffer (e.g. a request clip) encode
+    /// without first copying into a `Tensor`.
+    pub fn encode_slice(data: &[f32], shape: Vec<usize>) -> Result<CompressedTensor> {
+        let (rows, row_len) = Self::layout(&shape);
+        ensure!(
+            rows * row_len == data.len(),
+            "shape {shape:?} wants {} elements, got {}",
+            rows * row_len,
+            data.len()
+        );
+        let row_banks = row_len.div_ceil(BANK_WIDTH);
+        Ok(CompressedTensor {
+            shape,
+            row_len,
+            row_banks,
+            segments: vec![BankSegment::encode(data, rows, row_len)],
+        })
+    }
+
+    /// Logical (dense) element count.
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Rows along the batch axis covered by the segments.
+    pub fn rows(&self) -> usize {
+        self.segments.iter().map(|s| s.rows).sum()
+    }
+
+    /// Stored nonzero values.
+    pub fn nnz(&self) -> usize {
+        self.segments.iter().map(|s| s.packed.len()).sum()
+    }
+
+    /// Total encoded banks.
+    pub fn banks(&self) -> usize {
+        self.segments.iter().map(|s| s.hots.len()).sum()
+    }
+
+    /// Fraction of logical elements that are exactly zero.
+    pub fn sparsity(&self) -> f64 {
+        let n = self.len();
+        if n == 0 {
+            return 0.0;
+        }
+        1.0 - self.nnz() as f64 / n as f64
+    }
+
+    /// Bits this tensor occupies on the wire: packed values plus the
+    /// per-bank hot/mbhot sidecars.
+    pub fn compressed_bits(&self) -> u64 {
+        self.nnz() as u64 * ELEM_BITS as u64 + self.banks() as u64 * BANK_SIDECAR_BITS
+    }
+
+    /// Bits the dense transport of the same tensor would occupy.
+    pub fn dense_bits(&self) -> u64 {
+        self.len() as u64 * ELEM_BITS as u64
+    }
+
+    /// Dense bits over compressed bits (> 1 means compression wins).
+    pub fn compression_ratio(&self) -> f64 {
+        let c = self.compressed_bits();
+        if c == 0 {
+            return 1.0;
+        }
+        self.dense_bits() as f64 / c as f64
+    }
+
+    /// Decode to a dense tensor (single-threaded; the encoder module's
+    /// [`super::encoder::decode`] parallelizes over segments).
+    pub fn to_tensor(&self) -> Tensor {
+        let mut data = vec![0f32; self.len()];
+        if self.row_len > 0 {
+            let mut row0 = 0usize;
+            for seg in &self.segments {
+                let span = &mut data[row0 * self.row_len..(row0 + seg.rows) * self.row_len];
+                seg.decode_into(span, self.row_len);
+                row0 += seg.rows;
+            }
+        }
+        Tensor {
+            shape: self.shape.clone(),
+            data,
+        }
+    }
+
+    /// Zero-copy batch concatenation: segments move into the result,
+    /// packed data is never copied (shapes past the batch axis must
+    /// match).
+    pub fn concat_batch(parts: Vec<CompressedTensor>) -> Result<CompressedTensor> {
+        let Some(first) = parts.first() else {
+            bail!("concat of zero tensors");
+        };
+        ensure!(
+            first.shape.len() >= 2,
+            "concat needs a batch axis, got {:?}",
+            first.shape
+        );
+        let tail: Vec<usize> = first.shape[1..].to_vec();
+        let row_len = first.row_len;
+        let row_banks = first.row_banks;
+        let mut rows = 0usize;
+        let mut segments = Vec::new();
+        for p in parts {
+            ensure!(
+                p.shape[1..] == tail[..],
+                "ragged concat: {:?} vs tail {:?}",
+                p.shape,
+                tail
+            );
+            rows += p.shape[0];
+            segments.extend(p.segments);
+        }
+        let mut shape = vec![rows];
+        shape.extend_from_slice(&tail);
+        Ok(CompressedTensor {
+            shape,
+            row_len,
+            row_banks,
+            segments,
+        })
+    }
+
+    /// Random access to one encoded bank (`row` on the batch axis, `b`
+    /// the bank within the row): the layout-independent view the
+    /// sim-equivalence tests compare against [`crate::sim::rfc`].
+    pub fn bank(&self, row: usize, b: usize) -> Option<(u16, u8, &[f32])> {
+        if b >= self.row_banks {
+            return None;
+        }
+        let mut r = row;
+        for seg in &self.segments {
+            if r < seg.rows {
+                let i = r * seg.row_banks + b;
+                let lo = seg.offsets[i] as usize;
+                let hi = seg.offsets[i + 1] as usize;
+                return Some((seg.hots[i], seg.mbhots[i], &seg.packed[lo..hi]));
+            }
+            r -= seg.rows;
+        }
+        None
+    }
+
+    /// Full structural validation: shape/segment agreement plus every
+    /// bank's hot-code/packed-length and mbhot consistency.
+    pub fn validate(&self) -> Result<()> {
+        let (rows, row_len) = Self::layout(&self.shape);
+        ensure!(
+            row_len == self.row_len,
+            "shape {:?} implies row_len {row_len}, tensor says {}",
+            self.shape,
+            self.row_len
+        );
+        ensure!(
+            self.row_banks == row_len.div_ceil(BANK_WIDTH),
+            "row_banks {} inconsistent with row_len {row_len}",
+            self.row_banks
+        );
+        let seg_rows: usize = self.segments.iter().map(|s| s.rows).sum();
+        ensure!(
+            seg_rows == rows,
+            "segments cover {seg_rows} rows, shape has {rows}"
+        );
+        for seg in &self.segments {
+            ensure!(
+                seg.row_banks == self.row_banks,
+                "segment row_banks {} vs tensor {}",
+                seg.row_banks,
+                self.row_banks
+            );
+            seg.validate(self.row_len)?;
+        }
+        Ok(())
+    }
+}
+
+impl Default for CompressedTensor {
+    /// An empty 0-row placeholder (used when moving payloads out).
+    fn default() -> CompressedTensor {
+        CompressedTensor::zeros(vec![0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::rfc as sim_rfc;
+
+    fn sparse(shape: Vec<usize>, sparsity: f64, seed: u64) -> Tensor {
+        Tensor::random_sparse(shape, sparsity, seed)
+    }
+
+    #[test]
+    fn roundtrip_aligned_and_unaligned_rows() {
+        for row_len in [16usize, 64, 600, 75, 1] {
+            let t = sparse(vec![5, row_len], 0.5, row_len as u64);
+            let ct = CompressedTensor {
+                shape: t.shape.clone(),
+                row_len,
+                row_banks: row_len.div_ceil(BANK_WIDTH),
+                segments: vec![BankSegment::encode(&t.data, 5, row_len)],
+            };
+            ct.validate().unwrap();
+            assert_eq!(ct.to_tensor(), t, "row_len {row_len}");
+        }
+    }
+
+    #[test]
+    fn banks_match_sim_encoder() {
+        let row_len = 4 * BANK_WIDTH;
+        let t = sparse(vec![3, row_len], 0.6, 9);
+        let seg = BankSegment::encode(&t.data, 3, row_len);
+        let ct = CompressedTensor {
+            shape: t.shape.clone(),
+            row_len,
+            row_banks: 4,
+            segments: vec![seg],
+        };
+        for r in 0..3 {
+            let row = &t.data[r * row_len..(r + 1) * row_len];
+            let (sim_banks, _) = sim_rfc::encode_vector(row).unwrap();
+            for (b, sb) in sim_banks.iter().enumerate() {
+                let (hot, mbhot, packed) = ct.bank(r, b).unwrap();
+                assert_eq!(hot, sb.hot);
+                assert_eq!(mbhot, sb.mbhot);
+                assert_eq!(packed, &sb.packed[..]);
+            }
+        }
+    }
+
+    #[test]
+    fn zeros_cost_only_sidecars() {
+        let z = CompressedTensor::zeros(vec![4, 32]);
+        assert_eq!(z.nnz(), 0);
+        assert_eq!(z.banks(), 8);
+        assert_eq!(z.compressed_bits(), 8 * BANK_SIDECAR_BITS);
+        assert_eq!(z.to_tensor(), Tensor::zeros(vec![4, 32]));
+        z.validate().unwrap();
+    }
+
+    #[test]
+    fn concat_is_zero_copy_and_correct() {
+        let a = sparse(vec![2, 48], 0.5, 1);
+        let b = sparse(vec![3, 48], 0.8, 2);
+        let ca = CompressedTensor {
+            shape: a.shape.clone(),
+            row_len: 48,
+            row_banks: 3,
+            segments: vec![BankSegment::encode(&a.data, 2, 48)],
+        };
+        let cb = CompressedTensor {
+            shape: b.shape.clone(),
+            row_len: 48,
+            row_banks: 3,
+            segments: vec![BankSegment::encode(&b.data, 3, 48)],
+        };
+        let bits = ca.compressed_bits() + cb.compressed_bits();
+        let cat = CompressedTensor::concat_batch(vec![ca, cb]).unwrap();
+        cat.validate().unwrap();
+        assert_eq!(cat.shape, vec![5, 48]);
+        assert_eq!(cat.compressed_bits(), bits);
+        let dense = Tensor::concat_batch(&[a, b]).unwrap();
+        assert_eq!(cat.to_tensor(), dense);
+    }
+
+    #[test]
+    fn concat_rejects_ragged() {
+        let a = CompressedTensor::zeros(vec![1, 32]);
+        let b = CompressedTensor::zeros(vec![1, 48]);
+        assert!(CompressedTensor::concat_batch(vec![a, b]).is_err());
+        assert!(CompressedTensor::concat_batch(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_hot_packed_mismatch() {
+        let t = sparse(vec![2, 32], 0.5, 3);
+        let mut seg = BankSegment::encode(&t.data, 2, 32);
+        // flip one hot bit: packed length no longer matches the hot code
+        seg.hots[0] ^= 1 << 15;
+        seg.mbhots[0] = mbhot_for(seg.hots[0].count_ones() as usize);
+        let ct = CompressedTensor {
+            shape: vec![2, 32],
+            row_len: 32,
+            row_banks: 2,
+            segments: vec![seg],
+        };
+        assert!(ct.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_inconsistent_mbhot() {
+        let t = sparse(vec![1, 16], 0.3, 4);
+        let mut seg = BankSegment::encode(&t.data, 1, 16);
+        seg.mbhots[0] = 0b1111;
+        let nnz = seg.hots[0].count_ones() as usize;
+        if mbhot_for(nnz) != 0b1111 {
+            let ct = CompressedTensor {
+                shape: vec![1, 16],
+                row_len: 16,
+                row_banks: 1,
+                segments: vec![seg],
+            };
+            assert!(ct.validate().is_err());
+        }
+    }
+
+    #[test]
+    fn validate_rejects_padding_lane_hot_bits() {
+        // row_len 20: bank 1 has 4 live lanes, 12 padding lanes
+        let t = sparse(vec![1, 20], 0.0, 5);
+        let mut seg = BankSegment::encode(&t.data, 1, 20);
+        seg.hots[1] |= 1 << 10;
+        seg.packed.push(1.0);
+        for o in seg.offsets.iter_mut().skip(2) {
+            *o += 1;
+        }
+        seg.mbhots[1] = mbhot_for(seg.hots[1].count_ones() as usize);
+        let ct = CompressedTensor {
+            shape: vec![1, 20],
+            row_len: 20,
+            row_banks: 2,
+            segments: vec![seg],
+        };
+        assert!(ct.validate().is_err());
+    }
+
+    #[test]
+    fn ratio_reflects_sparsity() {
+        let sparse_t = sparse(vec![8, 256], 0.9, 6);
+        let dense_t = sparse(vec![8, 256], 0.0, 7);
+        let cs = CompressedTensor {
+            shape: sparse_t.shape.clone(),
+            row_len: 256,
+            row_banks: 16,
+            segments: vec![BankSegment::encode(&sparse_t.data, 8, 256)],
+        };
+        let cd = CompressedTensor {
+            shape: dense_t.shape.clone(),
+            row_len: 256,
+            row_banks: 16,
+            segments: vec![BankSegment::encode(&dense_t.data, 8, 256)],
+        };
+        assert!(cs.compression_ratio() > 3.0, "{}", cs.compression_ratio());
+        // fully dense pays the sidecar overhead (20 bits per 256-bit bank)
+        assert!(cd.compression_ratio() < 1.0);
+        assert!(cd.compression_ratio() > 0.85);
+    }
+}

@@ -1,0 +1,170 @@
+//! Multi-threaded bank-shard encoder/decoder for [`CompressedTensor`].
+//!
+//! The paper's storage writes every bank through its own write port in
+//! parallel; the software analog is one worker per *bank shard*: the
+//! batch rows are split into contiguous shards and each worker encodes
+//! its shard into an independent [`super::compressed::BankSegment`].
+//! Segments are kept separate in the result (no stitch copy), which is
+//! also what makes batch concatenation zero-copy.  Decoding scatters
+//! each segment into its disjoint slice of the dense output, so it
+//! parallelizes the same way.
+
+use std::num::NonZeroUsize;
+use std::thread;
+
+use crate::runtime::Tensor;
+
+use super::compressed::{BankSegment, CompressedTensor};
+
+/// Encoder/decoder policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct EncoderConfig {
+    /// worker shards; rows are split into this many contiguous ranges
+    pub shards: usize,
+    /// minimum activation sparsity for compressed transport to pay off
+    /// (the 16+4 sidecar bits per 16x16-bit bank break even near 8%
+    /// zeros); below it payloads stay dense -- see [`super::Payload`]
+    pub min_sparsity: f64,
+    /// tensors smaller than this many elements encode on the calling
+    /// thread.  The workers are scoped threads spawned per call (std
+    /// has no pool), so the threshold is set high enough that typical
+    /// per-stage activations stay serial -- the pipeline's 11 stage
+    /// threads already saturate the cores, and per-payload spawns there
+    /// would only add churn.  Sharding kicks in for genuinely large
+    /// tensors (big batches / long clips) where the spawn cost
+    /// amortizes; a persistent worker pool is a ROADMAP item.
+    pub parallel_threshold: usize,
+}
+
+impl Default for EncoderConfig {
+    fn default() -> Self {
+        EncoderConfig {
+            shards: thread::available_parallelism()
+                .map(NonZeroUsize::get)
+                .unwrap_or(4)
+                .min(8),
+            min_sparsity: 0.10,
+            parallel_threshold: 1 << 20,
+        }
+    }
+}
+
+/// Encode a dense tensor into bank-sharded compressed form.  The
+/// logical encoding (per-bank hot/mbhot/packed values) is identical for
+/// every shard count; only the internal segment boundaries differ.
+pub fn encode(t: &Tensor, cfg: &EncoderConfig) -> CompressedTensor {
+    let (rows, row_len) = CompressedTensor::layout(&t.shape);
+    let row_banks = row_len.div_ceil(crate::sim::rfc::BANK_WIDTH);
+    let shards = cfg.shards.clamp(1, rows.max(1));
+    let segments = if shards <= 1 || t.data.len() < cfg.parallel_threshold {
+        vec![BankSegment::encode(&t.data, rows, row_len)]
+    } else {
+        let per = rows.div_ceil(shards);
+        let ranges: Vec<(usize, usize)> = (0..shards)
+            .map(|s| (s * per, rows.min((s + 1) * per)))
+            .filter(|&(lo, hi)| lo < hi)
+            .collect();
+        thread::scope(|scope| {
+            let handles: Vec<_> = ranges
+                .iter()
+                .map(|&(lo, hi)| {
+                    let slice = &t.data[lo * row_len..hi * row_len];
+                    scope.spawn(move || BankSegment::encode(slice, hi - lo, row_len))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("encoder shard panicked"))
+                .collect()
+        })
+    };
+    CompressedTensor {
+        shape: t.shape.clone(),
+        row_len,
+        row_banks,
+        segments,
+    }
+}
+
+/// Decode back to dense form, one worker per segment when the tensor is
+/// large enough to pay for the spawns.
+pub fn decode(ct: &CompressedTensor, cfg: &EncoderConfig) -> Tensor {
+    if ct.segments.len() <= 1 || ct.len() < cfg.parallel_threshold || ct.row_len == 0 {
+        return ct.to_tensor();
+    }
+    let row_len = ct.row_len;
+    let mut data = vec![0f32; ct.len()];
+    thread::scope(|scope| {
+        let mut rest: &mut [f32] = &mut data;
+        for seg in &ct.segments {
+            let taken = std::mem::take(&mut rest);
+            let (head, tail) = taken.split_at_mut(seg.rows * row_len);
+            scope.spawn(move || seg.decode_into(head, row_len));
+            rest = tail;
+        }
+    });
+    Tensor {
+        shape: ct.shape.clone(),
+        data,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sparse(shape: Vec<usize>, sparsity: f64, seed: u64) -> Tensor {
+        Tensor::random_sparse(shape, sparsity, seed)
+    }
+
+    fn cfg(shards: usize, threshold: usize) -> EncoderConfig {
+        EncoderConfig {
+            shards,
+            min_sparsity: 0.10,
+            parallel_threshold: threshold,
+        }
+    }
+
+    #[test]
+    fn parallel_encode_matches_serial_logically() {
+        let t = sparse(vec![13, 4, 40], 0.55, 42);
+        let serial = encode(&t, &cfg(1, usize::MAX));
+        for shards in [2usize, 3, 5, 8] {
+            let par = encode(&t, &cfg(shards, 0));
+            par.validate().unwrap();
+            assert_eq!(par.nnz(), serial.nnz(), "shards {shards}");
+            assert_eq!(par.to_tensor(), t, "shards {shards}");
+            for r in 0..13 {
+                for b in 0..par.row_banks {
+                    assert_eq!(par.bank(r, b), serial.bank(r, b));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_decode_matches_dense() {
+        let t = sparse(vec![16, 512], 0.7, 7);
+        let ct = encode(&t, &cfg(4, 0));
+        assert!(ct.segments.len() > 1);
+        assert_eq!(decode(&ct, &cfg(4, 0)), t);
+        assert_eq!(decode(&ct, &cfg(4, usize::MAX)), t);
+    }
+
+    #[test]
+    fn more_shards_than_rows_is_fine() {
+        let t = sparse(vec![2, 64], 0.5, 8);
+        let ct = encode(&t, &cfg(16, 0));
+        ct.validate().unwrap();
+        assert_eq!(ct.to_tensor(), t);
+        assert!(ct.segments.len() <= 2);
+    }
+
+    #[test]
+    fn small_tensors_stay_on_calling_thread() {
+        let t = sparse(vec![4, 32], 0.5, 9);
+        let ct = encode(&t, &EncoderConfig::default());
+        assert_eq!(ct.segments.len(), 1);
+        assert_eq!(ct.to_tensor(), t);
+    }
+}

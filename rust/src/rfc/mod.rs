@@ -1,0 +1,160 @@
+//! RFC runtime subsystem: production sparse-feature compression for the
+//! serving hot path (paper SSV-C, Fig. 7 / Fig. 11).
+//!
+//! [`crate::sim::rfc`] stays the bit-exact functional + cost *reference*
+//! for the paper's bank/mini-bank scheme; this module is what the
+//! coordinator actually ships between pipeline stages:
+//!
+//! * [`CompressedTensor`] -- a bank-sharded encoded tensor whose
+//!   batch-axis concatenation is zero-copy (segments move, packed
+//!   values don't);
+//! * [`encode`] / [`decode`] -- the multi-threaded codec, one worker per
+//!   bank shard (the software analog of the paper's per-bank parallel
+//!   write ports);
+//! * [`Payload`] -- the stage-to-stage transport: compressed when the
+//!   post-ReLU sparsity clears the break-even gate, dense otherwise,
+//!   decoded lazily on stage entry.
+//!
+//! Equivalence contract (enforced by `tests/rfc_equivalence.rs`): for
+//! every 16-aligned bank, the runtime encoder's `(hot, mbhot, packed)`
+//! triple is bit-for-bit identical to `sim::rfc::encode_bank`, and
+//! decode reproduces the dense tensor exactly.
+
+pub mod compressed;
+pub mod encoder;
+
+pub use compressed::{BankSegment, CompressedTensor, BANK_SIDECAR_BITS};
+pub use encoder::{decode, encode, EncoderConfig};
+
+use crate::runtime::Tensor;
+
+/// A tensor travelling between pipeline stages: dense, or bank-encoded
+/// when compression pays for itself.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    Dense(Tensor),
+    Compressed(CompressedTensor),
+}
+
+impl Payload {
+    /// Wrap a stage output for transport: compress when the sparsity
+    /// gate says the wire format wins (ReLU outputs usually do), keep
+    /// dense otherwise.  This is the runtime decision the paper makes
+    /// structurally by placing the encoder after every ReLU.
+    ///
+    /// Single pass: encoding counts the nonzeros as it packs, so the
+    /// gate reads the exact wire costs off the result instead of
+    /// pre-scanning the tensor; a tensor that fails the gate costs one
+    /// discarded encode, which post-ReLU traffic rarely does.
+    pub fn from_tensor(t: Tensor, cfg: &EncoderConfig) -> Payload {
+        let ct = encode(&t, cfg);
+        if ct.sparsity() >= cfg.min_sparsity && ct.compressed_bits() < ct.dense_bits() {
+            Payload::Compressed(ct)
+        } else {
+            Payload::Dense(t)
+        }
+    }
+
+    /// Logical dense shape.
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Payload::Dense(t) => &t.shape,
+            Payload::Compressed(c) => &c.shape,
+        }
+    }
+
+    pub fn is_compressed(&self) -> bool {
+        matches!(self, Payload::Compressed(_))
+    }
+
+    /// The compressed view, if this payload is compressed.
+    pub fn as_compressed(&self) -> Option<&CompressedTensor> {
+        match self {
+            Payload::Compressed(c) => Some(c),
+            Payload::Dense(_) => None,
+        }
+    }
+
+    /// Bits the dense transport of this payload would occupy.
+    pub fn dense_bits(&self) -> u64 {
+        self.shape().iter().product::<usize>() as u64
+            * crate::sim::rfc::ELEM_BITS as u64
+    }
+
+    /// Bits this payload occupies on the wire.
+    pub fn transport_bits(&self) -> u64 {
+        match self {
+            Payload::Dense(t) => {
+                t.len() as u64 * crate::sim::rfc::ELEM_BITS as u64
+            }
+            Payload::Compressed(c) => c.compressed_bits(),
+        }
+    }
+
+    /// Materialize the dense tensor -- the lazy decode point, called at
+    /// stage entry by [`crate::runtime::Executable::run_payload`].
+    pub fn into_dense(self, cfg: &EncoderConfig) -> Tensor {
+        match self {
+            Payload::Dense(t) => t,
+            Payload::Compressed(c) => decode(&c, cfg),
+        }
+    }
+
+    /// Borrowing variant of [`Payload::into_dense`].
+    pub fn to_dense(&self, cfg: &EncoderConfig) -> Tensor {
+        match self {
+            Payload::Dense(t) => t.clone(),
+            Payload::Compressed(c) => decode(c, cfg),
+        }
+    }
+
+    /// Move the payload out, leaving an empty placeholder behind.
+    pub fn take(&mut self) -> Payload {
+        std::mem::replace(self, Payload::Compressed(CompressedTensor::default()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensor_with_sparsity(sparsity: f64, seed: u64) -> Tensor {
+        Tensor::random_sparse(vec![4, 256], sparsity, seed)
+    }
+
+    #[test]
+    fn gate_compresses_sparse_keeps_dense() {
+        let cfg = EncoderConfig::default();
+        let sparse = Payload::from_tensor(tensor_with_sparsity(0.6, 1), &cfg);
+        assert!(sparse.is_compressed());
+        let dense = Payload::from_tensor(tensor_with_sparsity(0.0, 2), &cfg);
+        assert!(!dense.is_compressed());
+    }
+
+    #[test]
+    fn into_dense_roundtrips() {
+        let cfg = EncoderConfig::default();
+        let t = tensor_with_sparsity(0.5, 3);
+        let p = Payload::from_tensor(t.clone(), &cfg);
+        assert_eq!(p.shape(), &[4, 256]);
+        assert_eq!(p.into_dense(&cfg), t);
+    }
+
+    #[test]
+    fn compressed_transport_is_smaller_when_sparse() {
+        let cfg = EncoderConfig::default();
+        let t = tensor_with_sparsity(0.7, 4);
+        let dense_bits = t.len() as u64 * 16;
+        let p = Payload::from_tensor(t, &cfg);
+        assert!(p.transport_bits() < dense_bits / 2);
+    }
+
+    #[test]
+    fn take_leaves_empty_placeholder() {
+        let cfg = EncoderConfig::default();
+        let mut p = Payload::from_tensor(tensor_with_sparsity(0.5, 5), &cfg);
+        let taken = p.take();
+        assert_eq!(taken.shape(), &[4, 256]);
+        assert_eq!(p.shape(), &[0]);
+    }
+}

@@ -118,6 +118,18 @@ impl Executable {
         Ok(out.pop().unwrap())
     }
 
+    /// Stage-entry execution over the compressed transport: the payload
+    /// is decoded lazily *here*, at the moment the stage needs dense
+    /// data, so upstream queues and channels only ever carry the
+    /// bank-encoded form (see [`crate::rfc`]).
+    pub fn run_payload(
+        &self,
+        payload: crate::rfc::Payload,
+        cfg: &crate::rfc::EncoderConfig,
+    ) -> Result<Tensor> {
+        self.run1(&[payload.into_dense(cfg)])
+    }
+
     /// Execute literal -> literal without any host `Vec` round-trip:
     /// the hot path for chaining pipeline stages (perf: saves two host
     /// copies per stage boundary vs `run`).

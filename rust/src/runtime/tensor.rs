@@ -31,6 +31,24 @@ impl Tensor {
         }
     }
 
+    /// Deterministic random tensor with the given fraction of exact
+    /// zeros and strictly positive (post-ReLU-style) nonzeros -- the
+    /// shared generator for the RFC tests and benches.
+    pub fn random_sparse(shape: Vec<usize>, sparsity: f64, seed: u64) -> Tensor {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = (0..n)
+            .map(|_| {
+                if rng.chance(sparsity) {
+                    0.0
+                } else {
+                    rng.f32() + 1e-3
+                }
+            })
+            .collect();
+        Tensor { shape, data }
+    }
+
     pub fn len(&self) -> usize {
         self.data.len()
     }

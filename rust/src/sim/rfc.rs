@@ -46,6 +46,34 @@ impl EncodedBank {
     pub fn nnz(&self) -> usize {
         self.hot.count_ones() as usize
     }
+
+    /// Expected mini-bank hot code for `nnz` packed values: the
+    /// `ceil(nnz/4)` head mini-banks, contiguously from the head.
+    pub fn mbhot_for(nnz: usize) -> u8 {
+        ((1u16 << nnz.div_ceil(MINI_WIDTH)) - 1) as u8
+    }
+
+    /// Structural validation: the hot code must name exactly the packed
+    /// values and mbhot must cover exactly `ceil(nnz/4)` mini-banks.
+    /// This is the rejection contract the runtime format
+    /// ([`crate::rfc::CompressedTensor::validate`]) mirrors.
+    pub fn validate(&self) -> Result<()> {
+        let nnz = self.nnz();
+        if nnz != self.packed.len() {
+            bail!(
+                "hot code names {nnz} values but {} are packed",
+                self.packed.len()
+            );
+        }
+        if self.mbhot != Self::mbhot_for(nnz) {
+            bail!(
+                "mbhot {:#06b} inconsistent with nnz {nnz} (expected {:#06b})",
+                self.mbhot,
+                Self::mbhot_for(nnz)
+            );
+        }
+        Ok(())
+    }
 }
 
 /// Encode one bank of `BANK_WIDTH` post-ReLU values.
@@ -61,9 +89,16 @@ pub fn encode_bank(values: &[f32]) -> Result<EncodedBank> {
             packed.push(v);
         }
     }
-    let used = packed.len().div_ceil(MINI_WIDTH);
-    let mbhot = ((1u16 << used) - 1) as u8;
+    let mbhot = EncodedBank::mbhot_for(packed.len());
     Ok(EncodedBank { packed, hot, mbhot })
+}
+
+/// Checked decode: rejects hot-code/packed-length (or mbhot) mismatches
+/// instead of panicking on a short `packed` or silently ignoring a long
+/// one.
+pub fn decode_bank_checked(e: &EncodedBank) -> Result<[f32; BANK_WIDTH]> {
+    e.validate()?;
+    Ok(decode_bank(e))
 }
 
 /// Decode an encoded bank back to its sparse form.
@@ -292,6 +327,63 @@ mod tests {
         assert_eq!(e.nnz(), 0);
         assert_eq!(e.mbhot, 0);
         assert_eq!(decode_bank(&e), [0f32; 16]);
+    }
+
+    #[test]
+    fn all_zero_bank_stores_and_loads() {
+        // mbhot = 0: no mini-bank is written, yet the line must load
+        // back as zeros (only the hot-code sidecars advance)
+        let mut st = BankStorage::new([4, 4, 4, 4]);
+        let e = encode_bank(&vec![0f32; 16]).unwrap();
+        let a = st.store(&e);
+        assert_eq!(a.cycles, 1);
+        assert!(!a.truncated);
+        let (back, _) = st.load(0).unwrap();
+        assert_eq!(back.mbhot, 0);
+        assert!(back.packed.is_empty());
+        assert_eq!(decode_bank(&back), [0f32; 16]);
+    }
+
+    #[test]
+    fn fully_dense_bank_roundtrips_through_storage() {
+        // all 4 mini-banks enabled: mbhot 0b1111, 16 packed values
+        let dense: Vec<f32> = (1..=16).map(|i| i as f32).collect();
+        let e = encode_bank(&dense).unwrap();
+        assert_eq!(e.mbhot, 0b1111);
+        assert_eq!(e.packed.len(), BANK_WIDTH);
+        e.validate().unwrap();
+        let mut st = BankStorage::new([2, 2, 2, 2]);
+        st.store(&e);
+        let (back, _) = st.load(0).unwrap();
+        assert_eq!(decode_bank(&back).to_vec(), dense);
+    }
+
+    #[test]
+    fn mismatched_packed_length_rejected() {
+        let v = vec16(&[(0, 1.0), (4, 2.0), (9, 3.0)]);
+        let mut e = encode_bank(&v).unwrap();
+        e.validate().unwrap();
+        assert_eq!(decode_bank_checked(&e).unwrap().to_vec(), v);
+        // drop one packed value: hot names 3, packed holds 2
+        e.packed.pop();
+        assert!(e.validate().is_err());
+        assert!(decode_bank_checked(&e).is_err());
+        // extra packed value: hot names 3, packed holds 4
+        e.packed.push(9.0);
+        e.packed.push(9.0);
+        assert!(decode_bank_checked(&e).is_err());
+    }
+
+    #[test]
+    fn inconsistent_mbhot_rejected() {
+        let v = vec16(&[(1, 1.0), (2, 2.0)]);
+        let mut e = encode_bank(&v).unwrap();
+        // 2 values need 1 mini-bank; claim all 4
+        e.mbhot = 0b1111;
+        assert!(e.validate().is_err());
+        assert!(decode_bank_checked(&e).is_err());
+        e.mbhot = EncodedBank::mbhot_for(2);
+        assert!(decode_bank_checked(&e).is_ok());
     }
 
     #[test]

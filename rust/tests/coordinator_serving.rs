@@ -1,5 +1,9 @@
 //! Coordinator end-to-end: submit clips, get classified responses, with
 //! batching and latency accounting intact.
+//!
+//! Quarantine note: these tests need the AOT artifacts, so they are
+//! `#[ignore]`d unless the `aot-artifacts` feature is on (tracking: the
+//! gates go away once artifact export runs in CI).
 
 use std::time::Duration;
 
@@ -18,6 +22,10 @@ fn setup() -> Option<(Manifest, Engine)> {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "aot-artifacts"),
+    ignore = "needs AOT artifacts (make artifacts); run with --features aot-artifacts"
+)]
 fn serves_all_requests() {
     let Some((m, engine)) = setup() else { return };
     let server = Server::start(
@@ -67,6 +75,10 @@ fn serves_all_requests() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "aot-artifacts"),
+    ignore = "needs AOT artifacts (make artifacts); run with --features aot-artifacts"
+)]
 fn distinct_requests_get_distinct_ids_and_logits_rows() {
     let Some((m, engine)) = setup() else { return };
     let server = Server::start(
@@ -97,6 +109,10 @@ fn distinct_requests_get_distinct_ids_and_logits_rows() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "aot-artifacts"),
+    ignore = "needs AOT artifacts (make artifacts); run with --features aot-artifacts"
+)]
 fn throughput_metrics_populate() {
     let Some((m, engine)) = setup() else { return };
     let server = Server::start(

@@ -4,11 +4,16 @@
 //! (Blocks run the Pallas-kernel path, the full module the jnp path, so
 //! this also cross-validates Layer 1 vs Layer 2 *through* Layer 3.)
 
+//! Quarantine note: every test here needs the AOT artifacts, so they are
+//! `#[ignore]`d unless the `aot-artifacts` feature is on (tracking: the
+//! gates go away once artifact export runs in CI).
+
 use std::sync::Arc;
 
 use rfc_hypgcn::coordinator::pipeline::{Job, Pipeline};
 use rfc_hypgcn::data::{GenConfig, SkeletonGen};
 use rfc_hypgcn::meta::Manifest;
+use rfc_hypgcn::rfc::EncoderConfig;
 use rfc_hypgcn::runtime::{Engine, Tensor};
 
 fn setup() -> Option<(Manifest, Engine)> {
@@ -33,6 +38,10 @@ fn input_batch(m: &Manifest, seed: u64) -> Tensor {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "aot-artifacts"),
+    ignore = "needs AOT artifacts (make artifacts); run with --features aot-artifacts"
+)]
 fn block_chain_matches_full_model() {
     let Some((m, engine)) = setup() else { return };
     let pipeline = Pipeline::load(&engine, &m).unwrap();
@@ -62,6 +71,10 @@ fn block_chain_matches_full_model() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "aot-artifacts"),
+    ignore = "needs AOT artifacts (make artifacts); run with --features aot-artifacts"
+)]
 fn block_shapes_chain() {
     let Some((m, engine)) = setup() else { return };
     let pipeline = Pipeline::load(&engine, &m).unwrap();
@@ -79,10 +92,15 @@ fn block_shapes_chain() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "aot-artifacts"),
+    ignore = "needs AOT artifacts (make artifacts); run with --features aot-artifacts"
+)]
 fn threaded_pipeline_matches_sync_and_preserves_order() {
     let Some((m, engine)) = setup() else { return };
     let pipeline = Arc::new(Pipeline::load(&engine, &m).unwrap());
     let handle = pipeline.spawn::<usize>(2);
+    let enc = EncoderConfig::default();
     let inputs: Vec<Tensor> =
         (0..4).map(|i| input_batch(&m, 100 + i)).collect();
     let expected: Vec<Tensor> = inputs
@@ -90,21 +108,14 @@ fn threaded_pipeline_matches_sync_and_preserves_order() {
         .map(|x| pipeline.run_sync(x).unwrap())
         .collect();
     for (i, x) in inputs.iter().enumerate() {
-        handle
-            .input
-            .send(Job {
-                ctx: i,
-                tensor: x.clone(),
-                entered: std::time::Instant::now(),
-            })
-            .unwrap();
+        handle.input.send(Job::dense(i, x.clone())).unwrap();
     }
     let mut got = 0;
     for job in handle.output.iter() {
         let exp = &expected[job.ctx];
-        assert_eq!(job.tensor.shape, exp.shape);
-        let max_err = job
-            .tensor
+        let out = job.payload.into_dense(&enc);
+        assert_eq!(out.shape, exp.shape);
+        let max_err = out
             .data
             .iter()
             .zip(&exp.data)
@@ -121,6 +132,10 @@ fn threaded_pipeline_matches_sync_and_preserves_order() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "aot-artifacts"),
+    ignore = "needs AOT artifacts (make artifacts); run with --features aot-artifacts"
+)]
 fn skip_variant_runs_on_half_frames() {
     let Some((m, engine)) = setup() else { return };
     let exe = engine.load_hlo(&m.hlo_path(&m.model_skip.hlo)).unwrap();
@@ -139,6 +154,10 @@ fn skip_variant_runs_on_half_frames() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "aot-artifacts"),
+    ignore = "needs AOT artifacts (make artifacts); run with --features aot-artifacts"
+)]
 fn ck_variant_differs_from_dense() {
     let Some((m, engine)) = setup() else { return };
     let dense = engine.load_hlo(&m.hlo_path(&m.model_dense.hlo)).unwrap();

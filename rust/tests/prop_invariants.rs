@@ -188,15 +188,54 @@ fn prop_batch_padding_rows_zero() {
             .collect();
         let b = Batcher::form_from(&policy, reqs).unwrap();
         assert_eq!(b.real, real);
-        assert_eq!(b.input.shape[0], batch_size);
+        assert_eq!(b.input.shape()[0], batch_size);
+        let dense = b
+            .input
+            .to_dense(&rfc_hypgcn::rfc::EncoderConfig::default());
         let row = 3 * seq_len * 25;
         for r in real..batch_size {
             assert!(
-                b.input.data[r * row..(r + 1) * row]
+                dense.data[r * row..(r + 1) * row]
                     .iter()
                     .all(|&v| v == 0.0),
                 "padding row {r} not zero"
             );
         }
+        match b.input.as_compressed() {
+            Some(ct) => {
+                ct.validate().unwrap();
+                // compressed-form batching: only the real (all-ones)
+                // clips' values are stored, padding is sidecar-only
+                assert_eq!(ct.nnz(), real * row);
+            }
+            // the batch-level gate ships dense only when every row is a
+            // dense clip (no padding at these policy sizes)
+            None => assert_eq!(real, batch_size),
+        }
+    }
+}
+
+#[test]
+fn prop_runtime_compress_roundtrip_any_shard_count() {
+    use rfc_hypgcn::rfc::{self, EncoderConfig};
+    let mut rng = Rng::new(8);
+    for case in 0..40 {
+        let rows = 1 + rng.below(9);
+        let cols = 1 + rng.below(90);
+        let s = rng.f64();
+        let t = Tensor::random_sparse(vec![rows, cols], s, rng.next_u64());
+        let cfg = EncoderConfig {
+            shards: 1 + rng.below(6),
+            min_sparsity: 0.0,
+            parallel_threshold: 0,
+        };
+        let ct = rfc::encode(&t, &cfg);
+        ct.validate().unwrap();
+        assert_eq!(rfc::decode(&ct, &cfg), t, "case {case}");
+        assert_eq!(
+            ct.nnz(),
+            t.data.iter().filter(|&&v| v != 0.0).count(),
+            "case {case}"
+        );
     }
 }

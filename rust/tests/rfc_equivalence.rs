@@ -1,0 +1,168 @@
+//! The equivalence contract between the serving-path RFC subsystem
+//! (`rfc::CompressedTensor`, multi-threaded encoder) and the bit-exact
+//! sim reference (`sim::rfc`): every 16-aligned bank's
+//! `(hot, mbhot, packed)` triple must be identical bit-for-bit, decode
+//! must reproduce the dense tensor exactly, and the answer must not
+//! depend on how many encoder shards produced it.  Runs without AOT
+//! artifacts.
+
+use rfc_hypgcn::rfc::{self, CompressedTensor, EncoderConfig, Payload};
+use rfc_hypgcn::runtime::Tensor;
+use rfc_hypgcn::sim::rfc as sim_rfc;
+use rfc_hypgcn::util::rng::Rng;
+
+fn sparse_tensor(shape: Vec<usize>, sparsity: f64, seed: u64) -> Tensor {
+    Tensor::random_sparse(shape, sparsity, seed)
+}
+
+fn cfg(shards: usize) -> EncoderConfig {
+    EncoderConfig {
+        shards,
+        min_sparsity: 0.0,
+        parallel_threshold: 0,
+    }
+}
+
+#[test]
+fn runtime_banks_match_sim_encoder_bit_exact() {
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..50u64 {
+        let rows = 1 + rng.below(6);
+        let banks_per_row = 1 + rng.below(5);
+        let row_len = banks_per_row * sim_rfc::BANK_WIDTH;
+        let sparsity = rng.f64();
+        let t = sparse_tensor(vec![rows, row_len], sparsity, 1000 + case);
+        let ct = rfc::encode(&t, &cfg(1 + (case as usize % 4)));
+        ct.validate().unwrap();
+        for r in 0..rows {
+            let row = &t.data[r * row_len..(r + 1) * row_len];
+            let (sim_banks, _cycles) = sim_rfc::encode_vector(row).unwrap();
+            for (b, sb) in sim_banks.iter().enumerate() {
+                let (hot, mbhot, packed) =
+                    ct.bank(r, b).expect("bank present");
+                assert_eq!(hot, sb.hot, "case {case} row {r} bank {b}");
+                assert_eq!(mbhot, sb.mbhot, "case {case} row {r} bank {b}");
+                assert_eq!(packed.len(), sb.packed.len());
+                for (x, y) in packed.iter().zip(&sb.packed) {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "case {case} row {r} bank {b}: value bits differ"
+                    );
+                }
+                sb.validate().unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn runtime_decode_matches_sim_decode_and_source() {
+    let mut rng = Rng::new(0xF00D);
+    for case in 0..30u64 {
+        let rows = 1 + rng.below(5);
+        let row_len = (1 + rng.below(4)) * sim_rfc::BANK_WIDTH;
+        let t = sparse_tensor(vec![rows, row_len], rng.f64(), 2000 + case);
+        let ct = rfc::encode(&t, &cfg(2));
+        // runtime decode == source, bit for bit
+        let back = rfc::decode(&ct, &cfg(2));
+        assert_eq!(back.shape, t.shape);
+        for (x, y) in back.data.iter().zip(&t.data) {
+            assert_eq!(x.to_bits(), y.to_bits(), "case {case}");
+        }
+        // sim decode of the runtime banks == source as well
+        for r in 0..rows {
+            for b in 0..row_len / sim_rfc::BANK_WIDTH {
+                let (hot, mbhot, packed) = ct.bank(r, b).unwrap();
+                let e = sim_rfc::EncodedBank {
+                    packed: packed.to_vec(),
+                    hot,
+                    mbhot,
+                };
+                let decoded = sim_rfc::decode_bank_checked(&e).unwrap();
+                let lo = r * row_len + b * sim_rfc::BANK_WIDTH;
+                assert_eq!(
+                    decoded.to_vec(),
+                    t.data[lo..lo + sim_rfc::BANK_WIDTH].to_vec()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn unaligned_rows_roundtrip_with_cold_padding_lanes() {
+    // the serving batch row (3 * T * 25 joints) is not a bank multiple
+    for row_len in [600usize, 75, 17, 15, 1] {
+        let t = sparse_tensor(vec![4, row_len], 0.5, row_len as u64);
+        let ct = rfc::encode(&t, &cfg(3));
+        ct.validate().unwrap();
+        assert_eq!(ct.to_tensor(), t, "row_len {row_len}");
+        // tail bank padding lanes must never be hot
+        let last_bank = ct.shape[1].div_ceil(sim_rfc::BANK_WIDTH) - 1;
+        let live = row_len - last_bank * sim_rfc::BANK_WIDTH;
+        for r in 0..4 {
+            let (hot, _, _) = ct.bank(r, last_bank).unwrap();
+            if live < sim_rfc::BANK_WIDTH {
+                assert_eq!(hot >> live, 0, "padding lanes hot");
+            }
+        }
+    }
+}
+
+#[test]
+fn shard_count_never_changes_the_encoding() {
+    let t = sparse_tensor(vec![11, 640], 0.6, 77);
+    let reference = rfc::encode(&t, &cfg(1));
+    for shards in [2usize, 3, 4, 7, 16] {
+        let ct = rfc::encode(&t, &cfg(shards));
+        assert_eq!(ct.nnz(), reference.nnz());
+        assert_eq!(ct.compressed_bits(), reference.compressed_bits());
+        for r in 0..11 {
+            for b in 0..ct.shape[1].div_ceil(sim_rfc::BANK_WIDTH) {
+                assert_eq!(
+                    ct.bank(r, b),
+                    reference.bank(r, b),
+                    "shards {shards} row {r} bank {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn compressed_concat_equals_dense_concat() {
+    let a = sparse_tensor(vec![3, 320], 0.7, 5);
+    let b = sparse_tensor(vec![2, 320], 0.2, 6);
+    let ca = rfc::encode(&a, &cfg(2));
+    let cb = rfc::encode(&b, &cfg(3));
+    let bits = ca.compressed_bits() + cb.compressed_bits();
+    let cat = CompressedTensor::concat_batch(vec![ca, cb]).unwrap();
+    cat.validate().unwrap();
+    // zero-copy: concat adds no bits and loses none
+    assert_eq!(cat.compressed_bits(), bits);
+    let dense = Tensor::concat_batch(&[a, b]).unwrap();
+    assert_eq!(cat.to_tensor(), dense);
+}
+
+#[test]
+fn payload_roundtrip_preserves_logits_semantics() {
+    let enc = EncoderConfig::default();
+    let t = sparse_tensor(vec![4, 16, 25, 64], 0.55, 11);
+    let p = Payload::from_tensor(t.clone(), &enc);
+    assert!(p.is_compressed());
+    assert!(p.transport_bits() < t.len() as u64 * 16);
+    assert_eq!(p.into_dense(&enc), t);
+}
+
+#[test]
+fn compression_ratio_tracks_sim_cost_model_accounting() {
+    // per-bank wire cost must match the sim model's accounting:
+    // 16 bits per packed value + (16 + 4) sidecar bits per bank
+    let t = sparse_tensor(vec![8, 512], 0.5, 13);
+    let ct = rfc::encode(&t, &cfg(2));
+    let nnz = t.data.iter().filter(|&&v| v != 0.0).count() as u64;
+    let banks = (8 * 512 / sim_rfc::BANK_WIDTH) as u64;
+    assert_eq!(ct.compressed_bits(), nnz * 16 + banks * 20);
+    assert_eq!(ct.dense_bits(), 8 * 512 * 16);
+}

@@ -1,5 +1,10 @@
 //! Runtime integration: the PJRT engine must load AOT HLO-text artifacts,
 //! execute them, and hand back numerically-correct host tensors.
+//!
+//! Quarantine note: tests touching the AOT model artifacts are
+//! `#[ignore]`d unless the `aot-artifacts` feature is on (tracking: the
+//! gates go away once artifact export runs in CI).  The inline-HLO tests
+//! below run everywhere -- they only need the engine backend.
 
 use std::path::Path;
 
@@ -57,6 +62,10 @@ fn executable_cache_dedupes() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "aot-artifacts"),
+    ignore = "needs AOT artifacts (make artifacts); run with --features aot-artifacts"
+)]
 fn block01_artifact_executes_finite() {
     let Some(m) = artifacts() else {
         eprintln!("skipping: artifacts not built");
@@ -81,6 +90,10 @@ fn block01_artifact_executes_finite() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "aot-artifacts"),
+    ignore = "needs AOT artifacts (make artifacts); run with --features aot-artifacts"
+)]
 fn quant_demo_executes() {
     let Some(m) = artifacts() else {
         eprintln!("skipping: artifacts not built");
@@ -111,6 +124,10 @@ fn quant_demo_executes() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "aot-artifacts"),
+    ignore = "needs AOT artifacts (make artifacts); run with --features aot-artifacts"
+)]
 fn full_model_variants_execute_finite() {
     let Some(m) = artifacts() else {
         eprintln!("skipping: artifacts not built");
@@ -135,6 +152,10 @@ fn full_model_variants_execute_finite() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "aot-artifacts"),
+    ignore = "needs AOT artifacts (make artifacts); run with --features aot-artifacts"
+)]
 fn hlo_is_text_not_proto() {
     // guardrail for the aot_recipe gotcha: artifacts must be HLO text
     let Some(m) = artifacts() else {

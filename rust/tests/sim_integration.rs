@@ -109,6 +109,10 @@ fn reports_render_with_manifest() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "aot-artifacts"),
+    ignore = "needs AOT artifacts (make artifacts); run with --features aot-artifacts"
+)]
 fn rfc_reduction_in_paper_band_on_traced_sparsity() {
     // with the traced (manifest) sparsity distributions, RFC must cut
     // storage vs dense by a two-digit percentage (paper: 35.93%)

@@ -1,0 +1,220 @@
+//! Offline work-alike for the `anyhow` crate, covering the API surface
+//! this workspace uses: [`Error`], [`Result`], the [`Context`] trait and
+//! the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! The build environment has no crates.io access, so this vendored
+//! subset stands in as a path dependency.  Semantics match real anyhow
+//! where it matters here: `{}` displays the outermost message, `{:#}`
+//! displays the whole context chain, and any `std::error::Error` value
+//! converts via `?`.  Differences: the source error is stringified at
+//! conversion time (no downcasting), and backtraces are not captured.
+
+use std::convert::Infallible;
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A stringly error with a context chain, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // anyhow's Debug prints the message plus its causes; the joined
+        // chain carries the same information for `unwrap()` diagnostics.
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+// Note: `Error` deliberately does NOT implement `std::error::Error`;
+// that is what keeps this blanket conversion coherent (same trick as
+// real anyhow).
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $($arg:tt)*)?) => {
+        $crate::Error::msg(format!($fmt $(, $($arg)*)?))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("inner {}", 42);
+    }
+
+    #[test]
+    fn display_outermost_alternate_chain() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner 42");
+    }
+
+    #[test]
+    fn std_errors_convert_with_sources() {
+        fn parse() -> Result<i32> {
+            let n: i32 = "nope".parse()?;
+            Ok(n)
+        }
+        let e = parse().unwrap_err();
+        assert!(format!("{e}").contains("invalid digit"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+        assert_eq!(Some(7).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn ensure_and_with_context() {
+        fn check(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert!(check(1).is_ok());
+        let e = check(-1).with_context(|| "checking input").unwrap_err();
+        assert_eq!(format!("{e:#}"), "checking input: x must be positive, got -1");
+    }
+
+    #[test]
+    fn anyhow_macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(format!("{a}"), "plain");
+        let x = 3;
+        let b = anyhow!("formatted {x} {}", 4);
+        assert_eq!(format!("{b}"), "formatted 3 4");
+        let c = anyhow!(String::from("from expr"));
+        assert_eq!(format!("{c}"), "from expr");
+    }
+}

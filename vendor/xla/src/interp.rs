@@ -1,0 +1,627 @@
+//! Reference interpreter over HLO text.
+//!
+//! Parses the `ENTRY` computation of an `HloModule` dump and evaluates
+//! its instruction list in program order (HLO text is topologically
+//! sorted).  Supported ops: `parameter`, `constant` (scalar or flat
+//! dense), `broadcast`, `add`, `subtract`, `multiply`, `divide`,
+//! `maximum`, `minimum`, `negate`, `reshape`, `convert`, `copy`,
+//! `tuple`, `get-tuple-element`.  Anything else (dot, convolution,
+//! fusions, called computations...) errors with the op name so callers
+//! know to use the real PJRT backend.
+
+use std::collections::HashMap;
+
+use super::{err, Data, Error, Literal, PrimitiveType, Result};
+
+/// A parsed module: just its entry computation.
+pub struct HloModule {
+    entry: Computation,
+}
+
+struct Computation {
+    instructions: Vec<Instruction>,
+    root: usize,
+}
+
+struct Instruction {
+    name: String,
+    shape: Shape,
+    op: String,
+    /// operand names (last whitespace token of each operand, `%` stripped)
+    operands: Vec<String>,
+    /// raw parenthesized payload (used by `constant` / `parameter`)
+    raw: String,
+    attrs: Vec<(String, String)>,
+}
+
+#[derive(Debug, Clone)]
+enum Shape {
+    Array(PrimitiveType, Vec<i64>),
+    Tuple(Vec<Shape>),
+}
+
+// ---------------------------------------------------------------- parsing
+
+/// Split `s` at top-level commas (depth tracked over `([{`).
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut depth = 0i32;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '(' | '[' | '{' => {
+                depth += 1;
+                cur.push(c);
+            }
+            ')' | ']' | '}' => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if depth == 0 => {
+                parts.push(cur.trim().to_string());
+                cur.clear();
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur.trim().to_string());
+    }
+    parts
+}
+
+fn parse_type(s: &str) -> Result<PrimitiveType> {
+    match s {
+        "f32" => Ok(PrimitiveType::F32),
+        "f64" => Ok(PrimitiveType::F64),
+        "s16" => Ok(PrimitiveType::S16),
+        "s32" => Ok(PrimitiveType::S32),
+        "pred" => Ok(PrimitiveType::Pred),
+        other => err(format!("unsupported element type {other:?}")),
+    }
+}
+
+fn parse_shape(s: &str) -> Result<Shape> {
+    let s = s.trim();
+    if let Some(inner) = s.strip_prefix('(') {
+        let inner = inner.strip_suffix(')').unwrap_or(inner);
+        let parts = split_top_level(inner);
+        let shapes: Result<Vec<Shape>> = parts.iter().map(|p| parse_shape(p)).collect();
+        return Ok(Shape::Tuple(shapes?));
+    }
+    let lb = match s.find('[') {
+        Some(i) => i,
+        None => return err(format!("malformed shape {s:?}")),
+    };
+    let rb = match s.find(']') {
+        Some(i) => i,
+        None => return err(format!("malformed shape {s:?}")),
+    };
+    let ty = parse_type(&s[..lb])?;
+    let dims_str = s[lb + 1..rb].trim();
+    let mut dims = Vec::new();
+    if !dims_str.is_empty() {
+        for d in dims_str.split(',') {
+            dims.push(
+                d.trim()
+                    .parse::<i64>()
+                    .map_err(|e| Error(format!("shape dim {d:?}: {e}")))?,
+            );
+        }
+    }
+    Ok(Shape::Array(ty, dims))
+}
+
+/// Consume a shape token from the head of `s` (stops at whitespace at
+/// bracket depth 0); returns (shape_str, rest).
+fn take_shape_token(s: &str) -> (&str, &str) {
+    let mut depth = 0i32;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' | '[' | '{' => depth += 1,
+            ')' | ']' | '}' => depth -= 1,
+            c if c.is_whitespace() && depth == 0 => return (&s[..i], &s[i..]),
+            _ => {}
+        }
+    }
+    (s, "")
+}
+
+/// Find the parenthesized operand list of the opcode; returns
+/// (inner, rest_after_close_paren).
+fn take_paren_group(s: &str) -> Result<(&str, &str)> {
+    let open = match s.find('(') {
+        Some(i) => i,
+        None => return err(format!("missing operand list in {s:?}")),
+    };
+    let mut depth = 0i32;
+    for (i, c) in s[open..].char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    let at = open + i;
+                    return Ok((&s[open + 1..at], &s[at + 1..]));
+                }
+            }
+            _ => {}
+        }
+    }
+    err(format!("unbalanced parens in {s:?}"))
+}
+
+fn parse_instruction(line: &str) -> Result<(Instruction, bool)> {
+    let line = line.trim().trim_end_matches(',');
+    let (is_root, line) = match line.strip_prefix("ROOT ") {
+        Some(rest) => (true, rest),
+        None => (false, line),
+    };
+    let eq = match line.find(" = ") {
+        Some(i) => i,
+        None => return err(format!("malformed instruction {line:?}")),
+    };
+    let name = line[..eq].trim().trim_start_matches('%').to_string();
+    let rest = line[eq + 3..].trim_start();
+    let (shape_str, rest) = take_shape_token(rest);
+    let shape = parse_shape(shape_str)?;
+    let rest = rest.trim_start();
+    let op_end = rest.find('(').unwrap_or(rest.len());
+    let op = rest[..op_end].trim().to_string();
+    if op.is_empty() {
+        return err(format!("missing opcode in {line:?}"));
+    }
+    let (raw, after) = take_paren_group(rest)?;
+    // operand tokens may carry shapes ("f32[4]{0} %x"): keep the last word
+    let operands: Vec<String> = split_top_level(raw)
+        .into_iter()
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            t.split_whitespace()
+                .last()
+                .unwrap_or("")
+                .trim_start_matches('%')
+                .to_string()
+        })
+        .collect();
+    let attrs: Vec<(String, String)> = split_top_level(after)
+        .into_iter()
+        .filter_map(|kv| {
+            let (k, v) = kv.split_once('=')?;
+            Some((k.trim().to_string(), v.trim().to_string()))
+        })
+        .collect();
+    Ok((
+        Instruction {
+            name,
+            shape,
+            op,
+            operands,
+            raw: raw.trim().to_string(),
+            attrs,
+        },
+        is_root,
+    ))
+}
+
+/// Parse the ENTRY computation out of an HLO text dump.
+pub fn parse_module(text: &str) -> Result<HloModule> {
+    let mut in_entry = false;
+    let mut instructions = Vec::new();
+    let mut root = None;
+    for line in text.lines() {
+        let t = line.trim();
+        if !in_entry {
+            if t.starts_with("ENTRY") && t.ends_with('{') {
+                in_entry = true;
+            }
+            continue;
+        }
+        if t == "}" {
+            let root = root.unwrap_or(instructions.len().saturating_sub(1));
+            if instructions.is_empty() {
+                return err("ENTRY computation has no instructions");
+            }
+            return Ok(HloModule {
+                entry: Computation { instructions, root },
+            });
+        }
+        if t.is_empty() || t.starts_with("//") {
+            continue;
+        }
+        let (inst, is_root) = parse_instruction(t)?;
+        if is_root {
+            root = Some(instructions.len());
+        }
+        instructions.push(inst);
+    }
+    err("no ENTRY computation found in HLO text")
+}
+
+// ------------------------------------------------------------- evaluation
+
+fn attr<'a>(inst: &'a Instruction, key: &str) -> Option<&'a str> {
+    inst.attrs
+        .iter()
+        .find(|(k, _)| k == key)
+        .map(|(_, v)| v.as_str())
+}
+
+fn parse_braced_usizes(s: &str) -> Result<Vec<usize>> {
+    let inner = s.trim().trim_start_matches('{').trim_end_matches('}');
+    let mut out = Vec::new();
+    for p in inner.split(',') {
+        let p = p.trim();
+        if p.is_empty() {
+            continue;
+        }
+        out.push(
+            p.parse::<usize>()
+                .map_err(|e| Error(format!("attr value {p:?}: {e}")))?,
+        );
+    }
+    Ok(out)
+}
+
+fn shape_dims(shape: &Shape) -> Result<(PrimitiveType, Vec<i64>)> {
+    match shape {
+        Shape::Array(ty, dims) => Ok((*ty, dims.clone())),
+        Shape::Tuple(_) => err("expected an array shape"),
+    }
+}
+
+fn constant_from_raw(inst: &Instruction) -> Result<Literal> {
+    let (ty, dims) = shape_dims(&inst.shape)?;
+    let n: usize = dims.iter().map(|&d| d as usize).product();
+    let flat: String = inst
+        .raw
+        .chars()
+        .map(|c| if c == '{' || c == '}' { ' ' } else { c })
+        .collect();
+    let mut values = Vec::new();
+    for tok in flat.split(|c: char| c == ',' || c.is_whitespace()) {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        values.push(
+            tok.parse::<f64>()
+                .map_err(|e| Error(format!("constant value {tok:?}: {e}")))?,
+        );
+    }
+    if values.len() != n {
+        return err(format!(
+            "constant {} has {} values for {} elements",
+            inst.name,
+            values.len(),
+            n
+        ));
+    }
+    let data = match ty {
+        PrimitiveType::F32 => Data::F32(values.iter().map(|&v| v as f32).collect()),
+        PrimitiveType::S16 => Data::S16(values.iter().map(|&v| v as i16).collect()),
+        other => return err(format!("constant of type {other:?} unsupported")),
+    };
+    Ok(Literal { dims, data })
+}
+
+fn strides(dims: &[i64]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1] as usize;
+    }
+    s
+}
+
+fn broadcast_indices<T: Copy>(
+    src: &[T],
+    src_dims: &[i64],
+    out_dims: &[i64],
+    bdims: &[usize],
+    out: &mut Vec<T>,
+) -> Result<()> {
+    if bdims.len() != src_dims.len() {
+        return err(format!(
+            "broadcast dimensions {bdims:?} do not match operand rank {}",
+            src_dims.len()
+        ));
+    }
+    // validate up front so malformed modules error instead of panicking
+    for (k, &od) in bdims.iter().enumerate() {
+        if od >= out_dims.len() {
+            return err(format!(
+                "broadcast dimension {od} out of range for output rank {}",
+                out_dims.len()
+            ));
+        }
+        if src_dims[k] != out_dims[od] && src_dims[k] != 1 {
+            return err(format!(
+                "broadcast operand dim {k} (size {}) incompatible with \
+                 output dim {od} (size {})",
+                src_dims[k], out_dims[od]
+            ));
+        }
+    }
+    let out_strides = strides(out_dims);
+    let src_strides = strides(src_dims);
+    let out_n: usize = out_dims.iter().map(|&d| d as usize).product();
+    out.reserve(out_n);
+    for oi in 0..out_n {
+        let mut si = 0usize;
+        for (k, &od) in bdims.iter().enumerate() {
+            if src_dims[k] == 1 {
+                continue; // degenerate (size-1) dim: stays at index 0
+            }
+            let coord = (oi / out_strides[od]) % out_dims[od] as usize;
+            si += coord * src_strides[k];
+        }
+        match src.get(si) {
+            Some(&v) => out.push(v),
+            None => {
+                return err(format!(
+                    "broadcast index {si} out of range for operand of {}",
+                    src.len()
+                ))
+            }
+        }
+    }
+    Ok(())
+}
+
+fn broadcast(x: &Literal, out_dims: &[i64], bdims: &[usize]) -> Result<Literal> {
+    match &x.data {
+        Data::F32(src) => {
+            let mut out = Vec::new();
+            broadcast_indices(src, &x.dims, out_dims, bdims, &mut out)?;
+            Ok(Literal {
+                dims: out_dims.to_vec(),
+                data: Data::F32(out),
+            })
+        }
+        Data::S16(src) => {
+            let mut out = Vec::new();
+            broadcast_indices(src, &x.dims, out_dims, bdims, &mut out)?;
+            Ok(Literal {
+                dims: out_dims.to_vec(),
+                data: Data::S16(out),
+            })
+        }
+        Data::Tuple(_) => err("cannot broadcast a tuple"),
+    }
+}
+
+fn binop(op: &str, a: &Literal, b: &Literal) -> Result<Literal> {
+    match (&a.data, &b.data) {
+        (Data::F32(x), Data::F32(y)) => {
+            if x.len() != y.len() {
+                return err(format!("{op}: operand sizes {} vs {}", x.len(), y.len()));
+            }
+            let out: Vec<f32> = x
+                .iter()
+                .zip(y)
+                .map(|(&p, &q)| match op {
+                    "add" => p + q,
+                    "subtract" => p - q,
+                    "multiply" => p * q,
+                    "divide" => p / q,
+                    "maximum" => p.max(q),
+                    "minimum" => p.min(q),
+                    _ => f32::NAN,
+                })
+                .collect();
+            Ok(Literal {
+                dims: a.dims.clone(),
+                data: Data::F32(out),
+            })
+        }
+        (Data::S16(x), Data::S16(y)) => {
+            if x.len() != y.len() {
+                return err(format!("{op}: operand sizes {} vs {}", x.len(), y.len()));
+            }
+            let out: Vec<i16> = x
+                .iter()
+                .zip(y)
+                .map(|(&p, &q)| match op {
+                    "add" => p.wrapping_add(q),
+                    "subtract" => p.wrapping_sub(q),
+                    "multiply" => p.wrapping_mul(q),
+                    "divide" => {
+                        if q == 0 {
+                            0
+                        } else {
+                            p.wrapping_div(q)
+                        }
+                    }
+                    "maximum" => p.max(q),
+                    "minimum" => p.min(q),
+                    _ => 0,
+                })
+                .collect();
+            Ok(Literal {
+                dims: a.dims.clone(),
+                data: Data::S16(out),
+            })
+        }
+        _ => err(format!("{op}: mismatched or tuple operand types")),
+    }
+}
+
+fn convert(x: &Literal, ty: PrimitiveType) -> Result<Literal> {
+    let data = match (&x.data, ty) {
+        (Data::F32(v), PrimitiveType::F32) => Data::F32(v.clone()),
+        (Data::S16(v), PrimitiveType::S16) => Data::S16(v.clone()),
+        (Data::F32(v), PrimitiveType::S16) => Data::S16(v.iter().map(|&p| p as i16).collect()),
+        (Data::S16(v), PrimitiveType::F32) => Data::F32(v.iter().map(|&p| p as f32).collect()),
+        (_, other) => return err(format!("convert to {other:?} unsupported")),
+    };
+    Ok(Literal {
+        dims: x.dims.clone(),
+        data,
+    })
+}
+
+fn eval_instruction(
+    inst: &Instruction,
+    args: &[&Literal],
+    env: &HashMap<String, Literal>,
+) -> Result<Literal> {
+    let operand = |i: usize| -> Result<&Literal> {
+        let name = inst
+            .operands
+            .get(i)
+            .ok_or_else(|| Error(format!("{}: missing operand {i}", inst.name)))?;
+        env.get(name)
+            .ok_or_else(|| Error(format!("{}: unknown operand {name:?}", inst.name)))
+    };
+    match inst.op.as_str() {
+        "parameter" => {
+            let idx: usize = inst
+                .raw
+                .trim()
+                .parse()
+                .map_err(|e| Error(format!("parameter index {:?}: {e}", inst.raw)))?;
+            args.get(idx)
+                .map(|l| (*l).clone())
+                .ok_or_else(|| Error(format!("parameter({idx}) but only {} args", args.len())))
+        }
+        "constant" => constant_from_raw(inst),
+        "broadcast" => {
+            let (_, out_dims) = shape_dims(&inst.shape)?;
+            let bdims = match attr(inst, "dimensions") {
+                Some(v) => parse_braced_usizes(v)?,
+                None => Vec::new(),
+            };
+            broadcast(operand(0)?, &out_dims, &bdims)
+        }
+        "add" | "subtract" | "multiply" | "divide" | "maximum" | "minimum" => {
+            binop(&inst.op, operand(0)?, operand(1)?)
+        }
+        "negate" => {
+            let x = operand(0)?;
+            match &x.data {
+                Data::F32(v) => Ok(Literal {
+                    dims: x.dims.clone(),
+                    data: Data::F32(v.iter().map(|&p| -p).collect()),
+                }),
+                Data::S16(v) => Ok(Literal {
+                    dims: x.dims.clone(),
+                    data: Data::S16(v.iter().map(|&p| p.wrapping_neg()).collect()),
+                }),
+                Data::Tuple(_) => err("cannot negate a tuple"),
+            }
+        }
+        "reshape" | "bitcast" => {
+            let (_, out_dims) = shape_dims(&inst.shape)?;
+            operand(0)?.reshape(&out_dims)
+        }
+        "copy" => Ok(operand(0)?.clone()),
+        "convert" => {
+            let (ty, _) = shape_dims(&inst.shape)?;
+            convert(operand(0)?, ty)
+        }
+        "tuple" => {
+            let mut parts = Vec::with_capacity(inst.operands.len());
+            for i in 0..inst.operands.len() {
+                parts.push(operand(i)?.clone());
+            }
+            Ok(Literal::tuple(parts))
+        }
+        "get-tuple-element" => {
+            let idx: usize = match attr(inst, "index") {
+                Some(v) => v
+                    .parse()
+                    .map_err(|e| Error(format!("tuple index {v:?}: {e}")))?,
+                None => return err(format!("{}: get-tuple-element without index", inst.name)),
+            };
+            let parts = operand(0)?.to_tuple()?;
+            parts
+                .get(idx)
+                .cloned()
+                .ok_or_else(|| Error(format!("tuple index {idx} out of range")))
+        }
+        other => err(format!(
+            "HLO op {other:?} is not supported by the stub interpreter \
+             (install the real PJRT backend for full model execution)"
+        )),
+    }
+}
+
+/// Evaluate the entry computation against positional arguments.
+pub fn evaluate(module: &HloModule, args: &[&Literal]) -> Result<Literal> {
+    let comp = &module.entry;
+    let mut env: HashMap<String, Literal> = HashMap::with_capacity(comp.instructions.len());
+    for inst in &comp.instructions {
+        let v = eval_instruction(inst, args, &env)?;
+        env.insert(inst.name.clone(), v);
+    }
+    let root = &comp.instructions[comp.root];
+    env.remove(&root.name)
+        .ok_or_else(|| Error("root instruction produced no value".to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_top_level_respects_depth() {
+        assert_eq!(split_top_level("a, b(c, d), e"), vec!["a", "b(c, d)", "e"]);
+        assert_eq!(split_top_level("{1, 2}, x"), vec!["{1, 2}", "x"]);
+    }
+
+    #[test]
+    fn parses_shapes() {
+        match parse_shape("f32[4,3]{1,0}").unwrap() {
+            Shape::Array(ty, dims) => {
+                assert_eq!(ty, PrimitiveType::F32);
+                assert_eq!(dims, vec![4, 3]);
+            }
+            _ => panic!("expected array"),
+        }
+        match parse_shape("(f32[4]{0}, s16[2]{0})").unwrap() {
+            Shape::Tuple(parts) => assert_eq!(parts.len(), 2),
+            _ => panic!("expected tuple"),
+        }
+    }
+
+    #[test]
+    fn instruction_with_shaped_operands() {
+        let (inst, root) =
+            parse_instruction("ROOT r = f32[4]{0} add(f32[4]{0} %a, f32[4]{0} %b)").unwrap();
+        assert!(root);
+        assert_eq!(inst.op, "add");
+        assert_eq!(inst.operands, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn broadcast_general_dims() {
+        // operand f32[2] broadcast into f32[2,3] along dim 0
+        let x = Literal {
+            dims: vec![2],
+            data: Data::F32(vec![10.0, 20.0]),
+        };
+        let y = broadcast(&x, &[2, 3], &[0]).unwrap();
+        assert_eq!(
+            y.to_vec::<f32>().unwrap(),
+            vec![10.0, 10.0, 10.0, 20.0, 20.0, 20.0]
+        );
+    }
+
+    #[test]
+    fn broadcast_degenerate_and_mismatched_dims() {
+        // size-1 operand dim stretches instead of indexing out of bounds
+        let x = Literal {
+            dims: vec![1],
+            data: Data::F32(vec![5.0]),
+        };
+        let y = broadcast(&x, &[2, 3], &[0]).unwrap();
+        assert_eq!(y.to_vec::<f32>().unwrap(), vec![5.0; 6]);
+        // mismatched (non-1) dim errors cleanly rather than panicking
+        let z = Literal {
+            dims: vec![2],
+            data: Data::F32(vec![1.0, 2.0]),
+        };
+        assert!(broadcast(&z, &[3, 4], &[0]).is_err());
+        assert!(broadcast(&z, &[2, 3], &[5]).is_err());
+    }
+}

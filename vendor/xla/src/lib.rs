@@ -1,0 +1,377 @@
+//! Offline stand-in for the `xla` crate (xla-rs PJRT bindings).
+//!
+//! The build environment has no native XLA/PJRT libraries, so this
+//! vendored crate mirrors the subset of the xla-rs API the workspace
+//! uses (`PjRtClient` -> `compile` -> `execute` over [`Literal`]s) and
+//! backs it with a small reference interpreter over **HLO text**.  The
+//! interpreter covers the element-wise subset the artifact-free tests
+//! exercise (parameter / constant / broadcast / binary arithmetic /
+//! reshape / convert / tuple); executing a full AOT model module still
+//! requires the real bindings, which drop in without source changes.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+mod interp;
+
+/// Stringly error type (the real crate wraps XLA status codes).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl StdError for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(Error(msg.into()))
+}
+
+/// Element types this stub stores (subset of XLA's).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    Pred,
+    S16,
+    S32,
+    F32,
+    F64,
+}
+
+/// Typed storage behind a [`Literal`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    S16(Vec<i16>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host element types convertible to/from [`Literal`] storage.
+pub trait NativeType: Clone + Sized {
+    const TY: PrimitiveType;
+    fn from_data(data: &Data) -> Option<&[Self]>;
+    fn into_data(v: Vec<Self>) -> Data;
+}
+
+impl NativeType for f32 {
+    const TY: PrimitiveType = PrimitiveType::F32;
+    fn from_data(data: &Data) -> Option<&[f32]> {
+        match data {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+    fn into_data(v: Vec<f32>) -> Data {
+        Data::F32(v)
+    }
+}
+
+impl NativeType for i16 {
+    const TY: PrimitiveType = PrimitiveType::S16;
+    fn from_data(data: &Data) -> Option<&[i16]> {
+        match data {
+            Data::S16(v) => Some(v),
+            _ => None,
+        }
+    }
+    fn into_data(v: Vec<i16>) -> Data {
+        Data::S16(v)
+    }
+}
+
+/// The dims + element type of an array literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: PrimitiveType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn primitive_type(&self) -> PrimitiveType {
+        self.ty
+    }
+}
+
+/// A host tensor value (array or tuple).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+impl Literal {
+    /// 1-D f32 literal.
+    pub fn vec1(values: &[f32]) -> Literal {
+        Literal {
+            dims: vec![values.len() as i64],
+            data: Data::F32(values.to_vec()),
+        }
+    }
+
+    /// f32 scalar literal.
+    pub fn scalar_f32(v: f32) -> Literal {
+        Literal {
+            dims: Vec::new(),
+            data: Data::F32(vec![v]),
+        }
+    }
+
+    /// Tuple literal from parts.
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal {
+            dims: Vec::new(),
+            data: Data::Tuple(parts),
+        }
+    }
+
+    /// Zero-filled literal of the given type and dims.
+    ///
+    /// Panics on element types the stub does not store (only F32/S16
+    /// literals are constructible host-side, matching workspace usage).
+    pub fn create_from_shape(ty: PrimitiveType, dims: &[usize]) -> Literal {
+        let n: usize = dims.iter().product();
+        let data = match ty {
+            PrimitiveType::F32 => Data::F32(vec![0.0; n]),
+            PrimitiveType::S16 => Data::S16(vec![0; n]),
+            other => panic!("xla stub: create_from_shape({other:?}) unsupported"),
+        };
+        Literal {
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            data,
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::S16(v) => v.len(),
+            Data::Tuple(_) => 0,
+        }
+    }
+
+    pub fn ty(&self) -> Option<PrimitiveType> {
+        match &self.data {
+            Data::F32(_) => Some(PrimitiveType::F32),
+            Data::S16(_) => Some(PrimitiveType::S16),
+            Data::Tuple(_) => None,
+        }
+    }
+
+    /// Same data, new dims (element counts must agree).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return err(format!(
+                "reshape to {dims:?} ({n} elements) from {} elements",
+                self.element_count()
+            ));
+        }
+        Ok(Literal {
+            dims: dims.to_vec(),
+            data: self.data.clone(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self.ty() {
+            Some(ty) => Ok(ArrayShape {
+                dims: self.dims.clone(),
+                ty,
+            }),
+            None => err("tuple literal has no array shape"),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match T::from_data(&self.data) {
+            Some(s) => Ok(s.to_vec()),
+            None => err(format!("literal does not hold {:?} elements", T::TY)),
+        }
+    }
+
+    /// Tuple elements (errors on a non-tuple literal).
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.data {
+            Data::Tuple(v) => Ok(v.clone()),
+            _ => err("literal is not a tuple"),
+        }
+    }
+
+    /// Single element of a 1-tuple.
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        let mut v = self.to_tuple()?;
+        if v.len() != 1 {
+            return err(format!("expected a 1-tuple, got {} elements", v.len()));
+        }
+        Ok(v.pop().unwrap())
+    }
+
+    /// Overwrite this literal's storage from a raw host slice.
+    pub fn copy_raw_from<T: NativeType>(&mut self, src: &[T]) -> Result<()> {
+        if self.ty() != Some(T::TY) {
+            return err(format!("copy_raw_from: literal is not {:?}", T::TY));
+        }
+        if src.len() != self.element_count() {
+            return err(format!(
+                "copy_raw_from: {} elements into a literal of {}",
+                src.len(),
+                self.element_count()
+            ));
+        }
+        self.data = T::into_data(src.to_vec());
+        Ok(())
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// Parsed-but-unvalidated HLO text (the real crate holds a protobuf).
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text(text: &str) -> Result<HloModuleProto> {
+        if !text.trim_start().starts_with("HloModule") {
+            return err("not HLO text (missing HloModule header)");
+        }
+        Ok(HloModuleProto {
+            text: text.to_string(),
+        })
+    }
+
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading {path}: {e}")))?;
+        Self::from_text(&text)
+    }
+}
+
+/// A computation handed to the client for compilation.
+pub struct XlaComputation {
+    text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            text: proto.text.clone(),
+        }
+    }
+}
+
+/// The stub "device": compiles by parsing, executes by interpreting.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "interpreter-stub".to_string()
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        let module = interp::parse_module(&comp.text)?;
+        Ok(PjRtLoadedExecutable { module })
+    }
+}
+
+/// A compiled (parsed) module ready to interpret.
+pub struct PjRtLoadedExecutable {
+    module: interp::HloModule,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute on one "device"; mirrors the real API's
+    /// per-device/per-output nesting (`result[0][0]`).
+    pub fn execute<T: AsRef<Literal>>(&self, args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let lits: Vec<&Literal> = args.iter().map(AsRef::as_ref).collect();
+        let out = interp::evaluate(&self.module, &lits)?;
+        Ok(vec![vec![PjRtBuffer { lit: out }]])
+    }
+}
+
+/// A device buffer (host-resident in the stub).
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY: &str = r#"
+HloModule tiny, entry_computation_layout={(f32[4]{0})->(f32[4]{0})}
+
+ENTRY main {
+  x = f32[4]{0} parameter(0)
+  two = f32[] constant(2)
+  twob = f32[4]{0} broadcast(two), dimensions={}
+  one = f32[] constant(1)
+  oneb = f32[4]{0} broadcast(one), dimensions={}
+  mul = f32[4]{0} multiply(x, twob)
+  add = f32[4]{0} add(mul, oneb)
+  ROOT out = (f32[4]{0}) tuple(add)
+}
+"#;
+
+    #[test]
+    fn interprets_elementwise_module() {
+        let proto = HloModuleProto::from_text(TINY).unwrap();
+        let comp = XlaComputation::from_proto(&proto);
+        let client = PjRtClient::cpu().unwrap();
+        let exe = client.compile(&comp).unwrap();
+        let x = Literal::vec1(&[0.0, 1.0, 2.0, -3.0]);
+        let out = exe.execute::<Literal>(&[x]).unwrap();
+        let lit = out[0][0].to_literal_sync().unwrap();
+        let y = lit.to_tuple1().unwrap();
+        assert_eq!(y.to_vec::<f32>().unwrap(), vec![1.0, 3.0, 5.0, -5.0]);
+    }
+
+    #[test]
+    fn literal_reshape_and_shape() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 3]);
+        assert!(l.reshape(&[4]).is_err());
+    }
+
+    #[test]
+    fn s16_copy_raw_roundtrip() {
+        let mut l = Literal::create_from_shape(PrimitiveType::S16, &[2, 2]);
+        l.copy_raw_from(&[1i16, -2, 3, -4]).unwrap();
+        assert_eq!(l.to_vec::<i16>().unwrap(), vec![1, -2, 3, -4]);
+        assert!(l.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn unsupported_op_reports_cleanly() {
+        let text = "HloModule t\n\nENTRY main {\n  x = f32[2]{0} parameter(0)\n  ROOT y = f32[2]{0} tanh(x)\n}\n";
+        let proto = HloModuleProto::from_text(text).unwrap();
+        let client = PjRtClient::cpu().unwrap();
+        let exe = client.compile(&XlaComputation::from_proto(&proto)).unwrap();
+        let e = exe.execute::<Literal>(&[Literal::vec1(&[1.0, 2.0])]);
+        assert!(e.is_err());
+        assert!(e.unwrap_err().0.contains("tanh"));
+    }
+}
