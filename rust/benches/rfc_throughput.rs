@@ -92,6 +92,37 @@ fn main() {
         );
     }
 
+    // wire codec v1: serialize/deserialize cost of shipping the same
+    // activations across a process boundary (shard links)
+    println!("\nwire codec v1 (same shape):");
+    println!(
+        "{:>8}  {:>10}  {:>12}  {:>12}",
+        "sparsity", "frame MB", "ser MB/s", "deser MB/s"
+    );
+    for s10 in [25u64, 50, 75, 90] {
+        let sparsity = s10 as f64 / 100.0;
+        let t = sparse_tensor(shape.clone(), sparsity, 142 + s10);
+        let ct = rfc::encode(&t, &serial);
+        let frame = rfc_hypgcn::rfc::wire::to_bytes(&ct).unwrap();
+        let ser = time_it(iters, || {
+            std::hint::black_box(
+                rfc_hypgcn::rfc::wire::to_bytes(&ct).unwrap(),
+            );
+        });
+        let deser = time_it(iters, || {
+            std::hint::black_box(
+                rfc_hypgcn::rfc::wire::from_bytes(&frame).unwrap(),
+            );
+        });
+        println!(
+            "{:>7.0}%  {:>10.2}  {:>12.1}  {:>12.1}",
+            sparsity * 100.0,
+            frame.len() as f64 / 1e6,
+            mbps(bytes, &ser),
+            mbps(bytes, &deser),
+        );
+    }
+
     // batcher view: padded batches are where compression always wins
     println!("\npadded-batch transport (batch 8, 1..8 real rows):");
     let row = sparse_tensor(vec![1, 3, 64, 25], 0.0, 7);

@@ -340,6 +340,39 @@ mod tests {
     }
 
     #[test]
+    fn take_after_dense_batch_leaves_no_padding_sidecar() {
+        // Regression: a full dense batch skips encoding and ships dense,
+        // but `Payload::take` used to leave a *compressed* placeholder
+        // (`CompressedTensor::default()`, the padding-sidecar
+        // constructor) in `Batch::input` -- so after the server moved the
+        // payload out, the batch read as still carrying a compressed
+        // padding sidecar with a phantom row.  The placeholder must be
+        // an empty dense tensor instead.
+        let policy = BatchPolicy {
+            batch_size: 2,
+            max_wait: Duration::from_millis(1),
+            seq_len: 8,
+        };
+        let reqs: Vec<Request> = (1..=2)
+            .map(|i| {
+                let (r, _rx) = req(i, 8);
+                std::mem::forget(_rx);
+                r
+            })
+            .collect();
+        let mut batch = Batcher::form_from(&policy, reqs).unwrap();
+        assert!(!batch.input.is_compressed(), "dense batch skipped encoding");
+        let taken = batch.input.take();
+        assert_eq!(taken.shape()[0], 2, "the real payload moved out");
+        assert!(
+            !batch.input.is_compressed(),
+            "placeholder resurrects a compressed padding sidecar"
+        );
+        assert_eq!(batch.input.shape(), &[0]);
+        assert_eq!(batch.input.transport_bits(), 0);
+    }
+
+    #[test]
     fn full_dense_batch_fails_the_gate_and_ships_dense() {
         // every row nonzero and no padding: sidecars would cost more
         // than they save, so the batch-level gate keeps it dense

@@ -6,6 +6,36 @@ use std::time::Instant;
 
 use crate::util::stats::{percentile, Summary};
 
+/// Per-node wire-transport counters for the shard coordinator
+/// ([`crate::coordinator::shard::ShardCluster`]): actual frame bytes
+/// shipped each way vs the dense-transport bytes of the same tensors.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct NodeTransport {
+    /// shard frames shipped to this node
+    pub shards: u64,
+    /// wire bytes coordinator -> node
+    pub tx_wire_bytes: u64,
+    /// dense bytes the same shards would have cost
+    pub tx_dense_bytes: u64,
+    /// wire bytes node -> coordinator
+    pub rx_wire_bytes: u64,
+    /// dense bytes the same replies would have cost
+    pub rx_dense_bytes: u64,
+}
+
+impl NodeTransport {
+    /// Fraction of dense-transport bytes the wire encoding saved on this
+    /// node's link, both directions (negative when framing overhead on
+    /// dense payloads outweighs compression).
+    pub fn saving(&self) -> f64 {
+        let dense = self.tx_dense_bytes + self.rx_dense_bytes;
+        if dense == 0 {
+            return 0.0;
+        }
+        1.0 - (self.tx_wire_bytes + self.rx_wire_bytes) as f64 / dense as f64
+    }
+}
+
 /// Shared metrics sink (cheap atomics on the hot path, a mutex-guarded
 /// latency reservoir sampled per response).
 #[derive(Debug)]
@@ -21,6 +51,8 @@ pub struct Metrics {
     pub transport_bits: AtomicU64,
     /// bits dense transport of the same input batches would have shipped
     pub transport_dense_bits: AtomicU64,
+    /// per-node shard link traffic (indexed by node id)
+    nodes: Mutex<Vec<NodeTransport>>,
     latencies_s: Mutex<Vec<f64>>,
     started: Instant,
 }
@@ -34,6 +66,7 @@ impl Default for Metrics {
             padded_rows: AtomicU64::new(0),
             transport_bits: AtomicU64::new(0),
             transport_dense_bits: AtomicU64::new(0),
+            nodes: Mutex::new(Vec::new()),
             latencies_s: Mutex::new(Vec::new()),
             started: Instant::now(),
         }
@@ -67,6 +100,44 @@ impl Metrics {
             return 0.0;
         }
         1.0 - self.transport_bits.load(Ordering::Relaxed) as f64 / dense as f64
+    }
+
+    /// Record one shard frame shipped coordinator -> `node`.
+    pub fn record_node_tx(&self, node: usize, wire_bytes: u64, dense_bytes: u64) {
+        let mut nodes = self.nodes.lock().unwrap();
+        if nodes.len() <= node {
+            nodes.resize(node + 1, NodeTransport::default());
+        }
+        let n = &mut nodes[node];
+        n.shards += 1;
+        n.tx_wire_bytes += wire_bytes;
+        n.tx_dense_bytes += dense_bytes;
+    }
+
+    /// Record one reply frame collected from `node`.
+    pub fn record_node_rx(&self, node: usize, wire_bytes: u64, dense_bytes: u64) {
+        let mut nodes = self.nodes.lock().unwrap();
+        if nodes.len() <= node {
+            nodes.resize(node + 1, NodeTransport::default());
+        }
+        let n = &mut nodes[node];
+        n.rx_wire_bytes += wire_bytes;
+        n.rx_dense_bytes += dense_bytes;
+    }
+
+    /// Snapshot of per-node shard link traffic (index = node id).
+    pub fn node_transport(&self) -> Vec<NodeTransport> {
+        self.nodes.lock().unwrap().clone()
+    }
+
+    /// [`NodeTransport::saving`] for one node (0.0 if it never saw work).
+    pub fn node_transport_saving(&self, node: usize) -> f64 {
+        self.nodes
+            .lock()
+            .unwrap()
+            .get(node)
+            .map(NodeTransport::saving)
+            .unwrap_or(0.0)
     }
 
     pub fn record_response(&self, latency_s: f64) {
@@ -105,7 +176,7 @@ impl Metrics {
     }
 
     pub fn report(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} responses={} batches={} fps={:.2} pad={:.1}% \
              rfc_in_save={:.1}% lat[{}]",
             self.requests_in.load(Ordering::Relaxed),
@@ -115,7 +186,16 @@ impl Metrics {
             self.padding_fraction() * 100.0,
             self.transport_saving() * 100.0,
             self.latency_summary(),
-        )
+        );
+        let nodes = self.nodes.lock().unwrap();
+        if !nodes.is_empty() {
+            let saves: Vec<String> = nodes
+                .iter()
+                .map(|n| format!("{:.1}%", n.saving() * 100.0))
+                .collect();
+            s.push_str(&format!(" node_save=[{}]", saves.join(", ")));
+        }
+        s
     }
 }
 
@@ -153,5 +233,27 @@ mod tests {
         let m = Metrics::default();
         m.record_response(0.005);
         assert!(m.report().contains("responses=1"));
+        assert!(!m.report().contains("node_save"));
+    }
+
+    #[test]
+    fn node_transport_tracks_per_node() {
+        let m = Metrics::default();
+        assert!(m.node_transport().is_empty());
+        assert_eq!(m.node_transport_saving(0), 0.0);
+        // node 1 recorded before node 0 ever shows up: vec grows
+        m.record_node_tx(1, 100, 400);
+        m.record_node_rx(1, 50, 100);
+        m.record_node_tx(0, 300, 300);
+        let nodes = m.node_transport();
+        assert_eq!(nodes.len(), 2);
+        assert_eq!(nodes[1].shards, 1);
+        assert_eq!(nodes[0].shards, 1);
+        assert!((nodes[1].saving() - 0.7).abs() < 1e-12);
+        assert!((m.node_transport_saving(1) - 0.7).abs() < 1e-12);
+        // dense payload framing can cost more than it saves: negative
+        m.record_node_rx(0, 400, 300);
+        assert!(m.node_transport_saving(0) < 0.0);
+        assert!(m.report().contains("node_save=["));
     }
 }

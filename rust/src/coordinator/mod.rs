@@ -6,7 +6,11 @@
 //! * [`pipeline`] -- the layer-pipelined executor over the ten AOT conv
 //!   blocks + head (the software mirror of the paper's on-chip pipeline);
 //! * [`server`] -- intake/delivery threads wiring it together;
-//! * [`metrics`] -- throughput/latency accounting.
+//! * [`shard`] -- multi-node layer: batches split by row shard, shipped
+//!   as RFC wire bytes over [`shard::NodeLink`]s to per-node stage
+//!   workers, results reassembled in the coordinator;
+//! * [`metrics`] -- throughput/latency accounting, including per-node
+//!   shard link traffic.
 
 pub mod batcher;
 pub mod metrics;
@@ -14,10 +18,12 @@ pub mod pipeline;
 pub mod request;
 pub mod router;
 pub mod server;
+pub mod shard;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use metrics::Metrics;
+pub use metrics::{Metrics, NodeTransport};
 pub use pipeline::{Pipeline, PipelineHandle};
 pub use request::{Batch, Request, Response};
 pub use router::{RouteInfo, Router, RouterConfig, Variant};
 pub use server::Server;
+pub use shard::{LoopbackLink, NodeLink, ShardCluster, ShardFn};

@@ -100,6 +100,17 @@ impl Pipeline {
         Tensor::from_literal(&out)
     }
 
+    /// The full stage chain as a row-local shard function: what one
+    /// worker node runs on its row shard when the coordinator fans a
+    /// batch over a [`super::shard::ShardCluster`].  The hand-off to and
+    /// from the worker goes through a [`super::shard::NodeLink`] as
+    /// wire-format bytes; *inside* the node the stages chain exactly
+    /// like [`Pipeline::run_sync`].
+    pub fn shard_fn(self: &Arc<Self>) -> super::shard::ShardFn {
+        let pipeline = self.clone();
+        Arc::new(move |t: Tensor| pipeline.run_sync(&t))
+    }
+
     /// Per-stage wall times for one batch (profiling / Table V shape).
     pub fn time_stages(&self, input: &Tensor) -> Result<Vec<f64>> {
         let mut times = Vec::with_capacity(self.stages.len() + 1);

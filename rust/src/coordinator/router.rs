@@ -39,6 +39,10 @@ pub struct RouterConfig {
     pub full_seq_len: usize,
     /// deadline below which the skip variant is preferred
     pub tight_deadline: Duration,
+    /// shard fan-out floor: a worker shard smaller than this many batch
+    /// rows costs more in framing + hand-off than it wins in
+    /// parallelism, so [`Router::shards_for`] stops adding nodes below it
+    pub min_shard_rows: usize,
 }
 
 impl Default for RouterConfig {
@@ -46,6 +50,7 @@ impl Default for RouterConfig {
         RouterConfig {
             full_seq_len: 64,
             tight_deadline: Duration::from_millis(50),
+            min_shard_rows: 2,
         }
     }
 }
@@ -88,6 +93,14 @@ impl Router {
             }
         }
         Variant::Pruned
+    }
+
+    /// How many of `nodes` worker nodes to fan a `rows`-row batch over
+    /// (see [`crate::coordinator::shard::ShardCluster`]): every shard
+    /// keeps at least `min_shard_rows` rows, and a batch too small to
+    /// split stays on one node.
+    pub fn shards_for(&self, rows: usize, nodes: usize) -> usize {
+        (rows / self.cfg.min_shard_rows.max(1)).clamp(1, nodes.max(1))
     }
 
     /// Fraction routed to each variant (pruned, skip, dense).
@@ -139,6 +152,18 @@ mod tests {
     fn reference_accuracy_wins_over_everything() {
         let mut r = Router::new(RouterConfig::default());
         assert_eq!(r.route(&info(32, Some(1), true)), Variant::Dense);
+    }
+
+    #[test]
+    fn shard_fanout_respects_row_floor() {
+        let r = Router::new(RouterConfig::default()); // min_shard_rows: 2
+        assert_eq!(r.shards_for(8, 4), 4);
+        assert_eq!(r.shards_for(8, 16), 4, "shards capped by the row floor");
+        assert_eq!(r.shards_for(3, 4), 1, "too small to split");
+        assert_eq!(r.shards_for(4, 4), 2);
+        assert_eq!(r.shards_for(1, 4), 1);
+        assert_eq!(r.shards_for(0, 4), 1, "degenerate batch still routes");
+        assert_eq!(r.shards_for(100, 0), 1, "no nodes: serve locally");
     }
 
     #[test]

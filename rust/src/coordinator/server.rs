@@ -18,6 +18,8 @@ use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
 use super::pipeline::{Job, Pipeline};
 use super::request::{Batch, Request, Response};
+use super::router::{Router, RouterConfig};
+use super::shard::ShardCluster;
 
 /// Handle to a running server.
 pub struct Server {
@@ -113,6 +115,85 @@ impl Server {
             submit_tx,
             metrics,
             num_classes: manifest.num_classes,
+            seq_len: manifest.seq_len,
+            next_id: AtomicU64::new(0),
+            threads,
+        })
+    }
+
+    /// Start the coordinator with the stage chain sharded over `nodes`
+    /// loopback worker nodes instead of the in-process stage pipeline:
+    /// each batch is split by rows, every shard ships its RFC wire bytes
+    /// over a [`super::shard::NodeLink`], the workers run the full stage
+    /// chain on their shard, and the coordinator reassembles the logits
+    /// before delivery.  Per-batch fan-out follows
+    /// [`Router::shards_for`] (tiny padded batches stay on one node);
+    /// per-node link traffic lands in [`Metrics::node_transport`].
+    pub fn start_sharded(
+        engine: &Engine,
+        manifest: &Manifest,
+        policy: BatchPolicy,
+        enc: EncoderConfig,
+        nodes: usize,
+    ) -> Result<Server> {
+        let pipeline = Arc::new(Pipeline::load(engine, manifest)?);
+        let metrics = Arc::new(Metrics::default());
+        let (submit_tx, submit_rx) = channel::<Request>();
+        let mut cluster = ShardCluster::loopback(nodes, pipeline.shard_fn(), enc);
+        let num_classes = manifest.num_classes;
+        let mut threads = Vec::new();
+
+        // one coordinator thread: batches form, fan out over the node
+        // links (the links themselves run concurrently), reassemble,
+        // deliver.  Within-batch parallelism comes from the nodes.
+        {
+            let metrics = metrics.clone();
+            let policy = policy.clone();
+            threads.push(std::thread::spawn(move || {
+                let mut batcher = Batcher::new(policy).with_encoder(enc);
+                let router = Router::new(RouterConfig::default());
+                while let Some(mut batch) = batcher.next_batch(&submit_rx) {
+                    metrics.record_batch(batch.real, batch.input.shape()[0]);
+                    metrics.record_transport(
+                        batch.input.transport_bits(),
+                        batch.input.dense_bits(),
+                    );
+                    let payload = batch.input.take();
+                    // real rows drive the fan-out: padding rows are
+                    // sidecar-only and not worth extra shard frames
+                    let fan = router.shards_for(batch.real, cluster.nodes());
+                    match cluster.infer_on(fan, &payload, Some(&metrics)) {
+                        Ok(logits) => {
+                            debug_assert_eq!(logits.shape[1], num_classes);
+                            for (i, req) in
+                                batch.requests.into_iter().enumerate()
+                            {
+                                let row = logits.data
+                                    [i * num_classes..(i + 1) * num_classes]
+                                    .to_vec();
+                                let resp = Response::from_logits(
+                                    req.id,
+                                    row,
+                                    req.arrived,
+                                );
+                                metrics.record_response(resp.latency_s);
+                                let _ = req.reply.send(resp);
+                            }
+                        }
+                        // dropping batch.requests disconnects the
+                        // per-request reply channels: submitters see the
+                        // failure instead of hanging
+                        Err(e) => eprintln!("shard cluster error: {e:#}"),
+                    }
+                }
+                cluster.shutdown();
+            }));
+        }
+
+        Ok(Server {
+            submit_tx,
+            metrics,
+            num_classes,
             seq_len: manifest.seq_len,
             next_id: AtomicU64::new(0),
             threads,

@@ -1,0 +1,454 @@
+//! Multi-node sharding: split a compressed batch by row shard, ship each
+//! shard's wire bytes over a [`NodeLink`], run the per-node stage
+//! workers, and reassemble the results in the coordinator.
+//!
+//! This is the serving-side continuation of the paper's bank-partitioned
+//! storage: the batch axis is already segmented into row-aligned bank
+//! runs (see [`crate::rfc`]), so a shard split is a row slice of the
+//! compressed form -- the bytes that leave the coordinator are the same
+//! `(hot, mbhot, packed)` data the RFC storage holds, serialized by
+//! [`crate::rfc::wire`] with **no decode/re-encode round trip**.
+//!
+//! Topology: one [`NodeLink`] per worker node.  The only link shipped
+//! here is the in-process [`LoopbackLink`] (byte channels between
+//! threads); a socket-backed link is a follow-up that implements the
+//! same trait against the same wire format -- the frames are already
+//! self-describing and length-prefixed.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::rfc::{wire, EncoderConfig, Payload};
+use crate::runtime::Tensor;
+
+use super::metrics::Metrics;
+
+/// Byte-frame transport between the coordinator and one worker node.
+/// Frames are [`crate::rfc::wire`] payload frames: self-describing,
+/// length-prefixed, validated on decode.
+pub trait NodeLink: Send {
+    /// Ship one frame to the node.
+    fn send(&mut self, frame: Vec<u8>) -> Result<()>;
+    /// Block until the node's next reply frame.
+    fn recv(&mut self) -> Result<Vec<u8>>;
+}
+
+/// In-process loopback link: a pair of byte channels.  The production
+/// socket link replaces this without touching the coordinator -- the
+/// frames on the channel are exactly the bytes a socket would carry.
+pub struct LoopbackLink {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+}
+
+impl NodeLink for LoopbackLink {
+    fn send(&mut self, frame: Vec<u8>) -> Result<()> {
+        self.tx.send(frame).map_err(|_| anyhow!("node link closed"))
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        self.rx.recv().map_err(|_| anyhow!("node link closed"))
+    }
+}
+
+/// A connected (coordinator-side, node-side) pair of loopback links.
+pub fn loopback_pair() -> (LoopbackLink, LoopbackLink) {
+    let (coord_tx, node_rx) = channel();
+    let (node_tx, coord_rx) = channel();
+    (
+        LoopbackLink {
+            tx: coord_tx,
+            rx: coord_rx,
+        },
+        LoopbackLink {
+            tx: node_tx,
+            rx: node_rx,
+        },
+    )
+}
+
+/// The row-local compute one worker node runs on its shard -- for the
+/// serving pipeline this is the full stage chain
+/// ([`super::pipeline::Pipeline::shard_fn`]); tests substitute synthetic
+/// models.
+pub type ShardFn = Arc<dyn Fn(Tensor) -> Result<Tensor> + Send + Sync>;
+
+/// Spawn a worker thread servicing `link` until the coordinator hangs
+/// up.  Each frame is decoded (lazily, through the payload gate), run
+/// through `compute`, and the result re-gated and framed for the reply;
+/// failures reply with an error frame instead of killing the node.
+pub fn spawn_worker(
+    mut link: LoopbackLink,
+    compute: ShardFn,
+    enc: EncoderConfig,
+    label: String,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || loop {
+        let frame = match link.recv() {
+            Ok(f) => f,
+            Err(_) => break, // coordinator gone: shut down
+        };
+        let reply = run_frame(&frame, &compute, &enc)
+            .unwrap_or_else(|e| wire::error_frame(&format!("{label}: {e:#}")));
+        if link.send(reply).is_err() {
+            break;
+        }
+    })
+}
+
+fn run_frame(frame: &[u8], compute: &ShardFn, enc: &EncoderConfig) -> Result<Vec<u8>> {
+    let payload = wire::payload_from_bytes(frame)?;
+    let out = compute(payload.into_dense(enc))?;
+    wire::payload_to_bytes(&Payload::from_tensor(out, enc))
+}
+
+/// Contiguous near-equal row ranges over `nodes` workers; nodes beyond
+/// the row count get no range.  Shards are in row order, so per-shard
+/// results concatenate back in batch order.
+pub fn shard_ranges(rows: usize, nodes: usize) -> Vec<(usize, usize)> {
+    let nodes = nodes.max(1);
+    let per = rows.div_ceil(nodes).max(1);
+    (0..nodes)
+        .map(|i| (i * per, rows.min((i + 1) * per)))
+        .filter(|&(lo, hi)| lo < hi)
+        .collect()
+}
+
+fn slice_payload(p: &Payload, lo: usize, hi: usize) -> Result<Payload> {
+    match p {
+        Payload::Compressed(ct) => Ok(Payload::Compressed(ct.slice_rows(lo, hi)?)),
+        Payload::Dense(t) => {
+            ensure!(
+                t.shape.len() >= 2,
+                "row slice needs a batch axis, got {:?}",
+                t.shape
+            );
+            let row: usize = t.shape[1..].iter().product();
+            let mut shape = t.shape.clone();
+            shape[0] = hi - lo;
+            Ok(Payload::Dense(Tensor::new(
+                shape,
+                t.data[lo * row..hi * row].to_vec(),
+            )?))
+        }
+    }
+}
+
+/// A cluster of worker nodes behind [`NodeLink`]s, plus the split /
+/// reassemble logic the coordinator runs around them.
+pub struct ShardCluster {
+    links: Vec<Box<dyn NodeLink>>,
+    workers: Vec<JoinHandle<()>>,
+    enc: EncoderConfig,
+}
+
+impl ShardCluster {
+    /// Spawn `nodes` loopback workers, all running `compute` on their
+    /// row shards.
+    pub fn loopback(nodes: usize, compute: ShardFn, enc: EncoderConfig) -> ShardCluster {
+        let mut links: Vec<Box<dyn NodeLink>> = Vec::new();
+        let mut workers = Vec::new();
+        for i in 0..nodes.max(1) {
+            let (coord, node) = loopback_pair();
+            workers.push(spawn_worker(node, compute.clone(), enc, format!("node {i}")));
+            links.push(Box::new(coord));
+        }
+        ShardCluster {
+            links,
+            workers,
+            enc,
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Run one batch over every node: split by rows, ship every shard's
+    /// wire frame before collecting any reply (the nodes run
+    /// concurrently), then reassemble the per-node results in batch
+    /// order.  Per-node wire traffic is recorded into `metrics` when
+    /// given.
+    pub fn infer(&mut self, input: &Payload, metrics: Option<&Metrics>) -> Result<Tensor> {
+        self.infer_on(self.links.len(), input, metrics)
+    }
+
+    /// [`ShardCluster::infer`] with an explicit fan-out (clamped to the
+    /// node count): the serving path picks it per batch via
+    /// [`super::router::Router::shards_for`], so tiny batches stay on
+    /// one node instead of paying per-shard framing for nothing.
+    ///
+    /// Failure handling: the cluster is long-lived, so every node that
+    /// was sent a shard is drained even after an error -- a reply left
+    /// queued on a link would be collected by the *next* batch and
+    /// silently deliver stale results one batch off, forever.
+    pub fn infer_on(
+        &mut self,
+        fan_out: usize,
+        input: &Payload,
+        metrics: Option<&Metrics>,
+    ) -> Result<Tensor> {
+        let shape = input.shape();
+        ensure!(
+            shape.len() >= 2,
+            "cluster input needs a batch axis, got {shape:?}"
+        );
+        let plan = shard_ranges(shape[0], fan_out.clamp(1, self.links.len()));
+        ensure!(!plan.is_empty(), "empty batch (0 rows)");
+        let mut failure: Option<anyhow::Error> = None;
+        let mut sent = vec![false; plan.len()];
+        for (node, &(lo, hi)) in plan.iter().enumerate() {
+            let result = slice_payload(input, lo, hi).and_then(|part| {
+                let frame = wire::payload_to_bytes(&part)?;
+                let wire_bytes = frame.len() as u64;
+                self.links[node]
+                    .send(frame)
+                    .with_context(|| format!("sending shard to node {node}"))?;
+                // recorded only after the link accepted the frame, so a
+                // dead node cannot inflate its transport stats
+                if let Some(m) = metrics {
+                    m.record_node_tx(node, wire_bytes, part.dense_bits() / 8);
+                }
+                Ok(())
+            });
+            match result {
+                Ok(()) => sent[node] = true,
+                Err(e) => {
+                    failure.get_or_insert(e);
+                }
+            }
+        }
+        let mut parts = Vec::with_capacity(plan.len());
+        for (node, &(lo, hi)) in plan.iter().enumerate() {
+            if !sent[node] {
+                continue; // nothing in flight on this link
+            }
+            let result = self.collect_reply(node, hi - lo, metrics);
+            match result {
+                Ok(t) => parts.push(t),
+                Err(e) => {
+                    failure.get_or_insert(e);
+                }
+            }
+        }
+        if let Some(e) = failure {
+            return Err(e);
+        }
+        Tensor::concat_batch(&parts)
+    }
+
+    /// Receive + decode one node's reply for a `rows`-row shard.
+    fn collect_reply(
+        &mut self,
+        node: usize,
+        rows: usize,
+        metrics: Option<&Metrics>,
+    ) -> Result<Tensor> {
+        let frame = self.links[node]
+            .recv()
+            .with_context(|| format!("collecting node {node}"))?;
+        let reply = wire::payload_from_bytes(&frame)
+            .with_context(|| format!("node {node} reply"))?;
+        ensure!(
+            reply.shape().first() == Some(&rows),
+            "node {node} returned shape {:?} for a {rows}-row shard",
+            reply.shape()
+        );
+        if let Some(m) = metrics {
+            m.record_node_rx(node, frame.len() as u64, reply.dense_bits() / 8);
+        }
+        Ok(reply.into_dense(&self.enc))
+    }
+
+    /// Hang up every link and join the workers.
+    pub fn shutdown(self) {
+        drop(self.links);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Row-local toy model (deliberately simpler than the synthetic
+    /// classifier the integration tests use): out[r][c] = (c+1) * sum(row).
+    /// Row-locality is what makes shard + concat equal single-node.
+    fn synth(classes: usize) -> ShardFn {
+        Arc::new(move |t: Tensor| {
+            ensure!(t.shape.len() >= 2, "need a batch axis");
+            let rows = t.shape[0];
+            let row: usize = t.shape[1..].iter().product();
+            let mut out = vec![0f32; rows * classes];
+            for r in 0..rows {
+                let s: f32 = t.data[r * row..(r + 1) * row].iter().sum();
+                for (c, slot) in out[r * classes..(r + 1) * classes]
+                    .iter_mut()
+                    .enumerate()
+                {
+                    *slot = s * (c + 1) as f32;
+                }
+            }
+            Tensor::new(vec![rows, classes], out)
+        })
+    }
+
+    fn enc() -> EncoderConfig {
+        EncoderConfig {
+            shards: 1,
+            min_sparsity: 0.10,
+            parallel_threshold: usize::MAX,
+        }
+    }
+
+    #[test]
+    fn shard_ranges_cover_and_order() {
+        for (rows, nodes) in [(8, 2), (8, 3), (3, 4), (1, 4), (16, 1), (5, 5)] {
+            let plan = shard_ranges(rows, nodes);
+            assert!(plan.len() <= nodes.max(1));
+            assert_eq!(plan[0].0, 0);
+            assert_eq!(plan.last().unwrap().1, rows);
+            for w in plan.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous ({rows}, {nodes})");
+            }
+        }
+        assert!(shard_ranges(0, 3).is_empty());
+    }
+
+    #[test]
+    fn cluster_matches_single_node_for_all_shard_counts() {
+        let t = Tensor::random_sparse(vec![8, 3, 4, 25], 0.6, 31);
+        let expect = synth(10)(t.clone()).unwrap();
+        for nodes in [1usize, 2, 3, 4, 8] {
+            let mut cluster = ShardCluster::loopback(nodes, synth(10), enc());
+            let out = cluster
+                .infer(&Payload::Dense(t.clone()), None)
+                .unwrap();
+            assert_eq!(out, expect, "{nodes} nodes");
+            cluster.shutdown();
+        }
+    }
+
+    #[test]
+    fn compressed_input_stays_compressed_on_the_wire() {
+        let t = Tensor::random_sparse(vec![4, 3, 4, 25], 0.8, 32);
+        let e = enc();
+        let p = Payload::from_tensor(t.clone(), &e);
+        assert!(p.is_compressed());
+        let m = Metrics::default();
+        let mut cluster = ShardCluster::loopback(2, synth(6), e);
+        let out = cluster.infer(&p, Some(&m)).unwrap();
+        assert_eq!(out, synth(6)(t).unwrap());
+        cluster.shutdown();
+        let nodes = m.node_transport();
+        assert_eq!(nodes.len(), 2);
+        for (i, n) in nodes.iter().enumerate() {
+            assert_eq!(n.shards, 1, "node {i}");
+            // a 80%-sparse shard's frame is far smaller than dense rows
+            assert!(
+                n.tx_wire_bytes < n.tx_dense_bytes / 2,
+                "node {i}: {} vs {}",
+                n.tx_wire_bytes,
+                n.tx_dense_bytes
+            );
+            assert!(n.saving() > 0.0);
+        }
+    }
+
+    #[test]
+    fn more_nodes_than_rows_leaves_tail_nodes_idle() {
+        let t = Tensor::random_sparse(vec![2, 3, 4, 25], 0.5, 33);
+        let expect = synth(4)(t.clone()).unwrap();
+        let m = Metrics::default();
+        let mut cluster = ShardCluster::loopback(4, synth(4), enc());
+        let out = cluster.infer(&Payload::Dense(t), Some(&m)).unwrap();
+        assert_eq!(out, expect);
+        cluster.shutdown();
+        let nodes = m.node_transport();
+        assert_eq!(nodes.len(), 2, "only the first two nodes saw work");
+    }
+
+    #[test]
+    fn worker_errors_surface_without_hanging() {
+        let failing: ShardFn =
+            Arc::new(|_t| Err(anyhow!("synthetic stage failure")));
+        let t = Tensor::random_sparse(vec![4, 3, 4, 25], 0.5, 34);
+        let mut cluster = ShardCluster::loopback(2, failing, enc());
+        let err = cluster.infer(&Payload::Dense(t), None).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("synthetic stage failure"),
+            "{err:#}"
+        );
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn cluster_stays_synchronized_after_a_failed_batch() {
+        // one worker fails on exactly one shard; the coordinator must
+        // drain every in-flight reply so the *next* batch gets its own
+        // results, not the failed batch's leftovers shifted by one
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let inner = synth(4);
+        let calls = Arc::new(AtomicUsize::new(0));
+        let counter = calls.clone();
+        let flaky: ShardFn = Arc::new(move |t: Tensor| {
+            if counter.fetch_add(1, Ordering::SeqCst) == 0 {
+                Err(anyhow!("transient stage failure"))
+            } else {
+                inner(t)
+            }
+        });
+        let reference = synth(4);
+        let t1 = Tensor::random_sparse(vec![4, 3, 4, 25], 0.5, 41);
+        let t2 = Tensor::random_sparse(vec![4, 3, 4, 25], 0.5, 42);
+        let mut cluster = ShardCluster::loopback(2, flaky, enc());
+        let err = cluster
+            .infer(&Payload::Dense(t1), None)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("transient"), "{err:#}");
+        // the very next batch on the same cluster must be correct
+        let out = cluster.infer(&Payload::Dense(t2.clone()), None).unwrap();
+        assert_eq!(out, reference(t2).unwrap());
+        assert_eq!(calls.load(Ordering::SeqCst), 4, "2 shards x 2 batches");
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn fan_out_keeps_small_batches_on_fewer_nodes() {
+        let t = Tensor::random_sparse(vec![4, 3, 4, 25], 0.5, 43);
+        let expect = synth(5)(t.clone()).unwrap();
+        let m = Metrics::default();
+        let mut cluster = ShardCluster::loopback(4, synth(5), enc());
+        let out = cluster
+            .infer_on(2, &Payload::Dense(t), Some(&m))
+            .unwrap();
+        assert_eq!(out, expect);
+        cluster.shutdown();
+        // only the first 2 nodes saw frames despite 4 being available
+        assert_eq!(m.node_transport().len(), 2);
+        // degenerate fan-outs clamp instead of panicking
+        let mut one = ShardCluster::loopback(1, synth(5), enc());
+        let t = Tensor::random_sparse(vec![2, 3, 4, 25], 0.5, 44);
+        assert!(one.infer_on(0, &Payload::Dense(t.clone()), None).is_ok());
+        assert!(one.infer_on(9, &Payload::Dense(t), None).is_ok());
+        one.shutdown();
+    }
+
+    #[test]
+    fn wrong_row_count_from_a_node_is_rejected() {
+        // a "model" that drops the batch axis contract
+        let bad: ShardFn = Arc::new(|t| {
+            let rows = t.shape[0] + 1;
+            Ok(Tensor::zeros(vec![rows, 2]))
+        });
+        let t = Tensor::random_sparse(vec![4, 3, 4, 25], 0.5, 35);
+        let mut cluster = ShardCluster::loopback(2, bad, enc());
+        assert!(cluster.infer(&Payload::Dense(t), None).is_err());
+        cluster.shutdown();
+    }
+}

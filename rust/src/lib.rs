@@ -20,7 +20,10 @@
 //!      model below stays the bit-exact reference; the equivalence
 //!      contract is enforced by `tests/rfc_equivalence.rs`;
 //!    * [`coordinator`]: request router, dynamic batcher (batching in
-//!      compressed form) and the layer-pipelined block executor;
+//!      compressed form), the layer-pipelined block executor, and the
+//!      multi-node shard layer ([`coordinator::shard`]) that ships
+//!      compressed batches across process boundaries as
+//!      [`rfc::wire`]-format bytes;
 //!    * [`sim`]: cycle-level model of the paper's FPGA architecture
 //!      (Mult-PE, Dyn-Mult-PE, RFC compressed storage, resource model)
 //!      regenerating Tables II-IV and Fig. 11;

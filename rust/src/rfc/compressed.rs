@@ -243,6 +243,90 @@ impl CompressedTensor {
         self.segments.iter().map(|s| s.rows).sum()
     }
 
+    /// Banks per row: the row-aligned unit that wire serialization and
+    /// shard slicing work in.
+    pub fn row_banks(&self) -> usize {
+        self.row_banks
+    }
+
+    /// The row-aligned encoder segments, in batch order (each segment is
+    /// a contiguous run of whole rows -- see [`super::encoder`]).
+    pub fn segments(&self) -> &[BankSegment] {
+        &self.segments
+    }
+
+    /// Assemble a tensor from already-validated parts (wire decode).
+    pub(crate) fn from_parts(
+        shape: Vec<usize>,
+        row_len: usize,
+        row_banks: usize,
+        segments: Vec<BankSegment>,
+    ) -> CompressedTensor {
+        CompressedTensor {
+            shape,
+            row_len,
+            row_banks,
+            segments,
+        }
+    }
+
+    /// Copy out rows `[lo, hi)` as a standalone tensor: the shard split.
+    /// Only the banks in range are copied -- the packed data is sliced by
+    /// the row-aligned offsets, never decoded.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Result<CompressedTensor> {
+        let (rows, _) = Self::layout(&self.shape);
+        ensure!(
+            self.shape.len() >= 2,
+            "row slice needs a batch axis, got {:?}",
+            self.shape
+        );
+        ensure!(lo <= hi && hi <= rows, "row slice {lo}..{hi} of {rows} rows");
+        let rb = self.row_banks;
+        let mut segments = Vec::new();
+        let mut seg_start = 0usize;
+        for seg in &self.segments {
+            let seg_end = seg_start + seg.rows;
+            let a = lo.max(seg_start);
+            let b = hi.min(seg_end);
+            if a < b {
+                let (la, lb) = (a - seg_start, b - seg_start);
+                let off_lo = seg.offsets[la * rb] as usize;
+                let off_hi = seg.offsets[lb * rb] as usize;
+                segments.push(BankSegment {
+                    rows: b - a,
+                    row_banks: rb,
+                    packed: seg.packed[off_lo..off_hi].to_vec(),
+                    hots: seg.hots[la * rb..lb * rb].to_vec(),
+                    mbhots: seg.mbhots[la * rb..lb * rb].to_vec(),
+                    offsets: seg.offsets[la * rb..=lb * rb]
+                        .iter()
+                        .map(|&o| o - off_lo as u32)
+                        .collect(),
+                });
+            }
+            seg_start = seg_end;
+        }
+        if segments.is_empty() {
+            // empty slice: keep one zero-row segment so validate() holds
+            segments.push(BankSegment {
+                rows: 0,
+                row_banks: rb,
+                packed: Vec::new(),
+                hots: Vec::new(),
+                mbhots: Vec::new(),
+                offsets: vec![0],
+            });
+        }
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        Ok(CompressedTensor {
+            shape,
+            row_len: self.row_len,
+            row_banks: rb,
+            segments,
+        })
+    }
+
     /// Stored nonzero values.
     pub fn nnz(&self) -> usize {
         self.segments.iter().map(|s| s.packed.len()).sum()
@@ -391,7 +475,10 @@ impl CompressedTensor {
 }
 
 impl Default for CompressedTensor {
-    /// An empty 0-row placeholder (used when moving payloads out).
+    /// An empty zero-element tensor.  NOT the [`super::Payload::take`]
+    /// placeholder: that is a dense empty tensor, because a compressed
+    /// default here reads as a leftover padding sidecar to anyone
+    /// inspecting a moved-out payload.
     fn default() -> CompressedTensor {
         CompressedTensor::zeros(vec![0])
     }
@@ -538,6 +625,53 @@ mod tests {
             segments: vec![seg],
         };
         assert!(ct.validate().is_err());
+    }
+
+    #[test]
+    fn slice_rows_matches_dense_slice() {
+        let t = sparse(vec![7, 52], 0.6, 21);
+        let ct = CompressedTensor {
+            shape: t.shape.clone(),
+            row_len: 52,
+            row_banks: 52usize.div_ceil(BANK_WIDTH),
+            segments: vec![
+                BankSegment::encode(&t.data[..3 * 52], 3, 52),
+                BankSegment::encode(&t.data[3 * 52..], 4, 52),
+            ],
+        };
+        ct.validate().unwrap();
+        // slices within one segment, across the boundary, and empty
+        for (lo, hi) in [(0, 2), (2, 5), (0, 7), (3, 3), (6, 7)] {
+            let s = ct.slice_rows(lo, hi).unwrap();
+            s.validate().unwrap();
+            assert_eq!(s.shape, vec![hi - lo, 52]);
+            let dense = s.to_tensor();
+            assert_eq!(
+                dense.data,
+                t.data[lo * 52..hi * 52].to_vec(),
+                "slice {lo}..{hi}"
+            );
+        }
+        assert!(ct.slice_rows(5, 3).is_err());
+        assert!(ct.slice_rows(0, 8).is_err());
+    }
+
+    #[test]
+    fn sliced_shards_reconcat_to_the_whole() {
+        let t = sparse(vec![8, 48], 0.5, 22);
+        let ct = CompressedTensor {
+            shape: t.shape.clone(),
+            row_len: 48,
+            row_banks: 3,
+            segments: vec![BankSegment::encode(&t.data, 8, 48)],
+        };
+        let parts: Vec<CompressedTensor> = [(0, 3), (3, 6), (6, 8)]
+            .iter()
+            .map(|&(lo, hi)| ct.slice_rows(lo, hi).unwrap())
+            .collect();
+        let back = CompressedTensor::concat_batch(parts).unwrap();
+        back.validate().unwrap();
+        assert_eq!(back.to_tensor(), t);
     }
 
     #[test]

@@ -15,13 +15,19 @@
 //!   post-ReLU sparsity clears the break-even gate, dense otherwise,
 //!   decoded lazily on stage entry.
 //!
+//! * [`wire`] -- wire format v1: the versioned, length-prefixed byte
+//!   encoding of [`CompressedTensor`] that leaves the process (multi-node
+//!   shard links, see [`crate::coordinator::shard`]).
+//!
 //! Equivalence contract (enforced by `tests/rfc_equivalence.rs`): for
 //! every 16-aligned bank, the runtime encoder's `(hot, mbhot, packed)`
-//! triple is bit-for-bit identical to `sim::rfc::encode_bank`, and
-//! decode reproduces the dense tensor exactly.
+//! triple is bit-for-bit identical to `sim::rfc::encode_bank`, decode
+//! reproduces the dense tensor exactly, and the serialized wire stream
+//! is byte-identical to the sim mirror `sim::rfc::wire_bytes`.
 
 pub mod compressed;
 pub mod encoder;
+pub mod wire;
 
 pub use compressed::{BankSegment, CompressedTensor, BANK_SIDECAR_BITS};
 pub use encoder::{decode, encode, EncoderConfig};
@@ -109,8 +115,16 @@ impl Payload {
     }
 
     /// Move the payload out, leaving an empty placeholder behind.
+    ///
+    /// The placeholder is a zero-element *dense* tensor, not a
+    /// compressed one: the old `CompressedTensor::default()` placeholder
+    /// made a batch that had shipped dense read as still carrying a
+    /// compressed padding sidecar (`is_compressed()` true, a phantom
+    /// segment row) after the server moved its payload out -- see the
+    /// `take_after_dense_batch_leaves_no_padding_sidecar` regression
+    /// test in [`crate::coordinator::batcher`].
     pub fn take(&mut self) -> Payload {
-        std::mem::replace(self, Payload::Compressed(CompressedTensor::default()))
+        std::mem::replace(self, Payload::Dense(Tensor::zeros(vec![0])))
     }
 }
 
@@ -156,5 +170,8 @@ mod tests {
         let taken = p.take();
         assert_eq!(taken.shape(), &[4, 256]);
         assert_eq!(p.shape(), &[0]);
+        // the placeholder must not read as a compressed sidecar
+        assert!(!p.is_compressed());
+        assert_eq!(p.transport_bits(), 0);
     }
 }

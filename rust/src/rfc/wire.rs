@@ -1,0 +1,519 @@
+//! RFC wire format v1: a versioned, length-prefixed binary encoding of
+//! [`CompressedTensor`] for process-boundary transport (multi-node
+//! sharding, and the socket links that follow).
+//!
+//! Normative spec: `docs/wire-format.md`.  Layout (little-endian):
+//!
+//! ```text
+//! header:  magic "RFCW" | version u16 | rank u16 | total_len u32
+//!          dims rank*u32 | row_banks u32 | bank_count u32 | packed_len u32
+//! body:    hots   bank_count * u16     (row-major bank order)
+//!          mbhots bank_count * u8
+//!          row_offsets (rows + 1) * u32 (packed index at each row boundary)
+//!          packed packed_len * f32      (IEEE-754 bit pattern)
+//! ```
+//!
+//! Two properties the rest of the system leans on:
+//!
+//! * **Canonical**: the stream depends only on the logical tensor, never
+//!   on how many encoder shards produced it -- segments are flattened in
+//!   row order, so the sim reference ([`crate::sim::rfc::wire_bytes`])
+//!   can produce byte-identical output with no segment concept at all.
+//! * **Row-aligned offsets**: the `row_offsets` table lets a receiver
+//!   slice whole rows out of the packed data without decoding, which is
+//!   exactly the unit the shard coordinator splits batches on.
+//!
+//! [`from_bytes`] never panics on malformed input: every length is
+//! checked before use (overflow-checked arithmetic), redundant header
+//! fields must agree, and the decoded tensor passes the existing
+//! [`CompressedTensor::validate`] rejection API before it is returned.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::runtime::Tensor;
+use crate::sim::rfc::BANK_WIDTH;
+
+use super::compressed::{BankSegment, CompressedTensor};
+use super::Payload;
+
+/// Frame magic for a serialized [`CompressedTensor`].
+pub const WIRE_MAGIC: [u8; 4] = *b"RFCW";
+/// Frame magic for a serialized [`Payload`] (dense or compressed).
+pub const PAYLOAD_MAGIC: [u8; 4] = *b"RFCP";
+/// The one and only wire version this build reads and writes.
+pub const WIRE_VERSION: u16 = 1;
+/// Sanity bound on tensor rank (serving shapes are rank <= 4).
+pub const MAX_RANK: usize = 8;
+
+const KIND_DENSE: u8 = 0;
+const KIND_COMPRESSED: u8 = 1;
+const KIND_ERROR: u8 = 2;
+
+/// Header bytes for a tensor frame of the given rank.
+fn header_len(rank: usize) -> usize {
+    // magic + version + rank + total_len, dims, row_banks + bank_count
+    // + packed_len
+    12 + 4 * rank + 12
+}
+
+fn put_u16(w: &mut Vec<u8>, v: u16) {
+    w.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(w: &mut Vec<u8>, v: u32) {
+    w.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Serialize to the v1 wire stream.  Fails only on tensors that are
+/// structurally invalid or too large for the u32 length fields.
+pub fn to_bytes(ct: &CompressedTensor) -> Result<Vec<u8>> {
+    ct.validate().context("serializing invalid tensor")?;
+    let (rows, _row_len) = CompressedTensor::layout(&ct.shape);
+    let rank = ct.shape.len();
+    let banks = ct.banks();
+    let nnz = ct.nnz();
+    ensure!(rank <= MAX_RANK, "rank {rank} exceeds wire max {MAX_RANK}");
+    for &d in &ct.shape {
+        ensure!(d as u64 <= u32::MAX as u64, "dim {d} exceeds u32");
+    }
+    ensure!(
+        banks as u64 <= u32::MAX as u64
+            && nnz as u64 <= u32::MAX as u64
+            && ct.row_banks() as u64 <= u32::MAX as u64,
+        "tensor too large for wire v1 ({banks} banks, {nnz} values)"
+    );
+    let total = header_len(rank) as u64
+        + banks as u64 * 3
+        + (rows as u64 + 1) * 4
+        + nnz as u64 * 4;
+    ensure!(total <= u32::MAX as u64, "frame length {total} exceeds u32");
+
+    let mut w = Vec::with_capacity(total as usize);
+    w.extend_from_slice(&WIRE_MAGIC);
+    put_u16(&mut w, WIRE_VERSION);
+    put_u16(&mut w, rank as u16);
+    put_u32(&mut w, total as u32);
+    for &d in &ct.shape {
+        put_u32(&mut w, d as u32);
+    }
+    put_u32(&mut w, ct.row_banks() as u32);
+    put_u32(&mut w, banks as u32);
+    put_u32(&mut w, nnz as u32);
+    // body: segments are whole-row runs in batch order, so walking them
+    // sequentially yields the canonical row-major bank order
+    for seg in ct.segments() {
+        for &h in &seg.hots {
+            put_u16(&mut w, h);
+        }
+    }
+    for seg in ct.segments() {
+        w.extend_from_slice(&seg.mbhots);
+    }
+    let mut base = 0u64;
+    put_u32(&mut w, 0);
+    for seg in ct.segments() {
+        for r in 1..=seg.rows {
+            put_u32(&mut w, (base + seg.offsets[r * seg.row_banks] as u64) as u32);
+        }
+        base += seg.packed.len() as u64;
+    }
+    for seg in ct.segments() {
+        for &v in &seg.packed {
+            w.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    debug_assert_eq!(w.len() as u64, total);
+    Ok(w)
+}
+
+/// Bounds-checked little-endian reader over a byte buffer.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .context("frame offset overflow")?;
+        ensure!(
+            end <= self.buf.len(),
+            "truncated frame: need {n} bytes at offset {}, have {}",
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn rest(&self) -> &'a [u8] {
+        &self.buf[self.pos..]
+    }
+}
+
+/// Decode a v1 wire stream, rejecting (never panicking on) anything
+/// malformed: short buffers, wrong magic, version skew, disagreeing
+/// counts, hot/packed mismatches, oversized shapes.
+pub fn from_bytes(buf: &[u8]) -> Result<CompressedTensor> {
+    let mut r = Reader::new(buf);
+    let magic = r.take(4)?;
+    ensure!(magic == WIRE_MAGIC, "bad magic {magic:02x?}");
+    let version = r.u16()?;
+    ensure!(
+        version == WIRE_VERSION,
+        "wire version {version} not supported (this build reads v{WIRE_VERSION})"
+    );
+    let rank = r.u16()? as usize;
+    ensure!(rank <= MAX_RANK, "rank {rank} exceeds wire max {MAX_RANK}");
+    let total_len = r.u32()? as usize;
+    ensure!(
+        total_len == buf.len(),
+        "frame says {total_len} bytes, buffer has {}",
+        buf.len()
+    );
+    let mut shape = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        shape.push(r.u32()? as usize);
+    }
+    // (rows, row_len) with overflow-checked products -- a hostile header
+    // can name dims whose product exceeds usize
+    let (rows, row_len) = match shape.len() {
+        0 => (1usize, 1usize),
+        1 => (1, shape[0]),
+        _ => (
+            shape[0],
+            shape[1..]
+                .iter()
+                .try_fold(1usize, |a, &d| a.checked_mul(d))
+                .context("shape element count overflows")?,
+        ),
+    };
+    let row_banks = row_len.div_ceil(BANK_WIDTH);
+    let row_banks_field = r.u32()? as usize;
+    ensure!(
+        row_banks_field == row_banks,
+        "header row_banks {row_banks_field}, shape implies {row_banks}"
+    );
+    let bank_count = r.u32()? as usize;
+    let expect_banks = rows
+        .checked_mul(row_banks)
+        .context("bank count overflows")?;
+    ensure!(
+        bank_count == expect_banks,
+        "header bank_count {bank_count}, shape implies {expect_banks}"
+    );
+    let packed_len = r.u32()? as usize;
+    // exact-size check before any array read: truncation and trailing
+    // garbage both fail here
+    let expect_total = header_len(rank) as u64
+        + bank_count as u64 * 3
+        + (rows as u64 + 1) * 4
+        + packed_len as u64 * 4;
+    ensure!(
+        expect_total == buf.len() as u64,
+        "counts imply a {expect_total}-byte frame, buffer has {}",
+        buf.len()
+    );
+
+    // the exact-size check above bounds every count by the buffer
+    // length, so these bulk reads cannot overflow; chunked decodes keep
+    // the hot-path cost to one pass per section
+    let hots: Vec<u16> = r
+        .take(bank_count * 2)?
+        .chunks_exact(2)
+        .map(|b| u16::from_le_bytes([b[0], b[1]]))
+        .collect();
+    let mbhots = r.take(bank_count)?.to_vec();
+    let row_offsets: Vec<u32> = r
+        .take((rows + 1) * 4)?
+        .chunks_exact(4)
+        .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    let packed: Vec<f32> = r
+        .take(packed_len * 4)?
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    ensure!(r.rest().is_empty(), "trailing bytes after frame");
+
+    // per-bank offsets are redundant on the wire: rebuild them from the
+    // hot-code popcounts and require they land exactly on packed_len
+    let mut offsets = Vec::with_capacity(bank_count + 1);
+    let mut at = 0u64;
+    offsets.push(0u32);
+    for &h in &hots {
+        at += h.count_ones() as u64;
+        ensure!(
+            at <= packed_len as u64,
+            "hot codes name more than the {packed_len} packed values"
+        );
+        offsets.push(at as u32);
+    }
+    ensure!(
+        at == packed_len as u64,
+        "hot codes name {at} values but {packed_len} are packed"
+    );
+    for (row, &off) in row_offsets.iter().enumerate() {
+        let expect = offsets[row * row_banks];
+        ensure!(
+            off == expect,
+            "row {row} offset {off} does not match hot codes ({expect})"
+        );
+    }
+
+    let ct = CompressedTensor::from_parts(
+        shape,
+        row_len,
+        row_banks,
+        vec![BankSegment {
+            rows,
+            row_banks,
+            packed,
+            hots,
+            mbhots,
+            offsets,
+        }],
+    );
+    ct.validate().context("decoded frame fails validation")?;
+    Ok(ct)
+}
+
+/// Frame a [`Payload`] for a [`crate::coordinator::shard::NodeLink`]:
+/// magic, version, a u32 total-length prefix (so a stream transport can
+/// delimit frames without understanding the body), a kind byte, then the
+/// body.  Compressed payloads embed their [`to_bytes`] stream untouched
+/// (no decode/re-encode round trip); dense payloads ship shape + raw
+/// values.
+pub fn payload_to_bytes(p: &Payload) -> Result<Vec<u8>> {
+    let mut w = Vec::new();
+    w.extend_from_slice(&PAYLOAD_MAGIC);
+    put_u16(&mut w, WIRE_VERSION);
+    put_u32(&mut w, 0); // total_len, patched below
+    match p {
+        Payload::Compressed(ct) => {
+            w.push(KIND_COMPRESSED);
+            w.extend_from_slice(&to_bytes(ct)?);
+        }
+        Payload::Dense(t) => {
+            let rank = t.shape.len();
+            ensure!(rank <= MAX_RANK, "rank {rank} exceeds wire max {MAX_RANK}");
+            for &d in &t.shape {
+                ensure!(d as u64 <= u32::MAX as u64, "dim {d} exceeds u32");
+            }
+            w.push(KIND_DENSE);
+            put_u16(&mut w, rank as u16);
+            for &d in &t.shape {
+                put_u32(&mut w, d as u32);
+            }
+            for &v in &t.data {
+                w.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+    ensure!(
+        w.len() as u64 <= u32::MAX as u64,
+        "payload frame length {} exceeds u32",
+        w.len()
+    );
+    let total = (w.len() as u32).to_le_bytes();
+    w[6..10].copy_from_slice(&total);
+    Ok(w)
+}
+
+/// An error reply frame: a worker that failed sends this instead of a
+/// payload, and [`payload_from_bytes`] surfaces it as `Err` on the
+/// coordinator side.
+pub fn error_frame(msg: &str) -> Vec<u8> {
+    let msg = &msg.as_bytes()[..msg.len().min(u16::MAX as usize)];
+    let mut w = Vec::with_capacity(11 + msg.len());
+    w.extend_from_slice(&PAYLOAD_MAGIC);
+    put_u16(&mut w, WIRE_VERSION);
+    put_u32(&mut w, (11 + msg.len()) as u32);
+    w.push(KIND_ERROR);
+    w.extend_from_slice(msg);
+    w
+}
+
+/// Decode a payload frame (the inverse of [`payload_to_bytes`] /
+/// [`error_frame`]).
+pub fn payload_from_bytes(buf: &[u8]) -> Result<Payload> {
+    let mut r = Reader::new(buf);
+    let magic = r.take(4)?;
+    ensure!(magic == PAYLOAD_MAGIC, "bad payload magic {magic:02x?}");
+    let version = r.u16()?;
+    ensure!(
+        version == WIRE_VERSION,
+        "payload version {version} not supported (this build reads v{WIRE_VERSION})"
+    );
+    let total_len = r.u32()? as usize;
+    ensure!(
+        total_len == buf.len(),
+        "payload frame says {total_len} bytes, buffer has {}",
+        buf.len()
+    );
+    match r.u8()? {
+        KIND_COMPRESSED => Ok(Payload::Compressed(from_bytes(r.rest())?)),
+        KIND_DENSE => {
+            let rank = r.u16()? as usize;
+            ensure!(rank <= MAX_RANK, "rank {rank} exceeds wire max {MAX_RANK}");
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(r.u32()? as usize);
+            }
+            let n = shape
+                .iter()
+                .try_fold(1usize, |a, &d| a.checked_mul(d))
+                .context("dense element count overflows")?;
+            let want = n.checked_mul(4).context("dense byte count overflows")?;
+            ensure!(
+                r.rest().len() == want,
+                "dense body has {} bytes, shape {shape:?} wants {want}",
+                r.rest().len()
+            );
+            let data = r
+                .rest()
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            Ok(Payload::Dense(Tensor::new(shape, data)?))
+        }
+        KIND_ERROR => bail!(
+            "remote node error: {}",
+            String::from_utf8_lossy(r.rest())
+        ),
+        k => bail!("unknown payload kind {k}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rfc::{encode, EncoderConfig};
+
+    fn cfg(shards: usize) -> EncoderConfig {
+        EncoderConfig {
+            shards,
+            min_sparsity: 0.0,
+            parallel_threshold: 0,
+        }
+    }
+
+    fn sample(shape: Vec<usize>, sparsity: f64, seed: u64) -> CompressedTensor {
+        encode(&Tensor::random_sparse(shape, sparsity, seed), &cfg(3))
+    }
+
+    #[test]
+    fn roundtrip_bit_exact() {
+        for (shape, s) in [
+            (vec![5, 64], 0.5),
+            (vec![3, 3, 20], 0.9),
+            (vec![1, 17], 0.0),
+            (vec![8, 600], 0.7),
+        ] {
+            let ct = sample(shape.clone(), s, 42);
+            let bytes = to_bytes(&ct).unwrap();
+            let back = from_bytes(&bytes).unwrap();
+            assert_eq!(back.shape, ct.shape);
+            assert_eq!(back.to_tensor(), ct.to_tensor(), "{shape:?}");
+            // and the stream re-serializes identically
+            assert_eq!(to_bytes(&back).unwrap(), bytes);
+        }
+    }
+
+    #[test]
+    fn stream_is_canonical_across_shard_counts() {
+        let t = Tensor::random_sparse(vec![9, 320], 0.6, 7);
+        let reference = to_bytes(&encode(&t, &cfg(1))).unwrap();
+        for shards in [2usize, 3, 5, 8] {
+            let bytes = to_bytes(&encode(&t, &cfg(shards))).unwrap();
+            assert_eq!(bytes, reference, "shards {shards}");
+        }
+    }
+
+    #[test]
+    fn zeros_frame_is_sidecar_only() {
+        let z = CompressedTensor::zeros(vec![4, 32]);
+        let bytes = to_bytes(&z).unwrap();
+        // header(rank 2) + 8 banks * 3 + 5 row offsets * 4, no packed data
+        assert_eq!(bytes.len(), header_len(2) + 8 * 3 + 5 * 4);
+        let back = from_bytes(&bytes).unwrap();
+        assert_eq!(back.nnz(), 0);
+        assert_eq!(back.to_tensor(), Tensor::zeros(vec![4, 32]));
+    }
+
+    #[test]
+    fn every_truncation_is_rejected() {
+        let bytes = to_bytes(&sample(vec![3, 48], 0.5, 9)).unwrap();
+        for n in 0..bytes.len() {
+            assert!(from_bytes(&bytes[..n]).is_err(), "prefix of {n} bytes");
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        let mut bytes = to_bytes(&sample(vec![2, 32], 0.5, 10)).unwrap();
+        bytes.push(0);
+        assert!(from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn payload_roundtrip_both_kinds() {
+        let t = Tensor::random_sparse(vec![4, 96], 0.6, 11);
+        for p in [
+            Payload::Dense(t.clone()),
+            Payload::Compressed(encode(&t, &cfg(2))),
+        ] {
+            let bytes = payload_to_bytes(&p).unwrap();
+            let back = payload_from_bytes(&bytes).unwrap();
+            assert_eq!(back.is_compressed(), p.is_compressed());
+            assert_eq!(
+                back.into_dense(&EncoderConfig::default()),
+                t,
+                "kind {}",
+                p.is_compressed()
+            );
+        }
+    }
+
+    #[test]
+    fn error_frame_surfaces_as_err() {
+        let e = payload_from_bytes(&error_frame("stage 3 exploded")).unwrap_err();
+        assert!(format!("{e:#}").contains("stage 3 exploded"));
+    }
+
+    #[test]
+    fn payload_frame_rejects_wrong_magic_and_kind() {
+        let t = Tensor::zeros(vec![1, 16]);
+        let mut bytes = payload_to_bytes(&Payload::Dense(t)).unwrap();
+        let good = bytes.clone();
+        bytes[0] = b'X';
+        assert!(payload_from_bytes(&bytes).is_err());
+        let mut skew = good.clone();
+        skew[10] = 99; // unknown kind
+        assert!(payload_from_bytes(&skew).is_err());
+        // total-length prefix must match the buffer exactly
+        let mut long = good.clone();
+        long.push(0);
+        assert!(payload_from_bytes(&long).is_err());
+        assert!(payload_from_bytes(&good).is_ok());
+    }
+}

@@ -20,7 +20,7 @@
 //! reproduces Fig. 11's BRAM accounting and the 1-cycle load / 4-cycle
 //! encode vs 64-cycle serial CSC comparison.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 /// Elements per bank (the paper's encoding grain).
 pub const BANK_WIDTH: usize = 16;
@@ -268,6 +268,89 @@ pub fn encode_vector(values: &[f32]) -> Result<(Vec<EncodedBank>, u64)> {
     Ok((banks, cycles))
 }
 
+/// Wire-format v1 magic -- duplicated from the runtime implementation
+/// (`crate::rfc::wire`) on purpose: this mirror re-implements the
+/// normative spec (`docs/wire-format.md`) independently, so the
+/// equivalence test in `tests/rfc_equivalence.rs` catches either side
+/// drifting from the format.
+pub const WIRE_MAGIC: [u8; 4] = *b"RFCW";
+/// Wire-format version this mirror emits.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Serialize a dense tensor into the v1 wire byte stream through the
+/// bit-exact sim encoder ([`encode_vector`]), bank by bank.  Unaligned
+/// rows are zero-padded to the bank grid before encoding (padding lanes
+/// are never hot), mirroring the runtime tail-bank rule.  The output
+/// must be byte-identical to `rfc::wire::to_bytes` of the runtime
+/// encoding of the same tensor, for every encoder shard count.
+pub fn wire_bytes(shape: &[usize], data: &[f32]) -> Result<Vec<u8>> {
+    // the same bounds the runtime writer enforces (8 is the wire MAX_RANK,
+    // restated here rather than imported to keep the mirror independent)
+    ensure!(shape.len() <= 8, "rank {} exceeds wire max 8", shape.len());
+    for &d in shape {
+        ensure!(d as u64 <= u32::MAX as u64, "dim {d} exceeds u32");
+    }
+    let (rows, row_len) = match shape.len() {
+        0 => (1usize, 1usize),
+        1 => (1, shape[0]),
+        _ => (shape[0], shape[1..].iter().product()),
+    };
+    ensure!(
+        rows * row_len == data.len(),
+        "shape {shape:?} wants {} elements, got {}",
+        rows * row_len,
+        data.len()
+    );
+    let row_banks = row_len.div_ceil(BANK_WIDTH);
+    let mut banks: Vec<EncodedBank> = Vec::with_capacity(rows * row_banks);
+    let mut row_offsets = Vec::with_capacity(rows + 1);
+    let mut nnz = 0usize;
+    row_offsets.push(0u32);
+    for r in 0..rows {
+        let mut padded = data[r * row_len..(r + 1) * row_len].to_vec();
+        padded.resize(row_banks * BANK_WIDTH, 0.0);
+        let (encoded, _cycles) = encode_vector(&padded)?;
+        nnz += encoded.iter().map(|b| b.packed.len()).sum::<usize>();
+        banks.extend(encoded);
+        row_offsets.push(nnz as u32);
+    }
+    // header: magic | version | rank | total_len | dims | row_banks |
+    // bank_count | packed_len, then hots, mbhots, row_offsets, packed
+    let total =
+        12 + 4 * shape.len() + 12 + banks.len() * 3 + (rows + 1) * 4 + nnz * 4;
+    ensure!(
+        total as u64 <= u32::MAX as u64,
+        "frame length {total} exceeds u32"
+    );
+    let mut w = Vec::with_capacity(total);
+    w.extend_from_slice(&WIRE_MAGIC);
+    w.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    w.extend_from_slice(&(shape.len() as u16).to_le_bytes());
+    w.extend_from_slice(&(total as u32).to_le_bytes());
+    for &d in shape {
+        w.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    w.extend_from_slice(&(row_banks as u32).to_le_bytes());
+    w.extend_from_slice(&((rows * row_banks) as u32).to_le_bytes());
+    w.extend_from_slice(&(nnz as u32).to_le_bytes());
+    for b in &banks {
+        w.extend_from_slice(&b.hot.to_le_bytes());
+    }
+    for b in &banks {
+        w.push(b.mbhot);
+    }
+    for &o in &row_offsets {
+        w.extend_from_slice(&o.to_le_bytes());
+    }
+    for b in &banks {
+        for &v in &b.packed {
+            w.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    debug_assert_eq!(w.len(), total);
+    Ok(w)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -442,6 +525,24 @@ mod tests {
             (0.25..0.45).contains(&saving),
             "saving {saving}"
         );
+    }
+
+    #[test]
+    fn wire_bytes_layout_sanity() {
+        // 2 rows of 20 elements: 2 banks per row, tail bank padded
+        let mut data = vec![0f32; 40];
+        data[0] = 1.0; // row 0, bank 0
+        data[17] = 2.0; // row 0, bank 1 (live lane 1)
+        data[20] = 3.0; // row 1, bank 0
+        let w = wire_bytes(&[2, 20], &data).unwrap();
+        assert_eq!(&w[..4], &WIRE_MAGIC);
+        assert_eq!(u16::from_le_bytes([w[4], w[5]]), WIRE_VERSION);
+        assert_eq!(u16::from_le_bytes([w[6], w[7]]), 2); // rank
+        // header 32 + 4 banks * 3 + 3 row offsets * 4 + 3 values * 4
+        assert_eq!(w.len(), 32 + 12 + 12 + 12);
+        assert_eq!(u32::from_le_bytes([w[8], w[9], w[10], w[11]]), w.len() as u32);
+        // bad element count is rejected
+        assert!(wire_bytes(&[2, 20], &data[..39]).is_err());
     }
 
     #[test]

@@ -1,16 +1,25 @@
 //! Coordinator end-to-end: submit clips, get classified responses, with
-//! batching and latency accounting intact.
+//! batching and latency accounting intact -- on the in-process stage
+//! pipeline and on multi-node loopback shard clusters.
 //!
-//! Quarantine note: these tests need the AOT artifacts, so they are
+//! Quarantine note: the tests that need the AOT artifacts are
 //! `#[ignore]`d unless the `aot-artifacts` feature is on (tracking: the
-//! gates go away once artifact export runs in CI).
+//! gates go away once artifact export runs in CI).  The shard-cluster
+//! stream tests run a synthetic row-local model and need no artifacts.
 
-use std::time::Duration;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use rfc_hypgcn::coordinator::{BatchPolicy, Server};
+use rfc_hypgcn::coordinator::{
+    BatchPolicy, Batcher, Metrics, Request, Response, Server, ShardCluster,
+    ShardFn,
+};
 use rfc_hypgcn::data::{GenConfig, SkeletonGen};
 use rfc_hypgcn::meta::Manifest;
-use rfc_hypgcn::runtime::Engine;
+use rfc_hypgcn::model::NUM_JOINTS;
+use rfc_hypgcn::rfc::EncoderConfig;
+use rfc_hypgcn::runtime::{Engine, Tensor};
 
 fn setup() -> Option<(Manifest, Engine)> {
     let dir = Manifest::default_dir();
@@ -19,6 +28,149 @@ fn setup() -> Option<(Manifest, Engine)> {
         return None;
     }
     Some((Manifest::load(&dir).unwrap(), Engine::cpu().unwrap()))
+}
+
+/// Deterministic row-local synthetic classifier (stands in for the full
+/// stage chain; row-locality is the same contract the real pipeline has
+/// on the batch axis): logits[r][c] = sum_i row[i] * ((i + c) % 7).
+fn synth_model(classes: usize) -> ShardFn {
+    Arc::new(move |t: Tensor| {
+        anyhow::ensure!(t.shape.len() >= 2, "need a batch axis");
+        let rows = t.shape[0];
+        let row: usize = t.shape[1..].iter().product();
+        let mut out = vec![0f32; rows * classes];
+        for r in 0..rows {
+            let src = &t.data[r * row..(r + 1) * row];
+            for (c, slot) in
+                out[r * classes..(r + 1) * classes].iter_mut().enumerate()
+            {
+                *slot = src
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &v)| v * (((i + c) % 7) as f32))
+                    .sum();
+            }
+        }
+        Tensor::new(vec![rows, classes], out)
+    })
+}
+
+#[test]
+fn loopback_cluster_serves_stream_identical_to_single_node() {
+    // a stream of sparse skeleton clips through the real batcher, served
+    // by 2- and 4-shard loopback clusters: responses must be identical
+    // to the single-node path (the model applied to each clip directly),
+    // and Metrics must report per-node transport savings.
+    const CLASSES: usize = 10;
+    let seq_len = 8;
+    let row = 3 * seq_len * NUM_JOINTS;
+    let policy = BatchPolicy {
+        batch_size: 4,
+        max_wait: Duration::from_millis(1),
+        seq_len,
+    };
+    let enc = EncoderConfig {
+        shards: 1,
+        min_sparsity: 0.10,
+        parallel_threshold: usize::MAX,
+    };
+    let model = synth_model(CLASSES);
+    let clips: Vec<Vec<f32>> = (0..13)
+        .map(|i| Tensor::random_sparse(vec![row], 0.7, 4000 + i).data)
+        .collect();
+    // the single-node path: the model applied to each clip on its own
+    let expected: Vec<Vec<f32>> = clips
+        .iter()
+        .map(|c| {
+            let t =
+                Tensor::new(vec![1, 3, seq_len, NUM_JOINTS], c.clone()).unwrap();
+            model(t).unwrap().data
+        })
+        .collect();
+
+    for nodes in [2usize, 4] {
+        let metrics = Metrics::default();
+        let mut cluster =
+            ShardCluster::loopback(nodes, model.clone(), enc);
+        let mut rxs = Vec::new();
+        let mut pending: Vec<Request> = clips
+            .iter()
+            .enumerate()
+            .map(|(i, clip)| {
+                let (tx, rx) = channel::<Response>();
+                rxs.push(rx);
+                Request {
+                    id: i as u64,
+                    clip: clip.clone(),
+                    seq_len,
+                    arrived: Instant::now(),
+                    reply: tx,
+                }
+            })
+            .collect();
+        // drain the stream in batcher-formed batches (the last one is
+        // 1 real row + 3 padding rows), exactly like the sharded server
+        while !pending.is_empty() {
+            let take = pending.len().min(policy.batch_size);
+            let reqs: Vec<Request> = pending.drain(..take).collect();
+            let mut batch = Batcher::form_from(&policy, reqs).unwrap();
+            metrics.record_batch(batch.real, batch.input.shape()[0]);
+            let payload = batch.input.take();
+            let logits = cluster.infer(&payload, Some(&metrics)).unwrap();
+            assert_eq!(logits.shape, vec![policy.batch_size, CLASSES]);
+            for (i, req) in batch.requests.into_iter().enumerate() {
+                let rowv =
+                    logits.data[i * CLASSES..(i + 1) * CLASSES].to_vec();
+                let resp = Response::from_logits(req.id, rowv, req.arrived);
+                metrics.record_response(resp.latency_s);
+                req.reply.send(resp).unwrap();
+            }
+        }
+        cluster.shutdown();
+        for (i, rx) in rxs.iter().enumerate() {
+            let resp = rx.try_recv().expect("response delivered");
+            assert_eq!(resp.id, i as u64, "{nodes} nodes");
+            assert_eq!(
+                resp.logits, expected[i],
+                "{nodes} nodes: clip {i} diverged from single-node"
+            );
+        }
+        // every node that saw work must report transport savings: the
+        // 70%-sparse shards ship far below their dense byte cost
+        let per_node = metrics.node_transport();
+        assert_eq!(per_node.len(), nodes, "{nodes} nodes all saw work");
+        for (n, t) in per_node.iter().enumerate() {
+            assert!(t.shards > 0, "{nodes} nodes: node {n} idle");
+            assert!(
+                metrics.node_transport_saving(n) > 0.1,
+                "{nodes} nodes: node {n} saving {}",
+                metrics.node_transport_saving(n)
+            );
+        }
+        assert!(metrics.report().contains("node_save=["));
+    }
+}
+
+#[test]
+fn cluster_output_independent_of_node_count() {
+    // 1-, 2-, 3- and 4-node clusters agree bit-for-bit on a batch that
+    // does not divide evenly
+    let t = Tensor::random_sparse(vec![6, 3, 8, 25], 0.5, 4100);
+    let enc = EncoderConfig {
+        shards: 1,
+        min_sparsity: 0.0,
+        parallel_threshold: usize::MAX,
+    };
+    let model = synth_model(7);
+    let reference = model(t.clone()).unwrap();
+    for nodes in [1usize, 2, 3, 4] {
+        let mut cluster = ShardCluster::loopback(nodes, model.clone(), enc);
+        let out = cluster
+            .infer(&rfc_hypgcn::rfc::Payload::Dense(t.clone()), None)
+            .unwrap();
+        assert_eq!(out, reference, "{nodes} nodes");
+        cluster.shutdown();
+    }
 }
 
 #[test]
@@ -106,6 +258,56 @@ fn distinct_requests_get_distinct_ids_and_logits_rows() {
     assert_ne!(ra.id, rb.id);
     assert_ne!(ra.logits, rb.logits, "distinct clips, distinct logits");
     server.shutdown();
+}
+
+#[test]
+#[cfg_attr(
+    not(feature = "aot-artifacts"),
+    ignore = "needs AOT artifacts (make artifacts); run with --features aot-artifacts"
+)]
+fn sharded_server_matches_single_node_server() {
+    let Some((m, engine)) = setup() else { return };
+    let policy = BatchPolicy {
+        batch_size: m.batch,
+        max_wait: Duration::from_millis(50),
+        seq_len: m.seq_len,
+    };
+    let single = Server::start(&engine, &m, policy.clone()).unwrap();
+    let sharded = Server::start_sharded(
+        &engine,
+        &m,
+        policy,
+        EncoderConfig::default(),
+        4,
+    )
+    .unwrap();
+    let mut gen = SkeletonGen::new(
+        GenConfig {
+            num_classes: m.num_classes,
+            seq_len: m.seq_len,
+            noise: 0.02,
+        },
+        4,
+    );
+    // exactly one full batch each, so batch composition is identical
+    let clips: Vec<Vec<f32>> = (0..m.batch).map(|_| gen.sample().0).collect();
+    let a: Vec<_> = clips.iter().map(|c| single.submit(c.clone())).collect();
+    let b: Vec<_> = clips.iter().map(|c| sharded.submit(c.clone())).collect();
+    for (i, (ra, rb)) in a.into_iter().zip(b).enumerate() {
+        let ra = ra.recv_timeout(Duration::from_secs(120)).unwrap();
+        let rb = rb.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert_eq!(
+            ra.logits, rb.logits,
+            "clip {i}: sharded serving diverged from single-node"
+        );
+        assert_eq!(ra.predicted, rb.predicted);
+    }
+    // the sharded path recorded per-node wire traffic
+    let nodes = sharded.metrics.node_transport();
+    assert!(!nodes.is_empty());
+    assert!(nodes.iter().any(|n| n.shards > 0));
+    single.shutdown();
+    sharded.shutdown();
 }
 
 #[test]

@@ -216,6 +216,139 @@ fn prop_batch_padding_rows_zero() {
 }
 
 #[test]
+fn prop_wire_roundtrip_bit_exact() {
+    // arbitrary sparsity/shape tensors round-trip through
+    // to_bytes/from_bytes bit-exactly, for any encoder shard count
+    use rfc_hypgcn::rfc::{self, wire, EncoderConfig};
+    let mut rng = Rng::new(9);
+    for case in 0..60 {
+        let rows = 1 + rng.below(8);
+        let cols = 1 + rng.below(120);
+        let shape = if case % 3 == 0 {
+            vec![rows, 4, cols.div_ceil(4)]
+        } else {
+            vec![rows, cols]
+        };
+        let t = Tensor::random_sparse(shape, rng.f64(), rng.next_u64());
+        let cfg = EncoderConfig {
+            shards: 1 + rng.below(5),
+            min_sparsity: 0.0,
+            parallel_threshold: 0,
+        };
+        let ct = rfc::encode(&t, &cfg);
+        let bytes = wire::to_bytes(&ct).unwrap();
+        let back = wire::from_bytes(&bytes).unwrap();
+        let dense = back.to_tensor();
+        assert_eq!(dense.shape, t.shape, "case {case}");
+        for (x, y) in dense.data.iter().zip(&t.data) {
+            assert_eq!(x.to_bits(), y.to_bits(), "case {case}");
+        }
+        // decoded tensors re-serialize to the identical stream
+        assert_eq!(wire::to_bytes(&back).unwrap(), bytes, "case {case}");
+    }
+}
+
+/// Little-endian field reads for the stitch helper below.
+fn rd_u16(b: &[u8], at: usize) -> usize {
+    u16::from_le_bytes([b[at], b[at + 1]]) as usize
+}
+
+fn rd_u32(b: &[u8], at: usize) -> usize {
+    u32::from_le_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]]) as usize
+}
+
+/// Reassemble a whole-batch wire frame from per-part frames by the
+/// header rules: dims[0] and the count fields sum, hot/mbhot/packed
+/// sections concatenate, row offsets rebase by the running packed count.
+fn stitch_wire(parts: &[Vec<u8>]) -> Vec<u8> {
+    let rank = rd_u16(&parts[0], 6);
+    let hdr = 24 + 4 * rank;
+    let mut rows = 0usize;
+    let mut banks = 0usize;
+    let mut packed = 0usize;
+    for p in parts {
+        rows += rd_u32(p, 12);
+        banks += rd_u32(p, 16 + 4 * rank);
+        packed += rd_u32(p, 20 + 4 * rank);
+    }
+    let total = hdr + banks * 3 + (rows + 1) * 4 + packed * 4;
+    let mut w = Vec::with_capacity(total);
+    w.extend_from_slice(&parts[0][..6]); // magic + version
+    w.extend_from_slice(&(rank as u16).to_le_bytes());
+    w.extend_from_slice(&(total as u32).to_le_bytes());
+    w.extend_from_slice(&(rows as u32).to_le_bytes());
+    w.extend_from_slice(&parts[0][16..12 + 4 * rank]); // tail dims
+    w.extend_from_slice(&parts[0][12 + 4 * rank..16 + 4 * rank]); // row_banks
+    w.extend_from_slice(&(banks as u32).to_le_bytes());
+    w.extend_from_slice(&(packed as u32).to_le_bytes());
+    for p in parts {
+        let b = rd_u32(p, 16 + 4 * rank);
+        w.extend_from_slice(&p[hdr..hdr + 2 * b]); // hots
+    }
+    for p in parts {
+        let b = rd_u32(p, 16 + 4 * rank);
+        w.extend_from_slice(&p[hdr + 2 * b..hdr + 3 * b]); // mbhots
+    }
+    w.extend_from_slice(&0u32.to_le_bytes());
+    let mut base = 0usize;
+    for p in parts {
+        let r = rd_u32(p, 12);
+        let b = rd_u32(p, 16 + 4 * rank);
+        let offs = hdr + 3 * b;
+        for i in 1..=r {
+            let o = rd_u32(p, offs + 4 * i) + base;
+            w.extend_from_slice(&(o as u32).to_le_bytes());
+        }
+        base += rd_u32(p, 20 + 4 * rank);
+    }
+    for p in parts {
+        let r = rd_u32(p, 12);
+        let b = rd_u32(p, 16 + 4 * rank);
+        let pk = rd_u32(p, 20 + 4 * rank);
+        let at = hdr + 3 * b + 4 * (r + 1);
+        w.extend_from_slice(&p[at..at + 4 * pk]); // packed values
+    }
+    assert_eq!(w.len(), total);
+    w
+}
+
+#[test]
+fn prop_wire_concat_equals_stitched_segments() {
+    // concat_batch(parts).to_bytes() == concatenating the parts' wire
+    // segments under the header rules
+    use rfc_hypgcn::rfc::{self, wire, CompressedTensor, EncoderConfig};
+    let mut rng = Rng::new(10);
+    for case in 0..40 {
+        let cols = 1 + rng.below(80);
+        let n_parts = 1 + rng.below(4);
+        let cfg = EncoderConfig {
+            shards: 1 + rng.below(3),
+            min_sparsity: 0.0,
+            parallel_threshold: 0,
+        };
+        let mut parts = Vec::new();
+        let mut part_bytes = Vec::new();
+        for _ in 0..n_parts {
+            let rows = 1 + rng.below(5);
+            let t = Tensor::random_sparse(
+                vec![rows, cols],
+                rng.f64(),
+                rng.next_u64(),
+            );
+            let ct = rfc::encode(&t, &cfg);
+            part_bytes.push(wire::to_bytes(&ct).unwrap());
+            parts.push(ct);
+        }
+        let whole = CompressedTensor::concat_batch(parts).unwrap();
+        assert_eq!(
+            wire::to_bytes(&whole).unwrap(),
+            stitch_wire(&part_bytes),
+            "case {case}"
+        );
+    }
+}
+
+#[test]
 fn prop_runtime_compress_roundtrip_any_shard_count() {
     use rfc_hypgcn::rfc::{self, EncoderConfig};
     let mut rng = Rng::new(8);

@@ -156,6 +156,35 @@ fn payload_roundtrip_preserves_logits_semantics() {
 }
 
 #[test]
+fn wire_stream_identical_between_sim_and_runtime() {
+    // the serialized byte stream -- not just the decoded values -- must
+    // agree between the runtime writer (rfc::wire::to_bytes over the
+    // sharded CompressedTensor) and the sim mirror (sim::rfc::wire_bytes
+    // straight from the reference encoder), locking wire v1 against
+    // drift on either side
+    let mut rng = Rng::new(0xCAFE);
+    for case in 0..40u64 {
+        let rows = 1 + rng.below(6);
+        let cols = 1 + rng.below(100); // includes bank-unaligned rows
+        let t = sparse_tensor(vec![rows, cols], rng.f64(), 3000 + case);
+        let shards = 1 + (case as usize % 5);
+        let ct = rfc::encode(&t, &cfg(shards));
+        let runtime = rfc::wire::to_bytes(&ct).unwrap();
+        let sim = sim_rfc::wire_bytes(&t.shape, &t.data).unwrap();
+        assert_eq!(runtime, sim, "case {case} shards {shards}");
+        // and the stream decodes back to the source, bit for bit
+        let back = rfc::wire::from_bytes(&runtime).unwrap().to_tensor();
+        for (x, y) in back.data.iter().zip(&t.data) {
+            assert_eq!(x.to_bits(), y.to_bits(), "case {case}");
+        }
+    }
+    // a rank-3 mid-pipeline activation shape serializes identically too
+    let t = sparse_tensor(vec![4, 16, 25], 0.55, 777);
+    let runtime = rfc::wire::to_bytes(&rfc::encode(&t, &cfg(3))).unwrap();
+    assert_eq!(runtime, sim_rfc::wire_bytes(&t.shape, &t.data).unwrap());
+}
+
+#[test]
 fn compression_ratio_tracks_sim_cost_model_accounting() {
     // per-bank wire cost must match the sim model's accounting:
     // 16 bits per packed value + (16 + 4) sidecar bits per bank
