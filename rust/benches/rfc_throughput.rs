@@ -1,14 +1,21 @@
-//! Bench: runtime RFC codec throughput and compression ratio vs dense
-//! transport (runs without AOT artifacts).
+//! Bench: runtime RFC codec, wire, batching and compressed-domain
+//! kernel throughput vs their dense baselines (runs without AOT
+//! artifacts).
 //!
-//! For a mid-pipeline activation shape, sweeps post-ReLU sparsity and
-//! reports (a) the wire-size ratio of compressed vs dense transport,
-//! (b) encode throughput serial and sharded, (c) decode throughput, and
-//! (d) the dense memcpy baseline the pipeline would otherwise pay per
-//! stage boundary.
+//! Sections (run all, or one via `-- --section <codec|wire|batch|kernel>`):
+//!
+//! * `codec`  -- encode/decode throughput and wire-size ratio vs dense
+//!   transport plus the memcpy baseline;
+//! * `wire`   -- wire format v1 serialize/deserialize cost;
+//! * `batch`  -- padded-batch transport ratios;
+//! * `kernel` -- dense GEMM vs decode+dense GEMM vs compressed-domain
+//!   (input-skipping) GEMM across sparsities.  Also emits the
+//!   machine-readable `BENCH_rfc.json` at the repo root so the perf
+//!   trajectory is recorded run over run (CI uploads it as an artifact).
 
 use std::time::Instant;
 
+use rfc_hypgcn::rfc::kernel::{gemm_dense_f32, spmm_f32, GemmF32, KernelConfig};
 use rfc_hypgcn::rfc::{self, EncoderConfig};
 use rfc_hypgcn::runtime::Tensor;
 use rfc_hypgcn::util::stats::Summary;
@@ -33,20 +40,28 @@ fn mbps(bytes: usize, s: &Summary) -> f64 {
     bytes as f64 / s.mean_s / 1e6
 }
 
-fn main() {
-    // (N, T, V, C): one batch of mid-pipeline activations
-    let shape = vec![8usize, 64, 25, 64];
-    let bytes: usize = shape.iter().product::<usize>() * 4;
-    let serial = EncoderConfig {
+fn serial_cfg() -> EncoderConfig {
+    EncoderConfig {
         shards: 1,
         min_sparsity: 0.0,
         parallel_threshold: usize::MAX,
-    };
-    let sharded = EncoderConfig {
+    }
+}
+
+fn sharded_cfg() -> EncoderConfig {
+    EncoderConfig {
         min_sparsity: 0.0,
         parallel_threshold: 0,
         ..EncoderConfig::default()
-    };
+    }
+}
+
+fn codec_section() {
+    // (N, T, V, C): one batch of mid-pipeline activations
+    let shape = vec![8usize, 64, 25, 64];
+    let bytes: usize = shape.iter().product::<usize>() * 4;
+    let serial = serial_cfg();
+    let sharded = sharded_cfg();
     let iters = 12;
 
     println!(
@@ -91,10 +106,17 @@ fn main() {
             mbps(bytes, &copy),
         );
     }
+}
+
+fn wire_section() {
+    let shape = vec![8usize, 64, 25, 64];
+    let bytes: usize = shape.iter().product::<usize>() * 4;
+    let serial = serial_cfg();
+    let iters = 12;
 
     // wire codec v1: serialize/deserialize cost of shipping the same
     // activations across a process boundary (shard links)
-    println!("\nwire codec v1 (same shape):");
+    println!("\nwire codec v1 (shape {shape:?}):");
     println!(
         "{:>8}  {:>10}  {:>12}  {:>12}",
         "sparsity", "frame MB", "ser MB/s", "deser MB/s"
@@ -122,7 +144,10 @@ fn main() {
             mbps(bytes, &deser),
         );
     }
+}
 
+fn batch_section() {
+    let serial = serial_cfg();
     // batcher view: padded batches are where compression always wins
     println!("\npadded-batch transport (batch 8, 1..8 real rows):");
     let row = sparse_tensor(vec![1, 3, 64, 25], 0.0, 7);
@@ -145,5 +170,141 @@ fn main() {
             batch.dense_bits(),
             batch.compressed_bits()
         );
+    }
+}
+
+/// One kernel-section measurement row (also serialized to BENCH_rfc.json).
+struct KernelRow {
+    sparsity: f64,
+    dense_s: f64,
+    decode_dense_s: f64,
+    spmm_serial_s: f64,
+    spmm_pooled_s: f64,
+    skip_fraction: f64,
+}
+
+fn kernel_section() {
+    // GEMM over one batch of flattened stage activations:
+    // X[m, k] . W[k, n], k bank-aligned (the per-joint feature transform)
+    let (m, k, n) = (512usize, 256usize, 64usize);
+    let serial = serial_cfg();
+    let pooled = KernelConfig {
+        rows_per_job: 8,
+        par_threshold_macs: 0,
+        ..KernelConfig::default()
+    };
+    let iters = 10;
+    let w: Vec<f32> = {
+        let mut rng = rfc_hypgcn::util::rng::Rng::new(0xBE7C);
+        (0..k * n).map(|_| rng.f32() * 2.0 - 1.0).collect()
+    };
+    let gemm = GemmF32::new(w, k, n).unwrap();
+
+    println!(
+        "\ncompressed-domain kernel -- X[{m}, {k}] . W[{k}, {n}], {} workers pooled",
+        pooled.workers
+    );
+    println!(
+        "{:>8}  {:>10}  {:>12}  {:>11}  {:>11}  {:>8}",
+        "sparsity", "dense ms", "dec+dense ms", "spmm(1) ms", "spmm(N) ms", "speedup"
+    );
+    let mut rows = Vec::new();
+    for s10 in [50u64, 70, 90] {
+        let sparsity = s10 as f64 / 100.0;
+        let t = sparse_tensor(vec![m, k], sparsity, 242 + s10);
+        let ct = rfc::encode(&t, &serial);
+        let (_, stats) = spmm_f32(&ct, &gemm, &KernelConfig::serial()).unwrap();
+
+        let dense = time_it(iters, || {
+            std::hint::black_box(gemm_dense_f32(&t.data, m, &gemm));
+        });
+        let decode_dense = time_it(iters, || {
+            let x = rfc::decode(&ct, &serial);
+            std::hint::black_box(gemm_dense_f32(&x.data, m, &gemm));
+        });
+        let spmm1 = time_it(iters, || {
+            std::hint::black_box(
+                spmm_f32(&ct, &gemm, &KernelConfig::serial()).unwrap(),
+            );
+        });
+        let spmmn = time_it(iters, || {
+            std::hint::black_box(spmm_f32(&ct, &gemm, &pooled).unwrap());
+        });
+        let best = spmm1.mean_s.min(spmmn.mean_s);
+        println!(
+            "{:>7.0}%  {:>10.3}  {:>12.3}  {:>11.3}  {:>11.3}  {:>7.2}x",
+            sparsity * 100.0,
+            dense.mean_s * 1e3,
+            decode_dense.mean_s * 1e3,
+            spmm1.mean_s * 1e3,
+            spmmn.mean_s * 1e3,
+            decode_dense.mean_s / best,
+        );
+        rows.push(KernelRow {
+            sparsity,
+            dense_s: dense.mean_s,
+            decode_dense_s: decode_dense.mean_s,
+            spmm_serial_s: spmm1.mean_s,
+            spmm_pooled_s: spmmn.mean_s,
+            skip_fraction: stats.skip_fraction(),
+        });
+    }
+    emit_json(m, k, n, &rows);
+}
+
+/// Write the kernel results to `BENCH_rfc.json` at the repo root so the
+/// perf trajectory is machine-readable across runs.
+fn emit_json(m: usize, k: usize, n: usize, rows: &[KernelRow]) {
+    let mut body = String::new();
+    body.push_str(&format!(
+        "{{\n  \"bench\": \"rfc_throughput\",\n  \"section\": \"kernel\",\n  \
+         \"m\": {m},\n  \"k\": {k},\n  \"n\": {n},\n  \"results\": [\n"
+    ));
+    for (i, r) in rows.iter().enumerate() {
+        let best = r.spmm_serial_s.min(r.spmm_pooled_s);
+        body.push_str(&format!(
+            "    {{\"sparsity\": {:.2}, \"dense_s\": {:.6e}, \
+             \"decode_dense_s\": {:.6e}, \"spmm_serial_s\": {:.6e}, \
+             \"spmm_pooled_s\": {:.6e}, \"speedup_vs_decode_dense\": {:.3}, \
+             \"skip_fraction\": {:.4}}}{}\n",
+            r.sparsity,
+            r.dense_s,
+            r.decode_dense_s,
+            r.spmm_serial_s,
+            r.spmm_pooled_s,
+            r.decode_dense_s / best,
+            r.skip_fraction,
+            if i + 1 == rows.len() { "" } else { "," },
+        ));
+    }
+    body.push_str("  ]\n}\n");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_rfc.json");
+    match std::fs::write(&path, body) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let section = args
+        .iter()
+        .position(|a| a == "--section")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let want = |name: &str| section.as_deref().map_or(true, |s| s == name);
+    if want("codec") {
+        codec_section();
+    }
+    if want("wire") {
+        wire_section();
+    }
+    if want("batch") {
+        batch_section();
+    }
+    if want("kernel") {
+        kernel_section();
     }
 }

@@ -4,6 +4,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::rfc::GateStats;
+use crate::runtime::StageEntry;
 use crate::util::stats::{percentile, Summary};
 
 /// Per-node wire-transport counters for the shard coordinator
@@ -51,6 +53,20 @@ pub struct Metrics {
     pub transport_bits: AtomicU64,
     /// bits dense transport of the same input batches would have shipped
     pub transport_dense_bits: AtomicU64,
+    /// payload compression-gate decisions (sampled pre-gate rejects,
+    /// discarded encodes, compressed ships)
+    pub gate: GateStats,
+    /// stage entries that consumed the compressed payload directly
+    /// through the compressed-domain kernel (no decode)
+    pub decodes_elided: AtomicU64,
+    /// stage entries that materialized a dense tensor on entry
+    pub decodes: AtomicU64,
+    /// nonzero input lanes the kernel multiplied
+    pub kernel_hot_lanes: AtomicU64,
+    /// zero input lanes the kernel skipped (dense-path MAC rows avoided)
+    pub kernel_skipped_lanes: AtomicU64,
+    /// kernel jobs that finished on a stealing worker
+    pub kernel_jobs_stolen: AtomicU64,
     /// per-node shard link traffic (indexed by node id)
     nodes: Mutex<Vec<NodeTransport>>,
     latencies_s: Mutex<Vec<f64>>,
@@ -66,6 +82,12 @@ impl Default for Metrics {
             padded_rows: AtomicU64::new(0),
             transport_bits: AtomicU64::new(0),
             transport_dense_bits: AtomicU64::new(0),
+            gate: GateStats::default(),
+            decodes_elided: AtomicU64::new(0),
+            decodes: AtomicU64::new(0),
+            kernel_hot_lanes: AtomicU64::new(0),
+            kernel_skipped_lanes: AtomicU64::new(0),
+            kernel_jobs_stolen: AtomicU64::new(0),
             nodes: Mutex::new(Vec::new()),
             latencies_s: Mutex::new(Vec::new()),
             started: Instant::now(),
@@ -100,6 +122,45 @@ impl Metrics {
             return 0.0;
         }
         1.0 - self.transport_bits.load(Ordering::Relaxed) as f64 / dense as f64
+    }
+
+    /// Record what one pipeline-stage entry did with its payload: a
+    /// decode elided by the compressed-domain kernel (plus that call's
+    /// input-skipping accounting), or a dense decode.
+    pub fn record_stage_entry(&self, entry: &StageEntry) {
+        if entry.decode_elided {
+            self.decodes_elided.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.decodes.fetch_add(1, Ordering::Relaxed);
+        }
+        if let Some(k) = entry.kernel {
+            self.kernel_hot_lanes.fetch_add(k.hot_lanes, Ordering::Relaxed);
+            self.kernel_skipped_lanes
+                .fetch_add(k.skipped_lanes, Ordering::Relaxed);
+            self.kernel_jobs_stolen
+                .fetch_add(k.stolen_jobs, Ordering::Relaxed);
+        }
+    }
+
+    /// Fraction of stage entries that never decoded their payload.
+    pub fn decode_elision_fraction(&self) -> f64 {
+        let elided = self.decodes_elided.load(Ordering::Relaxed);
+        let total = elided + self.decodes.load(Ordering::Relaxed);
+        if total == 0 {
+            return 0.0;
+        }
+        elided as f64 / total as f64
+    }
+
+    /// Fraction of logical input lanes the kernel skipped (the runtime
+    /// mirror of the paper's input-skipping MAC saving).
+    pub fn kernel_skip_fraction(&self) -> f64 {
+        let skipped = self.kernel_skipped_lanes.load(Ordering::Relaxed);
+        let total = skipped + self.kernel_hot_lanes.load(Ordering::Relaxed);
+        if total == 0 {
+            return 0.0;
+        }
+        skipped as f64 / total as f64
     }
 
     /// Record one shard frame shipped coordinator -> `node`.
@@ -187,6 +248,20 @@ impl Metrics {
             self.transport_saving() * 100.0,
             self.latency_summary(),
         );
+        if self.decodes_elided.load(Ordering::Relaxed)
+            + self.decodes.load(Ordering::Relaxed)
+            > 0
+        {
+            s.push_str(&format!(
+                " decode_elide={:.1}% mac_skip={:.1}%",
+                self.decode_elision_fraction() * 100.0,
+                self.kernel_skip_fraction() * 100.0,
+            ));
+        }
+        let pre = self.gate.pre_rejects.load(Ordering::Relaxed);
+        if pre > 0 {
+            s.push_str(&format!(" gate_pre_rejects={pre}"));
+        }
         let nodes = self.nodes.lock().unwrap();
         if !nodes.is_empty() {
             let saves: Vec<String> = nodes
@@ -234,6 +309,30 @@ mod tests {
         m.record_response(0.005);
         assert!(m.report().contains("responses=1"));
         assert!(!m.report().contains("node_save"));
+    }
+
+    #[test]
+    fn stage_entry_counters_track_elision_and_skipping() {
+        use crate::rfc::SpmmStats;
+        let m = Metrics::default();
+        assert_eq!(m.decode_elision_fraction(), 0.0);
+        assert_eq!(m.kernel_skip_fraction(), 0.0);
+        m.record_stage_entry(&StageEntry {
+            decode_elided: true,
+            kernel: Some(SpmmStats {
+                gemm_rows: 4,
+                hot_lanes: 30,
+                skipped_lanes: 70,
+                jobs: 4,
+                stolen_jobs: 1,
+            }),
+        });
+        m.record_stage_entry(&StageEntry::default());
+        assert!((m.decode_elision_fraction() - 0.5).abs() < 1e-12);
+        assert!((m.kernel_skip_fraction() - 0.7).abs() < 1e-12);
+        assert_eq!(m.kernel_jobs_stolen.load(Ordering::Relaxed), 1);
+        assert!(m.report().contains("decode_elide=50.0%"));
+        assert!(m.report().contains("mac_skip=70.0%"));
     }
 
     #[test]

@@ -26,4 +26,6 @@ pub use pipeline::{Pipeline, PipelineHandle};
 pub use request::{Batch, Request, Response};
 pub use router::{RouteInfo, Router, RouterConfig, Variant};
 pub use server::Server;
-pub use shard::{LoopbackLink, NodeLink, ShardCluster, ShardFn};
+pub use shard::{
+    dense_entry, LoopbackLink, NodeLink, PayloadShardFn, ShardCluster, ShardFn,
+};

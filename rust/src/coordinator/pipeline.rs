@@ -24,7 +24,9 @@ use anyhow::{Context, Result};
 
 use crate::meta::Manifest;
 use crate::rfc::{EncoderConfig, Payload};
-use crate::runtime::{Engine, Executable, Tensor};
+use crate::runtime::{Engine, Executable, StagePlan, Tensor};
+
+use super::metrics::Metrics;
 
 /// Compiled pipeline stages (10 blocks + head).
 pub struct Pipeline {
@@ -33,6 +35,11 @@ pub struct Pipeline {
     pub batch: usize,
     pub seq_len: usize,
     pub num_classes: usize,
+    /// Per-stage leading-GEMM plans (indexed like `stages`; the head is
+    /// never planned).  A planned stage consumes compressed payloads
+    /// through the compressed-domain kernel instead of decoding -- see
+    /// [`crate::runtime::StagePlan`] for the contract.
+    plans: Vec<Option<Arc<StagePlan>>>,
 }
 
 /// A unit of work travelling the pipeline with its provenance.
@@ -78,7 +85,31 @@ impl Pipeline {
             batch: manifest.batch,
             seq_len: manifest.seq_len,
             num_classes: manifest.num_classes,
+            plans: Vec::new(),
         })
+    }
+
+    /// Attach leading-GEMM plans, one slot per stage (missing / `None`
+    /// slots keep the decode path).
+    pub fn with_plans(mut self, plans: Vec<Option<StagePlan>>) -> Pipeline {
+        self.plans = plans.into_iter().map(|p| p.map(Arc::new)).collect();
+        self
+    }
+
+    /// Attach one stage's plan in place.
+    pub fn set_plan(&mut self, stage: usize, plan: StagePlan) {
+        if self.plans.len() <= stage {
+            self.plans.resize(stage + 1, None);
+        }
+        self.plans[stage] = Some(Arc::new(plan));
+    }
+
+    pub fn has_plans(&self) -> bool {
+        self.plans.iter().any(Option::is_some)
+    }
+
+    fn plan(&self, stage: usize) -> Option<Arc<StagePlan>> {
+        self.plans.get(stage).cloned().flatten()
     }
 
     /// Run one `(N, 3, T, V)` batch through all stages synchronously and
@@ -109,6 +140,65 @@ impl Pipeline {
     pub fn shard_fn(self: &Arc<Self>) -> super::shard::ShardFn {
         let pipeline = self.clone();
         Arc::new(move |t: Tensor| pipeline.run_sync(&t))
+    }
+
+    /// Payload-consuming variant of [`Pipeline::shard_fn`] for pipelines
+    /// with stage plans: the node's stage workers route compressed
+    /// payloads through the compressed-domain kernel
+    /// ([`Executable::run_payload_planned`]) instead of decoding on
+    /// every stage entry.  Stage-entry and gate decisions are recorded
+    /// into `metrics` when given.
+    pub fn payload_shard_fn(
+        self: &Arc<Self>,
+        enc: EncoderConfig,
+        metrics: Option<Arc<Metrics>>,
+    ) -> super::shard::PayloadShardFn {
+        let pipeline = self.clone();
+        Arc::new(move |p: Payload| {
+            pipeline.run_payload_sync(p, &enc, metrics.as_deref())
+        })
+    }
+
+    /// One transported batch through all stages synchronously, claiming
+    /// planned leading-GEMM stages in compressed form.  Stage 1 always
+    /// takes the dense entry (it owns the request-layout transpose);
+    /// between in-process stages the output is re-encoded only when the
+    /// *next* stage has a plan that could consume it -- an encode whose
+    /// only consumer is an immediate decode would be pure overhead.
+    pub fn run_payload_sync(
+        &self,
+        payload: Payload,
+        enc: &EncoderConfig,
+        metrics: Option<&Metrics>,
+    ) -> Result<Tensor> {
+        let first = self.stages.first().context("pipeline has no stages")?;
+        let x = nctv_to_ntvc(&payload.into_dense(enc))?;
+        let mut h = first.run1(&[x]).context("stage 1 failed")?;
+        for (j, stage) in self.stages.iter().enumerate().skip(1) {
+            h = match self.plan(j) {
+                // the shape-level claim check runs before the encode:
+                // a plan whose geometry can never line up must not cost
+                // an encode whose only consumer is an immediate decode
+                Some(plan) if plan.claims_dims(&h.shape) => {
+                    let p = Payload::from_tensor_metered(
+                        h,
+                        enc,
+                        metrics.map(|m| &m.gate),
+                    );
+                    let (out, entry) = stage
+                        .run_payload_planned(p, enc, Some(&plan))
+                        .with_context(|| format!("stage {} failed", j + 1))?;
+                    if let Some(m) = metrics {
+                        m.record_stage_entry(&entry);
+                    }
+                    out
+                }
+                _ => stage
+                    .run1(&[h])
+                    .with_context(|| format!("stage {} failed", j + 1))?,
+            };
+        }
+        self.head.run1(&[h]).context("head failed")
     }
 
     /// Per-stage wall times for one batch (profiling / Table V shape).
@@ -144,6 +234,19 @@ impl Pipeline {
         depth: usize,
         enc: EncoderConfig,
     ) -> PipelineHandle<Ctx> {
+        self.spawn_metered(depth, enc, None)
+    }
+
+    /// [`Pipeline::spawn_with`] recording stage-entry decisions (decode
+    /// elisions, kernel input-skipping, gate rejects) into `metrics` --
+    /// what [`super::Server`] passes so its report shows the kernel
+    /// counters live.
+    pub fn spawn_metered<Ctx: Send + 'static>(
+        self: &Arc<Self>,
+        depth: usize,
+        enc: EncoderConfig,
+        metrics: Option<Arc<Metrics>>,
+    ) -> PipelineHandle<Ctx> {
         let n_compute = self.stages.len() + 1; // blocks + head
         // channel j feeds compute stage j; stage j writes channel j+1.
         let mut txs: Vec<SyncSender<Job<Ctx>>> = Vec::new();
@@ -171,16 +274,30 @@ impl Pipeline {
             } else {
                 format!("stage {}", j + 1)
             };
+            let plan = if is_first || is_head {
+                None
+            } else {
+                self.plan(j)
+            };
+            let metrics = metrics.clone();
             threads.push(std::thread::spawn(move || {
                 for mut job in rx.iter() {
-                    // stage entry: lazy decode of the compressed transport
+                    // stage entry: planned stages consume the compressed
+                    // transport directly (input-skipping GEMM, decode
+                    // elided); everything else decodes lazily here
                     let payload = job.payload.take();
                     let result = if is_first {
                         // stage 1 also performs the layout transpose
                         nctv_to_ntvc(&payload.into_dense(&enc))
                             .and_then(|h| exe.run1(&[h]))
                     } else {
-                        exe.run_payload(payload, &enc)
+                        exe.run_payload_planned(payload, &enc, plan.as_deref())
+                            .map(|(h, entry)| {
+                                if let Some(m) = &metrics {
+                                    m.record_stage_entry(&entry);
+                                }
+                                h
+                            })
                     };
                     match result {
                         Ok(h) => {
@@ -189,7 +306,11 @@ impl Pipeline {
                             job.payload = if is_head {
                                 Payload::Dense(h)
                             } else {
-                                Payload::from_tensor(h, &enc)
+                                Payload::from_tensor_metered(
+                                    h,
+                                    &enc,
+                                    metrics.as_deref().map(|m| &m.gate),
+                                )
                             };
                             if tx.send(job).is_err() {
                                 break; // downstream gone

@@ -49,10 +49,24 @@ impl Server {
         policy: BatchPolicy,
         enc: EncoderConfig,
     ) -> Result<Server> {
-        let pipeline = Arc::new(Pipeline::load(engine, manifest)?);
+        Self::start_planned(engine, manifest, policy, enc, Vec::new())
+    }
+
+    /// [`Server::start_with`] with per-stage leading-GEMM plans: planned
+    /// stages consume compressed payloads through the compressed-domain
+    /// kernel (decode elided; see [`crate::runtime::StagePlan`]), and
+    /// the kernel / gate counters land in [`Server::metrics`].
+    pub fn start_planned(
+        engine: &Engine,
+        manifest: &Manifest,
+        policy: BatchPolicy,
+        enc: EncoderConfig,
+        plans: Vec<Option<crate::runtime::StagePlan>>,
+    ) -> Result<Server> {
+        let pipeline = Arc::new(Pipeline::load(engine, manifest)?.with_plans(plans));
         let metrics = Arc::new(Metrics::default());
         let (submit_tx, submit_rx) = channel::<Request>();
-        let handle = pipeline.spawn_with::<Batch>(2, enc);
+        let handle = pipeline.spawn_metered::<Batch>(2, enc, Some(metrics.clone()));
         let mut threads = Vec::new();
 
         // batcher thread: requests -> padded fixed-shape batches formed
@@ -136,10 +150,30 @@ impl Server {
         enc: EncoderConfig,
         nodes: usize,
     ) -> Result<Server> {
-        let pipeline = Arc::new(Pipeline::load(engine, manifest)?);
+        Self::start_sharded_planned(engine, manifest, policy, enc, nodes, Vec::new())
+    }
+
+    /// [`Server::start_sharded`] with per-stage leading-GEMM plans: the
+    /// node workers route through
+    /// [`Pipeline::payload_shard_fn`], so planned stages consume their
+    /// compressed shards without the node-boundary decode.
+    pub fn start_sharded_planned(
+        engine: &Engine,
+        manifest: &Manifest,
+        policy: BatchPolicy,
+        enc: EncoderConfig,
+        nodes: usize,
+        plans: Vec<Option<crate::runtime::StagePlan>>,
+    ) -> Result<Server> {
+        let pipeline = Arc::new(Pipeline::load(engine, manifest)?.with_plans(plans));
         let metrics = Arc::new(Metrics::default());
         let (submit_tx, submit_rx) = channel::<Request>();
-        let mut cluster = ShardCluster::loopback(nodes, pipeline.shard_fn(), enc);
+        let compute = if pipeline.has_plans() {
+            pipeline.payload_shard_fn(enc, Some(metrics.clone()))
+        } else {
+            super::shard::dense_entry(pipeline.shard_fn(), enc)
+        };
+        let mut cluster = ShardCluster::loopback_payload(nodes, compute, enc);
         let num_classes = manifest.num_classes;
         let mut threads = Vec::new();
 

@@ -76,13 +76,28 @@ pub fn loopback_pair() -> (LoopbackLink, LoopbackLink) {
 /// models.
 pub type ShardFn = Arc<dyn Fn(Tensor) -> Result<Tensor> + Send + Sync>;
 
+/// Payload-consuming worker compute: the shard arrives still in its
+/// transported form, so a pipeline with stage plans can feed the
+/// compressed banks straight into the compressed-domain kernel
+/// ([`super::pipeline::Pipeline::payload_shard_fn`]) instead of paying a
+/// decode at the node boundary.
+pub type PayloadShardFn = Arc<dyn Fn(Payload) -> Result<Tensor> + Send + Sync>;
+
+/// Adapt a dense-entry [`ShardFn`] to the payload-consuming worker
+/// interface: the payload is decoded lazily at the node, exactly the
+/// pre-plan behavior.
+pub fn dense_entry(compute: ShardFn, enc: EncoderConfig) -> PayloadShardFn {
+    Arc::new(move |p: Payload| compute(p.into_dense(&enc)))
+}
+
 /// Spawn a worker thread servicing `link` until the coordinator hangs
-/// up.  Each frame is decoded (lazily, through the payload gate), run
-/// through `compute`, and the result re-gated and framed for the reply;
-/// failures reply with an error frame instead of killing the node.
+/// up.  Each frame's payload is handed to `compute` in transported form
+/// (dense-entry models decode via [`dense_entry`]), and the result is
+/// re-gated and framed for the reply; failures reply with an error frame
+/// instead of killing the node.
 pub fn spawn_worker(
     mut link: LoopbackLink,
-    compute: ShardFn,
+    compute: PayloadShardFn,
     enc: EncoderConfig,
     label: String,
 ) -> JoinHandle<()> {
@@ -99,9 +114,9 @@ pub fn spawn_worker(
     })
 }
 
-fn run_frame(frame: &[u8], compute: &ShardFn, enc: &EncoderConfig) -> Result<Vec<u8>> {
+fn run_frame(frame: &[u8], compute: &PayloadShardFn, enc: &EncoderConfig) -> Result<Vec<u8>> {
     let payload = wire::payload_from_bytes(frame)?;
-    let out = compute(payload.into_dense(enc))?;
+    let out = compute(payload)?;
     wire::payload_to_bytes(&Payload::from_tensor(out, enc))
 }
 
@@ -146,9 +161,20 @@ pub struct ShardCluster {
 }
 
 impl ShardCluster {
-    /// Spawn `nodes` loopback workers, all running `compute` on their
-    /// row shards.
+    /// Spawn `nodes` loopback workers, all running the dense-entry
+    /// `compute` on their row shards (shards decode at the node).
     pub fn loopback(nodes: usize, compute: ShardFn, enc: EncoderConfig) -> ShardCluster {
+        Self::loopback_payload(nodes, dense_entry(compute, enc), enc)
+    }
+
+    /// Spawn `nodes` loopback workers running a payload-consuming
+    /// compute -- the entry point for planned pipelines whose stage
+    /// workers claim compressed shards without decoding.
+    pub fn loopback_payload(
+        nodes: usize,
+        compute: PayloadShardFn,
+        enc: EncoderConfig,
+    ) -> ShardCluster {
         let mut links: Vec<Box<dyn NodeLink>> = Vec::new();
         let mut workers = Vec::new();
         for i in 0..nodes.max(1) {
@@ -371,6 +397,49 @@ mod tests {
         cluster.shutdown();
         let nodes = m.node_transport();
         assert_eq!(nodes.len(), 2, "only the first two nodes saw work");
+    }
+
+    #[test]
+    fn payload_workers_consume_compressed_shards_without_decode() {
+        use crate::rfc::kernel::{self, GemmF32, KernelConfig};
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let (k, n) = (64usize, 6usize);
+        let w: Vec<f32> = (0..k * n).map(|i| ((i % 13) as f32 - 6.0) / 8.0).collect();
+        let gemm = Arc::new(GemmF32::new(w, k, n).unwrap());
+        let elided = Arc::new(AtomicU64::new(0));
+        // a worker compute that never decodes a compressed shard: the
+        // banks go straight through the compressed-domain kernel
+        let compute: PayloadShardFn = {
+            let gemm = gemm.clone();
+            let elided = elided.clone();
+            Arc::new(move |p: Payload| match p {
+                Payload::Compressed(ct) => {
+                    elided.fetch_add(1, Ordering::Relaxed);
+                    let (y, _) =
+                        kernel::spmm_f32(&ct, &gemm, &KernelConfig::serial())?;
+                    Ok(y)
+                }
+                Payload::Dense(t) => {
+                    let m = t.shape[0];
+                    let out = kernel::gemm_dense_f32(&t.data, m, &gemm);
+                    Tensor::new(vec![m, n], out)
+                }
+            })
+        };
+        let t = Tensor::random_sparse(vec![8, k], 0.8, 51);
+        let e = enc();
+        let p = Payload::from_tensor(t.clone(), &e);
+        assert!(p.is_compressed());
+        let mut cluster = ShardCluster::loopback_payload(2, compute, e);
+        let out = cluster.infer(&p, None).unwrap();
+        cluster.shutdown();
+        assert_eq!(out.shape, vec![8, n]);
+        assert_eq!(out.data, kernel::gemm_dense_f32(&t.data, 8, &gemm));
+        assert_eq!(
+            elided.load(Ordering::Relaxed),
+            2,
+            "both shards arrived compressed and skipped the decode"
+        );
     }
 
     #[test]

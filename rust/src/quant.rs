@@ -24,6 +24,15 @@ pub fn dequantize_slice(qs: &[i16]) -> Vec<f32> {
     qs.iter().copied().map(dequantize).collect()
 }
 
+/// int32 accumulator -> Q8.8 output: arithmetic shift then int16
+/// saturation.  The single definition of the requantization rule, shared
+/// by [`quant_matmul_ref`] and the compressed-domain kernel
+/// (`crate::rfc::kernel::spmm_q88`) so the two stay bit-identical by
+/// construction.
+pub fn requantize(acc: i32) -> i16 {
+    (acc >> FRAC_BITS).clamp(-32768, 32767) as i16
+}
+
 /// Reference Q8.8 matmul semantics (int32 accumulate, arithmetic shift,
 /// saturate) -- must agree with the AOT `quant_demo` kernel bit-for-bit.
 pub fn quant_matmul_ref(
@@ -41,8 +50,7 @@ pub fn quant_matmul_ref(
                 acc = acc
                     .wrapping_add(xq[i * k + l] as i32 * wq[l * n + j] as i32);
             }
-            out[i * n + j] =
-                (acc >> FRAC_BITS).clamp(-32768, 32767) as i16;
+            out[i * n + j] = requantize(acc);
         }
     }
     out

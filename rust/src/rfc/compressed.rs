@@ -110,6 +110,46 @@ impl BankSegment {
         }
     }
 
+    /// Rows covered by this segment.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Banks per row (shared with the owning tensor).
+    pub fn banks_per_row(&self) -> usize {
+        self.row_banks
+    }
+
+    /// Nonzero values packed in this segment.
+    pub fn nnz(&self) -> usize {
+        self.packed.len()
+    }
+
+    /// Iterate the encoded banks of rows `[lo, hi)` in row-major order,
+    /// in place (no decode, no copy).  This is the iteration surface the
+    /// compressed-domain kernel ([`super::kernel`]) computes over: each
+    /// [`BankRef`] carries the `(hot, mbhot)` bitmaps and the packed
+    /// nonzeros of one bank.
+    pub fn banks_in(&self, lo: usize, hi: usize) -> BankIter<'_> {
+        debug_assert!(lo <= hi && hi <= self.rows);
+        self.bank_span(lo * self.row_banks, hi * self.row_banks)
+    }
+
+    /// All banks of the segment, row-major.
+    pub fn iter_banks(&self) -> BankIter<'_> {
+        self.banks_in(0, self.rows)
+    }
+
+    /// Iterate an arbitrary span of bank indices (row-major numbering).
+    pub(crate) fn bank_span(&self, lo: usize, hi: usize) -> BankIter<'_> {
+        debug_assert!(lo <= hi && hi <= self.hots.len());
+        BankIter {
+            seg: self,
+            i: lo,
+            end: hi,
+        }
+    }
+
     /// Structural validation against `row_len` (the runtime counterpart
     /// of the sim model's hot-code/packed-length mismatch rejection).
     pub(crate) fn validate(&self, row_len: usize) -> Result<()> {
@@ -163,6 +203,57 @@ impl BankSegment {
 pub(crate) fn mbhot_for(nnz: usize) -> u8 {
     EncodedBank::mbhot_for(nnz)
 }
+
+/// One encoded bank viewed in place, yielded by [`BankSegment::banks_in`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BankRef<'a> {
+    /// row within the segment
+    pub row: usize,
+    /// bank index within the row
+    pub index: usize,
+    /// 16-bit element hot code (bit `l` set == lane `l` nonzero)
+    pub hot: u16,
+    /// mini-bank hot code (zero == the whole bank is empty)
+    pub mbhot: u8,
+    /// the bank's packed nonzeros, head-first
+    pub packed: &'a [f32],
+}
+
+/// Row-major in-place iterator over a segment's encoded banks.
+pub struct BankIter<'a> {
+    seg: &'a BankSegment,
+    i: usize,
+    end: usize,
+}
+
+impl<'a> Iterator for BankIter<'a> {
+    type Item = BankRef<'a>;
+
+    fn next(&mut self) -> Option<BankRef<'a>> {
+        if self.i >= self.end {
+            return None;
+        }
+        let i = self.i;
+        self.i += 1;
+        let seg = self.seg;
+        let lo = seg.offsets[i] as usize;
+        let hi = seg.offsets[i + 1] as usize;
+        Some(BankRef {
+            row: i / seg.row_banks,
+            index: i % seg.row_banks,
+            hot: seg.hots[i],
+            mbhot: seg.mbhots[i],
+            packed: &seg.packed[lo..hi],
+        })
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let n = self.end - self.i;
+        (n, Some(n))
+    }
+}
+
+impl ExactSizeIterator for BankIter<'_> {}
 
 /// A tensor in bank-encoded compressed form.
 #[derive(Debug, Clone)]
@@ -529,6 +620,29 @@ mod tests {
                 assert_eq!(packed, &sb.packed[..]);
             }
         }
+    }
+
+    #[test]
+    fn bank_iteration_matches_random_access() {
+        let t = sparse(vec![4, 52], 0.5, 17);
+        let ct = CompressedTensor::encode_slice(&t.data, t.shape.clone()).unwrap();
+        let seg = &ct.segments[0];
+        let mut seen = 0usize;
+        for bank in seg.iter_banks() {
+            let (hot, mbhot, packed) = ct.bank(bank.row, bank.index).unwrap();
+            assert_eq!(bank.hot, hot);
+            assert_eq!(bank.mbhot, mbhot);
+            assert_eq!(bank.packed, packed);
+            assert_eq!(bank.hot.count_ones() as usize, bank.packed.len());
+            seen += 1;
+        }
+        assert_eq!(seen, 4 * ct.row_banks);
+        // row-range iteration covers exactly the requested rows
+        let mid: Vec<_> = seg.banks_in(1, 3).collect();
+        assert_eq!(mid.len(), 2 * ct.row_banks);
+        assert_eq!(mid.first().unwrap().row, 1);
+        assert_eq!(mid.last().unwrap().row, 2);
+        assert_eq!(seg.banks_in(2, 2).count(), 0);
     }
 
     #[test]

@@ -1,0 +1,738 @@
+//! Compressed-domain GEMM: input-skipping matrix multiply computed
+//! directly over [`CompressedTensor`] bank segments, so a stage whose
+//! leading op is a GEMM never pays the decode on stage entry.
+//!
+//! This is the software realization of the paper's compute side (SSV-B):
+//! the Dyn-Mult-PE consumes RFC-encoded features as they are stored --
+//! a Logic-AND of the weight mask and the feature hot code drops zero
+//! features before any multiplier sees them.  Here the per-bank
+//! `(hot, mbhot)` bitmaps play the same role: `mbhot == 0` skips a whole
+//! bank, and the hot code walks only the packed nonzeros, each selecting
+//! the weight row it multiplies (input-skipping).  Work is scheduled
+//! dynamically: segment row-chunks are dealt to a worker pool and idle
+//! workers steal from loaded ones, the software analog of the intra-PE
+//! dynamic DSP scheduling that keeps sparsity-imbalanced banks from
+//! serializing the batch.
+//!
+//! ## GEMM geometry
+//!
+//! A [`CompressedTensor`] stores `rows` rows of `row_len` elements.  A
+//! `k x n` GEMM spec claims the tensor when either
+//!
+//! * `k == row_len` -- each tensor row is one GEMM row (any alignment:
+//!   tail-bank padding lanes are never hot), or
+//! * `k % 16 == 0 && row_len % k == 0` -- each tensor row splits into
+//!   `row_len / k` GEMM rows on exact bank boundaries (the per-joint
+//!   feature transform of a GCN block: `(N, T, V, C) x (C, C')`).
+//!
+//! ## Exactness contract (enforced by `tests/prop_invariants.rs`)
+//!
+//! * **f32**: bit-identical to [`gemm_dense_f32`] over the decoded
+//!   tensor.  Both accumulate lane-ascending per output element, and a
+//!   skipped zero lane contributes `+-0.0` to a finite accumulation,
+//!   which never changes the bits (weights must be finite: a `NaN`/`inf`
+//!   weight against a zero activation would poison the dense path but be
+//!   skipped here).
+//! * **Q8.8**: bit-identical to [`crate::quant::quant_matmul_ref`] over
+//!   the quantized decoded tensor.  Packed values are quantized on the
+//!   fly; zero lanes quantize to 0 and wrapping integer accumulation is
+//!   order-independent, so skipping them is exact by construction.
+
+use std::num::NonZeroUsize;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::thread;
+
+use anyhow::{ensure, Result};
+
+use crate::quant::{quantize, quantize_slice, requantize};
+use crate::runtime::Tensor;
+use crate::sim::rfc::BANK_WIDTH;
+
+use super::compressed::{BankSegment, CompressedTensor};
+
+/// A dense `k x n` f32 weight operand (row-major: `w[l * n + j]`).
+#[derive(Debug, Clone)]
+pub struct GemmF32 {
+    k: usize,
+    n: usize,
+    w: Vec<f32>,
+}
+
+impl GemmF32 {
+    pub fn new(weights: Vec<f32>, k: usize, n: usize) -> Result<GemmF32> {
+        ensure!(k > 0 && n > 0, "GEMM dims must be positive, got {k}x{n}");
+        ensure!(
+            weights.len() == k * n,
+            "weight buffer holds {} values for a {k}x{n} GEMM",
+            weights.len()
+        );
+        Ok(GemmF32 { k, n, w: weights })
+    }
+
+    /// Build from a rank-2 `[k, n]` tensor.
+    pub fn from_tensor(w: &Tensor) -> Result<GemmF32> {
+        ensure!(
+            w.shape.len() == 2,
+            "weights must be rank-2 [k, n], got {:?}",
+            w.shape
+        );
+        GemmF32::new(w.data.clone(), w.shape[0], w.shape[1])
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn weights(&self) -> &[f32] {
+        &self.w
+    }
+
+    /// Q8.8-quantize the weights once, ahead of serving.
+    pub fn quantize(&self) -> GemmQ88 {
+        GemmQ88 {
+            k: self.k,
+            n: self.n,
+            wq: quantize_slice(&self.w),
+        }
+    }
+}
+
+/// A Q8.8 `k x n` weight operand (row-major int16 raws).
+#[derive(Debug, Clone)]
+pub struct GemmQ88 {
+    k: usize,
+    n: usize,
+    wq: Vec<i16>,
+}
+
+impl GemmQ88 {
+    pub fn new(wq: Vec<i16>, k: usize, n: usize) -> Result<GemmQ88> {
+        ensure!(k > 0 && n > 0, "GEMM dims must be positive, got {k}x{n}");
+        ensure!(
+            wq.len() == k * n,
+            "weight buffer holds {} values for a {k}x{n} GEMM",
+            wq.len()
+        );
+        Ok(GemmQ88 { k, n, wq })
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn raw_weights(&self) -> &[i16] {
+        &self.wq
+    }
+}
+
+/// Scheduling knobs for the kernel's worker pool.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelConfig {
+    /// worker threads (1 = run on the calling thread)
+    pub workers: usize,
+    /// tensor rows per schedulable job (granularity of stealing)
+    pub rows_per_job: usize,
+    /// estimated MACs (`nnz * n`) below which the call stays serial --
+    /// the workers are scoped threads spawned per call, so tiny GEMMs
+    /// must not pay the spawn cost
+    pub par_threshold_macs: u64,
+}
+
+impl Default for KernelConfig {
+    fn default() -> Self {
+        KernelConfig {
+            workers: thread::available_parallelism()
+                .map(NonZeroUsize::get)
+                .unwrap_or(4)
+                .min(8),
+            rows_per_job: 1,
+            par_threshold_macs: 1 << 21,
+        }
+    }
+}
+
+impl KernelConfig {
+    /// Single-threaded configuration (deterministic scheduling, zero
+    /// spawn cost -- the result bits are identical either way).
+    pub fn serial() -> KernelConfig {
+        KernelConfig {
+            workers: 1,
+            rows_per_job: usize::MAX,
+            par_threshold_macs: u64::MAX,
+        }
+    }
+}
+
+/// What one spmm call did: the runtime mirror of the sim cost model's
+/// valid/skipped MAC admission accounting (`crate::sim::dyn_pe`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpmmStats {
+    /// GEMM output rows produced
+    pub gemm_rows: u64,
+    /// nonzero input lanes multiplied (each costs `n` MACs)
+    pub hot_lanes: u64,
+    /// zero input lanes skipped by the hot bitmaps (each would have cost
+    /// `n` MACs in the dense path; padding lanes are not counted)
+    pub skipped_lanes: u64,
+    /// jobs scheduled
+    pub jobs: u64,
+    /// jobs a worker stole from another worker's queue
+    pub stolen_jobs: u64,
+}
+
+impl SpmmStats {
+    /// Fraction of logical input lanes the kernel skipped.
+    pub fn skip_fraction(&self) -> f64 {
+        let total = self.hot_lanes + self.skipped_lanes;
+        if total == 0 {
+            return 0.0;
+        }
+        self.skipped_lanes as f64 / total as f64
+    }
+}
+
+/// How tensor rows map onto GEMM rows for a claimed `(tensor, k)` pair.
+#[derive(Debug, Clone, Copy)]
+struct Geometry {
+    /// GEMM rows per tensor row
+    g: usize,
+    /// banks per GEMM row
+    bpg: usize,
+    /// total GEMM rows
+    m: usize,
+    /// output columns
+    n: usize,
+    /// dense elements per tensor row (for live-lane accounting)
+    row_len: usize,
+}
+
+fn geometry(ct: &CompressedTensor, k: usize, n: usize) -> Result<Geometry> {
+    let (rows, row_len) = CompressedTensor::layout(&ct.shape);
+    ensure!(row_len > 0, "cannot GEMM a zero-length row");
+    if row_len == k {
+        return Ok(Geometry {
+            g: 1,
+            bpg: ct.row_banks(),
+            m: rows,
+            n,
+            row_len,
+        });
+    }
+    ensure!(
+        k % BANK_WIDTH == 0 && row_len % k == 0,
+        "cannot claim row_len {row_len} with k {k}: k must equal row_len \
+         or be a bank-aligned divisor of it"
+    );
+    Ok(Geometry {
+        g: row_len / k,
+        bpg: k / BANK_WIDTH,
+        m: rows * (row_len / k),
+        n,
+        row_len,
+    })
+}
+
+/// Whether a `k`-row GEMM can consume this tensor in compressed form
+/// (the fast-path claim check -- see module docs for the geometry rule).
+pub fn claimable(ct: &CompressedTensor, k: usize) -> bool {
+    if ct.is_empty() {
+        return false;
+    }
+    geometry(ct, k, 1).is_ok()
+}
+
+/// Logical output shape: the input shape with its last axis replaced by
+/// `n` when the GEMM ran per-last-axis, else a flat `[m, n]`.
+fn out_shape(in_shape: &[usize], k: usize, n: usize, m: usize) -> Vec<usize> {
+    if in_shape.last() == Some(&k) {
+        let mut s = in_shape.to_vec();
+        *s.last_mut().unwrap() = n;
+        s
+    } else {
+        vec![m, n]
+    }
+}
+
+/// Compressed-domain f32 GEMM: `out[m, n] = decode(ct)[m, k] . w[k, n]`,
+/// computed without decoding.  Bit-identical to [`gemm_dense_f32`] over
+/// the decoded tensor for finite weights, for every worker count.
+pub fn spmm_f32(
+    ct: &CompressedTensor,
+    gemm: &GemmF32,
+    cfg: &KernelConfig,
+) -> Result<(Tensor, SpmmStats)> {
+    let geo = geometry(ct, gemm.k, gemm.n)?;
+    let mut out = vec![0f32; geo.m * geo.n];
+    let w = gemm.w.as_slice();
+    let mut stats = dispatch(ct, &mut out, geo, cfg, &|job, _scratch, local| {
+        run_job_f32(job, w, geo, local)
+    });
+    stats.gemm_rows = geo.m as u64;
+    let shape = out_shape(&ct.shape, gemm.k, gemm.n, geo.m);
+    Ok((Tensor { shape, data: out }, stats))
+}
+
+/// Compressed-domain Q8.8 GEMM: packed values are quantized on the fly,
+/// accumulated in int32 per output row (per-worker scratch, reused
+/// across jobs), then requantized.  Bit-identical to
+/// [`crate::quant::quant_matmul_ref`] over the quantized decoded tensor.
+pub fn spmm_q88(
+    ct: &CompressedTensor,
+    gemm: &GemmQ88,
+    cfg: &KernelConfig,
+) -> Result<(Vec<i16>, SpmmStats)> {
+    let geo = geometry(ct, gemm.k, gemm.n)?;
+    let mut out = vec![0i16; geo.m * geo.n];
+    let wq = gemm.wq.as_slice();
+    let mut stats = dispatch(ct, &mut out, geo, cfg, &|job, scratch, local| {
+        run_job_q88(job, wq, geo, scratch, local)
+    });
+    stats.gemm_rows = geo.m as u64;
+    Ok((out, stats))
+}
+
+/// The decode-then-dense f32 reference: plain GEMM over a dense `[m, k]`
+/// buffer in the exact accumulation order the compressed kernel uses
+/// (lanes ascending per output element).  This is both the bit-exactness
+/// reference and the dense baseline the benches time.
+pub fn gemm_dense_f32(x: &[f32], m: usize, gemm: &GemmF32) -> Vec<f32> {
+    let (k, n) = (gemm.k, gemm.n);
+    debug_assert_eq!(x.len(), m * k);
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        let out_row = &mut out[i * n..(i + 1) * n];
+        for (l, &xv) in x[i * k..(i + 1) * k].iter().enumerate() {
+            let wrow = &gemm.w[l * n..(l + 1) * n];
+            for (o, &wv) in out_row.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------ scheduling
+
+/// One schedulable unit: a run of whole tensor rows within one segment,
+/// owning the disjoint output slice those rows produce.
+struct Job<'a, T> {
+    seg: &'a BankSegment,
+    row_lo: usize,
+    row_hi: usize,
+    out: &'a mut [T],
+}
+
+#[derive(Default)]
+struct LocalStats {
+    hot: u64,
+    skipped: u64,
+    stolen: u64,
+}
+
+/// A worker's job queue: jobs are claimed by a unique `fetch_add` ticket,
+/// so any worker (owner or thief) can pop concurrently without blocking.
+struct JobQueue<'a, T> {
+    slots: Vec<Mutex<Option<Job<'a, T>>>>,
+    next: AtomicUsize,
+}
+
+impl<'a, T> JobQueue<'a, T> {
+    fn pop(&self) -> Option<Job<'a, T>> {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.slots.len() {
+                return None;
+            }
+            // the ticket is unique, so the slot still holds its job
+            if let Some(job) = self.slots[i].lock().unwrap().take() {
+                return Some(job);
+            }
+        }
+    }
+}
+
+/// Chop the tensor into jobs: contiguous row chunks per segment, each
+/// paired with its disjoint slice of `out`.
+fn build_jobs<'a, T>(
+    ct: &'a CompressedTensor,
+    out: &'a mut [T],
+    geo: Geometry,
+    rows_per_job: usize,
+) -> Vec<Job<'a, T>> {
+    let rpj = rows_per_job.max(1);
+    let per_row = geo.g * geo.n;
+    let mut jobs = Vec::new();
+    let mut rest = out;
+    for seg in ct.segments() {
+        let mut r = 0;
+        while r < seg.rows() {
+            let hi = seg.rows().min(r.saturating_add(rpj));
+            let (head, tail) =
+                std::mem::take(&mut rest).split_at_mut((hi - r) * per_row);
+            rest = tail;
+            jobs.push(Job {
+                seg,
+                row_lo: r,
+                row_hi: hi,
+                out: head,
+            });
+            r = hi;
+        }
+    }
+    jobs
+}
+
+/// Run every job through `run`: serially when the work is too small to
+/// pay for thread spawns, otherwise on a worker pool with work-stealing.
+/// Jobs are dealt to the workers in contiguous blocks (cache-adjacent
+/// rows); a worker that drains its own queue steals from the others, so
+/// a sparsity-imbalanced segment never serializes the batch.
+fn dispatch<T, F>(
+    ct: &CompressedTensor,
+    out: &mut [T],
+    geo: Geometry,
+    cfg: &KernelConfig,
+    run: &F,
+) -> SpmmStats
+where
+    T: Send,
+    F: Fn(Job<'_, T>, &mut Vec<i32>, &mut LocalStats) + Sync,
+{
+    let est_macs = ct.nnz() as u64 * geo.n as u64;
+    let workers = if est_macs < cfg.par_threshold_macs {
+        1
+    } else {
+        cfg.workers.max(1)
+    };
+    let jobs = build_jobs(ct, out, geo, cfg.rows_per_job);
+    let n_jobs = jobs.len() as u64;
+
+    if workers <= 1 || jobs.len() <= 1 {
+        let mut local = LocalStats::default();
+        let mut scratch = Vec::new();
+        for job in jobs {
+            run(job, &mut scratch, &mut local);
+        }
+        return SpmmStats {
+            gemm_rows: 0, // filled by the caller
+            hot_lanes: local.hot,
+            skipped_lanes: local.skipped,
+            jobs: n_jobs,
+            stolen_jobs: 0,
+        };
+    }
+
+    let w = workers.min(jobs.len());
+    let per = jobs.len().div_ceil(w);
+    let mut queues: Vec<JobQueue<T>> = Vec::with_capacity(w);
+    let mut it = jobs.into_iter();
+    for _ in 0..w {
+        queues.push(JobQueue {
+            slots: it.by_ref().take(per).map(|j| Mutex::new(Some(j))).collect(),
+            next: AtomicUsize::new(0),
+        });
+    }
+    let queues = &queues;
+    let totals = Mutex::new(LocalStats::default());
+    thread::scope(|scope| {
+        for me in 0..w {
+            let totals = &totals;
+            scope.spawn(move || {
+                let mut local = LocalStats::default();
+                let mut scratch = Vec::new();
+                loop {
+                    // own queue first, then sweep the victims round-robin
+                    let mut taken = queues[me].pop().map(|j| (j, false));
+                    if taken.is_none() {
+                        for off in 1..queues.len() {
+                            let victim = (me + off) % queues.len();
+                            if let Some(j) = queues[victim].pop() {
+                                taken = Some((j, true));
+                                break;
+                            }
+                        }
+                    }
+                    let Some((job, stolen)) = taken else { break };
+                    if stolen {
+                        local.stolen += 1;
+                    }
+                    run(job, &mut scratch, &mut local);
+                }
+                let mut t = totals.lock().unwrap();
+                t.hot += local.hot;
+                t.skipped += local.skipped;
+                t.stolen += local.stolen;
+            });
+        }
+    });
+    let t = totals.into_inner().unwrap();
+    SpmmStats {
+        gemm_rows: 0,
+        hot_lanes: t.hot,
+        skipped_lanes: t.skipped,
+        jobs: n_jobs,
+        stolen_jobs: t.stolen,
+    }
+}
+
+// ---------------------------------------------------------- job kernels
+
+/// f32 job body: stream the job's banks, axpy each hot lane's weight row
+/// into the owning output row.  Lane order is ascending (lowest set bit
+/// first), matching [`gemm_dense_f32`] bit for bit.
+fn run_job_f32(job: Job<'_, f32>, w: &[f32], geo: Geometry, local: &mut LocalStats) {
+    let Job {
+        seg,
+        row_lo,
+        row_hi,
+        out,
+    } = job;
+    for bank in seg.banks_in(row_lo, row_hi) {
+        let live = BANK_WIDTH.min(geo.row_len - bank.index * BANK_WIDTH);
+        let nnz = bank.packed.len();
+        local.hot += nnz as u64;
+        local.skipped += (live - nnz) as u64;
+        if bank.mbhot == 0 {
+            continue; // mini-bank gate: whole bank empty
+        }
+        let gr = (bank.row - row_lo) * geo.g + bank.index / geo.bpg;
+        let out_row = &mut out[gr * geo.n..(gr + 1) * geo.n];
+        let base = (bank.index % geo.bpg) * BANK_WIDTH;
+        let mut bits = bank.hot;
+        let mut next = 0usize;
+        while bits != 0 {
+            let lane = bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            let x = bank.packed[next];
+            next += 1;
+            let wrow = &w[(base + lane) * geo.n..(base + lane + 1) * geo.n];
+            for (o, &wv) in out_row.iter_mut().zip(wrow) {
+                *o += x * wv;
+            }
+        }
+    }
+}
+
+/// Q8.8 job body: per GEMM row, accumulate `quantize(x) * wq` into the
+/// worker's int32 scratch, then requantize into the output row.
+fn run_job_q88(
+    job: Job<'_, i16>,
+    wq: &[i16],
+    geo: Geometry,
+    scratch: &mut Vec<i32>,
+    local: &mut LocalStats,
+) {
+    let Job {
+        seg,
+        row_lo,
+        row_hi,
+        out,
+    } = job;
+    let rb = seg.banks_per_row();
+    for (gr, out_row) in out.chunks_mut(geo.n).enumerate() {
+        let r = row_lo + gr / geo.g;
+        let gi = gr % geo.g;
+        scratch.clear();
+        scratch.resize(geo.n, 0);
+        let b0 = r * rb + gi * geo.bpg;
+        for bank in seg.bank_span(b0, b0 + geo.bpg) {
+            let live = BANK_WIDTH.min(geo.row_len - bank.index * BANK_WIDTH);
+            let nnz = bank.packed.len();
+            local.hot += nnz as u64;
+            local.skipped += (live - nnz) as u64;
+            if bank.mbhot == 0 {
+                continue;
+            }
+            let base = (bank.index % geo.bpg) * BANK_WIDTH;
+            let mut bits = bank.hot;
+            let mut next = 0usize;
+            while bits != 0 {
+                let lane = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                let xq = quantize(bank.packed[next]) as i32;
+                next += 1;
+                let wrow = &wq[(base + lane) * geo.n..(base + lane + 1) * geo.n];
+                for (acc, &wv) in scratch.iter_mut().zip(wrow) {
+                    *acc = acc.wrapping_add(xq * wv as i32);
+                }
+            }
+        }
+        for (o, &acc) in out_row.iter_mut().zip(scratch.iter()) {
+            *o = requantize(acc);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quant_matmul_ref;
+    use crate::rfc::{encode, EncoderConfig};
+    use crate::util::rng::Rng;
+
+    fn enc(shards: usize) -> EncoderConfig {
+        EncoderConfig {
+            shards,
+            min_sparsity: 0.0,
+            parallel_threshold: 0,
+        }
+    }
+
+    fn weights(k: usize, n: usize, seed: u64) -> GemmF32 {
+        let mut rng = Rng::new(seed);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        GemmF32::new(w, k, n).unwrap()
+    }
+
+    #[test]
+    fn matches_dense_reference_bit_for_bit() {
+        // k == row_len (incl. bank-unaligned) and k | row_len geometries
+        for (shape, k) in [
+            (vec![5usize, 48], 48),
+            (vec![3, 52], 52), // tail-bank padding lanes
+            (vec![4, 2, 64], 64),
+            (vec![2, 6, 32], 32),
+        ] {
+            let t = Tensor::random_sparse(shape.clone(), 0.6, k as u64);
+            let ct = encode(&t, &enc(2));
+            let gemm = weights(k, 9, 7);
+            let (y, stats) = spmm_f32(&ct, &gemm, &KernelConfig::serial()).unwrap();
+            let m = t.len() / k;
+            let reference = gemm_dense_f32(&t.data, m, &gemm);
+            assert_eq!(y.data.len(), reference.len());
+            for (a, b) in y.data.iter().zip(&reference) {
+                assert_eq!(a.to_bits(), b.to_bits(), "shape {shape:?} k {k}");
+            }
+            assert_eq!(stats.gemm_rows, m as u64);
+            assert_eq!(
+                stats.hot_lanes + stats.skipped_lanes,
+                t.len() as u64,
+                "lane accounting covers every logical element"
+            );
+            assert_eq!(
+                stats.hot_lanes as usize,
+                t.data.iter().filter(|&&v| v != 0.0).count()
+            );
+        }
+    }
+
+    #[test]
+    fn worker_count_never_changes_the_bits() {
+        let t = Tensor::random_sparse(vec![13, 64], 0.5, 99);
+        let ct = encode(&t, &enc(3));
+        let gemm = weights(64, 17, 3);
+        let (reference, _) = spmm_f32(&ct, &gemm, &KernelConfig::serial()).unwrap();
+        for workers in [2usize, 4, 8] {
+            let cfg = KernelConfig {
+                workers,
+                rows_per_job: 1,
+                par_threshold_macs: 0,
+            };
+            let (y, stats) = spmm_f32(&ct, &gemm, &cfg).unwrap();
+            for (a, b) in y.data.iter().zip(&reference.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "workers {workers}");
+            }
+            assert_eq!(stats.jobs, 13);
+        }
+    }
+
+    #[test]
+    fn q88_matches_quant_matmul_ref() {
+        let t = Tensor::random_sparse(vec![6, 32], 0.55, 21);
+        let ct = encode(&t, &enc(2));
+        let gemm = weights(32, 11, 5).quantize();
+        let (yq, stats) = spmm_q88(&ct, &gemm, &KernelConfig::serial()).unwrap();
+        let xq = quantize_slice(&t.data);
+        let reference = quant_matmul_ref(&xq, gemm.raw_weights(), 6, 32, 11);
+        assert_eq!(yq, reference);
+        assert_eq!(stats.gemm_rows, 6);
+    }
+
+    #[test]
+    fn all_zero_and_fully_dense_banks() {
+        let z = CompressedTensor::zeros(vec![4, 32]);
+        let gemm = weights(32, 5, 1);
+        let (y, stats) = spmm_f32(&z, &gemm, &KernelConfig::serial()).unwrap();
+        assert!(y.data.iter().all(|&v| v == 0.0));
+        assert_eq!(stats.hot_lanes, 0);
+        assert_eq!(stats.skipped_lanes, 4 * 32);
+
+        let d = Tensor::random_sparse(vec![4, 32], 0.0, 2);
+        let cd = encode(&d, &enc(1));
+        let (yd, sd) = spmm_f32(&cd, &gemm, &KernelConfig::serial()).unwrap();
+        assert_eq!(sd.skipped_lanes, 0);
+        let reference = gemm_dense_f32(&d.data, 4, &gemm);
+        for (a, b) in yd.data.iter().zip(&reference) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn claim_rules() {
+        let t = Tensor::random_sparse(vec![2, 96], 0.5, 4);
+        let ct = encode(&t, &enc(1));
+        assert!(claimable(&ct, 96)); // whole row
+        assert!(claimable(&ct, 32)); // bank-aligned divisor
+        assert!(claimable(&ct, 48));
+        assert!(!claimable(&ct, 24)); // not bank-aligned
+        assert!(!claimable(&ct, 40)); // does not divide row_len
+        let gemm = weights(24, 4, 6);
+        assert!(spmm_f32(&ct, &gemm, &KernelConfig::serial()).is_err());
+        // unaligned k is fine only when it covers the whole row
+        let u = encode(&Tensor::random_sparse(vec![2, 52], 0.5, 8), &enc(1));
+        assert!(claimable(&u, 52));
+        assert!(!claimable(&u, 26));
+    }
+
+    #[test]
+    fn sub_row_gemm_reshapes_trailing_axis() {
+        // (N, T, C) x (C, n): output keeps the leading axes
+        let t = Tensor::random_sparse(vec![3, 4, 16], 0.5, 11);
+        let ct = encode(&t, &enc(1));
+        let gemm = weights(16, 6, 12);
+        let (y, _) = spmm_f32(&ct, &gemm, &KernelConfig::serial()).unwrap();
+        assert_eq!(y.shape, vec![3, 4, 6]);
+        let reference = gemm_dense_f32(&t.data, 12, &gemm);
+        assert_eq!(y.data, reference);
+    }
+
+    #[test]
+    fn stealing_engages_on_imbalanced_segments() {
+        // one dense segment, one nearly-empty one: with one job per row
+        // and 2 workers dealt contiguous halves, the worker that gets
+        // the empty half must steal from the loaded one
+        let dense = Tensor::random_sparse(vec![8, 256], 0.0, 31);
+        let sparse = Tensor::random_sparse(vec![8, 256], 0.99, 32);
+        let mut data = dense.data.clone();
+        data.extend_from_slice(&sparse.data);
+        let ct = CompressedTensor::concat_batch(vec![
+            encode(&dense, &enc(1)),
+            encode(&sparse, &enc(1)),
+        ])
+        .unwrap();
+        let gemm = weights(256, 32, 33);
+        let cfg = KernelConfig {
+            workers: 2,
+            rows_per_job: 1,
+            par_threshold_macs: 0,
+        };
+        let (y, stats) = spmm_f32(&ct, &gemm, &cfg).unwrap();
+        let reference = gemm_dense_f32(&data, 16, &gemm);
+        for (a, b) in y.data.iter().zip(&reference) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(stats.jobs, 16);
+        // scheduling is timing-dependent; correctness above is the hard
+        // guarantee, stolen_jobs just has to be consistent
+        assert!(stats.stolen_jobs <= stats.jobs);
+    }
+}

@@ -17,7 +17,11 @@
 //!
 //! * [`wire`] -- wire format v1: the versioned, length-prefixed byte
 //!   encoding of [`CompressedTensor`] that leaves the process (multi-node
-//!   shard links, see [`crate::coordinator::shard`]).
+//!   shard links, see [`crate::coordinator::shard`]);
+//!
+//! * [`kernel`] -- compressed-domain compute: input-skipping GEMM that
+//!   consumes the bank segments directly, so a stage whose leading op is
+//!   a GEMM never decodes at all (see `docs/compressed-compute.md`).
 //!
 //! Equivalence contract (enforced by `tests/rfc_equivalence.rs`): for
 //! every 16-aligned bank, the runtime encoder's `(hot, mbhot, packed)`
@@ -27,12 +31,87 @@
 
 pub mod compressed;
 pub mod encoder;
+pub mod kernel;
 pub mod wire;
 
-pub use compressed::{BankSegment, CompressedTensor, BANK_SIDECAR_BITS};
+pub use compressed::{BankRef, BankSegment, CompressedTensor, BANK_SIDECAR_BITS};
 pub use encoder::{decode, encode, EncoderConfig};
+pub use kernel::{GemmF32, GemmQ88, KernelConfig, SpmmStats};
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::runtime::Tensor;
+
+/// Counters for the [`Payload::from_tensor`] compression gate (embedded
+/// in `crate::coordinator::Metrics` for the serving path).
+#[derive(Debug, Default)]
+pub struct GateStats {
+    /// tensors the sampled pre-gate rejected before any encode work
+    pub pre_rejects: AtomicU64,
+    /// tensors that were fully encoded and then failed the exact gate
+    /// (the encode was discarded)
+    pub encode_discards: AtomicU64,
+    /// tensors that cleared the gate and shipped compressed
+    pub compressed: AtomicU64,
+}
+
+impl GateStats {
+    /// Fraction of gate decisions that avoided a discarded encode thanks
+    /// to the sampled pre-gate.
+    pub fn pre_reject_fraction(&self) -> f64 {
+        let pre = self.pre_rejects.load(Ordering::Relaxed);
+        let total = pre
+            + self.encode_discards.load(Ordering::Relaxed)
+            + self.compressed.load(Ordering::Relaxed);
+        if total == 0 {
+            return 0.0;
+        }
+        pre as f64 / total as f64
+    }
+}
+
+/// Elements the pre-gate samples (evenly strided) before committing to a
+/// full encode.
+const GATE_SAMPLES: usize = 512;
+
+/// Cheap sampled-sparsity check: `true` when the tensor is clearly too
+/// dense for the `min_sparsity` gate, so [`Payload::from_tensor`] can
+/// skip the full (discarded) encode.  Sampling error is covered by a
+/// three-sigma margin, so a compressible tensor is practically never
+/// pre-rejected; a dense tensor that slips through just pays the encode
+/// it would have paid before this gate existed.
+fn pre_gate_rejects(data: &[f32], min_sparsity: f64) -> bool {
+    if data.is_empty() || min_sparsity <= 0.0 {
+        return false;
+    }
+    let stride = (data.len() / GATE_SAMPLES).max(1);
+    let mut sampled = 0usize;
+    let mut zeros = 0usize;
+    // rotate the intra-stride offset as we walk: a fixed-stride scan of
+    // a tensor whose trailing (channel) axis divides the stride would
+    // sample a single channel lane forever, and post-ReLU sparsity is
+    // strongly channel-structured -- the offset cycles through every
+    // residue class of the stride, so no axis can alias the sample
+    let mut j = 0usize;
+    loop {
+        let i = j * stride + j % stride;
+        if i >= data.len() {
+            break;
+        }
+        sampled += 1;
+        if data[i] == 0.0 {
+            zeros += 1;
+        }
+        j += 1;
+    }
+    let s = zeros as f64 / sampled as f64;
+    let margin = if stride == 1 {
+        0.0 // exhaustive scan: the estimate is exact
+    } else {
+        3.0 * (s * (1.0 - s) / sampled as f64).sqrt()
+    };
+    s + margin < min_sparsity
+}
 
 /// A tensor travelling between pipeline stages: dense, or bank-encoded
 /// when compression pays for itself.
@@ -48,15 +127,37 @@ impl Payload {
     /// dense otherwise.  This is the runtime decision the paper makes
     /// structurally by placing the encoder after every ReLU.
     ///
-    /// Single pass: encoding counts the nonzeros as it packs, so the
-    /// gate reads the exact wire costs off the result instead of
-    /// pre-scanning the tensor; a tensor that fails the gate costs one
-    /// discarded encode, which post-ReLU traffic rarely does.
+    /// Two-stage gate: a strided-sample sparsity estimate first (so a
+    /// clearly-dense tensor never pays a full discarded encode), then
+    /// the exact gate read off the encode result for everything that
+    /// survives.  Post-ReLU traffic almost always clears both.
     pub fn from_tensor(t: Tensor, cfg: &EncoderConfig) -> Payload {
+        Self::from_tensor_metered(t, cfg, None)
+    }
+
+    /// [`Payload::from_tensor`] recording gate decisions into `stats`
+    /// (the serving path passes `Metrics::gate`).
+    pub fn from_tensor_metered(
+        t: Tensor,
+        cfg: &EncoderConfig,
+        stats: Option<&GateStats>,
+    ) -> Payload {
+        if pre_gate_rejects(&t.data, cfg.min_sparsity) {
+            if let Some(s) = stats {
+                s.pre_rejects.fetch_add(1, Ordering::Relaxed);
+            }
+            return Payload::Dense(t);
+        }
         let ct = encode(&t, cfg);
         if ct.sparsity() >= cfg.min_sparsity && ct.compressed_bits() < ct.dense_bits() {
+            if let Some(s) = stats {
+                s.compressed.fetch_add(1, Ordering::Relaxed);
+            }
             Payload::Compressed(ct)
         } else {
+            if let Some(s) = stats {
+                s.encode_discards.fetch_add(1, Ordering::Relaxed);
+            }
             Payload::Dense(t)
         }
     }
@@ -143,6 +244,86 @@ mod tests {
         assert!(sparse.is_compressed());
         let dense = Payload::from_tensor(tensor_with_sparsity(0.0, 2), &cfg);
         assert!(!dense.is_compressed());
+    }
+
+    #[test]
+    fn pre_gate_skips_encode_for_dense_and_counts_it() {
+        let cfg = EncoderConfig::default();
+        let stats = GateStats::default();
+        // clearly dense: rejected by the sampled pre-gate, no encode
+        let p = Payload::from_tensor_metered(
+            tensor_with_sparsity(0.0, 10),
+            &cfg,
+            Some(&stats),
+        );
+        assert!(!p.is_compressed());
+        assert_eq!(stats.pre_rejects.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.encode_discards.load(Ordering::Relaxed), 0);
+        // clearly sparse: clears both gates
+        let p = Payload::from_tensor_metered(
+            tensor_with_sparsity(0.6, 11),
+            &cfg,
+            Some(&stats),
+        );
+        assert!(p.is_compressed());
+        assert_eq!(stats.compressed.load(Ordering::Relaxed), 1);
+        assert!(stats.pre_reject_fraction() > 0.4);
+    }
+
+    #[test]
+    fn pre_gate_survives_channel_aligned_sparsity() {
+        // regression: len 65536 gives stride 128, a multiple of the
+        // 64-wide channel axis.  A fixed-stride scan would only ever
+        // sample channel 0 (the dense one) and wrongly pre-reject a
+        // 98%-sparse tensor; the rotating offset must see the zeros.
+        let data: Vec<f32> = (0..64 * 1024)
+            .map(|i| if i % 64 == 0 { 1.0 } else { 0.0 })
+            .collect();
+        let t = Tensor::new(vec![1024, 64], data).unwrap();
+        let cfg = EncoderConfig::default();
+        assert!(!pre_gate_rejects(&t.data, cfg.min_sparsity));
+        let p = Payload::from_tensor(t, &cfg);
+        assert!(p.is_compressed(), "channel-structured sparsity must compress");
+    }
+
+    #[test]
+    fn pre_gate_never_rejects_compressible_traffic() {
+        // every sparsity that clears the exact gate must also clear the
+        // sampled pre-gate (the three-sigma margin absorbs sampling
+        // error); borderline-dense tensors ship dense either way
+        let cfg = EncoderConfig::default();
+        for s10 in [20u64, 40, 60, 80, 95] {
+            let t = tensor_with_sparsity(s10 as f64 / 100.0, 100 + s10);
+            let exact_gate = {
+                let ct = encode(&t, &cfg);
+                ct.sparsity() >= cfg.min_sparsity
+                    && ct.compressed_bits() < ct.dense_bits()
+            };
+            let p = Payload::from_tensor(t, &cfg);
+            assert_eq!(
+                p.is_compressed(),
+                exact_gate,
+                "sparsity {}%: pre-gate changed the gate decision",
+                s10
+            );
+        }
+        // right at the gate threshold the sampled estimate may land on
+        // either side; the invariant is one-sided -- a compressed ship
+        // always means the exact gate passed
+        for s10 in [8u64, 10, 12, 15] {
+            let t = tensor_with_sparsity(s10 as f64 / 100.0, 200 + s10);
+            let exact_gate = {
+                let ct = encode(&t, &cfg);
+                ct.sparsity() >= cfg.min_sparsity
+                    && ct.compressed_bits() < ct.dense_bits()
+            };
+            let p = Payload::from_tensor(t, &cfg);
+            assert!(
+                !p.is_compressed() || exact_gate,
+                "sparsity {}%: compressed despite failing the exact gate",
+                s10
+            );
+        }
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! entire model.  One compiled executable per model variant / pipeline
 //! stage, cached for the process lifetime.
 
+pub mod plan;
 pub mod tensor;
 
 use std::collections::HashMap;
@@ -15,6 +16,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
+pub use plan::{StageEntry, StagePlan};
 pub use tensor::Tensor;
 
 /// Process-wide PJRT engine with an executable cache.
@@ -128,6 +130,37 @@ impl Executable {
         cfg: &crate::rfc::EncoderConfig,
     ) -> Result<Tensor> {
         self.run1(&[payload.into_dense(cfg)])
+    }
+
+    /// Planned stage entry: when `plan` names this stage's leading GEMM
+    /// and the compressed payload's bank geometry lines up, the GEMM is
+    /// computed directly over the bank segments (input-skipping, no
+    /// decode) and only the result is handed to the executable -- which,
+    /// per the [`StagePlan`] contract, is the stage *remainder* compiled
+    /// without that GEMM.  Everything else falls back to
+    /// [`Executable::run_payload`]'s lazy decode.  The returned
+    /// [`StageEntry`] says which path ran (fed to
+    /// `coordinator::Metrics::record_stage_entry` on the serving path).
+    pub fn run_payload_planned(
+        &self,
+        payload: crate::rfc::Payload,
+        cfg: &crate::rfc::EncoderConfig,
+        plan: Option<&StagePlan>,
+    ) -> Result<(Tensor, StageEntry)> {
+        if let (Some(plan), crate::rfc::Payload::Compressed(ct)) = (plan, &payload) {
+            if plan.claims(ct) {
+                let (y, stats) = plan.apply(ct)?;
+                let out = self.run1(&[y])?;
+                return Ok((
+                    out,
+                    StageEntry {
+                        decode_elided: true,
+                        kernel: Some(stats),
+                    },
+                ));
+            }
+        }
+        Ok((self.run_payload(payload, cfg)?, StageEntry::default()))
     }
 
     /// Execute literal -> literal without any host `Vec` round-trip:

@@ -1,0 +1,150 @@
+//! Stage plans: the per-stage contract that lets
+//! [`super::Executable::run_payload_planned`] consume a compressed
+//! payload directly instead of decoding it on stage entry.
+//!
+//! A [`StagePlan`] names the stage's **leading GEMM** -- the first op the
+//! stage applies to its input.  When a plan is attached, the stage's
+//! executable is the *remainder* of the stage (compiled without that
+//! GEMM); the plan owns the GEMM weights and runs it through the
+//! compressed-domain kernel ([`crate::rfc::kernel`]), so the decode on
+//! stage entry disappears entirely for compressed payloads.  Payloads the
+//! plan cannot claim (dense, or bank geometry that does not line up)
+//! fall back to the lazy-decode path unchanged -- attaching a plan never
+//! changes results, only where the GEMM runs.
+
+use anyhow::{ensure, Result};
+
+use crate::meta::BlockMeta;
+use crate::rfc::{kernel, CompressedTensor, GemmF32, KernelConfig, SpmmStats};
+use crate::runtime::Tensor;
+use crate::sim::rfc::BANK_WIDTH;
+
+/// A claimable leading-GEMM description for one pipeline stage.
+#[derive(Debug, Clone)]
+pub struct StagePlan {
+    gemm: GemmF32,
+    kernel: KernelConfig,
+}
+
+impl StagePlan {
+    pub fn new(gemm: GemmF32) -> StagePlan {
+        StagePlan {
+            gemm,
+            kernel: KernelConfig::default(),
+        }
+    }
+
+    /// Override the kernel scheduling knobs (worker count, job grain).
+    pub fn with_kernel(mut self, cfg: KernelConfig) -> StagePlan {
+        self.kernel = cfg;
+        self
+    }
+
+    /// Plan a conv block's leading per-joint feature transform:
+    /// `(N, T, V, C_in) x (C_in, C_out)`.  `weights` must be the block's
+    /// `[in_channels, out_channels]` GEMM operand (exported alongside the
+    /// remainder HLO by the AOT pipeline).
+    pub fn from_block(block: &BlockMeta, weights: &Tensor) -> Result<StagePlan> {
+        ensure!(
+            weights.shape == [block.in_channels, block.out_channels],
+            "block wants a [{}, {}] GEMM operand, weights are {:?}",
+            block.in_channels,
+            block.out_channels,
+            weights.shape
+        );
+        Ok(StagePlan::new(GemmF32::from_tensor(weights)?))
+    }
+
+    pub fn gemm(&self) -> &GemmF32 {
+        &self.gemm
+    }
+
+    /// Whether this plan can consume `ct` in compressed form: the
+    /// tensor's trailing axis must be the GEMM contraction axis and the
+    /// bank geometry must line up (see [`kernel::claimable`]).
+    pub fn claims(&self, ct: &CompressedTensor) -> bool {
+        self.claims_dims(&ct.shape) && kernel::claimable(ct, self.gemm.k())
+    }
+
+    /// Shape-level claim check, answerable *before* any encode: would a
+    /// tensor of this dense shape be claimable once compressed?  Lets
+    /// callers skip the encode entirely for a plan whose geometry can
+    /// never line up (an encode whose only consumer would be an
+    /// immediate decode is pure overhead).
+    pub fn claims_dims(&self, shape: &[usize]) -> bool {
+        let k = self.gemm.k();
+        if shape.last() != Some(&k) {
+            return false;
+        }
+        let (_, row_len) = CompressedTensor::layout(shape);
+        row_len > 0 && (row_len == k || (k % BANK_WIDTH == 0 && row_len % k == 0))
+    }
+
+    /// Run the leading GEMM over the compressed payload.
+    pub fn apply(&self, ct: &CompressedTensor) -> Result<(Tensor, SpmmStats)> {
+        kernel::spmm_f32(ct, &self.gemm, &self.kernel)
+    }
+}
+
+/// What one stage entry did with its payload -- the per-entry record
+/// `crate::coordinator::Metrics::record_stage_entry` aggregates.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageEntry {
+    /// the stage consumed the compressed payload directly (no decode)
+    pub decode_elided: bool,
+    /// kernel accounting when the fast path ran
+    pub kernel: Option<SpmmStats>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rfc::{encode, EncoderConfig};
+
+    fn plan(k: usize, n: usize) -> StagePlan {
+        let w: Vec<f32> = (0..k * n).map(|i| (i % 7) as f32 - 3.0).collect();
+        StagePlan::new(GemmF32::new(w, k, n).unwrap())
+    }
+
+    #[test]
+    fn claims_only_matching_trailing_axis() {
+        let cfg = EncoderConfig {
+            shards: 1,
+            min_sparsity: 0.0,
+            parallel_threshold: usize::MAX,
+        };
+        let t = Tensor::random_sparse(vec![2, 5, 32], 0.5, 1);
+        let ct = encode(&t, &cfg);
+        assert!(plan(32, 8).claims(&ct));
+        assert!(!plan(16, 8).claims(&ct), "16 != trailing axis 32");
+        assert!(!plan(160, 8).claims(&ct), "whole-row k is not the trailing axis");
+        // the shape-level pre-check agrees with the compressed-form claim
+        assert!(plan(32, 8).claims_dims(&[2, 5, 32]));
+        assert!(!plan(16, 8).claims_dims(&[2, 5, 32]));
+        assert!(!plan(160, 8).claims_dims(&[2, 5, 32]));
+        // unaligned trailing axis claims only when it spans the row
+        assert!(plan(52, 4).claims_dims(&[3, 52]));
+        assert!(!plan(52, 4).claims_dims(&[3, 2, 52]), "52 is not bank-aligned");
+        let (y, stats) = plan(32, 8).apply(&ct).unwrap();
+        assert_eq!(y.shape, vec![2, 5, 8]);
+        assert_eq!(stats.gemm_rows, 10);
+    }
+
+    #[test]
+    fn from_block_checks_weight_shape() {
+        let block = BlockMeta {
+            hlo: "block.hlo".into(),
+            in_shape: vec![8, 64, 25, 64],
+            out_shape: vec![8, 64, 25, 128],
+            in_channels: 64,
+            out_channels: 128,
+            stride: 1,
+            kept_in: Vec::new(),
+            kept_t_out: Vec::new(),
+        };
+        let good = Tensor::zeros(vec![64, 128]);
+        assert!(StagePlan::from_block(&block, &good).is_ok());
+        let bad = Tensor::zeros(vec![128, 64]);
+        assert!(StagePlan::from_block(&block, &bad).is_err());
+    }
+}

@@ -45,6 +45,10 @@ pub struct PeStats {
     pub static_cycles: u64,
     /// valid MACs executed
     pub macs: u64,
+    /// MAC candidates offered to the admission logic (fed steps x queues)
+    pub offered: u64,
+    /// candidates the Logic-AND admitted (nonzero features enqueued)
+    pub admitted: u64,
     /// DSPs in this PE
     pub dsps: usize,
     /// queues (kept weights) in this PE
@@ -76,6 +80,17 @@ impl PeStats {
         (self.cycles as f64 - self.static_cycles as f64).max(0.0)
             / self.static_cycles as f64
     }
+
+    /// MAC candidates the Logic-AND admission dropped (zero features):
+    /// offered minus admitted -- directly comparable to the runtime
+    /// kernel's skipped-lane counter
+    /// (`crate::rfc::kernel::SpmmStats::skipped_lanes`) when both see
+    /// the same feature stream.  Counted at the admission point, so the
+    /// figure stays truthful even if the simulation's safety valve
+    /// aborts with queue backlog still undrained.
+    pub fn skipped_macs(&self) -> u64 {
+        self.offered - self.admitted
+    }
 }
 
 /// Cycle-accurate simulation of one Dyn-Mult-PE.
@@ -96,10 +111,36 @@ pub fn simulate(
     rng: &mut Rng,
 ) -> PeStats {
     assert!(q >= 1 && d >= 1 && d <= q);
+    // sample the admission flags up front (same order the feed loop
+    // consumed them historically: one per queue per input step) and run
+    // the explicit-stream simulation over them
+    let mut hot = Vec::with_capacity(steps as usize * q);
+    for _ in 0..steps {
+        for _ in 0..q {
+            hot.push(!rng.chance(sparsity));
+        }
+    }
+    simulate_stream(q, d, &hot, queue_cap)
+}
+
+/// [`simulate`] over an explicit admission stream instead of a sampled
+/// sparsity: `hot` holds `steps * q` flags in step-major `[steps][q]`
+/// order, `true` meaning that queue's candidate feature is nonzero.
+///
+/// This is the shared-fixture entry point: feeding a real tensor's zero
+/// pattern here must drop exactly the MACs the runtime compressed-domain
+/// kernel skips on the same tensor ([`PeStats::skipped_macs`] vs
+/// `SpmmStats::skipped_lanes` -- enforced by `tests/rfc_equivalence.rs`).
+pub fn simulate_stream(q: usize, d: usize, hot: &[bool], queue_cap: usize) -> PeStats {
+    assert!(q >= 1 && d >= 1 && d <= q);
+    assert_eq!(hot.len() % q, 0, "hot stream must be step-major [steps][q]");
+    let steps = (hot.len() / q) as u64;
     let mut queues = vec![0usize; q]; // occupancy per queue
     let mut macs = 0u64;
     let mut cycles = 0u64;
     let mut fed = 0u64;
+    let mut offered = 0u64;
+    let mut admitted = 0u64;
     // static reference: one DSP per queue, drains every cycle; its cycle
     // count equals the number of input steps (no backlog possible).
     let static_cycles = steps;
@@ -109,9 +150,12 @@ pub fn simulate(
         // no queue is saturated -- a full queue stalls the whole input
         // row, matching a synchronous feature broadcast)
         if fed < steps && queues.iter().all(|&o| o < queue_cap) {
-            for occ in queues.iter_mut() {
-                if !rng.chance(sparsity) {
+            let row = &hot[fed as usize * q..(fed as usize + 1) * q];
+            offered += q as u64;
+            for (occ, &h) in queues.iter_mut().zip(row) {
+                if h {
                     *occ += 1; // nonzero feature enqueued
+                    admitted += 1;
                 }
             }
             fed += 1;
@@ -142,6 +186,8 @@ pub fn simulate(
         cycles,
         static_cycles,
         macs,
+        offered,
+        admitted,
         dsps: d,
         queues: q,
     }
@@ -212,6 +258,48 @@ mod tests {
         assert!(st.delay() > 1.5, "delay {:.3}", st.delay());
         // but efficiency is perfect: DSPs never idle
         assert!(st.efficiency() > 0.95);
+    }
+
+    #[test]
+    fn stream_simulation_counts_admissions_exactly() {
+        // 3 queues, 4 steps, known zero pattern: 6 admitted, 6 dropped
+        let hot = [
+            true, false, true, false, false, false, true, true, true, false,
+            true, false,
+        ];
+        let st = simulate_stream(3, 3, &hot, 8);
+        assert_eq!(st.macs, 6);
+        assert_eq!(st.skipped_macs(), 6);
+        assert_eq!(st.static_cycles, 4);
+    }
+
+    #[test]
+    fn skipped_macs_counts_admission_drops_not_backlog() {
+        // q=32, d=1, fully dense: the safety valve truncates long
+        // before the backlog drains, but zero candidates were dropped
+        // by admission -- skipped_macs must say 0, not the backlog
+        let hot = vec![true; 32 * 100];
+        let st = simulate_stream(32, 1, &hot, 1024);
+        assert_eq!(st.skipped_macs(), 0);
+        assert_eq!(st.offered, 3200);
+        assert!(st.macs < st.admitted, "valve truncated the drain");
+    }
+
+    #[test]
+    fn sampled_simulation_is_a_stream_simulation() {
+        // simulate() must be exactly simulate_stream over the flags it
+        // would sample -- same seed, same stats
+        let mut r1 = Rng::new(42);
+        let a = simulate(5, 2, 200, 0.4, 8, &mut r1);
+        let mut r2 = Rng::new(42);
+        let mut hot = Vec::new();
+        for _ in 0..200 {
+            for _ in 0..5 {
+                hot.push(!r2.chance(0.4));
+            }
+        }
+        let b = simulate_stream(5, 2, &hot, 8);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -349,6 +349,111 @@ fn prop_wire_concat_equals_stitched_segments() {
 }
 
 #[test]
+fn prop_kernel_f32_bit_identical_to_decode_then_dense() {
+    // compressed-domain GEMM == dense GEMM over the decoded tensor, bit
+    // for bit, across random shapes/sparsities (incl. all-zero and
+    // fully-dense banks), both claim geometries, any shard count, any
+    // worker count / job grain
+    use rfc_hypgcn::rfc::kernel::{gemm_dense_f32, spmm_f32, GemmF32, KernelConfig};
+    use rfc_hypgcn::rfc::{self, EncoderConfig};
+    let mut rng = Rng::new(0x6E33);
+    for case in 0..60 {
+        let aligned = case % 2 == 0;
+        let (rows, k, g) = if aligned {
+            // bank-aligned k, 1..3 GEMM rows per tensor row
+            (1 + rng.below(6), (1 + rng.below(4)) * BANK_WIDTH, 1 + rng.below(3))
+        } else {
+            // k covers the whole (possibly unaligned) row
+            (1 + rng.below(6), 1 + rng.below(70), 1)
+        };
+        let n = 1 + rng.below(20);
+        let sparsity = match case % 5 {
+            0 => 0.0, // fully dense banks
+            1 => 1.0, // all-zero banks
+            _ => rng.f64(),
+        };
+        let t = Tensor::random_sparse(vec![rows, g * k], sparsity, 5000 + case);
+        let cfg = EncoderConfig {
+            shards: 1 + rng.below(4),
+            min_sparsity: 0.0,
+            parallel_threshold: 0,
+        };
+        let ct = rfc::encode(&t, &cfg);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.f32() * 4.0 - 2.0).collect();
+        let gemm = GemmF32::new(w, k, n).unwrap();
+        let m = rows * g;
+        let reference = gemm_dense_f32(&ct.to_tensor().data, m, &gemm);
+        for kcfg in [
+            KernelConfig::serial(),
+            KernelConfig {
+                workers: 1 + rng.below(6),
+                rows_per_job: 1 + rng.below(3),
+                par_threshold_macs: 0,
+            },
+        ] {
+            let (y, stats) = spmm_f32(&ct, &gemm, &kcfg).unwrap();
+            assert_eq!(y.data.len(), reference.len(), "case {case}");
+            for (a, b) in y.data.iter().zip(&reference) {
+                assert_eq!(a.to_bits(), b.to_bits(), "case {case}");
+            }
+            assert_eq!(
+                stats.hot_lanes + stats.skipped_lanes,
+                t.len() as u64,
+                "case {case}: lane accounting"
+            );
+            assert_eq!(
+                stats.hot_lanes as usize,
+                t.data.iter().filter(|&&v| v != 0.0).count(),
+                "case {case}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_kernel_q88_bit_identical_to_quant_matmul_ref() {
+    use rfc_hypgcn::quant::{quant_matmul_ref, quantize_slice};
+    use rfc_hypgcn::rfc::kernel::{spmm_q88, GemmF32, KernelConfig};
+    use rfc_hypgcn::rfc::{self, EncoderConfig};
+    let mut rng = Rng::new(0xABBA);
+    for case in 0..40 {
+        let rows = 1 + rng.below(5);
+        let k = if case % 2 == 0 {
+            (1 + rng.below(3)) * BANK_WIDTH
+        } else {
+            1 + rng.below(50)
+        };
+        let n = 1 + rng.below(12);
+        let sparsity = match case % 5 {
+            0 => 0.0,
+            1 => 1.0,
+            _ => rng.f64(),
+        };
+        let t = Tensor::random_sparse(vec![rows, k], sparsity, 7000 + case);
+        let cfg = EncoderConfig {
+            shards: 1 + rng.below(3),
+            min_sparsity: 0.0,
+            parallel_threshold: 0,
+        };
+        let ct = rfc::encode(&t, &cfg);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let gemm = GemmF32::new(w, k, n).unwrap().quantize();
+        let xq = quantize_slice(&ct.to_tensor().data);
+        let reference = quant_matmul_ref(&xq, gemm.raw_weights(), rows, k, n);
+        for workers in [1usize, 3] {
+            let kcfg = KernelConfig {
+                workers,
+                rows_per_job: 1,
+                par_threshold_macs: 0,
+            };
+            let (yq, stats) = spmm_q88(&ct, &gemm, &kcfg).unwrap();
+            assert_eq!(yq, reference, "case {case} workers {workers}");
+            assert_eq!(stats.gemm_rows, rows as u64, "case {case}");
+        }
+    }
+}
+
+#[test]
 fn prop_runtime_compress_roundtrip_any_shard_count() {
     use rfc_hypgcn::rfc::{self, EncoderConfig};
     let mut rng = Rng::new(8);

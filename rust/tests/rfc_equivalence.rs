@@ -185,6 +185,45 @@ fn wire_stream_identical_between_sim_and_runtime() {
 }
 
 #[test]
+fn kernel_skipped_lanes_match_sim_dyn_pe_admission() {
+    // the sim cost model and the runtime kernel must agree on how many
+    // MAC candidates sparsity eliminates: feed the same tensor's zero
+    // pattern to both.  One Dyn-Mult-PE queue per bank lane (q = 16),
+    // one input step per bank -- the Logic-AND admission then drops
+    // exactly the lanes the kernel's hot bitmaps skip.
+    use rfc_hypgcn::rfc::kernel::{spmm_f32, GemmF32, KernelConfig};
+    use rfc_hypgcn::sim::dyn_pe;
+    let mut rng = Rng::new(0x51AB);
+    for case in 0..20u64 {
+        let rows = 1 + rng.below(5);
+        let k = (1 + rng.below(4)) * sim_rfc::BANK_WIDTH;
+        let t = sparse_tensor(vec![rows, k], rng.f64(), 4000 + case);
+        let ct = rfc::encode(&t, &cfg(1 + (case as usize % 3)));
+
+        let n = 1 + rng.below(8);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.f32()).collect();
+        let gemm = GemmF32::new(w, k, n).unwrap();
+        let (_, stats) = spmm_f32(&ct, &gemm, &KernelConfig::serial()).unwrap();
+
+        // bank-aligned rows: the row-major zero pattern is also the
+        // bank-major admission stream
+        let hot: Vec<bool> = t.data.iter().map(|&v| v != 0.0).collect();
+        let pe = dyn_pe::simulate_stream(
+            sim_rfc::BANK_WIDTH,
+            sim_rfc::BANK_WIDTH,
+            &hot,
+            4,
+        );
+        assert_eq!(pe.macs, stats.hot_lanes, "case {case}: admitted MACs");
+        assert_eq!(
+            pe.skipped_macs(),
+            stats.skipped_lanes,
+            "case {case}: sim admission drop vs kernel skipped lanes"
+        );
+    }
+}
+
+#[test]
 fn compression_ratio_tracks_sim_cost_model_accounting() {
     // per-bank wire cost must match the sim model's accounting:
     // 16 bits per packed value + (16 + 4) sidecar bits per bank

@@ -9,7 +9,9 @@
 use std::path::Path;
 
 use rfc_hypgcn::meta::Manifest;
-use rfc_hypgcn::runtime::{Engine, Tensor};
+use rfc_hypgcn::rfc::kernel::{GemmF32, KernelConfig};
+use rfc_hypgcn::rfc::{EncoderConfig, Payload};
+use rfc_hypgcn::runtime::{Engine, StagePlan, Tensor};
 
 fn artifacts() -> Option<Manifest> {
     let dir = Manifest::default_dir();
@@ -59,6 +61,69 @@ fn executable_cache_dedupes() {
     let b = engine.load_hlo(&dir).unwrap();
     assert!(std::sync::Arc::ptr_eq(&a, &b));
     assert_eq!(engine.cached(), 1);
+}
+
+/// A stage *remainder* the stub interpreter can run (ReLU over the
+/// leading GEMM's `[8, 16]` output): what an AOT stage compiled without
+/// its leading GEMM looks like to [`StagePlan`]'s fast path.
+const RELU_REMAINDER_HLO: &str = r#"
+HloModule relu_remainder, entry_computation_layout={(f32[8,16]{1,0})->(f32[8,16]{1,0})}
+
+ENTRY main {
+  x = f32[8,16]{1,0} parameter(0)
+  zero = f32[] constant(0)
+  zb = f32[8,16]{1,0} broadcast(zero), dimensions={}
+  relu = f32[8,16]{1,0} maximum(x, zb)
+  ROOT out = (f32[8,16]{1,0}) tuple(relu)
+}
+"#;
+
+#[test]
+fn planned_stage_entry_elides_decode_and_matches_decode_path() {
+    let path = std::env::temp_dir().join("rfc_relu_remainder.txt");
+    std::fs::write(&path, RELU_REMAINDER_HLO).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let exe = engine.load_hlo(&path).unwrap();
+    let enc = EncoderConfig {
+        shards: 1,
+        min_sparsity: 0.10,
+        parallel_threshold: usize::MAX,
+    };
+    let t = Tensor::random_sparse(vec![8, 64], 0.7, 61);
+    let w: Vec<f32> = (0..64 * 16)
+        .map(|i| ((i % 11) as f32 - 5.0) / 4.0)
+        .collect();
+    let gemm = GemmF32::new(w, 64, 16).unwrap();
+    let plan = StagePlan::new(gemm.clone()).with_kernel(KernelConfig::serial());
+
+    let p = Payload::from_tensor(t.clone(), &enc);
+    assert!(p.is_compressed());
+    let (fast, entry) = exe
+        .run_payload_planned(p, &enc, Some(&plan))
+        .unwrap();
+    assert!(entry.decode_elided, "compressed payload must take the kernel path");
+    let stats = entry.kernel.unwrap();
+    assert_eq!(stats.hot_lanes + stats.skipped_lanes, 8 * 64);
+    assert!(stats.skipped_lanes > 0);
+
+    // decode-then-dense-GEMM through the same remainder: bit-identical
+    let y = Tensor::new(
+        vec![8, 16],
+        rfc_hypgcn::rfc::kernel::gemm_dense_f32(&t.data, 8, &gemm),
+    )
+    .unwrap();
+    let reference = exe.run1(&[y.clone()]).unwrap();
+    assert_eq!(fast.shape, reference.shape);
+    for (a, b) in fast.data.iter().zip(&reference.data) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    // a payload the plan cannot claim falls back to the lazy decode
+    let (slow, entry) = exe
+        .run_payload_planned(Payload::Dense(y), &enc, Some(&plan))
+        .unwrap();
+    assert!(!entry.decode_elided);
+    assert_eq!(slow, reference);
 }
 
 #[test]
