@@ -287,6 +287,8 @@ fn emit_json(m: usize, k: usize, n: usize, rows: &[KernelRow]) {
     }
 }
 
+const SECTIONS: [&str; 4] = ["codec", "wire", "batch", "kernel"];
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let section = args
@@ -294,6 +296,15 @@ fn main() {
         .position(|a| a == "--section")
         .and_then(|i| args.get(i + 1))
         .cloned();
+    // a typo'd section would otherwise run nothing and exit 0, and the
+    // CI symptom (missing BENCH_rfc.json at artifact upload) points far
+    // away from the cause
+    if let Some(s) = section.as_deref() {
+        if !SECTIONS.contains(&s) {
+            eprintln!("unknown --section {s:?} (expected one of {SECTIONS:?})");
+            std::process::exit(2);
+        }
+    }
     let want = |name: &str| section.as_deref().map_or(true, |s| s == name);
     if want("codec") {
         codec_section();

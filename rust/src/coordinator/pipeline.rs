@@ -24,7 +24,7 @@ use anyhow::{Context, Result};
 
 use crate::meta::Manifest;
 use crate::rfc::{EncoderConfig, Payload};
-use crate::runtime::{Engine, Executable, StagePlan, Tensor};
+use crate::runtime::{Engine, Executable, StageEntry, StagePlan, Tensor};
 
 use super::metrics::Metrics;
 
@@ -90,18 +90,46 @@ impl Pipeline {
     }
 
     /// Attach leading-GEMM plans, one slot per stage (missing / `None`
-    /// slots keep the decode path).
-    pub fn with_plans(mut self, plans: Vec<Option<StagePlan>>) -> Pipeline {
+    /// slots keep the decode path).  Stage 1 can never be planned (it
+    /// always runs its full executable: it owns the request-layout
+    /// transpose), and a plan beyond the stage count has no stage to
+    /// run its remainder -- both would leave a remainder executable
+    /// running without its GEMM, so they are rejected here instead of
+    /// being silently ignored by the execution paths.
+    pub fn with_plans(mut self, plans: Vec<Option<StagePlan>>) -> Result<Pipeline> {
+        anyhow::ensure!(
+            plans.first().map_or(true, Option::is_none),
+            "stage 1 cannot take a plan: it always runs its full executable"
+        );
+        anyhow::ensure!(
+            plans
+                .iter()
+                .enumerate()
+                .all(|(i, p)| p.is_none() || i < self.stages.len()),
+            "plan attached beyond the {}-stage pipeline",
+            self.stages.len()
+        );
         self.plans = plans.into_iter().map(|p| p.map(Arc::new)).collect();
-        self
+        Ok(self)
     }
 
-    /// Attach one stage's plan in place.
-    pub fn set_plan(&mut self, stage: usize, plan: StagePlan) {
+    /// Attach one stage's plan in place (same index rules as
+    /// [`Pipeline::with_plans`]).
+    pub fn set_plan(&mut self, stage: usize, plan: StagePlan) -> Result<()> {
+        anyhow::ensure!(
+            stage > 0,
+            "stage 1 cannot take a plan: it always runs its full executable"
+        );
+        anyhow::ensure!(
+            stage < self.stages.len(),
+            "stage index {stage} is beyond the {}-stage pipeline",
+            self.stages.len()
+        );
         if self.plans.len() <= stage {
             self.plans.resize(stage + 1, None);
         }
         self.plans[stage] = Some(Arc::new(plan));
+        Ok(())
     }
 
     pub fn has_plans(&self) -> bool {
@@ -119,6 +147,14 @@ impl Pipeline {
     /// input is produced here by transposing the NCHW-ish request layout
     /// (the full-model artifacts do this inside their HLO instead).
     pub fn run_sync(&self, input: &Tensor) -> Result<Tensor> {
+        // a planned pipeline's stage executables are remainders compiled
+        // without their leading GEMMs; running them as-is would silently
+        // skip those GEMMs (the payload-aware entries apply them)
+        anyhow::ensure!(
+            !self.has_plans(),
+            "pipeline has stage plans (remainder executables): \
+             use run_payload_sync, which runs the planned GEMMs"
+        );
         // chain XLA literals stage-to-stage: no host Vec materialization
         // between blocks (SSPerf L3: two copies saved per boundary)
         let mut lit = nctv_to_ntvc(input)?.to_literal()?;
@@ -193,16 +229,39 @@ impl Pipeline {
                     }
                     out
                 }
-                _ => stage
-                    .run1(&[h])
-                    .with_context(|| format!("stage {} failed", j + 1))?,
+                // dense entry: a planned stage still runs its leading
+                // GEMM (run_payload_planned applies it densely; a plan
+                // that can never match this stage errors there), an
+                // unplanned stage runs as compiled -- and the entry is
+                // recorded either way, so this path's stage-entry
+                // counts line up with the spawned pipeline's
+                plan => {
+                    let (out, entry) = stage
+                        .run_payload_planned(Payload::Dense(h), enc, plan.as_deref())
+                        .with_context(|| format!("stage {} failed", j + 1))?;
+                    if let Some(m) = metrics {
+                        m.record_stage_entry(&entry);
+                    }
+                    out
+                }
             };
+        }
+        // the spawned pipeline records a head entry too (it receives a
+        // payload); count it here so both serving paths report the same
+        // decode-elision denominator
+        if let Some(m) = metrics {
+            m.record_stage_entry(&StageEntry::default());
         }
         self.head.run1(&[h]).context("head failed")
     }
 
     /// Per-stage wall times for one batch (profiling / Table V shape).
     pub fn time_stages(&self, input: &Tensor) -> Result<Vec<f64>> {
+        anyhow::ensure!(
+            !self.has_plans(),
+            "pipeline has stage plans (remainder executables): \
+             stage timings without their leading GEMMs would be wrong"
+        );
         let mut times = Vec::with_capacity(self.stages.len() + 1);
         let mut h = nctv_to_ntvc(input)?;
         for stage in &self.stages {
@@ -316,6 +375,13 @@ impl Pipeline {
                                 break; // downstream gone
                             }
                         }
+                        // the job (and its ctx) drops here: on the
+                        // serving path that disconnects the batch's
+                        // per-request reply channels, so submitters see
+                        // the failure instead of hanging (mirrors the
+                        // shard-cluster error path).  Raw handle users
+                        // counting outputs must not assume one output
+                        // per input on error.
                         Err(e) => eprintln!("{label} error: {e:#}"),
                     }
                 }
@@ -363,6 +429,182 @@ impl<Ctx: Send + 'static> PipelineHandle<Ctx> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::Ordering;
+
+    use crate::rfc::kernel::{gemm_dense_f32, GemmF32};
+
+    /// Stage 1 of the toy planned pipeline: reshape the transposed
+    /// request layout into GEMM rows (what the real stage-1 transpose +
+    /// feature flatten amounts to for the plan machinery).
+    const STAGE1_HLO: &str = r#"
+HloModule pipe_stage1, entry_computation_layout={(f32[1,4,4,4]{3,2,1,0})->(f32[4,16]{1,0})}
+
+ENTRY main {
+  x = f32[1,4,4,4]{3,2,1,0} parameter(0)
+  r = f32[4,16]{1,0} reshape(x)
+  ROOT out = (f32[4,16]{1,0}) tuple(r)
+}
+"#;
+
+    /// Stage 2 *remainder* (ReLU): per the [`StagePlan`] contract it is
+    /// compiled without the leading 16x16 GEMM the plan owns.
+    const REMAINDER_HLO: &str = r#"
+HloModule pipe_remainder, entry_computation_layout={(f32[4,16]{1,0})->(f32[4,16]{1,0})}
+
+ENTRY main {
+  x = f32[4,16]{1,0} parameter(0)
+  zero = f32[] constant(0)
+  zb = f32[4,16]{1,0} broadcast(zero), dimensions={}
+  relu = f32[4,16]{1,0} maximum(x, zb)
+  ROOT out = (f32[4,16]{1,0}) tuple(relu)
+}
+"#;
+
+    /// Head: identity (add 0), so logits equal the stage-2 output.
+    const HEAD_HLO: &str = r#"
+HloModule pipe_head, entry_computation_layout={(f32[4,16]{1,0})->(f32[4,16]{1,0})}
+
+ENTRY main {
+  x = f32[4,16]{1,0} parameter(0)
+  zero = f32[] constant(0)
+  zb = f32[4,16]{1,0} broadcast(zero), dimensions={}
+  s = f32[4,16]{1,0} add(x, zb)
+  ROOT out = (f32[4,16]{1,0}) tuple(s)
+}
+"#;
+
+    /// A two-stage + head pipeline whose stage 2 is a remainder behind a
+    /// 16x16 leading-GEMM plan.
+    fn planned_pipeline(tag: &str, k: usize) -> (Pipeline, GemmF32) {
+        let engine = Engine::cpu().unwrap();
+        let load = |name: &str, hlo: &str| {
+            let path = std::env::temp_dir().join(format!("rfc_pipe_{tag}_{name}.txt"));
+            std::fs::write(&path, hlo).unwrap();
+            engine.load_hlo(&path).unwrap()
+        };
+        let stages = vec![load("s1", STAGE1_HLO), load("s2", REMAINDER_HLO)];
+        let head = load("head", HEAD_HLO);
+        let w: Vec<f32> = (0..k * 16)
+            .map(|i| ((i % 9) as f32 - 4.0) / 4.0)
+            .collect();
+        let gemm = GemmF32::new(w, k, 16).unwrap();
+        let mut p = Pipeline {
+            stages,
+            head,
+            batch: 1,
+            seq_len: 4,
+            num_classes: 16,
+            plans: Vec::new(),
+        };
+        p.set_plan(1, StagePlan::new(gemm.clone())).unwrap();
+        (p, gemm)
+    }
+
+    fn enc() -> EncoderConfig {
+        EncoderConfig {
+            shards: 1,
+            min_sparsity: 0.10,
+            parallel_threshold: usize::MAX,
+        }
+    }
+
+    /// relu(x_t . w) for the toy pipeline, computed by hand.
+    fn expected_logits(x: &Tensor, gemm: &GemmF32) -> Vec<f32> {
+        let x_t = nctv_to_ntvc(x).unwrap();
+        gemm_dense_f32(&x_t.data, 4, gemm)
+            .into_iter()
+            .map(|v| v.max(0.0))
+            .collect()
+    }
+
+    #[test]
+    fn planned_stage_runs_its_gemm_on_dense_gate_rejects() {
+        // every element nonzero: the compression gate rejects, so the
+        // planned stage sees a *dense* payload -- its leading GEMM must
+        // still run before the remainder executable
+        let (pipeline, gemm) = planned_pipeline("dense", 16);
+        let data: Vec<f32> = (0..64).map(|i| ((i % 7) + 1) as f32).collect();
+        let x = Tensor::new(vec![1, 4, 4, 4], data).unwrap();
+        let m = Metrics::default();
+        let out = pipeline
+            .run_payload_sync(Payload::Dense(x.clone()), &enc(), Some(&m))
+            .unwrap();
+        let expect = expected_logits(&x, &gemm);
+        assert_eq!(out.shape, vec![4, 16]);
+        for (a, b) in out.data.iter().zip(&expect) {
+            assert_eq!(a.to_bits(), b.to_bits(), "dense fallback skipped the GEMM");
+        }
+        assert_eq!(m.gate.pre_rejects.load(Ordering::Relaxed), 1);
+        assert_eq!(m.decodes_elided.load(Ordering::Relaxed), 0);
+        // stage 2 (dense entry) + head: both serving paths count these
+        assert_eq!(m.decodes.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn planned_stage_claims_compressed_payloads_and_matches_dense() {
+        let (pipeline, gemm) = planned_pipeline("sparse", 16);
+        let data: Vec<f32> = (0..64)
+            .map(|i| if i % 5 == 0 { (i + 1) as f32 } else { 0.0 })
+            .collect();
+        let x = Tensor::new(vec![1, 4, 4, 4], data).unwrap();
+        let m = Metrics::default();
+        let out = pipeline
+            .run_payload_sync(Payload::Dense(x.clone()), &enc(), Some(&m))
+            .unwrap();
+        let expect = expected_logits(&x, &gemm);
+        for (a, b) in out.data.iter().zip(&expect) {
+            assert_eq!(a.to_bits(), b.to_bits(), "kernel path diverged");
+        }
+        assert_eq!(m.decodes_elided.load(Ordering::Relaxed), 1);
+        assert_eq!(m.decodes.load(Ordering::Relaxed), 1, "head entry only");
+        assert!(m.kernel_skipped_lanes.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn misplaced_plans_are_rejected() {
+        // stage 1 never consults a plan and out-of-range slots have no
+        // stage: attaching either would silently skip a GEMM, so the
+        // attach points refuse them up front
+        let (mut p1, gemm) = planned_pipeline("validate", 16);
+        assert!(p1.set_plan(0, StagePlan::new(gemm.clone())).is_err());
+        assert!(p1.set_plan(5, StagePlan::new(gemm.clone())).is_err());
+        assert!(p1.set_plan(1, StagePlan::new(gemm.clone())).is_ok());
+        let (p2, _) = planned_pipeline("validate2", 16);
+        assert!(p2
+            .with_plans(vec![Some(StagePlan::new(gemm.clone())), None])
+            .is_err());
+        let (p3, _) = planned_pipeline("validate3", 16);
+        assert!(p3
+            .with_plans(vec![None, None, Some(StagePlan::new(gemm))])
+            .is_err());
+    }
+
+    #[test]
+    fn run_sync_refuses_planned_pipelines() {
+        // a planned pipeline's stage executables are remainders: running
+        // them through the plan-unaware entries would skip every leading
+        // GEMM, so those entries refuse instead
+        let (pipeline, _) = planned_pipeline("guard", 16);
+        let x = Tensor::zeros(vec![1, 4, 4, 4]);
+        assert!(pipeline.run_sync(&x).is_err());
+        assert!(pipeline.time_stages(&x).is_err());
+    }
+
+    #[test]
+    fn plan_that_can_never_match_its_stage_errors_loudly() {
+        // k = 8 against a 16-wide stage input: the GEMM cannot apply, and
+        // running the remainder without it would be silently wrong
+        let (pipeline, _) = planned_pipeline("mismatch", 8);
+        let data: Vec<f32> = (0..64).map(|i| (i + 1) as f32).collect();
+        let x = Tensor::new(vec![1, 4, 4, 4], data).unwrap();
+        let err = pipeline
+            .run_payload_sync(Payload::Dense(x), &enc(), None)
+            .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("contraction axis"),
+            "expected a configuration error, got: {err:#}"
+        );
+    }
 
     #[test]
     fn transpose_layout() {

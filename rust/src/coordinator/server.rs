@@ -63,7 +63,8 @@ impl Server {
         enc: EncoderConfig,
         plans: Vec<Option<crate::runtime::StagePlan>>,
     ) -> Result<Server> {
-        let pipeline = Arc::new(Pipeline::load(engine, manifest)?.with_plans(plans));
+        let pipeline =
+            Arc::new(Pipeline::load(engine, manifest)?.with_plans(plans)?);
         let metrics = Arc::new(Metrics::default());
         let (submit_tx, submit_rx) = channel::<Request>();
         let handle = pipeline.spawn_metered::<Batch>(2, enc, Some(metrics.clone()));
@@ -165,7 +166,8 @@ impl Server {
         nodes: usize,
         plans: Vec<Option<crate::runtime::StagePlan>>,
     ) -> Result<Server> {
-        let pipeline = Arc::new(Pipeline::load(engine, manifest)?.with_plans(plans));
+        let pipeline =
+            Arc::new(Pipeline::load(engine, manifest)?.with_plans(plans)?);
         let metrics = Arc::new(Metrics::default());
         let (submit_tx, submit_rx) = channel::<Request>();
         let compute = if pipeline.has_plans() {

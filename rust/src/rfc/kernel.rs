@@ -30,9 +30,9 @@
 //! * **f32**: bit-identical to [`gemm_dense_f32`] over the decoded
 //!   tensor.  Both accumulate lane-ascending per output element, and a
 //!   skipped zero lane contributes `+-0.0` to a finite accumulation,
-//!   which never changes the bits (weights must be finite: a `NaN`/`inf`
-//!   weight against a zero activation would poison the dense path but be
-//!   skipped here).
+//!   which never changes the bits (a `NaN`/`inf` weight against a zero
+//!   activation would poison the dense path but be skipped here, so
+//!   [`GemmF32::new`] rejects non-finite weights).
 //! * **Q8.8**: bit-identical to [`crate::quant::quant_matmul_ref`] over
 //!   the quantized decoded tensor.  Packed values are quantized on the
 //!   fly; zero lanes quantize to 0 and wrapping integer accumulation is
@@ -66,6 +66,12 @@ impl GemmF32 {
             weights.len() == k * n,
             "weight buffer holds {} values for a {k}x{n} GEMM",
             weights.len()
+        );
+        // the bit-exactness contract rests on skipped zero lanes being
+        // no-ops, which a NaN/inf weight would break (NaN * 0 != 0)
+        ensure!(
+            weights.iter().all(|w| w.is_finite()),
+            "GEMM weights must be finite for input-skipping to be exact"
         );
         Ok(GemmF32 { k, n, w: weights })
     }
@@ -215,6 +221,15 @@ struct Geometry {
     row_len: usize,
 }
 
+/// The claim-geometry rule, single-sourced for the kernel
+/// ([`geometry`]) and the shape-level pre-checks
+/// (`StagePlan::claims_dims`): a `k`-row GEMM consumes `row_len`-element
+/// rows when `k` spans the whole row or splits it on exact bank
+/// boundaries (see module docs).
+pub fn claimable_row(row_len: usize, k: usize) -> bool {
+    row_len > 0 && (row_len == k || (k % BANK_WIDTH == 0 && row_len % k == 0))
+}
+
 fn geometry(ct: &CompressedTensor, k: usize, n: usize) -> Result<Geometry> {
     let (rows, row_len) = CompressedTensor::layout(&ct.shape);
     ensure!(row_len > 0, "cannot GEMM a zero-length row");
@@ -228,7 +243,7 @@ fn geometry(ct: &CompressedTensor, k: usize, n: usize) -> Result<Geometry> {
         });
     }
     ensure!(
-        k % BANK_WIDTH == 0 && row_len % k == 0,
+        claimable_row(row_len, k),
         "cannot claim row_len {row_len} with k {k}: k must equal row_len \
          or be a bank-aligned divisor of it"
     );
@@ -674,6 +689,15 @@ mod tests {
         for (a, b) in yd.data.iter().zip(&reference) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn non_finite_weights_are_rejected() {
+        assert!(GemmF32::new(vec![1.0, f32::NAN], 2, 1).is_err());
+        assert!(GemmF32::new(vec![f32::INFINITY, 0.0], 1, 2).is_err());
+        let w = Tensor::new(vec![1, 2], vec![0.0, f32::NEG_INFINITY]).unwrap();
+        assert!(GemmF32::from_tensor(&w).is_err());
+        assert!(GemmF32::new(vec![0.0; 4], 2, 2).is_ok());
     }
 
     #[test]

@@ -137,9 +137,13 @@ impl Executable {
     /// computed directly over the bank segments (input-skipping, no
     /// decode) and only the result is handed to the executable -- which,
     /// per the [`StagePlan`] contract, is the stage *remainder* compiled
-    /// without that GEMM.  Everything else falls back to
-    /// [`Executable::run_payload`]'s lazy decode.  The returned
-    /// [`StageEntry`] says which path ran (fed to
+    /// without that GEMM.  A payload the plan cannot claim in compressed
+    /// form (dense after a compression-gate reject, or bank geometry
+    /// that does not line up) is decoded and the GEMM runs densely
+    /// ([`StagePlan::apply_dense`]) before the remainder -- the GEMM is
+    /// part of the stage and must run on *every* path through it.
+    /// Unplanned stages keep [`Executable::run_payload`]'s lazy decode.
+    /// The returned [`StageEntry`] says which path ran (fed to
     /// `coordinator::Metrics::record_stage_entry` on the serving path).
     pub fn run_payload_planned(
         &self,
@@ -147,7 +151,10 @@ impl Executable {
         cfg: &crate::rfc::EncoderConfig,
         plan: Option<&StagePlan>,
     ) -> Result<(Tensor, StageEntry)> {
-        if let (Some(plan), crate::rfc::Payload::Compressed(ct)) = (plan, &payload) {
+        let Some(plan) = plan else {
+            return Ok((self.run_payload(payload, cfg)?, StageEntry::default()));
+        };
+        if let crate::rfc::Payload::Compressed(ct) = &payload {
             if plan.claims(ct) {
                 let (y, stats) = plan.apply(ct)?;
                 let out = self.run1(&[y])?;
@@ -160,7 +167,8 @@ impl Executable {
                 ));
             }
         }
-        Ok((self.run_payload(payload, cfg)?, StageEntry::default()))
+        let y = plan.apply_dense(&payload.into_dense(cfg))?;
+        Ok((self.run1(&[y])?, StageEntry::default()))
     }
 
     /// Execute literal -> literal without any host `Vec` round-trip:

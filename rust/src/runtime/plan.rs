@@ -9,15 +9,16 @@
 //! compressed-domain kernel ([`crate::rfc::kernel`]), so the decode on
 //! stage entry disappears entirely for compressed payloads.  Payloads the
 //! plan cannot claim (dense, or bank geometry that does not line up)
-//! fall back to the lazy-decode path unchanged -- attaching a plan never
-//! changes results, only where the GEMM runs.
+//! decode and run the GEMM densely ([`StagePlan::apply_dense`]) before
+//! the remainder -- attaching a plan never changes results, only where
+//! the GEMM runs.  An input the GEMM can never apply to (trailing axis
+//! != contraction axis) is a configuration error and fails loudly.
 
 use anyhow::{ensure, Result};
 
 use crate::meta::BlockMeta;
 use crate::rfc::{kernel, CompressedTensor, GemmF32, KernelConfig, SpmmStats};
 use crate::runtime::Tensor;
-use crate::sim::rfc::BANK_WIDTH;
 
 /// A claimable leading-GEMM description for one pipeline stage.
 #[derive(Debug, Clone)]
@@ -77,12 +78,36 @@ impl StagePlan {
             return false;
         }
         let (_, row_len) = CompressedTensor::layout(shape);
-        row_len > 0 && (row_len == k || (k % BANK_WIDTH == 0 && row_len % k == 0))
+        kernel::claimable_row(row_len, k)
     }
 
     /// Run the leading GEMM over the compressed payload.
     pub fn apply(&self, ct: &CompressedTensor) -> Result<(Tensor, SpmmStats)> {
         kernel::spmm_f32(ct, &self.gemm, &self.kernel)
+    }
+
+    /// Run the leading GEMM densely over a stage input the compressed
+    /// path could not claim (dense gate reject, or bank geometry that
+    /// does not line up).  The executable behind a plan is the stage
+    /// *remainder*, so the GEMM must still run on every fallback --
+    /// skipping it would feed pre-GEMM data into the remainder and
+    /// produce silently wrong results.  An input whose trailing axis is
+    /// not the contraction axis is a configuration error: that plan can
+    /// never match this stage, and it is surfaced here rather than
+    /// papered over.
+    pub fn apply_dense(&self, x: &Tensor) -> Result<Tensor> {
+        let (k, n) = (self.gemm.k(), self.gemm.n());
+        ensure!(
+            x.shape.last() == Some(&k),
+            "planned stage input {:?} does not end in the GEMM \
+             contraction axis {k}: the plan cannot apply to this stage",
+            x.shape
+        );
+        let m = x.len() / k;
+        let data = kernel::gemm_dense_f32(&x.data, m, &self.gemm);
+        let mut shape = x.shape.clone();
+        *shape.last_mut().unwrap() = n;
+        Tensor::new(shape, data)
     }
 }
 
@@ -128,6 +153,27 @@ mod tests {
         let (y, stats) = plan(32, 8).apply(&ct).unwrap();
         assert_eq!(y.shape, vec![2, 5, 8]);
         assert_eq!(stats.gemm_rows, 10);
+    }
+
+    #[test]
+    fn apply_dense_runs_the_gemm_and_rejects_mismatched_axes() {
+        let p = plan(32, 8);
+        let t = Tensor::random_sparse(vec![2, 5, 32], 0.3, 9);
+        let y = p.apply_dense(&t).unwrap();
+        assert_eq!(y.shape, vec![2, 5, 8]);
+        let reference = kernel::gemm_dense_f32(&t.data, 10, p.gemm());
+        assert_eq!(y.data, reference);
+        // geometry the compressed path cannot claim (52 is not
+        // bank-aligned within a multi-row tensor) still applies densely
+        let u = Tensor::random_sparse(vec![3, 2, 52], 0.3, 10);
+        let pu = plan(52, 4);
+        assert!(!pu.claims_dims(&u.shape));
+        let yu = pu.apply_dense(&u).unwrap();
+        assert_eq!(yu.shape, vec![3, 2, 4]);
+        assert_eq!(yu.data, kernel::gemm_dense_f32(&u.data, 6, pu.gemm()));
+        // trailing-axis mismatch is a loud configuration error, never a
+        // silent GEMM skip
+        assert!(p.apply_dense(&Tensor::zeros(vec![2, 16])).is_err());
     }
 
     #[test]

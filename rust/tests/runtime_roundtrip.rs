@@ -112,18 +112,31 @@ fn planned_stage_entry_elides_decode_and_matches_decode_path() {
         rfc_hypgcn::rfc::kernel::gemm_dense_f32(&t.data, 8, &gemm),
     )
     .unwrap();
-    let reference = exe.run1(&[y.clone()]).unwrap();
+    let reference = exe.run1(&[y]).unwrap();
     assert_eq!(fast.shape, reference.shape);
     for (a, b) in fast.data.iter().zip(&reference.data) {
         assert_eq!(a.to_bits(), b.to_bits());
     }
 
-    // a payload the plan cannot claim falls back to the lazy decode
+    // a dense stage *input* (what a compression-gate reject delivers)
+    // must still go through the plan's GEMM before the remainder: the
+    // executable is the stage remainder, so skipping the GEMM on the
+    // fallback would silently feed it pre-GEMM data
     let (slow, entry) = exe
-        .run_payload_planned(Payload::Dense(y), &enc, Some(&plan))
+        .run_payload_planned(Payload::Dense(t.clone()), &enc, Some(&plan))
         .unwrap();
     assert!(!entry.decode_elided);
-    assert_eq!(slow, reference);
+    assert_eq!(slow.shape, reference.shape);
+    for (a, b) in slow.data.iter().zip(&reference.data) {
+        assert_eq!(a.to_bits(), b.to_bits(), "dense fallback skipped the GEMM");
+    }
+
+    // an input the plan can never match (wrong trailing axis) is a
+    // configuration error, not a silent remainder-only run
+    let bad = Tensor::zeros(vec![8, 16]);
+    assert!(exe
+        .run_payload_planned(Payload::Dense(bad), &enc, Some(&plan))
+        .is_err());
 }
 
 #[test]
