@@ -64,7 +64,11 @@ fn main() -> anyhow::Result<()> {
     let mut class_histogram = vec![0usize; manifest.num_classes];
     for rx in rxs {
         let resp = rx.recv()?;
-        class_histogram[resp.predicted] += 1;
+        // error responses carry no logits; don't let them skew the
+        // histogram toward class 0
+        if resp.is_ok() {
+            class_histogram[resp.predicted] += 1;
+        }
     }
     let wall = t_sub.elapsed().as_secs_f64();
     println!(

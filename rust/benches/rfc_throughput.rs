@@ -2,7 +2,8 @@
 //! kernel throughput vs their dense baselines (runs without AOT
 //! artifacts).
 //!
-//! Sections (run all, or one via `-- --section <codec|wire|batch|kernel>`):
+//! Sections (run all, or one via
+//! `-- --section <codec|wire|batch|kernel|node>`):
 //!
 //! * `codec`  -- encode/decode throughput and wire-size ratio vs dense
 //!   transport plus the memcpy baseline;
@@ -11,7 +12,10 @@
 //! * `kernel` -- dense GEMM vs decode+dense GEMM vs compressed-domain
 //!   (input-skipping) GEMM across sparsities.  Also emits the
 //!   machine-readable `BENCH_rfc.json` at the repo root so the perf
-//!   trajectory is recorded run over run (CI uploads it as an artifact).
+//!   trajectory is recorded run over run (CI uploads it as an artifact);
+//! * `node`   -- shard-cluster batch round-trip over the loopback link
+//!   vs localhost TCP node agents (the socket transport's framing +
+//!   syscall overhead on top of identical wire bytes).
 
 use std::time::Instant;
 
@@ -287,7 +291,82 @@ fn emit_json(m: usize, k: usize, n: usize, rows: &[KernelRow]) {
     }
 }
 
-const SECTIONS: [&str; 4] = ["codec", "wire", "batch", "kernel"];
+fn node_section() {
+    use rfc_hypgcn::coordinator::{
+        dense_entry, spawn_local_agents, ShardCluster, ShardFn,
+    };
+    use rfc_hypgcn::rfc::Payload;
+    use std::sync::Arc;
+
+    // a cheap row-local model, so the measurement is dominated by the
+    // transport (split, frame, ship, reassemble), not the compute
+    let classes = 8usize;
+    let model: ShardFn = Arc::new(move |t| {
+        let rows = t.shape[0];
+        let row: usize = t.shape[1..].iter().product();
+        let mut out = vec![0f32; rows * classes];
+        for r in 0..rows {
+            let s: f32 = t.data[r * row..(r + 1) * row].iter().sum();
+            for (c, slot) in
+                out[r * classes..(r + 1) * classes].iter_mut().enumerate()
+            {
+                *slot = s * (c + 1) as f32;
+            }
+        }
+        rfc_hypgcn::runtime::Tensor::new(vec![rows, classes], out)
+    });
+    let enc = serial_cfg();
+    let shape = vec![8usize, 64, 25, 64];
+    let bytes: usize = shape.iter().product::<usize>() * 4;
+    let nodes = 2usize;
+    let iters = 8;
+
+    println!(
+        "\nnode transport -- {nodes}-node cluster round trip, shape {shape:?} \
+         ({:.1} MB dense)",
+        bytes as f64 / 1e6
+    );
+    println!(
+        "{:>8}  {:>12}  {:>12}  {:>12}  {:>9}",
+        "sparsity", "frame MB", "loop ms", "tcp ms", "tcp MB/s"
+    );
+    for s10 in [50u64, 90] {
+        let sparsity = s10 as f64 / 100.0;
+        let t = sparse_tensor(shape.clone(), sparsity, 342 + s10);
+        let p = Payload::from_tensor(t, &enc);
+        let frame_mb = p.transport_bits() as f64 / 8.0 / 1e6;
+
+        let mut loopback =
+            ShardCluster::loopback(nodes, model.clone(), enc);
+        let loop_t = time_it(iters, || {
+            std::hint::black_box(loopback.infer(&p, None).unwrap());
+        });
+        loopback.shutdown();
+
+        let (agents, addrs) =
+            spawn_local_agents(nodes, dense_entry(model.clone(), enc), enc)
+                .unwrap();
+        let mut tcp = ShardCluster::connect(&addrs, enc).unwrap();
+        let tcp_t = time_it(iters, || {
+            std::hint::black_box(tcp.infer(&p, None).unwrap());
+        });
+        tcp.shutdown();
+        for a in agents {
+            a.shutdown();
+        }
+
+        println!(
+            "{:>7.0}%  {:>12.2}  {:>12.3}  {:>12.3}  {:>9.1}",
+            sparsity * 100.0,
+            frame_mb,
+            loop_t.mean_s * 1e3,
+            tcp_t.mean_s * 1e3,
+            frame_mb / tcp_t.mean_s,
+        );
+    }
+}
+
+const SECTIONS: [&str; 5] = ["codec", "wire", "batch", "kernel", "node"];
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
@@ -317,5 +396,8 @@ fn main() {
     }
     if want("kernel") {
         kernel_section();
+    }
+    if want("node") {
+        node_section();
     }
 }

@@ -24,7 +24,7 @@ use crate::rfc::{CompressedTensor, Payload, BANK_SIDECAR_BITS};
 use crate::runtime::Tensor;
 use crate::sim::rfc::{BANK_WIDTH, ELEM_BITS};
 
-use super::request::{Batch, Request};
+use super::request::{Batch, Request, Response};
 
 /// Batching policy knobs.
 #[derive(Debug, Clone)]
@@ -81,8 +81,7 @@ impl Batcher {
                 // nothing pending: block until a request shows up
                 match rx.recv() {
                     Ok(r) => {
-                        self.validate(&r);
-                        self.pending.push(r);
+                        self.admit(r);
                         continue;
                     }
                     Err(_) => return None,
@@ -97,8 +96,7 @@ impl Batcher {
             }
             match rx.recv_timeout(wait) {
                 Ok(r) => {
-                    self.validate(&r);
-                    self.pending.push(r);
+                    self.admit(r);
                 }
                 Err(RecvTimeoutError::Timeout) => return Some(self.form()),
                 Err(RecvTimeoutError::Disconnected) => {
@@ -112,13 +110,30 @@ impl Batcher {
         }
     }
 
-    fn validate(&self, r: &Request) {
-        debug_assert_eq!(
-            r.clip.len(),
-            3 * self.policy.seq_len * NUM_JOINTS,
-            "request {} clip length mismatch",
-            r.id
-        );
+    /// Intake gate: a clip that does not match the batch's fixed row
+    /// shape is answered with an error [`Response`] and dropped -- it
+    /// must never reach [`Batcher::form`], where a wrong-length clip
+    /// would panic the batcher thread (`copy_from_slice` on the dense
+    /// path, `encode_slice(..).expect(..)` on the compressed path) and
+    /// silently wedge the server.  `Server::submit` rejects these
+    /// up-front too; this gate keeps the batcher safe against any
+    /// direct-intake producer.
+    fn admit(&mut self, r: Request) {
+        let want = 3 * self.policy.seq_len * NUM_JOINTS;
+        if r.clip.len() != want {
+            let _ = r.reply.send(Response::failure(
+                r.id,
+                format!(
+                    "malformed clip: {} values, batch row wants {want} \
+                     (3 x {} x {NUM_JOINTS})",
+                    r.clip.len(),
+                    self.policy.seq_len
+                ),
+                r.arrived,
+            ));
+            return;
+        }
+        self.pending.push(r);
     }
 
     fn form(&mut self) -> Batch {
@@ -130,19 +145,24 @@ impl Batcher {
         // cheap pre-gate: under saturating load batches are full of
         // dense coordinate clips, where encoding just to discard it
         // would be pure waste -- a padded batch always goes the
-        // compressed route, a full batch only if a sampled prefix of
-        // each clip suggests enough zeros
+        // compressed route, a full batch only if a strided sample of
+        // each clip suggests enough zeros.  The sample is the same
+        // rotating-offset sampler `Payload::from_tensor`'s pre-gate
+        // uses: clips are (3, T, V) coordinate-major, so a prefix probe
+        // would see only x-coordinates of early frames and misjudge
+        // sparsity concentrated in later frames or other axes
         let worth_encoding = pad_rows > 0 || {
-            let probe = row.min(256);
-            let zeros: usize = requests
+            let (zeros, sampled) = requests
                 .iter()
-                .map(|r| {
-                    r.clip.iter().take(probe).filter(|&&v| v == 0.0).count()
-                })
-                .sum();
-            probe > 0
-                && zeros as f64 / (requests.len() * probe) as f64
-                    >= self.encoder.min_sparsity
+                .map(|r| crate::rfc::sampled_zeros(&r.clip))
+                .fold((0usize, 0usize), |(az, an), (z, n)| (az + z, an + n));
+            sampled > 0
+                && !crate::rfc::sampled_sparsity_below(
+                    zeros,
+                    sampled,
+                    requests.len() * row,
+                    self.encoder.min_sparsity,
+                )
         };
         let mut input = None;
         if worth_encoding {
@@ -207,6 +227,17 @@ impl Batcher {
             requests.len() <= policy.batch_size,
             "too many requests for one batch"
         );
+        // this path bypasses the intake gate, so enforce its contract
+        // here -- form() is allowed to assume exact-length clips
+        let want = 3 * policy.seq_len * NUM_JOINTS;
+        for r in &requests {
+            anyhow::ensure!(
+                r.clip.len() == want,
+                "request {}: clip has {} values, batch row wants {want}",
+                r.id,
+                r.clip.len()
+            );
+        }
         let mut b = Batcher::new(policy.clone());
         b.pending = requests;
         Ok(b.form())
@@ -370,6 +401,107 @@ mod tests {
         );
         assert_eq!(batch.input.shape(), &[0]);
         assert_eq!(batch.input.transport_bits(), 0);
+    }
+
+    #[test]
+    fn malformed_clip_gets_error_response_and_batcher_survives() {
+        // Regression: a wrong-length clip used to reach form(), where
+        // the dense path's copy_from_slice (or the compressed path's
+        // encode_slice().expect()) panicked the batcher thread in
+        // release builds -- after which every subsequent request was
+        // silently dropped forever.  The intake gate must answer the
+        // bad request with an error Response and keep batching.
+        let policy = BatchPolicy {
+            batch_size: 2,
+            max_wait: Duration::from_millis(1),
+            seq_len: 8,
+        };
+        let (tx, rx) = channel();
+        let (bad_tx, bad_rx) = channel();
+        tx.send(Request {
+            id: 99,
+            clip: vec![1.0; 17], // nowhere near 3 * 8 * NUM_JOINTS
+            seq_len: 8,
+            arrived: Instant::now(),
+            reply: bad_tx,
+        })
+        .unwrap();
+        let (good, good_rx) = req(1, 8);
+        tx.send(good).unwrap();
+        let mut b = Batcher::new(policy);
+        let batch = b.next_batch(&rx).unwrap();
+        // the bad clip was answered, not batched
+        let resp = bad_rx.try_recv().expect("error response delivered");
+        assert!(!resp.is_ok());
+        assert!(resp.error.as_deref().unwrap().contains("malformed clip"));
+        assert_eq!(resp.id, 99);
+        // the good clip still made it into a (padded) batch
+        assert_eq!(batch.real, 1);
+        assert_eq!(batch.requests[0].id, 1);
+        drop(good_rx);
+    }
+
+    #[test]
+    fn pre_gate_sees_sparsity_beyond_the_clip_prefix() {
+        // Regression: the old pre-gate probed only the first
+        // min(row, 256) elements of each clip.  Clips are (3, T, V)
+        // coordinate-major, so that prefix is x-coordinates of early
+        // frames -- a clip that is dense there but sparse elsewhere was
+        // wrongly shipped dense.  The strided sampler must see the
+        // zeros and let the exact gate compress the batch.
+        let policy = BatchPolicy {
+            batch_size: 2,
+            max_wait: Duration::from_millis(1),
+            seq_len: 8,
+        };
+        let row = 3 * 8 * NUM_JOINTS; // 600 > the old 256-element probe
+        let clip: Vec<f32> = (0..row)
+            .map(|i| if i < 256 { 1.0 } else { 0.0 })
+            .collect();
+        assert!(
+            (row - 256) as f64 / row as f64 > 0.5,
+            "fixture must be mostly sparse overall"
+        );
+        let reqs: Vec<Request> = (1..=2)
+            .map(|i| {
+                let (tx, _rx) = channel();
+                std::mem::forget(_rx);
+                Request {
+                    id: i,
+                    clip: clip.clone(),
+                    seq_len: 8,
+                    arrived: Instant::now(),
+                    reply: tx,
+                }
+            })
+            .collect();
+        // full batch (no padding): the pre-gate alone decides whether
+        // the encode is even attempted
+        let batch = Batcher::form_from(&policy, reqs).unwrap();
+        let ct = batch
+            .input
+            .as_compressed()
+            .expect("prefix-dense clip must still compress");
+        ct.validate().unwrap();
+        assert_eq!(ct.nnz(), 2 * 256, "exactly the dense prefixes stored");
+    }
+
+    #[test]
+    fn form_from_rejects_wrong_length_clips() {
+        let policy = BatchPolicy {
+            batch_size: 2,
+            max_wait: Duration::from_millis(1),
+            seq_len: 8,
+        };
+        let (tx, _rx) = channel();
+        let bad = Request {
+            id: 1,
+            clip: vec![0.0; 5],
+            seq_len: 8,
+            arrived: Instant::now(),
+            reply: tx,
+        };
+        assert!(Batcher::form_from(&policy, vec![bad]).is_err());
     }
 
     #[test]

@@ -44,8 +44,17 @@ impl NodeTransport {
 pub struct Metrics {
     pub requests_in: AtomicU64,
     pub responses_out: AtomicU64,
+    /// requests answered with an error [`super::request::Response`]
+    /// (malformed submission, failed batch) instead of logits
+    pub failures: AtomicU64,
     pub batches: AtomicU64,
     pub padded_rows: AtomicU64,
+    /// real (non-padding) rows, recorded at batch-formation time --
+    /// the padding-fraction denominator.  `responses_out` is recorded
+    /// at *delivery* time, so using it would skew the fraction while
+    /// batches are in flight and permanently over-count padding after
+    /// a failed batch (whose rows are never delivered)
+    pub real_rows: AtomicU64,
     /// bits shipped on the batcher -> stage-1 edge (RFC compressed form).
     /// Scope note: inter-stage payload boundaries re-encode inside the
     /// pipeline threads and are not recorded here, so this understates
@@ -78,8 +87,10 @@ impl Default for Metrics {
         Metrics {
             requests_in: AtomicU64::new(0),
             responses_out: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             padded_rows: AtomicU64::new(0),
+            real_rows: AtomicU64::new(0),
             transport_bits: AtomicU64::new(0),
             transport_dense_bits: AtomicU64::new(0),
             gate: GateStats::default(),
@@ -102,6 +113,7 @@ impl Metrics {
 
     pub fn record_batch(&self, real: usize, padded_to: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
+        self.real_rows.fetch_add(real as u64, Ordering::Relaxed);
         self.padded_rows
             .fetch_add((padded_to - real) as u64, Ordering::Relaxed);
     }
@@ -206,6 +218,14 @@ impl Metrics {
         self.latencies_s.lock().unwrap().push(latency_s);
     }
 
+    /// Record one request answered with an error response (malformed
+    /// submission or a failed batch).  Kept out of the latency
+    /// reservoir: an instant rejection would drag the percentiles away
+    /// from what served traffic actually experienced.
+    pub fn record_failure(&self) {
+        self.failures.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Completed responses per second since start.
     pub fn throughput_fps(&self) -> f64 {
         let n = self.responses_out.load(Ordering::Relaxed) as f64;
@@ -225,10 +245,15 @@ impl Metrics {
         percentile(&self.latencies_s.lock().unwrap(), 99.0)
     }
 
-    /// Fraction of executed rows that were padding (batching efficiency).
+    /// Fraction of executed rows that were padding (batching
+    /// efficiency).  Both counters are recorded together in
+    /// [`Metrics::record_batch`], so the fraction is exact even while
+    /// batches are in flight or after a failed batch -- the old
+    /// `responses_out` denominator was recorded at delivery time and
+    /// went stale in both cases.
     pub fn padding_fraction(&self) -> f64 {
         let pads = self.padded_rows.load(Ordering::Relaxed) as f64;
-        let real = self.responses_out.load(Ordering::Relaxed) as f64;
+        let real = self.real_rows.load(Ordering::Relaxed) as f64;
         if pads + real > 0.0 {
             pads / (pads + real)
         } else {
@@ -258,6 +283,10 @@ impl Metrics {
                 self.kernel_skip_fraction() * 100.0,
             ));
         }
+        let failures = self.failures.load(Ordering::Relaxed);
+        if failures > 0 {
+            s.push_str(&format!(" failures={failures}"));
+        }
         let pre = self.gate.pre_rejects.load(Ordering::Relaxed);
         if pre > 0 {
             s.push_str(&format!(" gate_pre_rejects={pre}"));
@@ -284,14 +313,28 @@ mod tests {
         m.record_request();
         m.record_request();
         m.record_batch(2, 4);
+        // the batch is still in flight (no responses yet): the padding
+        // fraction must already be exact -- the old responses_out
+        // denominator read 2/(2+0) = 1.0 here
+        assert_eq!(m.padded_rows.load(Ordering::Relaxed), 2);
+        assert_eq!(m.real_rows.load(Ordering::Relaxed), 2);
+        assert!((m.padding_fraction() - 0.5).abs() < 1e-12);
         m.record_response(0.010);
         m.record_response(0.020);
         assert_eq!(m.requests_in.load(Ordering::Relaxed), 2);
-        assert_eq!(m.padded_rows.load(Ordering::Relaxed), 2);
         assert!((m.padding_fraction() - 0.5).abs() < 1e-12);
         let s = m.latency_summary();
         assert_eq!(s.n, 2);
         assert!((s.mean_s - 0.015).abs() < 1e-12);
+        // a failed batch's rows never deliver: the fraction must not
+        // drift when a later batch errors out after formation
+        m.record_batch(2, 4);
+        assert!((m.padding_fraction() - 0.5).abs() < 1e-12);
+        m.record_failure();
+        m.record_failure();
+        assert_eq!(m.failures.load(Ordering::Relaxed), 2);
+        assert!(m.report().contains("failures=2"));
+        assert!((m.padding_fraction() - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -7,13 +7,18 @@
 //!   blocks + head (the software mirror of the paper's on-chip pipeline);
 //! * [`server`] -- intake/delivery threads wiring it together;
 //! * [`shard`] -- multi-node layer: batches split by row shard, shipped
-//!   as RFC wire bytes over [`shard::NodeLink`]s to per-node stage
-//!   workers, results reassembled in the coordinator;
+//!   as RFC wire bytes over [`shard::NodeLink`]s (in-process loopback or
+//!   TCP sockets) to per-node stage workers, results reassembled in the
+//!   coordinator;
+//! * [`node`] -- the worker-node agent serving the far end of a
+//!   [`shard::TcpLink`]: handshake, frame-service loop, error-frame
+//!   replies;
 //! * [`metrics`] -- throughput/latency accounting, including per-node
 //!   shard link traffic.
 
 pub mod batcher;
 pub mod metrics;
+pub mod node;
 pub mod pipeline;
 pub mod request;
 pub mod router;
@@ -22,10 +27,12 @@ pub mod shard;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::{Metrics, NodeTransport};
+pub use node::{serve_node, spawn_local_agents, NodeAgent};
 pub use pipeline::{Pipeline, PipelineHandle};
 pub use request::{Batch, Request, Response};
 pub use router::{RouteInfo, Router, RouterConfig, Variant};
 pub use server::Server;
 pub use shard::{
     dense_entry, LoopbackLink, NodeLink, PayloadShardFn, ShardCluster, ShardFn,
+    TcpLink,
 };

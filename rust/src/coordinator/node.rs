@@ -1,0 +1,256 @@
+//! The worker-node agent: the far end of a [`super::shard::TcpLink`].
+//!
+//! A node process binds a `TcpListener`, builds its shard compute (for
+//! real serving, [`super::pipeline::Pipeline::payload_shard_fn`] over
+//! its own copy of the artifacts), and parks in [`serve_node`].  Each
+//! coordinator connection gets the one-shot version handshake, then the
+//! same frame-service loop the loopback workers run
+//! ([`super::shard::spawn_worker`]): read a shard frame, run the
+//! compute, reply with the re-gated result -- or with an error frame,
+//! so a compute failure travels the same channel as a result instead of
+//! killing the node.
+//!
+//! Failure containment per connection:
+//!
+//! * a compute error replies with a [`crate::rfc::wire::error_frame`]
+//!   and the connection keeps serving;
+//! * a *framing* error (garbage or oversized outer length prefix,
+//!   truncated frame, handshake skew) drops that connection only --
+//!   framing is a stream-level contract, there is no way to resync
+//!   mid-stream -- and the listener keeps accepting;
+//! * the coordinator hanging up ends the connection loop normally.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::rfc::{wire, EncoderConfig};
+
+use super::shard::{run_frame, PayloadShardFn};
+
+/// Serve coordinator connections on `listener` forever (the blocking
+/// node-process entry point).  Every accepted connection is serviced on
+/// its own thread ([`handle_conn`] -> [`serve_conn`]); accept errors
+/// are transient-logged and the loop continues.  For an in-process,
+/// stoppable agent (tests, benches, embedded nodes) use
+/// [`NodeAgent::spawn`].
+pub fn serve_node(
+    listener: TcpListener,
+    compute: PayloadShardFn,
+    enc: EncoderConfig,
+) -> Result<()> {
+    accept_loop(
+        listener,
+        compute,
+        enc,
+        Arc::new(AtomicBool::new(false)),
+        Arc::new(Mutex::new(Vec::new())),
+    );
+    Ok(())
+}
+
+/// Severing handles for the live connections, keyed by connection id.
+/// `TcpStream::shutdown` acts on the socket across every duplicated
+/// descriptor, which is what lets [`NodeAgent::shutdown`] unblock
+/// handler threads parked in `read`.
+type ConnRegistry = Arc<Mutex<Vec<(u64, TcpStream)>>>;
+
+fn accept_loop(
+    listener: TcpListener,
+    compute: PayloadShardFn,
+    enc: EncoderConfig,
+    stop: Arc<AtomicBool>,
+    conns: ConnRegistry,
+) {
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    let mut next_id = 0u64;
+    loop {
+        // reap finished handlers so a long-lived node does not grow a
+        // JoinHandle per connection forever
+        handlers.retain(|h| !h.is_finished());
+        let stream = match listener.accept() {
+            Ok((stream, _peer)) => stream,
+            Err(e) => {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                eprintln!("node accept error: {e}");
+                // transient accept failures (fd pressure) should not
+                // spin the loop hot
+                std::thread::sleep(std::time::Duration::from_millis(50));
+                continue;
+            }
+        };
+        if stop.load(Ordering::SeqCst) {
+            break; // the shutdown nudge connection; drop it
+        }
+        let id = next_id;
+        next_id += 1;
+        let compute = compute.clone();
+        let (stop, conns) = (stop.clone(), conns.clone());
+        handlers.push(std::thread::spawn(move || {
+            handle_conn(id, stream, &compute, &enc, &stop, &conns)
+        }));
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+/// One connection's lifecycle: register a severing handle, serve, then
+/// shut the socket down across all descriptors and deregister -- the
+/// peer sees EOF/RST the moment service ends, and the registry never
+/// accumulates dead entries.
+fn handle_conn(
+    id: u64,
+    stream: TcpStream,
+    compute: &PayloadShardFn,
+    enc: &EncoderConfig,
+    stop: &AtomicBool,
+    conns: &ConnRegistry,
+) {
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "<unknown peer>".into());
+    if let Ok(clone) = stream.try_clone() {
+        conns.lock().unwrap().push((id, clone));
+    }
+    // re-check AFTER registering: a shutdown that raced past this
+    // connection's registration has already drained the registry, so
+    // the stop flag (stored before the drain) is the fallback signal
+    if !stop.load(Ordering::SeqCst) {
+        if let Err(e) = serve_conn(&stream, &peer, compute, enc) {
+            eprintln!("node connection {peer}: {e:#}");
+        }
+    }
+    // close the socket across every dup (the registry holds one), so
+    // the coordinator actually observes the drop instead of blocking
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+    conns.lock().unwrap().retain(|(cid, _)| *cid != id);
+}
+
+/// Service one coordinator connection: handshake, then frames until the
+/// peer hangs up or the stream framing breaks.
+fn serve_conn(
+    stream: &TcpStream,
+    peer: &str,
+    compute: &PayloadShardFn,
+    enc: &EncoderConfig,
+) -> Result<()> {
+    let _ = stream.set_nodelay(true);
+    let mut writer = BufWriter::new(stream);
+    let mut reader = BufReader::new(stream);
+    // symmetric exchange, ours first: a version-skewed coordinator still
+    // learns what this node speaks before the connection drops
+    wire::write_handshake(&mut writer)?;
+    wire::expect_handshake(&mut reader).context("coordinator handshake")?;
+    loop {
+        // a read failure here is the coordinator hanging up (normal) or
+        // broken framing (drop the connection; new connects still work)
+        let frame = match wire::read_frame(&mut reader) {
+            Ok(f) => f,
+            Err(e) => {
+                // a clean hangup fails the 4-byte length read with EOF
+                // (context "reading frame length"); anything else --
+                // oversized prefix, mid-frame truncation -- is broken
+                // or hostile framing and must be diagnosable in the log
+                let msg = format!("{e:#}");
+                if !msg.contains("reading frame length") {
+                    eprintln!("node connection {peer}: framing error: {msg}");
+                }
+                return Ok(());
+            }
+        };
+        let reply = run_frame(&frame, compute, enc)
+            .unwrap_or_else(|e| wire::error_frame(&format!("node {peer}: {e:#}")));
+        wire::write_frame(&mut writer, &reply)
+            .context("replying to coordinator")?;
+    }
+}
+
+/// Spawn `n` ephemeral-port localhost agents all running `compute`:
+/// the scaffold every TCP conformance test and bench builds its cluster
+/// from (connect the returned addresses with
+/// [`super::shard::ShardCluster::connect`], and shut the agents down
+/// after the cluster).  Production nodes run [`serve_node`] standalone
+/// instead.
+pub fn spawn_local_agents(
+    n: usize,
+    compute: PayloadShardFn,
+    enc: EncoderConfig,
+) -> Result<(Vec<NodeAgent>, Vec<SocketAddr>)> {
+    let mut agents = Vec::with_capacity(n.max(1));
+    let mut addrs = Vec::with_capacity(n.max(1));
+    for _ in 0..n.max(1) {
+        let listener = TcpListener::bind("127.0.0.1:0")
+            .context("binding ephemeral agent listener")?;
+        addrs.push(listener.local_addr().context("agent local addr")?);
+        agents.push(NodeAgent::spawn(listener, compute.clone(), enc)?);
+    }
+    Ok((agents, addrs))
+}
+
+/// An in-process node agent: [`serve_node`] on a background thread with
+/// a deterministic [`NodeAgent::shutdown`].  This is what the TCP
+/// conformance tests and benches run; a real deployment calls
+/// [`serve_node`] from its own main.
+pub struct NodeAgent {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    conns: ConnRegistry,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl NodeAgent {
+    /// Bind-and-go: spawn the accept loop for `listener` (bind to port 0
+    /// for an ephemeral localhost agent).
+    pub fn spawn(
+        listener: TcpListener,
+        compute: PayloadShardFn,
+        enc: EncoderConfig,
+    ) -> Result<NodeAgent> {
+        let addr = listener.local_addr().context("agent local addr")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let (stop, conns) = (stop.clone(), conns.clone());
+            std::thread::spawn(move || {
+                accept_loop(listener, compute, enc, stop, conns)
+            })
+        };
+        Ok(NodeAgent {
+            addr,
+            stop,
+            conns,
+            accept: Some(accept),
+        })
+    }
+
+    /// The address coordinators connect to.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, sever every live connection (a coordinator
+    /// mid-batch sees the peer-death error path), and join the agent
+    /// threads.
+    pub fn shutdown(mut self) {
+        // order matters: the stop flag is stored before the registry
+        // drain, so a handler whose registration raced past the drain
+        // still observes it (see `handle_conn`)
+        self.stop.store(true, Ordering::SeqCst);
+        for (_, c) in self.conns.lock().unwrap().drain(..) {
+            let _ = c.shutdown(std::net::Shutdown::Both);
+        }
+        // nudge the blocking accept so it observes the stop flag
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}

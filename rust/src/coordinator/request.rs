@@ -25,6 +25,10 @@ pub struct Response {
     pub predicted: usize,
     /// end-to-end latency (queue + batch + pipeline), seconds
     pub latency_s: f64,
+    /// why serving failed for this request, when it did (`logits` is
+    /// empty then).  A malformed request or a failed batch delivers one
+    /// of these instead of silently disconnecting the reply channel.
+    pub error: Option<String>,
 }
 
 impl Response {
@@ -40,7 +44,24 @@ impl Response {
             logits,
             predicted,
             latency_s: arrived.elapsed().as_secs_f64(),
+            error: None,
         }
+    }
+
+    /// A failure answer: no logits, an explanation instead.
+    pub fn failure(id: u64, error: String, arrived: Instant) -> Self {
+        Response {
+            id,
+            logits: Vec::new(),
+            predicted: 0,
+            latency_s: arrived.elapsed().as_secs_f64(),
+            error: Some(error),
+        }
+    }
+
+    /// Whether this response carries logits rather than an error.
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
     }
 }
 
@@ -72,5 +93,15 @@ mod tests {
         assert_eq!(r.predicted, 1);
         assert_eq!(r.id, 3);
         assert!(r.latency_s >= 0.0);
+        assert!(r.is_ok());
+    }
+
+    #[test]
+    fn failure_response_carries_the_error() {
+        let r = Response::failure(9, "bad clip".into(), Instant::now());
+        assert!(!r.is_ok());
+        assert_eq!(r.error.as_deref(), Some("bad clip"));
+        assert!(r.logits.is_empty());
+        assert_eq!(r.id, 9);
     }
 }

@@ -2,17 +2,19 @@
 //! pipeline -> response delivery, all on std threads (no Python, no async
 //! runtime dependency).
 
+use std::net::ToSocketAddrs;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::meta::Manifest;
+use crate::model::NUM_JOINTS;
 use crate::rfc::EncoderConfig;
-use crate::runtime::Engine;
+use crate::runtime::{Engine, Tensor};
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
@@ -20,6 +22,56 @@ use super::pipeline::{Job, Pipeline};
 use super::request::{Batch, Request, Response};
 use super::router::{Router, RouterConfig};
 use super::shard::ShardCluster;
+
+/// Release-mode delivery contract: the logits a batch is sliced from
+/// must actually be `(rows >= requests, num_classes)` -- a mis-sized
+/// node or stage reply would otherwise slice the wrong rows (or panic)
+/// in release builds, where the old `debug_assert` was compiled out.
+fn check_logits(logits: &Tensor, requests: usize, num_classes: usize) -> Result<()> {
+    ensure!(
+        logits.shape.len() == 2 && logits.shape[1] == num_classes,
+        "delivery expects (batch, {num_classes}) logits, got {:?}",
+        logits.shape
+    );
+    ensure!(
+        logits.shape[0] >= requests,
+        "logits carry {} rows for a batch of {requests} requests",
+        logits.shape[0]
+    );
+    Ok(())
+}
+
+/// Deliver one batch outcome to its requesters: per-request logits rows
+/// on success, an error [`Response`] to every requester on failure --
+/// submitters get an answer either way instead of a silently
+/// disconnected reply channel.
+fn deliver(batch: Batch, result: Result<Tensor>, num_classes: usize, metrics: &Metrics) {
+    let checked = result.and_then(|logits| {
+        check_logits(&logits, batch.requests.len(), num_classes)?;
+        Ok(logits)
+    });
+    match checked {
+        Ok(logits) => {
+            for (i, req) in batch.requests.into_iter().enumerate() {
+                let row = logits.data[i * num_classes..(i + 1) * num_classes]
+                    .to_vec();
+                let resp = Response::from_logits(req.id, row, req.arrived);
+                metrics.record_response(resp.latency_s);
+                let _ = req.reply.send(resp);
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            eprintln!("batch delivery failed: {msg}");
+            for req in batch.requests {
+                metrics.record_failure();
+                let _ = req
+                    .reply
+                    .send(Response::failure(req.id, msg.clone(), req.arrived));
+            }
+        }
+    }
+}
 
 /// Handle to a running server.
 pub struct Server {
@@ -100,6 +152,8 @@ impl Server {
         }
 
         // delivery thread: pipeline output -> per-request responses
+        // (a mis-shaped stage output fails the batch with error
+        // responses instead of slicing wrong rows)
         {
             let metrics = metrics.clone();
             let out = handle.output;
@@ -108,16 +162,7 @@ impl Server {
                 for job in out.iter() {
                     let batch: Batch = job.ctx;
                     let logits = job.payload.into_dense(&enc);
-                    debug_assert_eq!(logits.shape[1], num_classes);
-                    for (i, req) in batch.requests.into_iter().enumerate() {
-                        let row = logits.data
-                            [i * num_classes..(i + 1) * num_classes]
-                            .to_vec();
-                        let resp =
-                            Response::from_logits(req.id, row, req.arrived);
-                        metrics.record_response(resp.latency_s);
-                        let _ = req.reply.send(resp);
-                    }
+                    deliver(batch, Ok(logits), num_classes, &metrics);
                 }
             }));
         }
@@ -169,14 +214,74 @@ impl Server {
         let pipeline =
             Arc::new(Pipeline::load(engine, manifest)?.with_plans(plans)?);
         let metrics = Arc::new(Metrics::default());
-        let (submit_tx, submit_rx) = channel::<Request>();
         let compute = if pipeline.has_plans() {
             pipeline.payload_shard_fn(enc, Some(metrics.clone()))
         } else {
             super::shard::dense_entry(pipeline.shard_fn(), enc)
         };
-        let mut cluster = ShardCluster::loopback_payload(nodes, compute, enc);
-        let num_classes = manifest.num_classes;
+        let cluster = ShardCluster::loopback_payload(nodes, compute, enc);
+        Ok(Self::start_cluster_with_metrics(
+            policy,
+            enc,
+            cluster,
+            manifest.num_classes,
+            manifest.seq_len,
+            metrics,
+        ))
+    }
+
+    /// Start the coordinator over a **pre-built** shard cluster --
+    /// loopback workers, TCP links to remote node agents
+    /// ([`ShardCluster::connect`]), or any mix.  The nodes own the
+    /// model, so the coordinator needs no engine or artifacts here;
+    /// `num_classes` is the delivery contract the node replies are
+    /// checked against, and the batch shape follows `policy`.
+    pub fn start_cluster(
+        policy: BatchPolicy,
+        enc: EncoderConfig,
+        cluster: ShardCluster,
+        num_classes: usize,
+    ) -> Server {
+        let seq_len = policy.seq_len;
+        Self::start_cluster_with_metrics(
+            policy,
+            enc,
+            cluster,
+            num_classes,
+            seq_len,
+            Arc::new(Metrics::default()),
+        )
+    }
+
+    /// [`Server::start_cluster`] over TCP node agents at `addrs`
+    /// (connects one [`super::shard::TcpLink`] per address, with the
+    /// version handshake): the shard cluster spans real machines.
+    /// Links carry [`super::shard::DEFAULT_NODE_IO_TIMEOUT`], so a
+    /// silently-partitioned peer fails its batch instead of wedging the
+    /// coordinator thread forever.
+    pub fn connect_sharded<A: ToSocketAddrs>(
+        addrs: &[A],
+        policy: BatchPolicy,
+        enc: EncoderConfig,
+        num_classes: usize,
+    ) -> Result<Server> {
+        let cluster = ShardCluster::connect_timeout(
+            addrs,
+            enc,
+            Some(super::shard::DEFAULT_NODE_IO_TIMEOUT),
+        )?;
+        Ok(Self::start_cluster(policy, enc, cluster, num_classes))
+    }
+
+    fn start_cluster_with_metrics(
+        policy: BatchPolicy,
+        enc: EncoderConfig,
+        mut cluster: ShardCluster,
+        num_classes: usize,
+        seq_len: usize,
+        metrics: Arc<Metrics>,
+    ) -> Server {
+        let (submit_tx, submit_rx) = channel::<Request>();
         let mut threads = Vec::new();
 
         // one coordinator thread: batches form, fan out over the node
@@ -198,54 +303,59 @@ impl Server {
                     // real rows drive the fan-out: padding rows are
                     // sidecar-only and not worth extra shard frames
                     let fan = router.shards_for(batch.real, cluster.nodes());
-                    match cluster.infer_on(fan, &payload, Some(&metrics)) {
-                        Ok(logits) => {
-                            debug_assert_eq!(logits.shape[1], num_classes);
-                            for (i, req) in
-                                batch.requests.into_iter().enumerate()
-                            {
-                                let row = logits.data
-                                    [i * num_classes..(i + 1) * num_classes]
-                                    .to_vec();
-                                let resp = Response::from_logits(
-                                    req.id,
-                                    row,
-                                    req.arrived,
-                                );
-                                metrics.record_response(resp.latency_s);
-                                let _ = req.reply.send(resp);
-                            }
-                        }
-                        // dropping batch.requests disconnects the
-                        // per-request reply channels: submitters see the
-                        // failure instead of hanging
-                        Err(e) => eprintln!("shard cluster error: {e:#}"),
-                    }
+                    let result = cluster.infer_on(fan, &payload, Some(&metrics));
+                    // a failed batch (node death, mis-sized reply, stage
+                    // error) answers every requester with an error
+                    // response; the cluster drained its live links, so
+                    // the next batch starts clean
+                    deliver(batch, result, num_classes, &metrics);
                 }
                 cluster.shutdown();
             }));
         }
 
-        Ok(Server {
+        Server {
             submit_tx,
             metrics,
             num_classes,
-            seq_len: manifest.seq_len,
+            seq_len,
             next_id: AtomicU64::new(0),
             threads,
-        })
+        }
     }
 
     /// Submit one clip `(3, T, V)`; returns a receiver for the response.
+    ///
+    /// A clip whose length does not match the model's `3 * T * V` frame
+    /// contract is answered immediately with an error [`Response`] --
+    /// it never reaches the batcher, so one malformed submission cannot
+    /// poison a batch or (as it once did, via a release-mode
+    /// `copy_from_slice` panic) wedge the whole server.
     pub fn submit(&self, clip: Vec<f32>) -> Receiver<Response> {
         let (tx, rx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.metrics.record_request();
+        let arrived = Instant::now();
+        let want = 3 * self.seq_len * NUM_JOINTS;
+        if clip.len() != want {
+            self.metrics.record_failure();
+            let _ = tx.send(Response::failure(
+                id,
+                format!(
+                    "malformed clip: {} values, model wants {want} \
+                     (3 x {} x {NUM_JOINTS})",
+                    clip.len(),
+                    self.seq_len
+                ),
+                arrived,
+            ));
+            return rx;
+        }
         let req = Request {
             id,
             clip,
             seq_len: self.seq_len,
-            arrived: Instant::now(),
+            arrived,
             reply: tx,
         };
         // a closed intake only happens after shutdown(); drop silently.

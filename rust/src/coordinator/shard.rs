@@ -9,12 +9,15 @@
 //! `(hot, mbhot, packed)` data the RFC storage holds, serialized by
 //! [`crate::rfc::wire`] with **no decode/re-encode round trip**.
 //!
-//! Topology: one [`NodeLink`] per worker node.  The only link shipped
-//! here is the in-process [`LoopbackLink`] (byte channels between
-//! threads); a socket-backed link is a follow-up that implements the
-//! same trait against the same wire format -- the frames are already
-//! self-describing and length-prefixed.
+//! Topology: one [`NodeLink`] per worker node.  Two links ship here:
+//! the in-process [`LoopbackLink`] (byte channels between threads) and
+//! the socket-backed [`TcpLink`] (u32-length outer framing + one-shot
+//! version handshake over `std::net::TcpStream`, speaking to a
+//! [`super::node`] agent).  Both carry identical frames -- the loopback
+//! cluster tests double as the TCP conformance suite.
 
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -70,6 +73,125 @@ pub fn loopback_pair() -> (LoopbackLink, LoopbackLink) {
     )
 }
 
+/// Default per-I/O activity timeout [`Server::connect_sharded`] applies
+/// to its node links: generous enough for any real shard compute, small
+/// enough that a silently-partitioned peer (no RST/FIN ever arrives)
+/// cannot wedge the coordinator thread forever.
+///
+/// [`Server::connect_sharded`]: super::server::Server::connect_sharded
+pub const DEFAULT_NODE_IO_TIMEOUT: std::time::Duration =
+    std::time::Duration::from_secs(120);
+
+/// Socket-backed [`NodeLink`]: the same payload frames the loopback
+/// link carries, delimited on the byte stream by the
+/// [`wire::write_frame`] u32-length outer framing, with a one-shot
+/// [`wire::write_handshake`] version exchange on connect.  A peer that
+/// dies mid-batch surfaces as a `recv` error on the coordinator, which
+/// [`ShardCluster::infer_on`] treats exactly like a failed compute --
+/// the other nodes still drain.
+///
+/// Any send/recv failure (peer death, framing break, I/O timeout)
+/// **poisons the link**: the socket is shut down so a reply that
+/// arrives late can never be misread as a *later* batch's reply.  A
+/// timed-out link is dead, not one-batch-desynchronized.
+pub struct TcpLink {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    peer: String,
+}
+
+impl TcpLink {
+    /// Connect to a node agent (see [`super::node::serve_node`]) and run
+    /// the handshake: both ends send magic + wire version, then verify
+    /// the peer's.  Version skew or a non-RFC peer fails here, before
+    /// any shard frame is in flight.  No I/O timeout: a hung peer
+    /// blocks `recv` indefinitely -- serving paths should prefer
+    /// [`TcpLink::connect_timeout`].
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<TcpLink> {
+        Self::connect_timeout(addr, None)
+    }
+
+    /// [`TcpLink::connect`] with a per-I/O activity timeout: a read or
+    /// write that makes no progress for `io_timeout` fails (and
+    /// poisons) the link instead of blocking forever.  This is the
+    /// hung-peer guard -- a network partition with no RST/FIN would
+    /// otherwise park the coordinator in `recv` permanently.
+    pub fn connect_timeout<A: ToSocketAddrs>(
+        addr: A,
+        io_timeout: Option<std::time::Duration>,
+    ) -> Result<TcpLink> {
+        let stream = TcpStream::connect(addr).context("connecting node link")?;
+        stream
+            .set_read_timeout(io_timeout)
+            .context("setting link read timeout")?;
+        stream
+            .set_write_timeout(io_timeout)
+            .context("setting link write timeout")?;
+        Self::from_stream(stream)
+    }
+
+    /// Wrap an already-connected stream (either side: the exchange is
+    /// symmetric -- write ours, read theirs).
+    pub fn from_stream(stream: TcpStream) -> Result<TcpLink> {
+        let peer = stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "<unknown peer>".into());
+        // shard frames are one write / one reply: latency, not batching
+        let _ = stream.set_nodelay(true);
+        let mut writer = BufWriter::new(
+            stream.try_clone().context("cloning node stream")?,
+        );
+        let mut reader = BufReader::new(stream);
+        wire::write_handshake(&mut writer)
+            .with_context(|| format!("handshake to {peer}"))?;
+        wire::expect_handshake(&mut reader)
+            .with_context(|| format!("handshake from {peer}"))?;
+        Ok(TcpLink {
+            reader,
+            writer,
+            peer,
+        })
+    }
+
+    /// The peer address this link talks to (diagnostics).
+    pub fn peer(&self) -> &str {
+        &self.peer
+    }
+}
+
+impl TcpLink {
+    /// Sever the socket after an I/O failure so the link can never
+    /// deliver a stale (previous-batch) reply: a timed-out or
+    /// half-written stream has lost framing sync permanently.
+    fn poison(&self) {
+        let _ = self
+            .reader
+            .get_ref()
+            .shutdown(std::net::Shutdown::Both);
+    }
+}
+
+impl NodeLink for TcpLink {
+    fn send(&mut self, frame: Vec<u8>) -> Result<()> {
+        let r = wire::write_frame(&mut self.writer, &frame)
+            .with_context(|| format!("sending to node {}", self.peer));
+        if r.is_err() {
+            self.poison();
+        }
+        r
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        let r = wire::read_frame(&mut self.reader)
+            .with_context(|| format!("receiving from node {}", self.peer));
+        if r.is_err() {
+            self.poison();
+        }
+        r
+    }
+}
+
 /// The row-local compute one worker node runs on its shard -- for the
 /// serving pipeline this is the full stage chain
 /// ([`super::pipeline::Pipeline::shard_fn`]); tests substitute synthetic
@@ -94,9 +216,11 @@ pub fn dense_entry(compute: ShardFn, enc: EncoderConfig) -> PayloadShardFn {
 /// up.  Each frame's payload is handed to `compute` in transported form
 /// (dense-entry models decode via [`dense_entry`]), and the result is
 /// re-gated and framed for the reply; failures reply with an error frame
-/// instead of killing the node.
-pub fn spawn_worker(
-    mut link: LoopbackLink,
+/// instead of killing the node.  Generic over the link, so the same
+/// worker loop backs loopback clusters here and socket connections in
+/// [`super::node`].
+pub fn spawn_worker<L: NodeLink + 'static>(
+    mut link: L,
     compute: PayloadShardFn,
     enc: EncoderConfig,
     label: String,
@@ -114,7 +238,13 @@ pub fn spawn_worker(
     })
 }
 
-fn run_frame(frame: &[u8], compute: &PayloadShardFn, enc: &EncoderConfig) -> Result<Vec<u8>> {
+/// Service one shard frame: decode, compute, re-gate, frame the reply.
+/// Shared by [`spawn_worker`] and the node agent's connection loop.
+pub(crate) fn run_frame(
+    frame: &[u8],
+    compute: &PayloadShardFn,
+    enc: &EncoderConfig,
+) -> Result<Vec<u8>> {
     let payload = wire::payload_from_bytes(frame)?;
     let out = compute(payload)?;
     wire::payload_to_bytes(&Payload::from_tensor(out, enc))
@@ -185,6 +315,51 @@ impl ShardCluster {
         ShardCluster {
             links,
             workers,
+            enc,
+        }
+    }
+
+    /// Drive remote node agents over localhost/network TCP: one
+    /// [`TcpLink`] per address, handshake on connect.  The coordinator
+    /// treats the resulting cluster exactly like a loopback one -- same
+    /// split/reassemble, same drain-after-failure invariant when a peer
+    /// dies mid-batch.
+    pub fn connect<A: ToSocketAddrs>(
+        addrs: &[A],
+        enc: EncoderConfig,
+    ) -> Result<ShardCluster> {
+        Self::connect_timeout(addrs, enc, None)
+    }
+
+    /// [`ShardCluster::connect`] with a per-I/O activity timeout on
+    /// every link (see [`TcpLink::connect_timeout`]): the serving
+    /// path's guard against a hung-but-not-dead peer.
+    pub fn connect_timeout<A: ToSocketAddrs>(
+        addrs: &[A],
+        enc: EncoderConfig,
+        io_timeout: Option<std::time::Duration>,
+    ) -> Result<ShardCluster> {
+        ensure!(!addrs.is_empty(), "cluster needs at least one node address");
+        let mut links: Vec<Box<dyn NodeLink>> = Vec::with_capacity(addrs.len());
+        for (i, a) in addrs.iter().enumerate() {
+            links.push(Box::new(
+                TcpLink::connect_timeout(a, io_timeout)
+                    .with_context(|| format!("node {i}"))?,
+            ));
+        }
+        Ok(Self::from_links(links, enc))
+    }
+
+    /// A cluster over caller-built links (mixed transports, tests).  The
+    /// cluster owns no worker threads for these; whatever serves the far
+    /// end of each link outlives it.
+    pub fn from_links(
+        links: Vec<Box<dyn NodeLink>>,
+        enc: EncoderConfig,
+    ) -> ShardCluster {
+        ShardCluster {
+            links,
+            workers: Vec::new(),
             enc,
         }
     }
@@ -302,6 +477,52 @@ impl ShardCluster {
 mod tests {
     use super::*;
 
+    use crate::coordinator::node::{spawn_local_agents, NodeAgent};
+
+    /// Every cluster test below runs against both transports: the
+    /// in-process loopback link and real localhost TCP sockets served
+    /// by [`NodeAgent`]s.  This is the conformance contract -- above
+    /// the link layer the two are indistinguishable.
+    const TRANSPORTS: [&str; 2] = ["loopback", "tcp"];
+
+    /// Build a cluster over the named transport; the returned agents
+    /// (TCP only) must outlive the cluster and be shut down after it.
+    fn cluster_on(
+        transport: &str,
+        nodes: usize,
+        compute: PayloadShardFn,
+        enc: EncoderConfig,
+    ) -> (ShardCluster, Vec<NodeAgent>) {
+        match transport {
+            "loopback" => (
+                ShardCluster::loopback_payload(nodes, compute, enc),
+                Vec::new(),
+            ),
+            "tcp" => {
+                let (agents, addrs) =
+                    spawn_local_agents(nodes, compute, enc).unwrap();
+                (ShardCluster::connect(&addrs, enc).unwrap(), agents)
+            }
+            t => panic!("unknown transport {t}"),
+        }
+    }
+
+    fn dense_cluster_on(
+        transport: &str,
+        nodes: usize,
+        compute: ShardFn,
+        enc: EncoderConfig,
+    ) -> (ShardCluster, Vec<NodeAgent>) {
+        cluster_on(transport, nodes, dense_entry(compute, enc), enc)
+    }
+
+    fn teardown(cluster: ShardCluster, agents: Vec<NodeAgent>) {
+        cluster.shutdown();
+        for a in agents {
+            a.shutdown();
+        }
+    }
+
     /// Row-local toy model (deliberately simpler than the synthetic
     /// classifier the integration tests use): out[r][c] = (c+1) * sum(row).
     /// Row-locality is what makes shard + concat equal single-node.
@@ -350,13 +571,16 @@ mod tests {
     fn cluster_matches_single_node_for_all_shard_counts() {
         let t = Tensor::random_sparse(vec![8, 3, 4, 25], 0.6, 31);
         let expect = synth(10)(t.clone()).unwrap();
-        for nodes in [1usize, 2, 3, 4, 8] {
-            let mut cluster = ShardCluster::loopback(nodes, synth(10), enc());
-            let out = cluster
-                .infer(&Payload::Dense(t.clone()), None)
-                .unwrap();
-            assert_eq!(out, expect, "{nodes} nodes");
-            cluster.shutdown();
+        for transport in TRANSPORTS {
+            for nodes in [1usize, 2, 3, 4, 8] {
+                let (mut cluster, agents) =
+                    dense_cluster_on(transport, nodes, synth(10), enc());
+                let out = cluster
+                    .infer(&Payload::Dense(t.clone()), None)
+                    .unwrap();
+                assert_eq!(out, expect, "{transport}: {nodes} nodes");
+                teardown(cluster, agents);
+            }
         }
     }
 
@@ -366,23 +590,26 @@ mod tests {
         let e = enc();
         let p = Payload::from_tensor(t.clone(), &e);
         assert!(p.is_compressed());
-        let m = Metrics::default();
-        let mut cluster = ShardCluster::loopback(2, synth(6), e);
-        let out = cluster.infer(&p, Some(&m)).unwrap();
-        assert_eq!(out, synth(6)(t).unwrap());
-        cluster.shutdown();
-        let nodes = m.node_transport();
-        assert_eq!(nodes.len(), 2);
-        for (i, n) in nodes.iter().enumerate() {
-            assert_eq!(n.shards, 1, "node {i}");
-            // a 80%-sparse shard's frame is far smaller than dense rows
-            assert!(
-                n.tx_wire_bytes < n.tx_dense_bytes / 2,
-                "node {i}: {} vs {}",
-                n.tx_wire_bytes,
-                n.tx_dense_bytes
-            );
-            assert!(n.saving() > 0.0);
+        for transport in TRANSPORTS {
+            let m = Metrics::default();
+            let (mut cluster, agents) =
+                dense_cluster_on(transport, 2, synth(6), e);
+            let out = cluster.infer(&p, Some(&m)).unwrap();
+            assert_eq!(out, synth(6)(t.clone()).unwrap(), "{transport}");
+            teardown(cluster, agents);
+            let nodes = m.node_transport();
+            assert_eq!(nodes.len(), 2, "{transport}");
+            for (i, n) in nodes.iter().enumerate() {
+                assert_eq!(n.shards, 1, "{transport}: node {i}");
+                // a 80%-sparse shard's frame is far smaller than dense
+                assert!(
+                    n.tx_wire_bytes < n.tx_dense_bytes / 2,
+                    "{transport}: node {i}: {} vs {}",
+                    n.tx_wire_bytes,
+                    n.tx_dense_bytes
+                );
+                assert!(n.saving() > 0.0);
+            }
         }
     }
 
@@ -390,13 +617,22 @@ mod tests {
     fn more_nodes_than_rows_leaves_tail_nodes_idle() {
         let t = Tensor::random_sparse(vec![2, 3, 4, 25], 0.5, 33);
         let expect = synth(4)(t.clone()).unwrap();
-        let m = Metrics::default();
-        let mut cluster = ShardCluster::loopback(4, synth(4), enc());
-        let out = cluster.infer(&Payload::Dense(t), Some(&m)).unwrap();
-        assert_eq!(out, expect);
-        cluster.shutdown();
-        let nodes = m.node_transport();
-        assert_eq!(nodes.len(), 2, "only the first two nodes saw work");
+        for transport in TRANSPORTS {
+            let m = Metrics::default();
+            let (mut cluster, agents) =
+                dense_cluster_on(transport, 4, synth(4), enc());
+            let out = cluster
+                .infer(&Payload::Dense(t.clone()), Some(&m))
+                .unwrap();
+            assert_eq!(out, expect, "{transport}");
+            teardown(cluster, agents);
+            let nodes = m.node_transport();
+            assert_eq!(
+                nodes.len(),
+                2,
+                "{transport}: only the first two nodes saw work"
+            );
+        }
     }
 
     #[test]
@@ -430,16 +666,22 @@ mod tests {
         let e = enc();
         let p = Payload::from_tensor(t.clone(), &e);
         assert!(p.is_compressed());
-        let mut cluster = ShardCluster::loopback_payload(2, compute, e);
-        let out = cluster.infer(&p, None).unwrap();
-        cluster.shutdown();
-        assert_eq!(out.shape, vec![8, n]);
-        assert_eq!(out.data, kernel::gemm_dense_f32(&t.data, 8, &gemm));
-        assert_eq!(
-            elided.load(Ordering::Relaxed),
-            2,
-            "both shards arrived compressed and skipped the decode"
-        );
+        let expect = kernel::gemm_dense_f32(&t.data, 8, &gemm);
+        for transport in TRANSPORTS {
+            elided.store(0, Ordering::Relaxed);
+            let (mut cluster, agents) =
+                cluster_on(transport, 2, compute.clone(), e);
+            let out = cluster.infer(&p, None).unwrap();
+            teardown(cluster, agents);
+            assert_eq!(out.shape, vec![8, n], "{transport}");
+            assert_eq!(out.data, expect, "{transport}");
+            assert_eq!(
+                elided.load(Ordering::Relaxed),
+                2,
+                "{transport}: both shards arrived compressed and skipped \
+                 the decode"
+            );
+        }
     }
 
     #[test]
@@ -447,13 +689,18 @@ mod tests {
         let failing: ShardFn =
             Arc::new(|_t| Err(anyhow!("synthetic stage failure")));
         let t = Tensor::random_sparse(vec![4, 3, 4, 25], 0.5, 34);
-        let mut cluster = ShardCluster::loopback(2, failing, enc());
-        let err = cluster.infer(&Payload::Dense(t), None).unwrap_err();
-        assert!(
-            format!("{err:#}").contains("synthetic stage failure"),
-            "{err:#}"
-        );
-        cluster.shutdown();
+        for transport in TRANSPORTS {
+            let (mut cluster, agents) =
+                dense_cluster_on(transport, 2, failing.clone(), enc());
+            let err = cluster
+                .infer(&Payload::Dense(t.clone()), None)
+                .unwrap_err();
+            assert!(
+                format!("{err:#}").contains("synthetic stage failure"),
+                "{transport}: {err:#}"
+            );
+            teardown(cluster, agents);
+        }
     }
 
     #[test]
@@ -462,50 +709,66 @@ mod tests {
         // drain every in-flight reply so the *next* batch gets its own
         // results, not the failed batch's leftovers shifted by one
         use std::sync::atomic::{AtomicUsize, Ordering};
-        let inner = synth(4);
-        let calls = Arc::new(AtomicUsize::new(0));
-        let counter = calls.clone();
-        let flaky: ShardFn = Arc::new(move |t: Tensor| {
-            if counter.fetch_add(1, Ordering::SeqCst) == 0 {
-                Err(anyhow!("transient stage failure"))
-            } else {
-                inner(t)
-            }
-        });
         let reference = synth(4);
         let t1 = Tensor::random_sparse(vec![4, 3, 4, 25], 0.5, 41);
         let t2 = Tensor::random_sparse(vec![4, 3, 4, 25], 0.5, 42);
-        let mut cluster = ShardCluster::loopback(2, flaky, enc());
-        let err = cluster
-            .infer(&Payload::Dense(t1), None)
-            .unwrap_err();
-        assert!(format!("{err:#}").contains("transient"), "{err:#}");
-        // the very next batch on the same cluster must be correct
-        let out = cluster.infer(&Payload::Dense(t2.clone()), None).unwrap();
-        assert_eq!(out, reference(t2).unwrap());
-        assert_eq!(calls.load(Ordering::SeqCst), 4, "2 shards x 2 batches");
-        cluster.shutdown();
+        for transport in TRANSPORTS {
+            let inner = synth(4);
+            let calls = Arc::new(AtomicUsize::new(0));
+            let counter = calls.clone();
+            let flaky: ShardFn = Arc::new(move |t: Tensor| {
+                if counter.fetch_add(1, Ordering::SeqCst) == 0 {
+                    Err(anyhow!("transient stage failure"))
+                } else {
+                    inner(t)
+                }
+            });
+            let (mut cluster, agents) =
+                dense_cluster_on(transport, 2, flaky, enc());
+            let err = cluster
+                .infer(&Payload::Dense(t1.clone()), None)
+                .unwrap_err();
+            assert!(
+                format!("{err:#}").contains("transient"),
+                "{transport}: {err:#}"
+            );
+            // the very next batch on the same cluster must be correct
+            let out = cluster
+                .infer(&Payload::Dense(t2.clone()), None)
+                .unwrap();
+            assert_eq!(out, reference(t2.clone()).unwrap(), "{transport}");
+            assert_eq!(
+                calls.load(Ordering::SeqCst),
+                4,
+                "{transport}: 2 shards x 2 batches"
+            );
+            teardown(cluster, agents);
+        }
     }
 
     #[test]
     fn fan_out_keeps_small_batches_on_fewer_nodes() {
         let t = Tensor::random_sparse(vec![4, 3, 4, 25], 0.5, 43);
         let expect = synth(5)(t.clone()).unwrap();
-        let m = Metrics::default();
-        let mut cluster = ShardCluster::loopback(4, synth(5), enc());
-        let out = cluster
-            .infer_on(2, &Payload::Dense(t), Some(&m))
-            .unwrap();
-        assert_eq!(out, expect);
-        cluster.shutdown();
-        // only the first 2 nodes saw frames despite 4 being available
-        assert_eq!(m.node_transport().len(), 2);
-        // degenerate fan-outs clamp instead of panicking
-        let mut one = ShardCluster::loopback(1, synth(5), enc());
-        let t = Tensor::random_sparse(vec![2, 3, 4, 25], 0.5, 44);
-        assert!(one.infer_on(0, &Payload::Dense(t.clone()), None).is_ok());
-        assert!(one.infer_on(9, &Payload::Dense(t), None).is_ok());
-        one.shutdown();
+        for transport in TRANSPORTS {
+            let m = Metrics::default();
+            let (mut cluster, agents) =
+                dense_cluster_on(transport, 4, synth(5), enc());
+            let out = cluster
+                .infer_on(2, &Payload::Dense(t.clone()), Some(&m))
+                .unwrap();
+            assert_eq!(out, expect, "{transport}");
+            teardown(cluster, agents);
+            // only the first 2 nodes saw frames despite 4 available
+            assert_eq!(m.node_transport().len(), 2, "{transport}");
+            // degenerate fan-outs clamp instead of panicking
+            let (mut one, one_agents) =
+                dense_cluster_on(transport, 1, synth(5), enc());
+            let t = Tensor::random_sparse(vec![2, 3, 4, 25], 0.5, 44);
+            assert!(one.infer_on(0, &Payload::Dense(t.clone()), None).is_ok());
+            assert!(one.infer_on(9, &Payload::Dense(t), None).is_ok());
+            teardown(one, one_agents);
+        }
     }
 
     #[test]
@@ -516,8 +779,40 @@ mod tests {
             Ok(Tensor::zeros(vec![rows, 2]))
         });
         let t = Tensor::random_sparse(vec![4, 3, 4, 25], 0.5, 35);
-        let mut cluster = ShardCluster::loopback(2, bad, enc());
-        assert!(cluster.infer(&Payload::Dense(t), None).is_err());
-        cluster.shutdown();
+        for transport in TRANSPORTS {
+            let (mut cluster, agents) =
+                dense_cluster_on(transport, 2, bad.clone(), enc());
+            assert!(
+                cluster.infer(&Payload::Dense(t.clone()), None).is_err(),
+                "{transport}"
+            );
+            teardown(cluster, agents);
+        }
+    }
+
+    #[test]
+    fn tcp_peer_death_mid_batch_drains_the_live_nodes() {
+        // kill node 1's agent while the cluster is connected: the next
+        // batch fails (link error, not a hang), but node 0's in-flight
+        // reply must still be drained -- a stale reply left queued
+        // would be collected by the next batch and deliver wrong rows
+        let (mut cluster, mut agents) =
+            dense_cluster_on("tcp", 2, synth(4), enc());
+        agents.remove(1).shutdown();
+        let t1 = Tensor::random_sparse(vec![4, 3, 4, 25], 0.5, 45);
+        let err = cluster
+            .infer(&Payload::Dense(t1), None)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("node 1"), "{msg}");
+        // fan-out 1 hits only the (live, drained) node 0: the reply it
+        // gets must be for *this* batch, which the row-count check and
+        // the value assert both verify
+        let t2 = Tensor::random_sparse(vec![4, 3, 4, 25], 0.5, 46);
+        let out = cluster
+            .infer_on(1, &Payload::Dense(t2.clone()), None)
+            .unwrap();
+        assert_eq!(out, synth(4)(t2).unwrap());
+        teardown(cluster, agents);
     }
 }

@@ -23,7 +23,8 @@
 //!      compressed form), the layer-pipelined block executor, and the
 //!      multi-node shard layer ([`coordinator::shard`]) that ships
 //!      compressed batches across process boundaries as
-//!      [`rfc::wire`]-format bytes;
+//!      [`rfc::wire`]-format bytes -- over in-process loopback links or
+//!      real TCP sockets to [`coordinator::node`] worker agents;
 //!    * [`sim`]: cycle-level model of the paper's FPGA architecture
 //!      (Mult-PE, Dyn-Mult-PE, RFC compressed storage, resource model)
 //!      regenerating Tables II-IV and Fig. 11;

@@ -2,10 +2,12 @@
 //! the AOT artifacts.  Hand-rolled argument parsing (offline build).
 //!
 //! ```text
-//! rfc-hypgcn infer    [--artifacts DIR] [--variant pruned|dense|ck|skip] [--batches N]
-//! rfc-hypgcn serve    [--artifacts DIR] [--requests N] [--rate FPS] [--batch-wait MS]
-//! rfc-hypgcn simulate [--table2] [--table4] [--fig11] [--all]
-//! rfc-hypgcn report   [--artifacts DIR]
+//! rfc-hypgcn infer      [--artifacts DIR] [--variant pruned|dense|ck|skip] [--batches N]
+//! rfc-hypgcn serve      [--artifacts DIR] [--requests N] [--rate FPS] [--batch-wait MS]
+//!                       [--nodes HOST:PORT,HOST:PORT,...]
+//! rfc-hypgcn serve-node [--artifacts DIR] [--listen HOST:PORT]
+//! rfc-hypgcn simulate   [--table2] [--table4] [--fig11] [--all]
+//! rfc-hypgcn report     [--artifacts DIR]
 //! ```
 
 use std::path::PathBuf;
@@ -75,6 +77,7 @@ fn main() -> Result<()> {
     match args.cmd.as_str() {
         "infer" => infer(&args),
         "serve" => serve(&args),
+        "serve-node" => serve_node_cmd(&args),
         "simulate" => simulate(&args),
         "report" => report(&args),
         "help" | "--help" | "-h" => {
@@ -89,10 +92,12 @@ const HELP: &str = "\
 rfc-hypgcn -- RFC-HyPGCN accelerator reproduction
 
 USAGE:
-  rfc-hypgcn infer    [--artifacts DIR] [--variant pruned|dense|ck|skip|blocks] [--batches N]
-  rfc-hypgcn serve    [--artifacts DIR] [--requests N] [--rate FPS] [--batch-wait MS]
-  rfc-hypgcn simulate [--table2|--table4|--fig11|--all]
-  rfc-hypgcn report   [--artifacts DIR]";
+  rfc-hypgcn infer      [--artifacts DIR] [--variant pruned|dense|ck|skip|blocks] [--batches N]
+  rfc-hypgcn serve      [--artifacts DIR] [--requests N] [--rate FPS] [--batch-wait MS]
+                        [--nodes HOST:PORT,...]   (drive remote node agents over TCP)
+  rfc-hypgcn serve-node [--artifacts DIR] [--listen HOST:PORT]   (worker-node agent)
+  rfc-hypgcn simulate   [--table2|--table4|--fig11|--all]
+  rfc-hypgcn report     [--artifacts DIR]";
 
 fn infer(args: &Args) -> Result<()> {
     let manifest = Manifest::load(&args.artifacts())?;
@@ -197,7 +202,6 @@ fn serve(args: &Args) -> Result<()> {
         cfg.artifacts.clone()
     };
     let manifest = Manifest::load(&artifacts)?;
-    let engine = Engine::cpu()?;
     let requests = args.usize("requests", 64)?;
     let wait_ms = args.usize(
         "batch-wait",
@@ -210,7 +214,22 @@ fn serve(args: &Args) -> Result<()> {
     };
     println!("starting coordinator (batch={}, wait={}ms)...",
              policy.batch_size, wait_ms);
-    let server = Server::start(&engine, &manifest, policy)?;
+    // --nodes addr,addr: the shard cluster spans real machines -- the
+    // coordinator connects TCP links to `serve-node` agents and needs
+    // no local engine at all (the nodes own the model)
+    let server = if let Some(nodes) = args.get("nodes") {
+        let addrs: Vec<&str> = nodes.split(',').map(str::trim).collect();
+        println!("connecting to {} node agents: {addrs:?}", addrs.len());
+        Server::connect_sharded(
+            &addrs,
+            policy,
+            rfc_hypgcn::rfc::EncoderConfig::default(),
+            manifest.num_classes,
+        )?
+    } else {
+        let engine = Engine::cpu()?;
+        Server::start(&engine, &manifest, policy)?
+    };
     let mut gen = SkeletonGen::new(
         GenConfig {
             num_classes: manifest.num_classes,
@@ -224,16 +243,49 @@ fn serve(args: &Args) -> Result<()> {
         let (clip, _) = gen.sample();
         rxs.push(server.submit(clip));
     }
+    // failures now arrive as delivered error Responses (not channel
+    // disconnects), so count Response::is_ok, not channel delivery
     let mut ok = 0;
+    let mut failed = 0;
     for rx in rxs {
-        if rx.recv().is_ok() {
-            ok += 1;
+        match rx.recv() {
+            Ok(resp) if resp.is_ok() => ok += 1,
+            _ => failed += 1,
         }
     }
-    println!("{ok}/{requests} answered");
+    if failed > 0 {
+        println!("{ok}/{requests} answered ({failed} failed)");
+    } else {
+        println!("{ok}/{requests} answered");
+    }
     println!("{}", server.metrics.report());
     server.shutdown();
     Ok(())
+}
+
+/// Run one worker node of a TCP shard cluster: compile the stage chain
+/// from the local artifacts, bind the listener, and service coordinator
+/// connections forever (see `coordinator::node::serve_node`).
+fn serve_node_cmd(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&args.artifacts())?;
+    let engine = Engine::cpu()?;
+    let listen = args.get("listen").unwrap_or("127.0.0.1:7070");
+    let enc = rfc_hypgcn::rfc::EncoderConfig::default();
+    let t0 = Instant::now();
+    let pipeline = std::sync::Arc::new(
+        rfc_hypgcn::coordinator::Pipeline::load(&engine, &manifest)?,
+    );
+    println!(
+        "compiled {} stages in {:.2}s",
+        pipeline.stages.len() + 1,
+        t0.elapsed().as_secs_f64()
+    );
+    let compute =
+        rfc_hypgcn::coordinator::dense_entry(pipeline.shard_fn(), enc);
+    let listener = std::net::TcpListener::bind(listen)
+        .with_context(|| format!("binding {listen}"))?;
+    println!("node agent listening on {}", listener.local_addr()?);
+    rfc_hypgcn::coordinator::serve_node(listener, compute, enc)
 }
 
 fn simulate(args: &Args) -> Result<()> {

@@ -74,24 +74,23 @@ impl GateStats {
 /// full encode.
 const GATE_SAMPLES: usize = 512;
 
-/// Cheap sampled-sparsity check: `true` when the tensor is clearly too
-/// dense for the `min_sparsity` gate, so [`Payload::from_tensor`] can
-/// skip the full (discarded) encode.  Sampling error is covered by a
-/// three-sigma margin, so a compressible tensor is practically never
-/// pre-rejected; a dense tensor that slips through just pays the encode
-/// it would have paid before this gate existed.
-fn pre_gate_rejects(data: &[f32], min_sparsity: f64) -> bool {
-    if data.is_empty() || min_sparsity <= 0.0 {
-        return false;
+/// Rotating-offset strided zero count over `data`: the shared sampler
+/// behind every cheap sparsity pre-gate ([`Payload::from_tensor`] and
+/// the batcher's batch-level gate, which sums it across request clips).
+/// Returns `(zeros, sampled)`.
+///
+/// The intra-stride offset rotates as the scan walks: a fixed-stride
+/// scan of a tensor whose trailing (channel) axis divides the stride
+/// would sample a single channel lane forever, and post-ReLU sparsity
+/// is strongly channel-structured -- the offset cycles through every
+/// residue class of the stride, so no axis can alias the sample.
+pub fn sampled_zeros(data: &[f32]) -> (usize, usize) {
+    if data.is_empty() {
+        return (0, 0);
     }
     let stride = (data.len() / GATE_SAMPLES).max(1);
     let mut sampled = 0usize;
     let mut zeros = 0usize;
-    // rotate the intra-stride offset as we walk: a fixed-stride scan of
-    // a tensor whose trailing (channel) axis divides the stride would
-    // sample a single channel lane forever, and post-ReLU sparsity is
-    // strongly channel-structured -- the offset cycles through every
-    // residue class of the stride, so no axis can alias the sample
     let mut j = 0usize;
     loop {
         let i = j * stride + j % stride;
@@ -104,13 +103,39 @@ fn pre_gate_rejects(data: &[f32], min_sparsity: f64) -> bool {
         }
         j += 1;
     }
+    (zeros, sampled)
+}
+
+/// Shared pre-gate decision rule: does a `(zeros, sampled)` estimate of
+/// a `total`-element population fall clearly below `min_sparsity`?
+/// Sampling error is covered by a three-sigma margin (zero for an
+/// exhaustive scan, where the estimate is exact), so a compressible
+/// tensor is practically never pre-rejected; a dense tensor that slips
+/// through just pays the encode it would have paid without the gate.
+pub fn sampled_sparsity_below(
+    zeros: usize,
+    sampled: usize,
+    total: usize,
+    min_sparsity: f64,
+) -> bool {
+    if sampled == 0 || min_sparsity <= 0.0 {
+        return false;
+    }
     let s = zeros as f64 / sampled as f64;
-    let margin = if stride == 1 {
+    let margin = if sampled >= total {
         0.0 // exhaustive scan: the estimate is exact
     } else {
         3.0 * (s * (1.0 - s) / sampled as f64).sqrt()
     };
     s + margin < min_sparsity
+}
+
+/// Cheap sampled-sparsity check: `true` when the tensor is clearly too
+/// dense for the `min_sparsity` gate, so [`Payload::from_tensor`] can
+/// skip the full (discarded) encode.
+fn pre_gate_rejects(data: &[f32], min_sparsity: f64) -> bool {
+    let (zeros, sampled) = sampled_zeros(data);
+    sampled_sparsity_below(zeros, sampled, data.len(), min_sparsity)
 }
 
 /// A tensor travelling between pipeline stages: dense, or bank-encoded

@@ -28,6 +28,8 @@
 //! fields must agree, and the decoded tensor passes the existing
 //! [`CompressedTensor::validate`] rejection API before it is returned.
 
+use std::io::{Read, Write};
+
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::runtime::Tensor;
@@ -40,10 +42,17 @@ use super::Payload;
 pub const WIRE_MAGIC: [u8; 4] = *b"RFCW";
 /// Frame magic for a serialized [`Payload`] (dense or compressed).
 pub const PAYLOAD_MAGIC: [u8; 4] = *b"RFCP";
+/// Magic opening the one-shot stream handshake (see [`write_handshake`]).
+pub const HANDSHAKE_MAGIC: [u8; 4] = *b"RFCH";
 /// The one and only wire version this build reads and writes.
 pub const WIRE_VERSION: u16 = 1;
 /// Sanity bound on tensor rank (serving shapes are rank <= 4).
 pub const MAX_RANK: usize = 8;
+/// Upper bound a stream receiver accepts for one outer frame.  Wire v1
+/// caps inner frames at u32 anyway; this tighter bound means a hostile
+/// or corrupted length prefix can never provoke a multi-gigabyte
+/// allocation before the inner validation gets a chance to reject it.
+pub const MAX_FRAME_LEN: u32 = 1 << 30;
 
 const KIND_DENSE: u8 = 0;
 const KIND_COMPRESSED: u8 = 1;
@@ -404,6 +413,90 @@ pub fn payload_from_bytes(buf: &[u8]) -> Result<Payload> {
     }
 }
 
+/// Ship one frame over a byte stream: a u32 little-endian length prefix,
+/// then the frame bytes.  This is the *outer* framing socket transports
+/// use to delimit the self-describing payload frames above -- the inner
+/// `total_len` stays, so a receiver can still validate the body against
+/// what the stream promised.
+pub fn write_frame<W: Write>(w: &mut W, frame: &[u8]) -> Result<()> {
+    ensure!(
+        frame.len() as u64 <= MAX_FRAME_LEN as u64,
+        "frame of {} bytes exceeds the {MAX_FRAME_LEN}-byte stream bound",
+        frame.len()
+    );
+    w.write_all(&(frame.len() as u32).to_le_bytes())
+        .context("writing frame length")?;
+    w.write_all(frame).context("writing frame body")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame off a byte stream (inverse of
+/// [`write_frame`]).  The length is bounds-checked before any
+/// allocation, and the buffer then grows only as bytes actually arrive
+/// (`read_to_end` over a `Take`), so a hostile in-bound length prefix
+/// costs the attacker the bytes, not this process an up-front
+/// `MAX_FRAME_LEN` allocation.  A short read (peer died mid-frame)
+/// surfaces as `Err`, never a partial frame.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4).context("reading frame length")?;
+    let len = u32::from_le_bytes(len4) as u64;
+    ensure!(
+        len <= MAX_FRAME_LEN as u64,
+        "stream names a {len}-byte frame, bound is {MAX_FRAME_LEN}"
+    );
+    let mut buf = Vec::with_capacity(len.min(64 * 1024) as usize);
+    let got = r
+        .by_ref()
+        .take(len)
+        .read_to_end(&mut buf)
+        .with_context(|| format!("reading {len}-byte frame body"))?;
+    ensure!(
+        got as u64 == len,
+        "stream ended after {got} of {len} frame bytes"
+    );
+    Ok(buf)
+}
+
+/// Send this build's one-shot stream handshake: magic + wire version.
+/// Both ends of a socket link write theirs immediately on connect, then
+/// read the peer's -- six bytes each way, so the symmetric exchange
+/// cannot deadlock.
+pub fn write_handshake<W: Write>(w: &mut W) -> Result<()> {
+    w.write_all(&HANDSHAKE_MAGIC).context("writing handshake")?;
+    w.write_all(&WIRE_VERSION.to_le_bytes())
+        .context("writing handshake version")?;
+    w.flush().context("flushing handshake")?;
+    Ok(())
+}
+
+/// Read the peer's handshake and return the wire version it speaks.
+/// Bad magic (the peer is not an RFC node at all) is an error here;
+/// version *skew* is returned to the caller, which decides how loudly
+/// to fail -- see [`expect_handshake`] for the common strict form.
+pub fn read_handshake<R: Read>(r: &mut R) -> Result<u16> {
+    let mut buf = [0u8; 6];
+    r.read_exact(&mut buf).context("reading handshake")?;
+    ensure!(
+        buf[..4] == HANDSHAKE_MAGIC,
+        "bad handshake magic {:02x?} (not an RFC node link)",
+        &buf[..4]
+    );
+    Ok(u16::from_le_bytes([buf[4], buf[5]]))
+}
+
+/// [`read_handshake`] that also rejects version skew: the one check
+/// every socket link runs right after connect.
+pub fn expect_handshake<R: Read>(r: &mut R) -> Result<()> {
+    let version = read_handshake(r)?;
+    ensure!(
+        version == WIRE_VERSION,
+        "peer speaks wire v{version}, this build speaks v{WIRE_VERSION}"
+    );
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -515,5 +608,70 @@ mod tests {
         long.push(0);
         assert!(payload_from_bytes(&long).is_err());
         assert!(payload_from_bytes(&good).is_ok());
+    }
+
+    #[test]
+    fn stream_framing_roundtrips_back_to_back_frames() {
+        let t = Tensor::random_sparse(vec![3, 48], 0.6, 12);
+        let frames = [
+            payload_to_bytes(&Payload::Compressed(encode(&t, &cfg(1)))).unwrap(),
+            payload_to_bytes(&Payload::Dense(t)).unwrap(),
+            error_frame("node fell over"),
+        ];
+        let mut stream = Vec::new();
+        for f in &frames {
+            write_frame(&mut stream, f).unwrap();
+        }
+        let mut r = std::io::Cursor::new(stream);
+        for f in &frames {
+            assert_eq!(&read_frame(&mut r).unwrap(), f);
+        }
+        // the stream is exactly consumed: one more read hits EOF
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn truncated_outer_frame_is_rejected() {
+        let inner = error_frame("short");
+        let mut stream = Vec::new();
+        write_frame(&mut stream, &inner).unwrap();
+        for n in 0..stream.len() {
+            let mut r = std::io::Cursor::new(&stream[..n]);
+            assert!(read_frame(&mut r).is_err(), "prefix of {n} bytes");
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_fails_before_allocating() {
+        // a hostile length prefix (u32::MAX) with no body behind it must
+        // be rejected by the bound check, not by an allocation attempt
+        let mut stream = Vec::from(u32::MAX.to_le_bytes());
+        stream.extend_from_slice(b"garbage");
+        let e = read_frame(&mut std::io::Cursor::new(stream)).unwrap_err();
+        assert!(format!("{e:#}").contains("bound"), "{e:#}");
+    }
+
+    #[test]
+    fn handshake_roundtrip_and_skew() {
+        let mut stream = Vec::new();
+        write_handshake(&mut stream).unwrap();
+        assert_eq!(stream.len(), 6);
+        let mut r = std::io::Cursor::new(stream.clone());
+        assert_eq!(read_handshake(&mut r).unwrap(), WIRE_VERSION);
+        let mut r = std::io::Cursor::new(stream.clone());
+        assert!(expect_handshake(&mut r).is_ok());
+        // version skew: readable, but the strict form rejects it loudly
+        let mut skew = stream.clone();
+        skew[4] = 9;
+        let mut r = std::io::Cursor::new(skew.clone());
+        assert_eq!(read_handshake(&mut r).unwrap(), 9);
+        let e = expect_handshake(&mut std::io::Cursor::new(skew)).unwrap_err();
+        assert!(format!("{e:#}").contains("v9"), "{e:#}");
+        // wrong magic: not an RFC peer at all
+        let mut junk = stream;
+        junk[0] = b'X';
+        assert!(read_handshake(&mut std::io::Cursor::new(junk)).is_err());
+        // truncation
+        assert!(read_handshake(&mut std::io::Cursor::new(vec![0u8; 3])).is_err());
     }
 }

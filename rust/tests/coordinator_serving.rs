@@ -12,8 +12,8 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use rfc_hypgcn::coordinator::{
-    BatchPolicy, Batcher, Metrics, Request, Response, Server, ShardCluster,
-    ShardFn,
+    dense_entry, spawn_local_agents, BatchPolicy, Batcher, Metrics, NodeAgent,
+    Request, Response, Server, ShardCluster, ShardFn,
 };
 use rfc_hypgcn::data::{GenConfig, SkeletonGen};
 use rfc_hypgcn::meta::Manifest;
@@ -28,6 +28,28 @@ fn setup() -> Option<(Manifest, Engine)> {
         return None;
     }
     Some((Manifest::load(&dir).unwrap(), Engine::cpu().unwrap()))
+}
+
+/// The cluster conformance axis: every shard-cluster test runs against
+/// both the in-process loopback link and localhost TCP node agents.
+const TRANSPORTS: [&str; 2] = ["loopback", "tcp"];
+
+fn cluster_on(
+    transport: &str,
+    nodes: usize,
+    model: ShardFn,
+    enc: EncoderConfig,
+) -> (ShardCluster, Vec<NodeAgent>) {
+    match transport {
+        "loopback" => (ShardCluster::loopback(nodes, model, enc), Vec::new()),
+        "tcp" => {
+            let (agents, addrs) =
+                spawn_local_agents(nodes, dense_entry(model, enc), enc)
+                    .unwrap();
+            (ShardCluster::connect(&addrs, enc).unwrap(), agents)
+        }
+        t => panic!("unknown transport {t}"),
+    }
 }
 
 /// Deterministic row-local synthetic classifier (stands in for the full
@@ -88,73 +110,84 @@ fn loopback_cluster_serves_stream_identical_to_single_node() {
         })
         .collect();
 
-    for nodes in [2usize, 4] {
-        let metrics = Metrics::default();
-        let mut cluster =
-            ShardCluster::loopback(nodes, model.clone(), enc);
-        let mut rxs = Vec::new();
-        let mut pending: Vec<Request> = clips
-            .iter()
-            .enumerate()
-            .map(|(i, clip)| {
-                let (tx, rx) = channel::<Response>();
-                rxs.push(rx);
-                Request {
-                    id: i as u64,
-                    clip: clip.clone(),
-                    seq_len,
-                    arrived: Instant::now(),
-                    reply: tx,
+    for transport in TRANSPORTS {
+        for nodes in [2usize, 4] {
+            let metrics = Metrics::default();
+            let (mut cluster, agents) =
+                cluster_on(transport, nodes, model.clone(), enc);
+            let mut rxs = Vec::new();
+            let mut pending: Vec<Request> = clips
+                .iter()
+                .enumerate()
+                .map(|(i, clip)| {
+                    let (tx, rx) = channel::<Response>();
+                    rxs.push(rx);
+                    Request {
+                        id: i as u64,
+                        clip: clip.clone(),
+                        seq_len,
+                        arrived: Instant::now(),
+                        reply: tx,
+                    }
+                })
+                .collect();
+            // drain the stream in batcher-formed batches (the last one
+            // is 1 real row + 3 padding rows), like the sharded server
+            while !pending.is_empty() {
+                let take = pending.len().min(policy.batch_size);
+                let reqs: Vec<Request> = pending.drain(..take).collect();
+                let mut batch = Batcher::form_from(&policy, reqs).unwrap();
+                metrics.record_batch(batch.real, batch.input.shape()[0]);
+                let payload = batch.input.take();
+                let logits = cluster.infer(&payload, Some(&metrics)).unwrap();
+                assert_eq!(logits.shape, vec![policy.batch_size, CLASSES]);
+                for (i, req) in batch.requests.into_iter().enumerate() {
+                    let rowv =
+                        logits.data[i * CLASSES..(i + 1) * CLASSES].to_vec();
+                    let resp =
+                        Response::from_logits(req.id, rowv, req.arrived);
+                    metrics.record_response(resp.latency_s);
+                    req.reply.send(resp).unwrap();
                 }
-            })
-            .collect();
-        // drain the stream in batcher-formed batches (the last one is
-        // 1 real row + 3 padding rows), exactly like the sharded server
-        while !pending.is_empty() {
-            let take = pending.len().min(policy.batch_size);
-            let reqs: Vec<Request> = pending.drain(..take).collect();
-            let mut batch = Batcher::form_from(&policy, reqs).unwrap();
-            metrics.record_batch(batch.real, batch.input.shape()[0]);
-            let payload = batch.input.take();
-            let logits = cluster.infer(&payload, Some(&metrics)).unwrap();
-            assert_eq!(logits.shape, vec![policy.batch_size, CLASSES]);
-            for (i, req) in batch.requests.into_iter().enumerate() {
-                let rowv =
-                    logits.data[i * CLASSES..(i + 1) * CLASSES].to_vec();
-                let resp = Response::from_logits(req.id, rowv, req.arrived);
-                metrics.record_response(resp.latency_s);
-                req.reply.send(resp).unwrap();
             }
-        }
-        cluster.shutdown();
-        for (i, rx) in rxs.iter().enumerate() {
-            let resp = rx.try_recv().expect("response delivered");
-            assert_eq!(resp.id, i as u64, "{nodes} nodes");
+            cluster.shutdown();
+            for a in agents {
+                a.shutdown();
+            }
+            for (i, rx) in rxs.iter().enumerate() {
+                let resp = rx.try_recv().expect("response delivered");
+                assert_eq!(resp.id, i as u64, "{transport}: {nodes} nodes");
+                assert_eq!(
+                    resp.logits, expected[i],
+                    "{transport}: {nodes} nodes: clip {i} diverged from \
+                     single-node"
+                );
+            }
+            // every node that saw work must report transport savings:
+            // the 70%-sparse shards ship far below their dense cost
+            let per_node = metrics.node_transport();
             assert_eq!(
-                resp.logits, expected[i],
-                "{nodes} nodes: clip {i} diverged from single-node"
+                per_node.len(),
+                nodes,
+                "{transport}: {nodes} nodes all saw work"
             );
+            for (n, t) in per_node.iter().enumerate() {
+                assert!(t.shards > 0, "{transport}: node {n} idle");
+                assert!(
+                    metrics.node_transport_saving(n) > 0.1,
+                    "{transport}: node {n} saving {}",
+                    metrics.node_transport_saving(n)
+                );
+            }
+            assert!(metrics.report().contains("node_save=["));
         }
-        // every node that saw work must report transport savings: the
-        // 70%-sparse shards ship far below their dense byte cost
-        let per_node = metrics.node_transport();
-        assert_eq!(per_node.len(), nodes, "{nodes} nodes all saw work");
-        for (n, t) in per_node.iter().enumerate() {
-            assert!(t.shards > 0, "{nodes} nodes: node {n} idle");
-            assert!(
-                metrics.node_transport_saving(n) > 0.1,
-                "{nodes} nodes: node {n} saving {}",
-                metrics.node_transport_saving(n)
-            );
-        }
-        assert!(metrics.report().contains("node_save=["));
     }
 }
 
 #[test]
 fn cluster_output_independent_of_node_count() {
     // 1-, 2-, 3- and 4-node clusters agree bit-for-bit on a batch that
-    // does not divide evenly
+    // does not divide evenly, over both transports
     let t = Tensor::random_sparse(vec![6, 3, 8, 25], 0.5, 4100);
     let enc = EncoderConfig {
         shards: 1,
@@ -163,13 +196,19 @@ fn cluster_output_independent_of_node_count() {
     };
     let model = synth_model(7);
     let reference = model(t.clone()).unwrap();
-    for nodes in [1usize, 2, 3, 4] {
-        let mut cluster = ShardCluster::loopback(nodes, model.clone(), enc);
-        let out = cluster
-            .infer(&rfc_hypgcn::rfc::Payload::Dense(t.clone()), None)
-            .unwrap();
-        assert_eq!(out, reference, "{nodes} nodes");
-        cluster.shutdown();
+    for transport in TRANSPORTS {
+        for nodes in [1usize, 2, 3, 4] {
+            let (mut cluster, agents) =
+                cluster_on(transport, nodes, model.clone(), enc);
+            let out = cluster
+                .infer(&rfc_hypgcn::rfc::Payload::Dense(t.clone()), None)
+                .unwrap();
+            assert_eq!(out, reference, "{transport}: {nodes} nodes");
+            cluster.shutdown();
+            for a in agents {
+                a.shutdown();
+            }
+        }
     }
 }
 

@@ -1,0 +1,412 @@
+//! Socket-backed shard cluster, end to end: a coordinator `Server` over
+//! TCP node agents must serve exactly like the loopback cluster, and
+//! the failure surface (peer death, version skew, garbage frames,
+//! malformed requests, mis-sized node replies) must come back as error
+//! responses / rejected connections -- never hangs, panics, or a
+//! silently wedged server.
+//!
+//! Runs entirely on localhost ephemeral ports; no artifacts and no
+//! external network needed.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use rfc_hypgcn::coordinator::{
+    dense_entry, spawn_local_agents, BatchPolicy, NodeAgent, Server,
+    ShardCluster, ShardFn, TcpLink,
+};
+use rfc_hypgcn::model::NUM_JOINTS;
+use rfc_hypgcn::rfc::{wire, EncoderConfig, Payload};
+use rfc_hypgcn::runtime::Tensor;
+
+/// Deterministic row-local synthetic classifier (same contract as the
+/// real stage chain on the batch axis).
+fn synth_model(classes: usize) -> ShardFn {
+    Arc::new(move |t: Tensor| {
+        anyhow::ensure!(t.shape.len() >= 2, "need a batch axis");
+        let rows = t.shape[0];
+        let row: usize = t.shape[1..].iter().product();
+        let mut out = vec![0f32; rows * classes];
+        for r in 0..rows {
+            let src = &t.data[r * row..(r + 1) * row];
+            for (c, slot) in
+                out[r * classes..(r + 1) * classes].iter_mut().enumerate()
+            {
+                *slot = src
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &v)| v * (((i + c) % 7) as f32))
+                    .sum();
+            }
+        }
+        Tensor::new(vec![rows, classes], out)
+    })
+}
+
+fn enc() -> EncoderConfig {
+    EncoderConfig {
+        shards: 1,
+        min_sparsity: 0.10,
+        parallel_threshold: usize::MAX,
+    }
+}
+
+fn policy(seq_len: usize) -> BatchPolicy {
+    BatchPolicy {
+        batch_size: 4,
+        max_wait: Duration::from_millis(1),
+        seq_len,
+    }
+}
+
+/// Spawn `n` localhost node agents running `model`; returns them with
+/// their addresses.
+fn spawn_agents(
+    n: usize,
+    model: ShardFn,
+    enc: EncoderConfig,
+) -> (Vec<NodeAgent>, Vec<SocketAddr>) {
+    spawn_local_agents(n, dense_entry(model, enc), enc).unwrap()
+}
+
+#[test]
+fn sharded_server_over_tcp_matches_loopback_cluster_server() {
+    const CLASSES: usize = 6;
+    let seq_len = 8;
+    let row = 3 * seq_len * NUM_JOINTS;
+    let model = synth_model(CLASSES);
+    let clips: Vec<Vec<f32>> = (0..9)
+        .map(|i| Tensor::random_sparse(vec![row], 0.7, 6000 + i).data)
+        .collect();
+
+    let loopback = Server::start_cluster(
+        policy(seq_len),
+        enc(),
+        ShardCluster::loopback(2, model.clone(), enc()),
+        CLASSES,
+    );
+    let (agents, addrs) = spawn_agents(2, model.clone(), enc());
+    let tcp =
+        Server::connect_sharded(&addrs, policy(seq_len), enc(), CLASSES)
+            .unwrap();
+
+    let a: Vec<_> = clips.iter().map(|c| loopback.submit(c.clone())).collect();
+    let b: Vec<_> = clips.iter().map(|c| tcp.submit(c.clone())).collect();
+    for (i, (ra, rb)) in a.into_iter().zip(b).enumerate() {
+        let ra = ra.recv_timeout(Duration::from_secs(30)).unwrap();
+        let rb = rb.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(ra.is_ok() && rb.is_ok(), "clip {i}");
+        assert_eq!(
+            ra.logits, rb.logits,
+            "clip {i}: TCP serving diverged from loopback"
+        );
+        // and both match the model applied to the clip directly
+        let t = Tensor::new(
+            vec![1, 3, seq_len, NUM_JOINTS],
+            clips[i].clone(),
+        )
+        .unwrap();
+        assert_eq!(ra.logits, model(t).unwrap().data, "clip {i}");
+    }
+    // the TCP links recorded per-node wire traffic
+    let nodes = tcp.metrics.node_transport();
+    assert!(!nodes.is_empty());
+    assert!(nodes.iter().any(|n| n.shards > 0));
+    tcp.shutdown();
+    loopback.shutdown();
+    for a in agents {
+        a.shutdown();
+    }
+}
+
+#[test]
+fn malformed_clip_gets_error_response_and_good_clip_still_served() {
+    // Regression: a wrong-length clip used to panic the batcher thread
+    // in release builds, after which every request was dropped forever.
+    const CLASSES: usize = 5;
+    let seq_len = 8;
+    let model = synth_model(CLASSES);
+    let server = Server::start_cluster(
+        policy(seq_len),
+        enc(),
+        ShardCluster::loopback(2, model.clone(), enc()),
+        CLASSES,
+    );
+    // bad clip first: must be answered with an error response
+    let bad_rx = server.submit(vec![1.0; 17]);
+    let bad = bad_rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert!(!bad.is_ok());
+    assert!(
+        bad.error.as_deref().unwrap().contains("malformed clip"),
+        "{:?}",
+        bad.error
+    );
+    assert!(bad.logits.is_empty());
+    // the good clip right behind it must still be served
+    let row = 3 * seq_len * NUM_JOINTS;
+    let clip = Tensor::random_sparse(vec![row], 0.6, 7000).data;
+    let good_rx = server.submit(clip.clone());
+    let good = good_rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert!(good.is_ok(), "{:?}", good.error);
+    let t = Tensor::new(vec![1, 3, seq_len, NUM_JOINTS], clip).unwrap();
+    assert_eq!(good.logits, model(t).unwrap().data);
+    assert!(
+        server
+            .metrics
+            .failures
+            .load(std::sync::atomic::Ordering::Relaxed)
+            >= 1
+    );
+    server.shutdown();
+}
+
+#[test]
+fn wrong_width_node_reply_fails_the_batch_with_error_responses() {
+    // a shard compute that answers 3-wide logits for a server expecting
+    // 10: release builds used to debug_assert (i.e. not at all) and
+    // slice wrong rows; now the batch fails loudly with error responses
+    const WRONG: usize = 3;
+    const EXPECTED: usize = 10;
+    let seq_len = 8;
+    let server = Server::start_cluster(
+        policy(seq_len),
+        enc(),
+        ShardCluster::loopback(2, synth_model(WRONG), enc()),
+        EXPECTED,
+    );
+    let row = 3 * seq_len * NUM_JOINTS;
+    let rxs: Vec<_> = (0..2)
+        .map(|i| {
+            server.submit(Tensor::random_sparse(vec![row], 0.5, 7100 + i).data)
+        })
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(!resp.is_ok(), "mis-sized reply must fail the batch");
+        assert!(
+            resp.error.as_deref().unwrap().contains("delivery expects"),
+            "{:?}",
+            resp.error
+        );
+    }
+    server.shutdown();
+}
+
+#[test]
+fn tcp_peer_death_fails_the_batch_then_single_shard_batches_recover() {
+    const CLASSES: usize = 4;
+    let seq_len = 8;
+    let row = 3 * seq_len * NUM_JOINTS;
+    let model = synth_model(CLASSES);
+    let (mut agents, addrs) = spawn_agents(2, model.clone(), enc());
+    // a generous max_wait so the 4 submits below land in ONE full batch
+    // (a split batch could route a lone shard to the live node and pass
+    // without exercising the dead peer at all)
+    let batch_policy = BatchPolicy {
+        batch_size: 4,
+        max_wait: Duration::from_millis(250),
+        seq_len,
+    };
+    let server =
+        Server::connect_sharded(&addrs, batch_policy, enc(), CLASSES)
+            .unwrap();
+    // kill node 1 while the server holds live links to both
+    agents.remove(1).shutdown();
+    // a full batch fans out over both nodes: it must fail with error
+    // responses (node 1 is gone), not hang and not panic
+    let rxs: Vec<_> = (0..4)
+        .map(|i| {
+            server.submit(Tensor::random_sparse(vec![row], 0.5, 7200 + i).data)
+        })
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(!resp.is_ok(), "dead peer must fail the batch");
+    }
+    // a lone request pads out and routes to a single shard on node 0,
+    // which the failed batch drained: it must serve correctly -- a
+    // stale queued reply would have shifted its results by one batch
+    let clip = Tensor::random_sparse(vec![row], 0.5, 7300).data;
+    let rx = server.submit(clip.clone());
+    let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert!(resp.is_ok(), "{:?}", resp.error);
+    let t = Tensor::new(vec![1, 3, seq_len, NUM_JOINTS], clip).unwrap();
+    assert_eq!(resp.logits, model(t).unwrap().data);
+    server.shutdown();
+    for a in agents {
+        a.shutdown();
+    }
+}
+
+#[test]
+fn hung_peer_trips_the_io_timeout_and_poisons_the_link() {
+    use rfc_hypgcn::coordinator::NodeLink;
+    // a peer that handshakes, swallows our frame, and then goes silent
+    // forever -- no RST, no FIN, just nothing.  Without an I/O timeout
+    // the coordinator would block in recv permanently.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let hung = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let mut hs = Vec::new();
+        hs.extend_from_slice(&wire::HANDSHAKE_MAGIC);
+        hs.extend_from_slice(&wire::WIRE_VERSION.to_le_bytes());
+        s.write_all(&hs).unwrap();
+        let mut theirs = [0u8; 6];
+        s.read_exact(&mut theirs).unwrap();
+        // drain whatever arrives, reply with nothing; exits when the
+        // poisoned link severs the socket
+        let mut sink = [0u8; 1024];
+        loop {
+            match s.read(&mut sink) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+        }
+    });
+    // generous enough that the handshake never trips it on a loaded
+    // machine; the silent peer still deterministically times out recv
+    let mut link =
+        TcpLink::connect_timeout(addr, Some(Duration::from_millis(500)))
+            .unwrap();
+    link.send(wire::error_frame("ping")).unwrap();
+    let err = link.recv().unwrap_err();
+    assert!(format!("{err:#}").contains("receiving from node"), "{err:#}");
+    // the failure poisoned the link: it is dead, not desynchronized --
+    // a late reply can never be read as the next batch's answer
+    assert!(
+        link.send(wire::error_frame("again")).is_err(),
+        "poisoned link must refuse further traffic"
+    );
+    hung.join().unwrap();
+}
+
+#[test]
+fn version_skew_on_handshake_is_rejected() {
+    // a fake "node" speaking wire v2: the coordinator link must refuse
+    // it at connect, naming both versions
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let fake = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let mut hs = Vec::new();
+        hs.extend_from_slice(&wire::HANDSHAKE_MAGIC);
+        hs.extend_from_slice(&2u16.to_le_bytes());
+        s.write_all(&hs).unwrap();
+        let mut theirs = [0u8; 6];
+        let _ = s.read_exact(&mut theirs);
+    });
+    let err = TcpLink::connect(addr).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("v2") && msg.contains("v1"), "{msg}");
+    fake.join().unwrap();
+}
+
+#[test]
+fn non_rfc_peer_is_rejected_at_handshake() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let fake = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        s.write_all(b"HTTP/1.1 200 OK\r\n\r\n").unwrap();
+    });
+    let err = TcpLink::connect(addr).unwrap_err();
+    assert!(format!("{err:#}").contains("handshake"), "{err:#}");
+    fake.join().unwrap();
+}
+
+#[test]
+fn node_agent_rejects_skewed_coordinators_but_keeps_accepting() {
+    let (agents, addrs) = spawn_agents(1, synth_model(3), enc());
+    // a skewed "coordinator": handshake names wire v9
+    {
+        let mut s = TcpStream::connect(addrs[0]).unwrap();
+        let mut hs = Vec::new();
+        hs.extend_from_slice(&wire::HANDSHAKE_MAGIC);
+        hs.extend_from_slice(&9u16.to_le_bytes());
+        s.write_all(&hs).unwrap();
+        // the node sends its own handshake, then drops the connection
+        // instead of serving frames
+        let mut theirs = [0u8; 6];
+        s.read_exact(&mut theirs).unwrap();
+        assert_eq!(&theirs[..4], &wire::HANDSHAKE_MAGIC);
+        let mut probe = [0u8; 1];
+        let n = s.read(&mut probe);
+        assert!(
+            matches!(n, Ok(0) | Err(_)),
+            "connection must close, got {n:?}"
+        );
+    }
+    // the agent still serves well-behaved coordinators afterwards
+    let mut cluster = ShardCluster::connect(&addrs, enc()).unwrap();
+    let t = Tensor::random_sparse(vec![2, 3, 8, 25], 0.5, 7400);
+    let out = cluster.infer(&Payload::Dense(t.clone()), None).unwrap();
+    assert_eq!(out, synth_model(3)(t).unwrap());
+    cluster.shutdown();
+    for a in agents {
+        a.shutdown();
+    }
+}
+
+#[test]
+fn oversized_outer_frame_drops_the_connection_not_the_agent() {
+    let (agents, addrs) = spawn_agents(1, synth_model(3), enc());
+    {
+        let mut s = TcpStream::connect(addrs[0]).unwrap();
+        let mut hs = Vec::new();
+        hs.extend_from_slice(&wire::HANDSHAKE_MAGIC);
+        hs.extend_from_slice(&wire::WIRE_VERSION.to_le_bytes());
+        s.write_all(&hs).unwrap();
+        let mut theirs = [0u8; 6];
+        s.read_exact(&mut theirs).unwrap();
+        // a hostile length prefix: 4 GiB frame announcement
+        s.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        s.write_all(b"junk").unwrap();
+        // the node must sever this connection (and must not try to
+        // allocate the announced 4 GiB).  The unread junk in the node's
+        // receive buffer makes the close an RST on most stacks, so both
+        // EOF and a reset error count as "closed"
+        let mut probe = [0u8; 1];
+        let n = s.read(&mut probe);
+        assert!(
+            matches!(n, Ok(0) | Err(_)),
+            "connection must close, got {n:?}"
+        );
+    }
+    // fresh connections still serve
+    let mut cluster = ShardCluster::connect(&addrs, enc()).unwrap();
+    let t = Tensor::random_sparse(vec![2, 3, 8, 25], 0.5, 7500);
+    let out = cluster.infer(&Payload::Dense(t.clone()), None).unwrap();
+    assert_eq!(out, synth_model(3)(t).unwrap());
+    cluster.shutdown();
+    for a in agents {
+        a.shutdown();
+    }
+}
+
+#[test]
+fn garbage_inner_frame_gets_an_error_reply_and_the_connection_survives() {
+    // broken *framing* kills a connection; a broken *payload* inside a
+    // well-formed outer frame is an application error -- the node
+    // replies with an error frame and keeps serving the same link
+    let (agents, addrs) = spawn_agents(1, synth_model(3), enc());
+    let mut link = TcpLink::connect(addrs[0]).unwrap();
+    use rfc_hypgcn::coordinator::NodeLink;
+    link.send(b"definitely not a payload frame".to_vec()).unwrap();
+    let reply = link.recv().unwrap();
+    let err = wire::payload_from_bytes(&reply).unwrap_err();
+    assert!(format!("{err:#}").contains("remote node error"), "{err:#}");
+    // same connection, now a valid shard frame: served normally
+    let t = Tensor::random_sparse(vec![2, 3, 8, 25], 0.6, 7600);
+    let frame = wire::payload_to_bytes(&Payload::Dense(t.clone())).unwrap();
+    link.send(frame).unwrap();
+    let reply = link.recv().unwrap();
+    let payload = wire::payload_from_bytes(&reply).unwrap();
+    assert_eq!(payload.into_dense(&enc()), synth_model(3)(t).unwrap());
+    drop(link);
+    for a in agents {
+        a.shutdown();
+    }
+}

@@ -40,7 +40,7 @@ fn corpus_files_all_rejected() {
             checked += 1;
         }
     }
-    assert!(checked >= 12, "corpus shrank: only {checked} files");
+    assert!(checked >= 13, "corpus shrank: only {checked} files");
 }
 
 #[test]
@@ -125,6 +125,46 @@ fn oversized_rank_and_dims_rejected() {
     assert_eq!(w.len(), 56);
     let e = wire::from_bytes(&w).unwrap_err();
     assert!(format!("{e:#}").contains("overflow"), "{e:#}");
+}
+
+#[test]
+fn corpus_truncated_outer_frame_rejected_by_stream_reader() {
+    // the socket transport's outer framing: a u32 length prefix that
+    // promises more bytes than the stream carries must come back as
+    // `Err` from `wire::read_frame` (peer died / corrupted stream),
+    // never a partial frame
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/wire_corpus/truncated_outer_frame.bin");
+    let bytes = std::fs::read(&path).unwrap();
+    let mut r = std::io::Cursor::new(bytes.clone());
+    assert!(wire::read_frame(&mut r).is_err(), "truncated outer frame");
+    // every shorter prefix of the stream is just as dead
+    for n in 0..bytes.len() {
+        let mut r = std::io::Cursor::new(&bytes[..n]);
+        assert!(wire::read_frame(&mut r).is_err(), "stream prefix {n}");
+    }
+}
+
+#[test]
+fn oversized_outer_length_prefix_rejected_before_allocation() {
+    let mut stream = Vec::from(u32::MAX.to_le_bytes());
+    stream.extend_from_slice(b"junk");
+    let e = wire::read_frame(&mut std::io::Cursor::new(stream)).unwrap_err();
+    assert!(format!("{e:#}").contains("bound"), "{e:#}");
+}
+
+#[test]
+fn outer_framing_roundtrips_payload_frames() {
+    // write_frame/read_frame must hand back exactly the payload frame
+    // bytes, so the inner validation chain is unchanged by the stream
+    let t = Tensor::random_sparse(vec![2, 3, 8, 25], 0.6, 101);
+    let p = rfc::Payload::from_tensor(t, &cfg());
+    let inner = wire::payload_to_bytes(&p).unwrap();
+    let mut stream = Vec::new();
+    wire::write_frame(&mut stream, &inner).unwrap();
+    let back = wire::read_frame(&mut std::io::Cursor::new(stream)).unwrap();
+    assert_eq!(back, inner);
+    assert!(wire::payload_from_bytes(&back).is_ok());
 }
 
 #[test]
