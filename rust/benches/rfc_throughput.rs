@@ -19,9 +19,12 @@
 
 use std::time::Instant;
 
-use rfc_hypgcn::rfc::kernel::{gemm_dense_f32, spmm_f32, GemmF32, KernelConfig};
+use rfc_hypgcn::rfc::kernel::{
+    cpu_features, gemm_dense_f32, spmm_f32, GemmF32, KernelConfig, LaneDispatch,
+};
 use rfc_hypgcn::rfc::{self, EncoderConfig};
 use rfc_hypgcn::runtime::Tensor;
+use rfc_hypgcn::util::json::{obj, Json};
 use rfc_hypgcn::util::stats::Summary;
 
 fn sparse_tensor(shape: Vec<usize>, sparsity: f64, seed: u64) -> Tensor {
@@ -183,6 +186,7 @@ struct KernelRow {
     dense_s: f64,
     decode_dense_s: f64,
     spmm_serial_s: f64,
+    spmm_scalar_s: f64,
     spmm_pooled_s: f64,
     skip_fraction: f64,
 }
@@ -197,6 +201,9 @@ fn kernel_section() {
         par_threshold_macs: 0,
         ..KernelConfig::default()
     };
+    let forced_scalar =
+        KernelConfig::serial().with_dispatch(LaneDispatch::ForceScalar);
+    let isa = LaneDispatch::Auto.resolve();
     let iters = 10;
     let w: Vec<f32> = {
         let mut rng = rfc_hypgcn::util::rng::Rng::new(0xBE7C);
@@ -205,12 +212,20 @@ fn kernel_section() {
     let gemm = GemmF32::new(w, k, n).unwrap();
 
     println!(
-        "\ncompressed-domain kernel -- X[{m}, {k}] . W[{k}, {n}], {} workers pooled",
+        "\ncompressed-domain kernel -- X[{m}, {k}] . W[{k}, {n}], \
+         isa {}, {} workers pooled",
+        isa.name(),
         pooled.workers
     );
     println!(
-        "{:>8}  {:>10}  {:>12}  {:>11}  {:>11}  {:>8}",
-        "sparsity", "dense ms", "dec+dense ms", "spmm(1) ms", "spmm(N) ms", "speedup"
+        "{:>8}  {:>10}  {:>12}  {:>11}  {:>11}  {:>11}  {:>8}",
+        "sparsity",
+        "dense ms",
+        "dec+dense ms",
+        "spmm(1) ms",
+        "scalar ms",
+        "spmm(N) ms",
+        "speedup"
     );
     let mut rows = Vec::new();
     for s10 in [50u64, 70, 90] {
@@ -231,16 +246,25 @@ fn kernel_section() {
                 spmm_f32(&ct, &gemm, &KernelConfig::serial()).unwrap(),
             );
         });
+        // the scalar reference path, timed on every runner: the ratchet
+        // reads simd_speedup_vs_scalar off this column, and a scalar-only
+        // host simply shows 1.0x
+        let scalar = time_it(iters, || {
+            std::hint::black_box(
+                spmm_f32(&ct, &gemm, &forced_scalar).unwrap(),
+            );
+        });
         let spmmn = time_it(iters, || {
             std::hint::black_box(spmm_f32(&ct, &gemm, &pooled).unwrap());
         });
         let best = spmm1.mean_s.min(spmmn.mean_s);
         println!(
-            "{:>7.0}%  {:>10.3}  {:>12.3}  {:>11.3}  {:>11.3}  {:>7.2}x",
+            "{:>7.0}%  {:>10.3}  {:>12.3}  {:>11.3}  {:>11.3}  {:>11.3}  {:>7.2}x",
             sparsity * 100.0,
             dense.mean_s * 1e3,
             decode_dense.mean_s * 1e3,
             spmm1.mean_s * 1e3,
+            scalar.mean_s * 1e3,
             spmmn.mean_s * 1e3,
             decode_dense.mean_s / best,
         );
@@ -249,6 +273,7 @@ fn kernel_section() {
             dense_s: dense.mean_s,
             decode_dense_s: decode_dense.mean_s,
             spmm_serial_s: spmm1.mean_s,
+            spmm_scalar_s: scalar.mean_s,
             spmm_pooled_s: spmmn.mean_s,
             skip_fraction: stats.skip_fraction(),
         });
@@ -256,35 +281,104 @@ fn kernel_section() {
     emit_json(m, k, n, &rows);
 }
 
+/// Best-effort commit id for the emission: CI exports `GITHUB_SHA`;
+/// local runs ask git; `"unknown"` keeps the file self-describing even
+/// without either.
+fn git_sha() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            return sha;
+        }
+    }
+    if let Ok(out) = std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+    {
+        if out.status.success() {
+            if let Ok(s) = String::from_utf8(out.stdout) {
+                let s = s.trim();
+                if !s.is_empty() {
+                    return s.to_string();
+                }
+            }
+        }
+    }
+    "unknown".to_string()
+}
+
 /// Write the kernel results to `BENCH_rfc.json` at the repo root so the
 /// perf trajectory is machine-readable across runs.
+///
+/// Schema v2 (consumed by `tools/bench_ratchet` -- keep the two in
+/// sync): top-level `schema_version`, `bench`, `section`, `git_sha`,
+/// problem dims, and a `machine` object whose `fingerprint`
+/// (`<arch>/<isa>/<cpus>cpu`) gates ratchet comparisons -- results from
+/// different fingerprints are never compared, only skipped.  Metric
+/// fields end in `_s` (seconds, lower is better); every other numeric
+/// field is context, not a ratcheted metric.
 fn emit_json(m: usize, k: usize, n: usize, rows: &[KernelRow]) {
-    let mut body = String::new();
-    body.push_str(&format!(
-        "{{\n  \"bench\": \"rfc_throughput\",\n  \"section\": \"kernel\",\n  \
-         \"m\": {m},\n  \"k\": {k},\n  \"n\": {n},\n  \"results\": [\n"
-    ));
-    for (i, r) in rows.iter().enumerate() {
-        let best = r.spmm_serial_s.min(r.spmm_pooled_s);
-        body.push_str(&format!(
-            "    {{\"sparsity\": {:.2}, \"dense_s\": {:.6e}, \
-             \"decode_dense_s\": {:.6e}, \"spmm_serial_s\": {:.6e}, \
-             \"spmm_pooled_s\": {:.6e}, \"speedup_vs_decode_dense\": {:.3}, \
-             \"skip_fraction\": {:.4}}}{}\n",
-            r.sparsity,
-            r.dense_s,
-            r.decode_dense_s,
-            r.spmm_serial_s,
-            r.spmm_pooled_s,
-            r.decode_dense_s / best,
-            r.skip_fraction,
-            if i + 1 == rows.len() { "" } else { "," },
-        ));
-    }
-    body.push_str("  ]\n}\n");
+    let isa = LaneDispatch::Auto.resolve();
+    let arch = std::env::consts::ARCH;
+    let cpus = std::thread::available_parallelism()
+        .map(std::num::NonZeroUsize::get)
+        .unwrap_or(1);
+    let machine = obj([
+        ("arch", Json::Str(arch.to_string())),
+        ("cpus", Json::Num(cpus as f64)),
+        ("isa", Json::Str(isa.name().to_string())),
+        (
+            "cpu_features",
+            Json::Arr(
+                cpu_features()
+                    .iter()
+                    .map(|f| Json::Str(f.to_string()))
+                    .collect(),
+            ),
+        ),
+        (
+            "fingerprint",
+            Json::Str(format!("{arch}/{}/{cpus}cpu", isa.name())),
+        ),
+    ]);
+    let results: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let best = r.spmm_serial_s.min(r.spmm_pooled_s);
+            obj([
+                ("sparsity", Json::Num(r.sparsity)),
+                ("dense_s", Json::Num(r.dense_s)),
+                ("decode_dense_s", Json::Num(r.decode_dense_s)),
+                ("spmm_serial_s", Json::Num(r.spmm_serial_s)),
+                ("spmm_scalar_s", Json::Num(r.spmm_scalar_s)),
+                ("spmm_pooled_s", Json::Num(r.spmm_pooled_s)),
+                (
+                    "speedup_vs_decode_dense",
+                    Json::Num(r.decode_dense_s / best),
+                ),
+                (
+                    "simd_speedup_vs_scalar",
+                    Json::Num(r.spmm_scalar_s / r.spmm_serial_s),
+                ),
+                ("skip_fraction", Json::Num(r.skip_fraction)),
+            ])
+        })
+        .collect();
+    let doc = obj([
+        ("schema_version", Json::Num(2.0)),
+        ("bench", Json::Str("rfc_throughput".to_string())),
+        ("section", Json::Str("kernel".to_string())),
+        ("git_sha", Json::Str(git_sha())),
+        ("machine", machine),
+        ("m", Json::Num(m as f64)),
+        ("k", Json::Num(k as f64)),
+        ("n", Json::Num(n as f64)),
+        ("results", Json::Arr(results)),
+    ]);
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .join("..")
         .join("BENCH_rfc.json");
+    let mut body = doc.to_string_pretty();
+    body.push('\n');
     match std::fs::write(&path, body) {
         Ok(()) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("could not write {}: {e}", path.display()),

@@ -33,6 +33,17 @@ pub fn requantize(acc: i32) -> i16 {
     (acc >> FRAC_BITS).clamp(-32768, 32767) as i16
 }
 
+/// [`requantize`] over a whole accumulator row: `out[j] =
+/// requantize(acc[j])`.  The compressed-domain kernel's output step
+/// (shared by its scalar and SIMD paths, so the rule keeps its single
+/// definition no matter which lanes accumulated).
+pub fn requantize_slice(acc: &[i32], out: &mut [i16]) {
+    debug_assert_eq!(acc.len(), out.len());
+    for (o, &a) in out.iter_mut().zip(acc) {
+        *o = requantize(a);
+    }
+}
+
 /// Reference Q8.8 matmul semantics (int32 accumulate, arithmetic shift,
 /// saturate) -- must agree with the AOT `quant_demo` kernel bit-for-bit.
 pub fn quant_matmul_ref(
@@ -99,5 +110,17 @@ mod tests {
         // -1 (raw) * 1 (raw) >> 8 must be -1, not 0
         let out = quant_matmul_ref(&[-1], &[1], 1, 1, 1);
         assert_eq!(out[0], -1);
+    }
+
+    #[test]
+    fn requantize_slice_matches_scalar_rule() {
+        let acc = [0i32, -1, 256, -257, i32::MAX, i32::MIN];
+        let mut out = [0i16; 6];
+        requantize_slice(&acc, &mut out);
+        for (o, a) in out.iter().zip(acc) {
+            assert_eq!(*o, requantize(a));
+        }
+        assert_eq!(out[4], i16::MAX);
+        assert_eq!(out[5], i16::MIN);
     }
 }

@@ -125,6 +125,24 @@ impl BankSegment {
         self.packed.len()
     }
 
+    /// The segment's packed nonzeros as one contiguous slice.
+    ///
+    /// **Stride/alignment contract** (relied on by the SIMD lanes in
+    /// [`super::kernel`]): banks are stored back-to-back in row-major
+    /// iteration order, so the `BankRef::packed` slices yielded by
+    /// [`BankSegment::banks_in`] are *adjacent* subslices of this one
+    /// buffer -- a kernel walking banks in order streams this memory
+    /// strictly forward with no gaps, which is what makes the software
+    /// prefetch of the upcoming bank ([`BankIter::upcoming_packed`])
+    /// effective.  Values are naturally 4-byte aligned (`Vec<f32>`);
+    /// no wider alignment is promised, so lane code must use unaligned
+    /// loads.  The per-bank extents are the validated monotone
+    /// `offsets` table (`offsets[i + 1] - offsets[i]` equals the bank's
+    /// hot-code popcount -- see [`BankSegment::validate`]).
+    pub fn packed_values(&self) -> &[f32] {
+        &self.packed
+    }
+
     /// Iterate the encoded banks of rows `[lo, hi)` in row-major order,
     /// in place (no decode, no copy).  This is the iteration surface the
     /// compressed-domain kernel ([`super::kernel`]) computes over: each
@@ -224,6 +242,25 @@ pub struct BankIter<'a> {
     seg: &'a BankSegment,
     i: usize,
     end: usize,
+}
+
+impl<'a> BankIter<'a> {
+    /// First packed value of the bank the next `next()` call will
+    /// yield, if any -- the kernel's software-prefetch hint.  Because a
+    /// segment's banks pack back-to-back ([`BankSegment::packed_values`]
+    /// documents the stride contract), touching this address pulls the
+    /// upcoming bank's head cache line while the current bank drains.
+    ///
+    /// `None` at the end of the span or when no packed data follows
+    /// (trailing banks all empty); an empty *upcoming* bank may still
+    /// return `Some` -- the address is then the first value of the next
+    /// non-empty bank, which is exactly what should be warmed.
+    pub fn upcoming_packed(&self) -> Option<&'a f32> {
+        if self.i >= self.end {
+            return None;
+        }
+        self.seg.packed.get(self.seg.offsets[self.i] as usize)
+    }
 }
 
 impl<'a> Iterator for BankIter<'a> {
@@ -643,6 +680,34 @@ mod tests {
         assert_eq!(mid.first().unwrap().row, 1);
         assert_eq!(mid.last().unwrap().row, 2);
         assert_eq!(seg.banks_in(2, 2).count(), 0);
+    }
+
+    #[test]
+    fn packed_banks_are_adjacent_subslices_in_iteration_order() {
+        // the SIMD lanes' stride contract: concatenating the yielded
+        // banks' packed slices reproduces packed_values() exactly, and
+        // upcoming_packed() always points at the next value the stream
+        // will touch
+        let t = sparse(vec![5, 52], 0.6, 77);
+        let ct = CompressedTensor::encode_slice(&t.data, t.shape.clone()).unwrap();
+        let seg = &ct.segments[0];
+        let mut streamed: Vec<f32> = Vec::new();
+        let mut iter = seg.iter_banks();
+        while let Some(bank) = iter.next() {
+            if let Some(hint) = iter.upcoming_packed() {
+                // the hint is the next packed value after this bank's
+                // slice in the one contiguous buffer
+                let consumed = streamed.len() + bank.packed.len();
+                assert_eq!(
+                    *hint,
+                    seg.packed_values()[consumed],
+                    "prefetch hint must point into the forward stream"
+                );
+            }
+            streamed.extend_from_slice(bank.packed);
+        }
+        assert_eq!(streamed, seg.packed_values());
+        assert!(iter.upcoming_packed().is_none());
     }
 
     #[test]

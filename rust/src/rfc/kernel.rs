@@ -37,6 +37,38 @@
 //!   the quantized decoded tensor.  Packed values are quantized on the
 //!   fly; zero lanes quantize to 0 and wrapping integer accumulation is
 //!   order-independent, so skipping them is exact by construction.
+//!
+//! ## SIMD lanes
+//!
+//! The hot loops execute many MACs per cycle -- the CPU analog of the
+//! paper's Dyn-Mult-PE DSP array -- by vectorizing over the *output
+//! column* axis with `std::arch` intrinsics: AVX2 8-wide f32 / 8-wide
+//! i32 on x86_64 (runtime-detected), NEON 4-wide on aarch64 (baseline).
+//! The scalar loops stay compiled on every target as the always-available
+//! fallback and the single source of truth for bit-exactness:
+//!
+//! * the f32 lanes use separate multiply-then-add (never FMA), so each
+//!   element performs the identical IEEE operations in the identical
+//!   order as the scalar loop -- vectorizing across columns never
+//!   reorders any single output element's accumulation;
+//! * the Q8.8 lanes widen int16 weights to int32 and use wrapping
+//!   vector multiply/add, exact by integer arithmetic;
+//! * ragged tails (`n` not a multiple of the lane width) fall through to
+//!   the scalar loop for the remaining columns.
+//!
+//! Weight rows are processed in [`PANEL_COLS`]-column panels so a hot
+//! bitmap's packed nonzeros stream against weight columns resident in
+//! L1/L2 instead of walking whole cache-busting rows; panels change only
+//! *when* columns are touched, never per-element accumulation order.
+//! The next bank's packed values are software-prefetched while the
+//! current bank drains (see [`BankSegment::packed_values`] for the
+//! stride contract that makes the hint meaningful).
+//!
+//! Selection is per call via [`KernelConfig::dispatch`]:
+//! [`LaneDispatch::Auto`] resolves to the widest ISA the host supports,
+//! [`LaneDispatch::ForceScalar`] pins the reference loops (every CI leg
+//! exercises forced-scalar vs auto equivalence, so the fallback cannot
+//! rot on SIMD-capable runners).  Result bits are identical either way.
 
 use std::num::NonZeroUsize;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -45,7 +77,7 @@ use std::thread;
 
 use anyhow::{ensure, Result};
 
-use crate::quant::{quantize, quantize_slice, requantize};
+use crate::quant::{quantize, quantize_slice, requantize_slice};
 use crate::runtime::Tensor;
 use crate::sim::rfc::BANK_WIDTH;
 
@@ -140,6 +172,154 @@ impl GemmQ88 {
     }
 }
 
+/// Lane-selection knob: which inner-loop implementation a kernel call
+/// may use.  Purely a scheduling choice -- the output bits are identical
+/// for every value (enforced by `tests/prop_invariants.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LaneDispatch {
+    /// Runtime feature detection picks the widest ISA path the host
+    /// supports (AVX2 on x86_64, NEON on aarch64, scalar otherwise).
+    #[default]
+    Auto,
+    /// Pin the scalar reference loops -- the testing knob that keeps the
+    /// fallback exercised on SIMD-capable machines, and an escape hatch
+    /// should a platform's vector unit ever misbehave.
+    ForceScalar,
+}
+
+impl LaneDispatch {
+    /// The ISA path this dispatch setting resolves to on this host.
+    pub fn resolve(self) -> IsaPath {
+        match self {
+            LaneDispatch::Auto => IsaPath::detect(),
+            LaneDispatch::ForceScalar => IsaPath::Scalar,
+        }
+    }
+}
+
+/// A concrete inner-loop implementation (what [`LaneDispatch::resolve`]
+/// picked).  `Avx2`/`Neon` are only ever produced on hosts where the
+/// corresponding intrinsics are safe to execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IsaPath {
+    /// Portable scalar loops: always available, the bit-exactness
+    /// reference every vector path must match.
+    Scalar,
+    /// AVX2 256-bit lanes (8 x f32 / 8 x i32), x86_64 runtime-detected.
+    Avx2,
+    /// NEON 128-bit lanes (4 x f32 / 4 x i32), aarch64 baseline.
+    Neon,
+}
+
+impl IsaPath {
+    /// Detect the widest path the running CPU supports.
+    #[cfg(target_arch = "x86_64")]
+    pub fn detect() -> IsaPath {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            IsaPath::Avx2
+        } else {
+            IsaPath::Scalar
+        }
+    }
+
+    /// Detect the widest path the running CPU supports (NEON is
+    /// architecturally mandatory on aarch64 -- no runtime probe needed).
+    #[cfg(target_arch = "aarch64")]
+    pub fn detect() -> IsaPath {
+        IsaPath::Neon
+    }
+
+    /// Detect the widest path the running CPU supports.
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    pub fn detect() -> IsaPath {
+        IsaPath::Scalar
+    }
+
+    /// Stable name for bench output / `BENCH_rfc.json` (the ratchet uses
+    /// it to tell AVX2 runners from scalar ones).
+    pub fn name(self) -> &'static str {
+        match self {
+            IsaPath::Scalar => "scalar",
+            IsaPath::Avx2 => "avx2",
+            IsaPath::Neon => "neon",
+        }
+    }
+
+    /// f32 elements per vector lane operation.
+    pub fn f32_lanes(self) -> usize {
+        match self {
+            IsaPath::Scalar => 1,
+            IsaPath::Avx2 => 8,
+            IsaPath::Neon => 4,
+        }
+    }
+
+    /// f32 axpy over one weight-row panel: `out[j] += x * w[j]`.
+    /// Every path performs the identical per-element IEEE multiply and
+    /// add (no FMA), so the bits match the scalar loop exactly.
+    #[inline]
+    fn axpy_f32(self, out: &mut [f32], x: f32, w: &[f32]) {
+        match self {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Avx2 is only produced by detect() after the
+            // runtime avx2 probe succeeded
+            IsaPath::Avx2 => unsafe { axpy_f32_avx2(out, x, w) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is baseline on aarch64
+            IsaPath::Neon => unsafe { axpy_f32_neon(out, x, w) },
+            _ => axpy_f32_scalar(out, x, w),
+        }
+    }
+
+    /// Q8.8 accumulate over one weight-row panel:
+    /// `acc[j] = acc[j].wrapping_add(xq * wq[j] as i32)`.
+    #[inline]
+    fn acc_q88(self, acc: &mut [i32], xq: i32, wq: &[i16]) {
+        match self {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: see axpy_f32
+            IsaPath::Avx2 => unsafe { acc_q88_avx2(acc, xq, wq) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: see axpy_f32
+            IsaPath::Neon => unsafe { acc_q88_neon(acc, xq, wq) },
+            _ => acc_q88_scalar(acc, xq, wq),
+        }
+    }
+}
+
+/// Runtime-detected CPU features relevant to the kernel, stamped into
+/// `BENCH_rfc.json` so ratchet comparisons are self-describing.
+#[cfg(target_arch = "x86_64")]
+pub fn cpu_features() -> Vec<&'static str> {
+    let mut f = Vec::new();
+    for (name, have) in [
+        ("sse4.2", std::arch::is_x86_feature_detected!("sse4.2")),
+        ("avx", std::arch::is_x86_feature_detected!("avx")),
+        ("avx2", std::arch::is_x86_feature_detected!("avx2")),
+        ("fma", std::arch::is_x86_feature_detected!("fma")),
+        ("avx512f", std::arch::is_x86_feature_detected!("avx512f")),
+    ] {
+        if have {
+            f.push(name);
+        }
+    }
+    f
+}
+
+/// Runtime-detected CPU features relevant to the kernel, stamped into
+/// `BENCH_rfc.json` so ratchet comparisons are self-describing.
+#[cfg(target_arch = "aarch64")]
+pub fn cpu_features() -> Vec<&'static str> {
+    vec!["neon"]
+}
+
+/// Runtime-detected CPU features relevant to the kernel, stamped into
+/// `BENCH_rfc.json` so ratchet comparisons are self-describing.
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn cpu_features() -> Vec<&'static str> {
+    Vec::new()
+}
+
 /// Scheduling knobs for the kernel's worker pool.
 #[derive(Debug, Clone, Copy)]
 pub struct KernelConfig {
@@ -151,6 +331,8 @@ pub struct KernelConfig {
     /// the workers are scoped threads spawned per call, so tiny GEMMs
     /// must not pay the spawn cost
     pub par_threshold_macs: u64,
+    /// inner-loop lane selection (never changes output bits)
+    pub dispatch: LaneDispatch,
 }
 
 impl Default for KernelConfig {
@@ -162,6 +344,7 @@ impl Default for KernelConfig {
                 .min(8),
             rows_per_job: 1,
             par_threshold_macs: 1 << 21,
+            dispatch: LaneDispatch::Auto,
         }
     }
 }
@@ -174,7 +357,14 @@ impl KernelConfig {
             workers: 1,
             rows_per_job: usize::MAX,
             par_threshold_macs: u64::MAX,
+            dispatch: LaneDispatch::Auto,
         }
+    }
+
+    /// Same scheduling, different lane selection.
+    pub fn with_dispatch(mut self, dispatch: LaneDispatch) -> KernelConfig {
+        self.dispatch = dispatch;
+        self
     }
 }
 
@@ -288,8 +478,9 @@ pub fn spmm_f32(
     let geo = geometry(ct, gemm.k, gemm.n)?;
     let mut out = vec![0f32; geo.m * geo.n];
     let w = gemm.w.as_slice();
+    let isa = cfg.dispatch.resolve();
     let mut stats = dispatch(ct, &mut out, geo, cfg, &|job, _scratch, local| {
-        run_job_f32(job, w, geo, local)
+        run_job_f32(job, w, geo, isa, local)
     });
     stats.gemm_rows = geo.m as u64;
     let shape = out_shape(&ct.shape, gemm.k, gemm.n, geo.m);
@@ -308,8 +499,9 @@ pub fn spmm_q88(
     let geo = geometry(ct, gemm.k, gemm.n)?;
     let mut out = vec![0i16; geo.m * geo.n];
     let wq = gemm.wq.as_slice();
+    let isa = cfg.dispatch.resolve();
     let mut stats = dispatch(ct, &mut out, geo, cfg, &|job, scratch, local| {
-        run_job_q88(job, wq, geo, scratch, local)
+        run_job_q88(job, wq, geo, isa, scratch, local)
     });
     stats.gemm_rows = geo.m as u64;
     Ok((out, stats))
@@ -434,7 +626,15 @@ where
     if workers <= 1 || jobs.len() <= 1 {
         let mut local = LocalStats::default();
         let mut scratch = Vec::new();
-        for job in jobs {
+        let mut it = jobs.into_iter().peekable();
+        while let Some(job) = it.next() {
+            // warm the next job's segment head (often the next
+            // BankSegment) while the current one drains
+            if let Some(next) = it.peek() {
+                if let Some(p) = next.seg.packed_values().first() {
+                    prefetch_read(p);
+                }
+            }
             run(job, &mut scratch, &mut local);
         }
         return SpmmStats {
@@ -501,55 +701,107 @@ where
 
 // ---------------------------------------------------------- job kernels
 
-/// f32 job body: stream the job's banks, axpy each hot lane's weight row
-/// into the owning output row.  Lane order is ascending (lowest set bit
-/// first), matching [`gemm_dense_f32`] bit for bit.
-fn run_job_f32(job: Job<'_, f32>, w: &[f32], geo: Geometry, local: &mut LocalStats) {
-    let Job {
-        seg,
-        row_lo,
-        row_hi,
-        out,
-    } = job;
-    for bank in seg.banks_in(row_lo, row_hi) {
-        let live = BANK_WIDTH.min(geo.row_len - bank.index * BANK_WIDTH);
-        let nnz = bank.packed.len();
-        local.hot += nnz as u64;
-        local.skipped += (live - nnz) as u64;
-        if bank.mbhot == 0 {
-            continue; // mini-bank gate: whole bank empty
-        }
-        let gr = (bank.row - row_lo) * geo.g + bank.index / geo.bpg;
-        let out_row = &mut out[gr * geo.n..(gr + 1) * geo.n];
-        let base = (bank.index % geo.bpg) * BANK_WIDTH;
-        let mut bits = bank.hot;
-        let mut next = 0usize;
-        while bits != 0 {
-            let lane = bits.trailing_zeros() as usize;
-            bits &= bits - 1;
-            let x = bank.packed[next];
-            next += 1;
-            let wrow = &w[(base + lane) * geo.n..(base + lane + 1) * geo.n];
-            for (o, &wv) in out_row.iter_mut().zip(wrow) {
-                *o += x * wv;
-            }
-        }
+/// Output columns per weight-row panel.  One bank selects at most 16
+/// weight rows; a 512-column f32 panel of those rows is 16 x 512 x 4 B =
+/// 32 KiB -- resident in L1d (or at worst hot L2) while the bank's
+/// packed nonzeros stream against it.  Panels partition the column axis
+/// *outside* the lane walk, so each output element still accumulates its
+/// lanes in exactly the scalar reference order (bit-exactness is
+/// untouched); lane/skip accounting runs on the first panel only, so a
+/// bank's lanes are counted exactly once however many panels replay it.
+pub const PANEL_COLS: usize = 512;
+
+/// Best-effort software prefetch of the cache line holding `p` (the
+/// upcoming bank's packed values, or the next job's segment head).
+/// No-op off x86_64: stable Rust exposes no aarch64 prefetch intrinsic,
+/// and the NEON path's strictly-forward packed stream is a pattern
+/// hardware prefetchers already handle.
+#[inline(always)]
+fn prefetch_read<T>(p: *const T) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: PREFETCHT0 is architecturally a hint and cannot fault
+    unsafe {
+        use core::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        _mm_prefetch::<_MM_HINT_T0>(p.cast::<i8>());
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = p;
     }
 }
 
-/// Q8.8 job body: per GEMM row, accumulate `quantize(x) * wq` into the
-/// worker's int32 scratch, then requantize into the output row.
-fn run_job_q88(
-    job: Job<'_, i16>,
-    wq: &[i16],
+/// f32 job body: stream the job's banks, axpy each hot lane's weight row
+/// into the owning output row.  Lane order is ascending (lowest set bit
+/// first), matching [`gemm_dense_f32`] bit for bit; columns are covered
+/// in [`PANEL_COLS`] panels (see the constant's docs).
+fn run_job_f32(
+    job: Job<'_, f32>,
+    w: &[f32],
     geo: Geometry,
-    scratch: &mut Vec<i32>,
+    isa: IsaPath,
     local: &mut LocalStats,
 ) {
     let Job {
         seg,
         row_lo,
         row_hi,
+        out,
+    } = job;
+    let n = geo.n;
+    let mut j0 = 0usize;
+    let mut first_panel = true;
+    while j0 < n {
+        let j1 = n.min(j0 + PANEL_COLS);
+        let mut banks = seg.banks_in(row_lo, row_hi);
+        while let Some(bank) = banks.next() {
+            if first_panel {
+                let live = BANK_WIDTH.min(geo.row_len - bank.index * BANK_WIDTH);
+                let nnz = bank.packed.len();
+                local.hot += nnz as u64;
+                local.skipped += (live - nnz) as u64;
+            }
+            // warm the next bank's packed head while this one drains
+            if let Some(p) = banks.upcoming_packed() {
+                prefetch_read(p);
+            }
+            if bank.mbhot == 0 {
+                continue; // mini-bank gate: whole bank empty
+            }
+            let gr = (bank.row - row_lo) * geo.g + bank.index / geo.bpg;
+            let out_row = &mut out[gr * n + j0..gr * n + j1];
+            let base = (bank.index % geo.bpg) * BANK_WIDTH;
+            let mut bits = bank.hot;
+            let mut next = 0usize;
+            while bits != 0 {
+                let lane = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                let x = bank.packed[next];
+                next += 1;
+                let row0 = (base + lane) * n;
+                isa.axpy_f32(out_row, x, &w[row0 + j0..row0 + j1]);
+            }
+        }
+        first_panel = false;
+        j0 = j1;
+    }
+}
+
+/// Q8.8 job body: per GEMM row, accumulate `quantize(x) * wq` into the
+/// worker's int32 scratch (panel by panel, like the f32 path), then
+/// requantize into the output row via the shared
+/// [`crate::quant::requantize_slice`] rule.
+fn run_job_q88(
+    job: Job<'_, i16>,
+    wq: &[i16],
+    geo: Geometry,
+    isa: IsaPath,
+    scratch: &mut Vec<i32>,
+    local: &mut LocalStats,
+) {
+    let Job {
+        seg,
+        row_lo,
+        row_hi: _,
         out,
     } = job;
     let rb = seg.banks_per_row();
@@ -559,32 +811,156 @@ fn run_job_q88(
         scratch.clear();
         scratch.resize(geo.n, 0);
         let b0 = r * rb + gi * geo.bpg;
-        for bank in seg.bank_span(b0, b0 + geo.bpg) {
-            let live = BANK_WIDTH.min(geo.row_len - bank.index * BANK_WIDTH);
-            let nnz = bank.packed.len();
-            local.hot += nnz as u64;
-            local.skipped += (live - nnz) as u64;
-            if bank.mbhot == 0 {
-                continue;
-            }
-            let base = (bank.index % geo.bpg) * BANK_WIDTH;
-            let mut bits = bank.hot;
-            let mut next = 0usize;
-            while bits != 0 {
-                let lane = bits.trailing_zeros() as usize;
-                bits &= bits - 1;
-                let xq = quantize(bank.packed[next]) as i32;
-                next += 1;
-                let wrow = &wq[(base + lane) * geo.n..(base + lane + 1) * geo.n];
-                for (acc, &wv) in scratch.iter_mut().zip(wrow) {
-                    *acc = acc.wrapping_add(xq * wv as i32);
+        let mut j0 = 0usize;
+        let mut first_panel = true;
+        while j0 < geo.n {
+            let j1 = geo.n.min(j0 + PANEL_COLS);
+            let mut banks = seg.bank_span(b0, b0 + geo.bpg);
+            while let Some(bank) = banks.next() {
+                if first_panel {
+                    let live =
+                        BANK_WIDTH.min(geo.row_len - bank.index * BANK_WIDTH);
+                    let nnz = bank.packed.len();
+                    local.hot += nnz as u64;
+                    local.skipped += (live - nnz) as u64;
+                }
+                if let Some(p) = banks.upcoming_packed() {
+                    prefetch_read(p);
+                }
+                if bank.mbhot == 0 {
+                    continue;
+                }
+                let base = (bank.index % geo.bpg) * BANK_WIDTH;
+                let mut bits = bank.hot;
+                let mut next = 0usize;
+                while bits != 0 {
+                    let lane = bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    let xq = quantize(bank.packed[next]) as i32;
+                    next += 1;
+                    let row0 = (base + lane) * geo.n;
+                    isa.acc_q88(
+                        &mut scratch[j0..j1],
+                        xq,
+                        &wq[row0 + j0..row0 + j1],
+                    );
                 }
             }
+            first_panel = false;
+            j0 = j1;
         }
-        for (o, &acc) in out_row.iter_mut().zip(scratch.iter()) {
-            *o = requantize(acc);
-        }
+        requantize_slice(scratch, out_row);
     }
+}
+
+// ----------------------------------------------------------- lane loops
+//
+// The scalar loops below are the bit-exactness reference; each vector
+// path performs the identical per-element operations (IEEE f32 multiply
+// then add -- never FMA, whose unrounded intermediate would change bits;
+// wrapping i32 multiply/add, exact by integer arithmetic) over the same
+// column order, then falls through to the scalar loop for the ragged
+// tail.  `out`/`acc` and `w`/`wq` panels always have equal lengths.
+
+#[inline(always)]
+fn axpy_f32_scalar(out: &mut [f32], x: f32, w: &[f32]) {
+    for (o, &wv) in out.iter_mut().zip(w) {
+        *o += x * wv;
+    }
+}
+
+#[inline(always)]
+fn acc_q88_scalar(acc: &mut [i32], xq: i32, wq: &[i16]) {
+    for (a, &wv) in acc.iter_mut().zip(wq) {
+        // |xq|, |wq| <= 2^15, so the i32 product is exact (no overflow
+        // before the wrapping accumulate)
+        *a = a.wrapping_add(xq * wv as i32);
+    }
+}
+
+/// # Safety
+/// Caller must have verified AVX2 support (see [`IsaPath::detect`]).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_f32_avx2(out: &mut [f32], x: f32, w: &[f32]) {
+    use core::arch::x86_64::*;
+    debug_assert_eq!(out.len(), w.len());
+    let n = out.len();
+    let xs = _mm256_set1_ps(x);
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let wv = _mm256_loadu_ps(w.as_ptr().add(j));
+        let ov = _mm256_loadu_ps(out.as_ptr().add(j));
+        let r = _mm256_add_ps(ov, _mm256_mul_ps(xs, wv));
+        _mm256_storeu_ps(out.as_mut_ptr().add(j), r);
+        j += 8;
+    }
+    axpy_f32_scalar(&mut out[j..], x, &w[j..]);
+}
+
+/// # Safety
+/// Caller must have verified AVX2 support (see [`IsaPath::detect`]).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn acc_q88_avx2(acc: &mut [i32], xq: i32, wq: &[i16]) {
+    use core::arch::x86_64::*;
+    debug_assert_eq!(acc.len(), wq.len());
+    let n = acc.len();
+    let xs = _mm256_set1_epi32(xq);
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let w128 = _mm_loadu_si128(wq.as_ptr().add(j).cast());
+        let wv = _mm256_cvtepi16_epi32(w128);
+        let prod = _mm256_mullo_epi32(xs, wv);
+        let av = _mm256_loadu_si256(acc.as_ptr().add(j).cast());
+        _mm256_storeu_si256(
+            acc.as_mut_ptr().add(j).cast(),
+            _mm256_add_epi32(av, prod),
+        );
+        j += 8;
+    }
+    acc_q88_scalar(&mut acc[j..], xq, &wq[j..]);
+}
+
+/// # Safety
+/// NEON is baseline on aarch64; callable from any aarch64 context.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn axpy_f32_neon(out: &mut [f32], x: f32, w: &[f32]) {
+    use core::arch::aarch64::*;
+    debug_assert_eq!(out.len(), w.len());
+    let n = out.len();
+    let xs = vdupq_n_f32(x);
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let wv = vld1q_f32(w.as_ptr().add(j));
+        let ov = vld1q_f32(out.as_ptr().add(j));
+        // separate mul + add (not vfmaq) to keep the scalar rounding
+        let r = vaddq_f32(ov, vmulq_f32(xs, wv));
+        vst1q_f32(out.as_mut_ptr().add(j), r);
+        j += 4;
+    }
+    axpy_f32_scalar(&mut out[j..], x, &w[j..]);
+}
+
+/// # Safety
+/// NEON is baseline on aarch64; callable from any aarch64 context.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn acc_q88_neon(acc: &mut [i32], xq: i32, wq: &[i16]) {
+    use core::arch::aarch64::*;
+    debug_assert_eq!(acc.len(), wq.len());
+    let n = acc.len();
+    let xs = vdupq_n_s32(xq);
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let wv = vmovl_s16(vld1_s16(wq.as_ptr().add(j)));
+        let av = vld1q_s32(acc.as_ptr().add(j));
+        // integer multiply-accumulate wraps, matching wrapping_add
+        vst1q_s32(acc.as_mut_ptr().add(j), vmlaq_s32(av, xs, wv));
+        j += 4;
+    }
+    acc_q88_scalar(&mut acc[j..], xq, &wq[j..]);
 }
 
 #[cfg(test)]
@@ -651,6 +1027,7 @@ mod tests {
                 workers,
                 rows_per_job: 1,
                 par_threshold_macs: 0,
+                dispatch: LaneDispatch::Auto,
             };
             let (y, stats) = spmm_f32(&ct, &gemm, &cfg).unwrap();
             for (a, b) in y.data.iter().zip(&reference.data) {
@@ -730,6 +1107,123 @@ mod tests {
     }
 
     #[test]
+    fn dispatch_resolution_is_sane() {
+        // ForceScalar always pins the reference loops
+        assert_eq!(LaneDispatch::ForceScalar.resolve(), IsaPath::Scalar);
+        // Auto resolves to *some* path this binary can execute; its lane
+        // width and name are consistent
+        let auto = LaneDispatch::Auto.resolve();
+        assert!(auto.f32_lanes() >= 1);
+        match auto {
+            IsaPath::Scalar => assert_eq!(auto.name(), "scalar"),
+            IsaPath::Avx2 => {
+                assert_eq!(auto.name(), "avx2");
+                assert_eq!(auto.f32_lanes(), 8);
+                assert!(cpu_features().contains(&"avx2"));
+            }
+            IsaPath::Neon => {
+                assert_eq!(auto.name(), "neon");
+                assert_eq!(auto.f32_lanes(), 4);
+            }
+        }
+        assert_eq!(KernelConfig::default().dispatch, LaneDispatch::Auto);
+        let forced =
+            KernelConfig::serial().with_dispatch(LaneDispatch::ForceScalar);
+        assert_eq!(forced.dispatch, LaneDispatch::ForceScalar);
+    }
+
+    #[test]
+    fn forced_scalar_matches_auto_dispatch_bit_for_bit() {
+        // n = 21 exercises the ragged tail of both the 8-wide and 4-wide
+        // paths; run serial and parallel schedules under both dispatches
+        let t = Tensor::random_sparse(vec![9, 64], 0.55, 41);
+        let ct = encode(&t, &enc(2));
+        let gemm = weights(64, 21, 43);
+        let gq = gemm.quantize();
+        let scalar_cfg =
+            KernelConfig::serial().with_dispatch(LaneDispatch::ForceScalar);
+        let (y_s, st_s) = spmm_f32(&ct, &gemm, &scalar_cfg).unwrap();
+        let (q_s, _) = spmm_q88(&ct, &gq, &scalar_cfg).unwrap();
+        for cfg in [
+            KernelConfig::serial(),
+            KernelConfig {
+                workers: 4,
+                rows_per_job: 1,
+                par_threshold_macs: 0,
+                dispatch: LaneDispatch::Auto,
+            },
+        ] {
+            let (y, st) = spmm_f32(&ct, &gemm, &cfg).unwrap();
+            for (a, b) in y.data.iter().zip(&y_s.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "auto vs forced-scalar");
+            }
+            assert_eq!(st.hot_lanes, st_s.hot_lanes);
+            assert_eq!(st.skipped_lanes, st_s.skipped_lanes);
+            let (q, _) = spmm_q88(&ct, &gq, &cfg).unwrap();
+            assert_eq!(q, q_s);
+        }
+    }
+
+    #[test]
+    fn column_panels_count_lanes_once_and_stay_bit_exact() {
+        // n = PANEL_COLS + 3 forces a second (ragged) panel; the banks
+        // replay once per panel but lane accounting must not double-count
+        let t = Tensor::random_sparse(vec![3, 32], 0.5, 51);
+        let ct = encode(&t, &enc(1));
+        let n = PANEL_COLS + 3;
+        let gemm = weights(32, n, 53);
+        for dispatch in [LaneDispatch::Auto, LaneDispatch::ForceScalar] {
+            let cfg = KernelConfig::serial().with_dispatch(dispatch);
+            let (y, stats) = spmm_f32(&ct, &gemm, &cfg).unwrap();
+            let reference = gemm_dense_f32(&t.data, 3, &gemm);
+            for (a, b) in y.data.iter().zip(&reference) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{dispatch:?}");
+            }
+            assert_eq!(
+                stats.hot_lanes + stats.skipped_lanes,
+                t.len() as u64,
+                "multi-panel lane accounting must count each bank once"
+            );
+            let gq = gemm.quantize();
+            let (yq, qstats) = spmm_q88(&ct, &gq, &cfg).unwrap();
+            let xq = quantize_slice(&t.data);
+            let qref = quant_matmul_ref(&xq, gq.raw_weights(), 3, 32, n);
+            assert_eq!(yq, qref);
+            assert_eq!(qstats.hot_lanes + qstats.skipped_lanes, t.len() as u64);
+        }
+    }
+
+    #[test]
+    fn lane_loops_match_scalar_on_all_tail_lengths() {
+        // drive the lane primitives directly through every residue of the
+        // widest lane width (plus empty), on whichever path Auto picked
+        let isa = LaneDispatch::Auto.resolve();
+        let mut rng = Rng::new(61);
+        for len in 0..=17usize {
+            let w: Vec<f32> = (0..len).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            let x = rng.f32() * 2.0 - 1.0;
+            let mut out_v: Vec<f32> =
+                (0..len).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            let mut out_s = out_v.clone();
+            isa.axpy_f32(&mut out_v, x, &w);
+            axpy_f32_scalar(&mut out_s, x, &w);
+            for (a, b) in out_v.iter().zip(&out_s) {
+                assert_eq!(a.to_bits(), b.to_bits(), "f32 len {len}");
+            }
+
+            let wq: Vec<i16> =
+                (0..len).map(|_| (rng.f32() * 60000.0 - 30000.0) as i16).collect();
+            let xq = (rng.f32() * 60000.0 - 30000.0) as i32;
+            let mut acc_v: Vec<i32> =
+                (0..len).map(|_| (rng.f32() * 1e6) as i32).collect();
+            let mut acc_s = acc_v.clone();
+            isa.acc_q88(&mut acc_v, xq, &wq);
+            acc_q88_scalar(&mut acc_s, xq, &wq);
+            assert_eq!(acc_v, acc_s, "q88 len {len}");
+        }
+    }
+
+    #[test]
     fn stealing_engages_on_imbalanced_segments() {
         // one dense segment, one nearly-empty one: with one job per row
         // and 2 workers dealt contiguous halves, the worker that gets
@@ -748,6 +1242,7 @@ mod tests {
             workers: 2,
             rows_per_job: 1,
             par_threshold_macs: 0,
+            dispatch: LaneDispatch::Auto,
         };
         let (y, stats) = spmm_f32(&ct, &gemm, &cfg).unwrap();
         let reference = gemm_dense_f32(&data, 16, &gemm);

@@ -36,7 +36,10 @@ pub mod wire;
 
 pub use compressed::{BankRef, BankSegment, CompressedTensor, BANK_SIDECAR_BITS};
 pub use encoder::{decode, encode, EncoderConfig};
-pub use kernel::{GemmF32, GemmQ88, KernelConfig, SpmmStats};
+pub use kernel::{
+    cpu_features, GemmF32, GemmQ88, IsaPath, KernelConfig, LaneDispatch,
+    SpmmStats,
+};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

@@ -354,7 +354,9 @@ fn prop_kernel_f32_bit_identical_to_decode_then_dense() {
     // for bit, across random shapes/sparsities (incl. all-zero and
     // fully-dense banks), both claim geometries, any shard count, any
     // worker count / job grain
-    use rfc_hypgcn::rfc::kernel::{gemm_dense_f32, spmm_f32, GemmF32, KernelConfig};
+    use rfc_hypgcn::rfc::kernel::{
+        gemm_dense_f32, spmm_f32, GemmF32, KernelConfig, LaneDispatch,
+    };
     use rfc_hypgcn::rfc::{self, EncoderConfig};
     let mut rng = Rng::new(0x6E33);
     for case in 0..60 {
@@ -385,10 +387,18 @@ fn prop_kernel_f32_bit_identical_to_decode_then_dense() {
         let reference = gemm_dense_f32(&ct.to_tensor().data, m, &gemm);
         for kcfg in [
             KernelConfig::serial(),
+            KernelConfig::serial().with_dispatch(LaneDispatch::ForceScalar),
             KernelConfig {
                 workers: 1 + rng.below(6),
                 rows_per_job: 1 + rng.below(3),
                 par_threshold_macs: 0,
+                dispatch: LaneDispatch::Auto,
+            },
+            KernelConfig {
+                workers: 1 + rng.below(6),
+                rows_per_job: 1 + rng.below(3),
+                par_threshold_macs: 0,
+                dispatch: LaneDispatch::ForceScalar,
             },
         ] {
             let (y, stats) = spmm_f32(&ct, &gemm, &kcfg).unwrap();
@@ -413,7 +423,7 @@ fn prop_kernel_f32_bit_identical_to_decode_then_dense() {
 #[test]
 fn prop_kernel_q88_bit_identical_to_quant_matmul_ref() {
     use rfc_hypgcn::quant::{quant_matmul_ref, quantize_slice};
-    use rfc_hypgcn::rfc::kernel::{spmm_q88, GemmF32, KernelConfig};
+    use rfc_hypgcn::rfc::kernel::{spmm_q88, GemmF32, KernelConfig, LaneDispatch};
     use rfc_hypgcn::rfc::{self, EncoderConfig};
     let mut rng = Rng::new(0xABBA);
     for case in 0..40 {
@@ -441,15 +451,86 @@ fn prop_kernel_q88_bit_identical_to_quant_matmul_ref() {
         let xq = quantize_slice(&ct.to_tensor().data);
         let reference = quant_matmul_ref(&xq, gemm.raw_weights(), rows, k, n);
         for workers in [1usize, 3] {
-            let kcfg = KernelConfig {
-                workers,
-                rows_per_job: 1,
-                par_threshold_macs: 0,
-            };
-            let (yq, stats) = spmm_q88(&ct, &gemm, &kcfg).unwrap();
-            assert_eq!(yq, reference, "case {case} workers {workers}");
-            assert_eq!(stats.gemm_rows, rows as u64, "case {case}");
+            for dispatch in [LaneDispatch::Auto, LaneDispatch::ForceScalar] {
+                let kcfg = KernelConfig {
+                    workers,
+                    rows_per_job: 1,
+                    par_threshold_macs: 0,
+                    dispatch,
+                };
+                let (yq, stats) = spmm_q88(&ct, &gemm, &kcfg).unwrap();
+                assert_eq!(
+                    yq, reference,
+                    "case {case} workers {workers} {dispatch:?}"
+                );
+                assert_eq!(stats.gemm_rows, rows as u64, "case {case}");
+            }
         }
+    }
+}
+
+#[test]
+fn prop_kernel_simd_tail_geometries_match_scalar() {
+    // the SIMD-specific hazard zone: output widths sweeping every
+    // residue of the widest lane width (ragged tails), single-row
+    // banks, and rows forced all-zero (empty mbhot banks mid-stream).
+    // Forced-scalar and auto dispatch must agree bit for bit with each
+    // other and with the dense reference, f32 and Q8.8 alike.
+    use rfc_hypgcn::quant::{quant_matmul_ref, quantize_slice};
+    use rfc_hypgcn::rfc::kernel::{
+        gemm_dense_f32, spmm_f32, spmm_q88, GemmF32, KernelConfig,
+        LaneDispatch,
+    };
+    use rfc_hypgcn::rfc::{self, EncoderConfig};
+    let mut rng = Rng::new(0x51D3);
+    for case in 0..40 {
+        // n = 1..=18 covers every residue mod 8 (AVX2) and mod 4 (NEON),
+        // including n smaller than one vector lane
+        let n = 1 + (case as usize % 18);
+        let single_row_banks = case % 3 == 0;
+        let (rows, k) = if single_row_banks {
+            // one bank per GEMM row: k == BANK_WIDTH
+            (1 + rng.below(4), BANK_WIDTH)
+        } else {
+            (1 + rng.below(4), 1 + rng.below(70))
+        };
+        let mut t =
+            Tensor::random_sparse(vec![rows, k], rng.f64(), 9000 + case);
+        // force a row all-zero so the kernel crosses empty mbhot banks
+        // between live ones
+        if rows > 1 {
+            let dead = rng.below(rows);
+            for v in &mut t.data[dead * k..(dead + 1) * k] {
+                *v = 0.0;
+            }
+        }
+        let cfg = EncoderConfig {
+            shards: 1 + rng.below(3),
+            min_sparsity: 0.0,
+            parallel_threshold: 0,
+        };
+        let ct = rfc::encode(&t, &cfg);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let gemm = GemmF32::new(w, k, n).unwrap();
+        let reference = gemm_dense_f32(&ct.to_tensor().data, rows, &gemm);
+        let auto = KernelConfig::serial();
+        let scalar =
+            KernelConfig::serial().with_dispatch(LaneDispatch::ForceScalar);
+        let (y_a, st_a) = spmm_f32(&ct, &gemm, &auto).unwrap();
+        let (y_s, st_s) = spmm_f32(&ct, &gemm, &scalar).unwrap();
+        for ((a, s), r) in y_a.data.iter().zip(&y_s.data).zip(&reference) {
+            assert_eq!(a.to_bits(), s.to_bits(), "case {case} n {n}");
+            assert_eq!(a.to_bits(), r.to_bits(), "case {case} n {n}");
+        }
+        assert_eq!(st_a, st_s, "case {case}: stats must not depend on ISA");
+
+        let gq = gemm.quantize();
+        let xq = quantize_slice(&ct.to_tensor().data);
+        let qref = quant_matmul_ref(&xq, gq.raw_weights(), rows, k, n);
+        let (q_a, _) = spmm_q88(&ct, &gq, &auto).unwrap();
+        let (q_s, _) = spmm_q88(&ct, &gq, &scalar).unwrap();
+        assert_eq!(q_a, qref, "case {case} n {n}: q88 auto vs ref");
+        assert_eq!(q_s, qref, "case {case} n {n}: q88 scalar vs ref");
     }
 }
 

@@ -1,0 +1,481 @@
+//! CI perf ratchet over `BENCH_rfc.json` (schema v2, emitted by
+//! `rust/benches/rfc_throughput.rs` -- keep the two in sync).
+//!
+//! Compares a current benchmark emission against a baseline (the base
+//! branch's artifact, or the checked-in `bench/BENCH_baseline.json` on
+//! cold start) and fails on regression:
+//!
+//! * only numeric result fields ending in `_s` are ratcheted metrics
+//!   (seconds, lower is better); everything else is context;
+//! * result rows are matched by their `sparsity` key -- a row present
+//!   on one side only is ignored (geometry changes are not regressions);
+//! * a regression is `current > baseline * (1 + tolerance)`;
+//! * comparisons only run between identical machine fingerprints
+//!   (`machine.fingerprint`, `<arch>/<isa>/<cpus>cpu`): timings from a
+//!   different runner class are incomparable, so a mismatch is a SKIP
+//!   (exit 0), never a failure.
+//!
+//! Exit codes: 0 = ok or skipped, 1 = regression, 2 = malformed input.
+//! The explicit override for an accepted slowdown is refreshing the
+//! baseline file -- see `docs/bench-ratchet.md`.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{bail, ensure, Context, Result};
+use rfc_hypgcn::util::json::Json;
+
+/// Schema this tool understands; bump together with the bench emitter.
+const SCHEMA_VERSION: usize = 2;
+
+/// Default headroom before a slowdown counts as a regression.  Bench
+/// timings on shared CI runners jitter; 25% is wide enough that noise
+/// does not flake the job while a real (2x-style) regression still trips.
+const DEFAULT_TOLERANCE: f64 = 0.25;
+
+/// One metric that got slower than the baseline allows.
+#[derive(Debug, Clone, PartialEq)]
+struct Regression {
+    row: String,
+    metric: String,
+    baseline_s: f64,
+    current_s: f64,
+    ratio: f64,
+}
+
+/// What the comparison concluded.
+#[derive(Debug, PartialEq)]
+enum Outcome {
+    /// Fingerprints differ: timings are incomparable, nothing checked.
+    Skipped { current: String, baseline: String },
+    /// Fingerprints match: every shared `_s` metric was checked.
+    Compared {
+        metrics: usize,
+        regressions: Vec<Regression>,
+    },
+}
+
+fn fingerprint(doc: &Json) -> Result<String> {
+    Ok(doc
+        .get("machine")
+        .context("bench document has no machine object")?
+        .get("fingerprint")
+        .context("machine object has no fingerprint")?
+        .as_str()?
+        .to_string())
+}
+
+/// Stable identity of a result row: its `sparsity` value.  Rows are
+/// matched across documents by this key, not by position.
+fn row_key(row: &Json) -> Result<String> {
+    let s = row
+        .get("sparsity")
+        .context("result row has no sparsity key")?
+        .as_f64()?;
+    Ok(format!("sparsity={s}"))
+}
+
+fn check_schema(doc: &Json, which: &str) -> Result<()> {
+    let v = doc
+        .get("schema_version")
+        .with_context(|| format!("{which}: missing schema_version"))?
+        .as_usize()?;
+    ensure!(
+        v == SCHEMA_VERSION,
+        "{which}: schema_version {v}, this tool understands {SCHEMA_VERSION}"
+    );
+    Ok(())
+}
+
+/// Compare two parsed bench documents.  Pure so the regression trip is
+/// unit-testable (the acceptance check injects a slowdown through here).
+fn compare(current: &Json, baseline: &Json, tolerance: f64) -> Result<Outcome> {
+    check_schema(current, "current")?;
+    check_schema(baseline, "baseline")?;
+    ensure!(
+        tolerance >= 0.0,
+        "tolerance must be non-negative, got {tolerance}"
+    );
+    let cur_fp = fingerprint(current)?;
+    let base_fp = fingerprint(baseline)?;
+    if cur_fp != base_fp {
+        return Ok(Outcome::Skipped {
+            current: cur_fp,
+            baseline: base_fp,
+        });
+    }
+    let cur_rows = current.get("results")?.as_arr()?;
+    let base_rows = baseline.get("results")?.as_arr()?;
+    let mut metrics = 0usize;
+    let mut regressions = Vec::new();
+    for cur_row in cur_rows {
+        let key = row_key(cur_row)?;
+        let Some(base_row) = base_rows
+            .iter()
+            .find(|r| row_key(r).ok().as_deref() == Some(key.as_str()))
+        else {
+            continue; // new row: nothing to ratchet against
+        };
+        for (name, cur_v) in cur_row.as_obj()? {
+            if !name.ends_with("_s") {
+                continue; // not a timing metric
+            }
+            let Some(base_v) = base_row.opt(name) else {
+                continue; // metric added since the baseline
+            };
+            let cur_s = cur_v
+                .as_f64()
+                .with_context(|| format!("{key}: {name} not numeric"))?;
+            let base_s = base_v
+                .as_f64()
+                .with_context(|| format!("baseline {key}: {name} not numeric"))?;
+            ensure!(
+                cur_s > 0.0 && base_s > 0.0,
+                "{key}: {name} must be positive seconds \
+                 (current {cur_s}, baseline {base_s})"
+            );
+            metrics += 1;
+            if cur_s > base_s * (1.0 + tolerance) {
+                regressions.push(Regression {
+                    row: key.clone(),
+                    metric: name.clone(),
+                    baseline_s: base_s,
+                    current_s: cur_s,
+                    ratio: cur_s / base_s,
+                });
+            }
+        }
+    }
+    ensure!(
+        metrics > 0,
+        "no comparable `_s` metrics between current and baseline \
+         (matched rows: {} of {})",
+        cur_rows
+            .iter()
+            .filter(|r| {
+                row_key(r).ok().is_some_and(|k| {
+                    base_rows
+                        .iter()
+                        .any(|b| row_key(b).ok().as_deref() == Some(k.as_str()))
+                })
+            })
+            .count(),
+        cur_rows.len()
+    );
+    Ok(Outcome::Compared {
+        metrics,
+        regressions,
+    })
+}
+
+struct Args {
+    current: PathBuf,
+    baseline: PathBuf,
+    tolerance: f64,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut current = None;
+    let mut baseline = None;
+    let mut tolerance = DEFAULT_TOLERANCE;
+    let mut it = std::env::args().skip(1);
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--current" => {
+                current = Some(PathBuf::from(
+                    it.next().context("--current needs a path")?,
+                ));
+            }
+            "--baseline" => {
+                baseline = Some(PathBuf::from(
+                    it.next().context("--baseline needs a path")?,
+                ));
+            }
+            "--tolerance" => {
+                tolerance = it
+                    .next()
+                    .context("--tolerance needs a value")?
+                    .parse()
+                    .context("--tolerance must be a number")?;
+            }
+            other => bail!(
+                "unknown argument {other:?} \
+                 (usage: bench_ratchet --current <json> --baseline <json> \
+                 [--tolerance <frac>])"
+            ),
+        }
+    }
+    Ok(Args {
+        current: current.context("--current is required")?,
+        baseline: baseline.context("--baseline is required")?,
+        tolerance,
+    })
+}
+
+fn run() -> Result<bool> {
+    let args = parse_args()?;
+    let current = Json::from_file(&args.current)
+        .with_context(|| format!("parsing {}", args.current.display()))?;
+    let baseline = Json::from_file(&args.baseline)
+        .with_context(|| format!("parsing {}", args.baseline.display()))?;
+    match compare(&current, &baseline, args.tolerance)? {
+        Outcome::Skipped {
+            current: c,
+            baseline: b,
+        } => {
+            println!(
+                "bench-ratchet: SKIP -- fingerprint mismatch \
+                 (current {c:?} vs baseline {b:?}); timings from \
+                 different runner classes are not comparable"
+            );
+            Ok(true)
+        }
+        Outcome::Compared {
+            metrics,
+            regressions,
+        } => {
+            if regressions.is_empty() {
+                println!(
+                    "bench-ratchet: OK -- {metrics} metrics within \
+                     {:.0}% of baseline",
+                    args.tolerance * 100.0
+                );
+                return Ok(true);
+            }
+            eprintln!(
+                "bench-ratchet: FAIL -- {} of {metrics} metrics regressed \
+                 beyond the {:.0}% tolerance:",
+                regressions.len(),
+                args.tolerance * 100.0
+            );
+            for r in &regressions {
+                eprintln!(
+                    "  {} {}: {:.6}s -> {:.6}s ({:.2}x)",
+                    r.row, r.metric, r.baseline_s, r.current_s, r.ratio
+                );
+            }
+            eprintln!(
+                "to accept an intended slowdown, refresh the checked-in \
+                 baseline (see docs/bench-ratchet.md)"
+            );
+            Ok(false)
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::from(1),
+        Err(e) => {
+            eprintln!("bench-ratchet: error: {e:#}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A minimal valid v2 document; `scale` multiplies every `_s` metric
+    /// so tests can inject a uniform slowdown.
+    fn doc(fingerprint: &str, scale: f64) -> Json {
+        Json::parse(&format!(
+            r#"{{
+              "schema_version": 2,
+              "bench": "rfc_throughput",
+              "section": "kernel",
+              "git_sha": "deadbeef",
+              "machine": {{
+                "arch": "x86_64", "cpus": 8, "isa": "avx2",
+                "cpu_features": ["avx2"],
+                "fingerprint": "{fingerprint}"
+              }},
+              "m": 512, "k": 256, "n": 64,
+              "results": [
+                {{"sparsity": 0.5, "dense_s": {d1}, "spmm_serial_s": {s1},
+                  "spmm_scalar_s": {c1}, "skip_fraction": 0.5}},
+                {{"sparsity": 0.9, "dense_s": {d2}, "spmm_serial_s": {s2},
+                  "spmm_scalar_s": {c2}, "skip_fraction": 0.9}}
+              ]
+            }}"#,
+            d1 = 0.010 * scale,
+            s1 = 0.004 * scale,
+            c1 = 0.008 * scale,
+            d2 = 0.010 * scale,
+            s2 = 0.002 * scale,
+            c2 = 0.006 * scale,
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn identical_runs_pass() {
+        let base = doc("x86_64/avx2/8cpu", 1.0);
+        let cur = doc("x86_64/avx2/8cpu", 1.0);
+        match compare(&cur, &base, 0.25).unwrap() {
+            Outcome::Compared {
+                metrics,
+                regressions,
+            } => {
+                assert_eq!(metrics, 6, "3 `_s` metrics x 2 rows");
+                assert!(regressions.is_empty());
+            }
+            o => panic!("expected Compared, got {o:?}"),
+        }
+    }
+
+    #[test]
+    fn slowdown_within_tolerance_passes() {
+        let base = doc("x86_64/avx2/8cpu", 1.0);
+        let cur = doc("x86_64/avx2/8cpu", 1.2); // +20% < 25% tolerance
+        match compare(&cur, &base, 0.25).unwrap() {
+            Outcome::Compared { regressions, .. } => {
+                assert!(regressions.is_empty());
+            }
+            o => panic!("expected Compared, got {o:?}"),
+        }
+    }
+
+    #[test]
+    fn injected_regression_fails() {
+        // the acceptance check: a 2x slowdown must trip the ratchet
+        let base = doc("x86_64/avx2/8cpu", 1.0);
+        let cur = doc("x86_64/avx2/8cpu", 2.0);
+        match compare(&cur, &base, 0.25).unwrap() {
+            Outcome::Compared {
+                metrics,
+                regressions,
+            } => {
+                assert_eq!(
+                    regressions.len(),
+                    metrics,
+                    "a uniform 2x slowdown regresses every metric"
+                );
+                let r = &regressions[0];
+                assert!((r.ratio - 2.0).abs() < 1e-9);
+                assert!(r.metric.ends_with("_s"));
+            }
+            o => panic!("expected Compared, got {o:?}"),
+        }
+    }
+
+    #[test]
+    fn speedups_never_fail() {
+        let base = doc("x86_64/avx2/8cpu", 1.0);
+        let cur = doc("x86_64/avx2/8cpu", 0.5);
+        match compare(&cur, &base, 0.25).unwrap() {
+            Outcome::Compared { regressions, .. } => {
+                assert!(regressions.is_empty());
+            }
+            o => panic!("expected Compared, got {o:?}"),
+        }
+    }
+
+    #[test]
+    fn fingerprint_mismatch_skips() {
+        // cross-runner comparison (or the placeholder cold-start
+        // baseline) must skip, not fail
+        let base = doc("baseline-placeholder", 1.0);
+        let cur = doc("x86_64/avx2/8cpu", 50.0); // wildly slower -- irrelevant
+        match compare(&cur, &base, 0.25).unwrap() {
+            Outcome::Skipped { current, baseline } => {
+                assert_eq!(current, "x86_64/avx2/8cpu");
+                assert_eq!(baseline, "baseline-placeholder");
+            }
+            o => panic!("expected Skipped, got {o:?}"),
+        }
+    }
+
+    #[test]
+    fn non_timing_fields_are_ignored() {
+        // skip_fraction differs hugely but is not a `_s` metric
+        let base = doc("f", 1.0);
+        let mut cur = doc("f", 1.0);
+        if let Json::Obj(m) = &mut cur {
+            if let Some(Json::Arr(rows)) = m.get_mut("results") {
+                if let Json::Obj(row) = &mut rows[0] {
+                    row.insert("skip_fraction".into(), Json::Num(99.0));
+                }
+            }
+        }
+        match compare(&cur, &base, 0.25).unwrap() {
+            Outcome::Compared { regressions, .. } => {
+                assert!(regressions.is_empty());
+            }
+            o => panic!("expected Compared, got {o:?}"),
+        }
+    }
+
+    #[test]
+    fn rows_match_by_sparsity_not_position() {
+        let base = doc("f", 1.0);
+        let mut cur = doc("f", 1.0);
+        if let Json::Obj(m) = &mut cur {
+            if let Some(Json::Arr(rows)) = m.get_mut("results") {
+                rows.reverse();
+            }
+        }
+        match compare(&cur, &base, 0.25).unwrap() {
+            Outcome::Compared {
+                metrics,
+                regressions,
+            } => {
+                assert_eq!(metrics, 6);
+                assert!(regressions.is_empty());
+            }
+            o => panic!("expected Compared, got {o:?}"),
+        }
+    }
+
+    #[test]
+    fn unmatched_rows_are_not_regressions() {
+        // current measures a sparsity the baseline never saw
+        let base = doc("f", 1.0);
+        let mut cur = doc("f", 1.0);
+        if let Json::Obj(m) = &mut cur {
+            if let Some(Json::Arr(rows)) = m.get_mut("results") {
+                if let Json::Obj(row) = &mut rows[1] {
+                    row.insert("sparsity".into(), Json::Num(0.7));
+                    row.insert("spmm_serial_s".into(), Json::Num(100.0));
+                }
+            }
+        }
+        match compare(&cur, &base, 0.25).unwrap() {
+            Outcome::Compared {
+                metrics,
+                regressions,
+            } => {
+                assert_eq!(metrics, 3, "only the matched row is ratcheted");
+                assert!(regressions.is_empty());
+            }
+            o => panic!("expected Compared, got {o:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_documents_error() {
+        let good = doc("f", 1.0);
+        // wrong schema version
+        let mut v1 = good.clone();
+        if let Json::Obj(m) = &mut v1 {
+            m.insert("schema_version".into(), Json::Num(1.0));
+        }
+        assert!(compare(&v1, &good, 0.25).is_err());
+        // no machine fingerprint
+        let mut no_fp = good.clone();
+        if let Json::Obj(m) = &mut no_fp {
+            m.insert("machine".into(), Json::Obj(Default::default()));
+        }
+        assert!(compare(&no_fp, &good, 0.25).is_err());
+        // no overlapping metrics at all
+        let mut empty = good.clone();
+        if let Json::Obj(m) = &mut empty {
+            m.insert("results".into(), Json::Arr(Vec::new()));
+        }
+        assert!(compare(&empty, &good, 0.25).is_err());
+        // nonsensical tolerance
+        assert!(compare(&good, &good, -0.5).is_err());
+    }
+}
