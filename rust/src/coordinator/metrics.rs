@@ -38,6 +38,23 @@ impl NodeTransport {
     }
 }
 
+/// Supervision snapshot of one cluster slot, published by
+/// [`crate::coordinator::shard::ShardCluster`] (full state on startup
+/// via `publish_health`, then incrementally on every Down/reconnect
+/// transition) so link degradation is observable from the coordinator.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct NodeHealth {
+    /// where the slot points: the dialed address, or "static" for
+    /// loopback / caller-built links the cluster cannot rebuild
+    pub label: String,
+    /// whether the slot is in the shard rotation
+    pub up: bool,
+    /// lifetime successful reconnects of this slot
+    pub reconnects: u64,
+    /// link failures since the slot last served (0 while up)
+    pub consecutive_failures: u64,
+}
+
 /// Shared metrics sink (cheap atomics on the hot path, a mutex-guarded
 /// latency reservoir sampled per response).
 #[derive(Debug)]
@@ -78,6 +95,8 @@ pub struct Metrics {
     pub kernel_jobs_stolen: AtomicU64,
     /// per-node shard link traffic (indexed by node id)
     nodes: Mutex<Vec<NodeTransport>>,
+    /// per-node link supervision state (indexed by node id)
+    health: Mutex<Vec<NodeHealth>>,
     latencies_s: Mutex<Vec<f64>>,
     started: Instant,
 }
@@ -100,6 +119,7 @@ impl Default for Metrics {
             kernel_skipped_lanes: AtomicU64::new(0),
             kernel_jobs_stolen: AtomicU64::new(0),
             nodes: Mutex::new(Vec::new()),
+            health: Mutex::new(Vec::new()),
             latencies_s: Mutex::new(Vec::new()),
             started: Instant::now(),
         }
@@ -213,6 +233,34 @@ impl Metrics {
             .unwrap_or(0.0)
     }
 
+    /// Publish slot `node`'s supervision state (the cluster calls this
+    /// on every Down/reconnect transition and once at startup).
+    pub fn set_node_health(
+        &self,
+        node: usize,
+        label: &str,
+        up: bool,
+        reconnects: u64,
+        consecutive_failures: u64,
+    ) {
+        let mut health = self.health.lock().unwrap();
+        if health.len() <= node {
+            health.resize(node + 1, NodeHealth::default());
+        }
+        health[node] = NodeHealth {
+            label: label.to_string(),
+            up,
+            reconnects,
+            consecutive_failures,
+        };
+    }
+
+    /// Snapshot of per-node link supervision state (index = node id;
+    /// empty until a cluster publishes).
+    pub fn node_health(&self) -> Vec<NodeHealth> {
+        self.health.lock().unwrap().clone()
+    }
+
     pub fn record_response(&self, latency_s: f64) {
         self.responses_out.fetch_add(1, Ordering::Relaxed);
         self.latencies_s.lock().unwrap().push(latency_s);
@@ -298,6 +346,25 @@ impl Metrics {
                 .map(|n| format!("{:.1}%", n.saving() * 100.0))
                 .collect();
             s.push_str(&format!(" node_save=[{}]", saves.join(", ")));
+        }
+        let health = self.health.lock().unwrap();
+        // an all-up, never-failed cluster stays out of the report line
+        if health.iter().any(|h| !h.up || h.reconnects > 0) {
+            let states: Vec<String> = health
+                .iter()
+                .map(|h| {
+                    if h.up {
+                        if h.reconnects > 0 {
+                            format!("up(r{})", h.reconnects)
+                        } else {
+                            "up".into()
+                        }
+                    } else {
+                        format!("down(f{})", h.consecutive_failures)
+                    }
+                })
+                .collect();
+            s.push_str(&format!(" node_state=[{}]", states.join(", ")));
         }
         s
     }
@@ -397,5 +464,28 @@ mod tests {
         m.record_node_rx(0, 400, 300);
         assert!(m.node_transport_saving(0) < 0.0);
         assert!(m.report().contains("node_save=["));
+    }
+
+    #[test]
+    fn node_health_tracks_transitions_and_reports_degradation() {
+        let m = Metrics::default();
+        assert!(m.node_health().is_empty());
+        m.set_node_health(0, "127.0.0.1:7000", true, 0, 0);
+        m.set_node_health(1, "127.0.0.1:7001", true, 0, 0);
+        // a fully-healthy cluster stays out of the report line
+        assert!(!m.report().contains("node_state"));
+        // node 1 fails twice, then heals
+        m.set_node_health(1, "127.0.0.1:7001", false, 0, 2);
+        let h = m.node_health();
+        assert_eq!(h.len(), 2);
+        assert!(h[0].up && !h[1].up);
+        assert_eq!(h[1].consecutive_failures, 2);
+        assert!(m.report().contains("node_state=[up, down(f2)]"));
+        m.set_node_health(1, "127.0.0.1:7001", true, 1, 0);
+        let h = m.node_health();
+        assert!(h[1].up);
+        assert_eq!(h[1].reconnects, 1);
+        // a healed slot keeps its reconnect count visible
+        assert!(m.report().contains("node_state=[up, up(r1)]"));
     }
 }

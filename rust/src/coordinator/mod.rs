@@ -9,7 +9,8 @@
 //! * [`shard`] -- multi-node layer: batches split by row shard, shipped
 //!   as RFC wire bytes over [`shard::NodeLink`]s (in-process loopback or
 //!   TCP sockets) to per-node stage workers, results reassembled in the
-//!   coordinator;
+//!   coordinator; links live in supervised slots that route around and
+//!   reconnect dead nodes (see `docs/cluster-resilience.md`);
 //! * [`node`] -- the worker-node agent serving the far end of a
 //!   [`shard::TcpLink`]: handshake, frame-service loop, error-frame
 //!   replies;
@@ -26,13 +27,13 @@ pub mod server;
 pub mod shard;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use metrics::{Metrics, NodeTransport};
+pub use metrics::{Metrics, NodeHealth, NodeTransport};
 pub use node::{serve_node, spawn_local_agents, NodeAgent};
 pub use pipeline::{Pipeline, PipelineHandle};
 pub use request::{Batch, Request, Response};
 pub use router::{RouteInfo, Router, RouterConfig, Variant};
 pub use server::Server;
 pub use shard::{
-    dense_entry, LoopbackLink, NodeLink, PayloadShardFn, ShardCluster, ShardFn,
-    TcpLink,
+    backoff_delay, dense_entry, LoopbackLink, NodeLink, PayloadShardFn,
+    ReconnectPolicy, ShardCluster, ShardFn, SlotState, TcpLink,
 };

@@ -20,7 +20,7 @@
 //!   mid-stream -- and the listener keeps accepting;
 //! * the coordinator hanging up ends the connection loop normally.
 
-use std::io::{BufReader, BufWriter};
+use std::io::{BufRead, BufReader, BufWriter};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -117,8 +117,17 @@ fn handle_conn(
         .peer_addr()
         .map(|a| a.to_string())
         .unwrap_or_else(|_| "<unknown peer>".into());
-    if let Ok(clone) = stream.try_clone() {
-        conns.lock().unwrap().push((id, clone));
+    // no severing handle, no service: a connection the registry cannot
+    // sever would leave its handler parked in a blocking read with
+    // nothing able to unblock it, wedging `NodeAgent::shutdown` on the
+    // join forever
+    if !register_severing(id, stream.try_clone(), conns) {
+        eprintln!(
+            "node connection {peer}: cannot register severing handle \
+             (try_clone failed); refusing connection"
+        );
+        let _ = stream.shutdown(std::net::Shutdown::Both);
+        return;
     }
     // re-check AFTER registering: a shutdown that raced past this
     // connection's registration has already drained the registry, so
@@ -132,6 +141,44 @@ fn handle_conn(
     // the coordinator actually observes the drop instead of blocking
     let _ = stream.shutdown(std::net::Shutdown::Both);
     conns.lock().unwrap().retain(|(cid, _)| *cid != id);
+}
+
+/// Register `clone` as connection `id`'s severing handle.  Returns
+/// whether registration succeeded; a failed `try_clone` means the
+/// connection must be refused (see [`handle_conn`]).
+fn register_severing(
+    id: u64,
+    clone: std::io::Result<TcpStream>,
+    conns: &ConnRegistry,
+) -> bool {
+    match clone {
+        Ok(c) => {
+            conns.lock().unwrap().push((id, c));
+            true
+        }
+        Err(_) => false,
+    }
+}
+
+/// Read the next shard frame, classifying a clean hangup: EOF exactly
+/// at a frame boundary (the buffered reader's `fill_buf` comes back
+/// empty before any length byte arrives) is the peer hanging up
+/// normally and returns `Ok(None)`.  Anything else that fails --
+/// death mid-length-prefix, oversized prefix, mid-frame truncation --
+/// is broken framing and surfaces as the error it is.  This replaces
+/// matching on the frame reader's context string, which misclassified
+/// a peer dying 2 bytes into the length prefix as a clean hangup (both
+/// fail the same 4-byte read) and silently broke if the wording
+/// changed.
+fn next_frame<R: BufRead>(reader: &mut R) -> Result<Option<Vec<u8>>> {
+    let at_frame_start_eof = reader
+        .fill_buf()
+        .context("polling for next frame")?
+        .is_empty();
+    if at_frame_start_eof {
+        return Ok(None);
+    }
+    wire::read_frame(reader).map(Some)
 }
 
 /// Service one coordinator connection: handshake, then frames until the
@@ -150,19 +197,16 @@ fn serve_conn(
     wire::write_handshake(&mut writer)?;
     wire::expect_handshake(&mut reader).context("coordinator handshake")?;
     loop {
-        // a read failure here is the coordinator hanging up (normal) or
-        // broken framing (drop the connection; new connects still work)
-        let frame = match wire::read_frame(&mut reader) {
-            Ok(f) => f,
+        // EOF at a frame boundary is the coordinator hanging up
+        // (normal); any other read failure -- death mid-prefix,
+        // oversized prefix, mid-frame truncation -- is broken or
+        // hostile framing: drop the connection (new connects still
+        // work) and leave a diagnosable log line
+        let frame = match next_frame(&mut reader) {
+            Ok(Some(f)) => f,
+            Ok(None) => return Ok(()),
             Err(e) => {
-                // a clean hangup fails the 4-byte length read with EOF
-                // (context "reading frame length"); anything else --
-                // oversized prefix, mid-frame truncation -- is broken
-                // or hostile framing and must be diagnosable in the log
-                let msg = format!("{e:#}");
-                if !msg.contains("reading frame length") {
-                    eprintln!("node connection {peer}: framing error: {msg}");
-                }
+                eprintln!("node connection {peer}: framing error: {e:#}");
                 return Ok(());
             }
         };
@@ -252,5 +296,67 @@ impl NodeAgent {
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn eof_at_frame_start_is_a_clean_hangup() {
+        let mut hung_up = Cursor::new(Vec::<u8>::new());
+        assert!(next_frame(&mut hung_up).unwrap().is_none());
+    }
+
+    #[test]
+    fn death_mid_length_prefix_is_a_framing_error_not_a_clean_hangup() {
+        // 2 of the 4 length bytes arrived before the peer died: the old
+        // error-string classification called this a clean hangup
+        // because the same 4-byte read fails either way
+        let mut partial_prefix = Cursor::new(vec![0x03, 0x00]);
+        assert!(next_frame(&mut partial_prefix).is_err());
+        // mid-body truncation is equally a framing error
+        let mut framed = Vec::new();
+        wire::write_frame(&mut framed, &wire::error_frame("x")).unwrap();
+        framed.truncate(framed.len() - 1);
+        let mut truncated_body = Cursor::new(framed);
+        assert!(next_frame(&mut truncated_body).is_err());
+    }
+
+    #[test]
+    fn whole_frames_round_trip_then_clean_eof() {
+        let frame = wire::error_frame("ping");
+        let mut framed = Vec::new();
+        wire::write_frame(&mut framed, &frame).unwrap();
+        let mut reader = Cursor::new(framed);
+        assert_eq!(
+            next_frame(&mut reader).unwrap().as_deref(),
+            Some(frame.as_slice())
+        );
+        assert!(next_frame(&mut reader).unwrap().is_none());
+    }
+
+    #[test]
+    fn failed_severing_registration_refuses_the_connection() {
+        let conns: ConnRegistry = Arc::new(Mutex::new(Vec::new()));
+        // try_clone failed (fd exhaustion): registration must refuse
+        // and leave no registry entry behind
+        let denied = std::io::Error::new(
+            std::io::ErrorKind::Other,
+            "too many open files",
+        );
+        assert!(!register_severing(7, Err(denied), &conns));
+        assert!(conns.lock().unwrap().is_empty());
+        // the success path registers the handle under the given id
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _client = TcpStream::connect(addr).unwrap();
+        let (stream, _) = listener.accept().unwrap();
+        assert!(register_severing(8, stream.try_clone(), &conns));
+        let registry = conns.lock().unwrap();
+        assert_eq!(registry.len(), 1);
+        assert_eq!(registry[0].0, 8);
     }
 }

@@ -98,7 +98,9 @@ impl Router {
     /// How many of `nodes` worker nodes to fan a `rows`-row batch over
     /// (see [`crate::coordinator::shard::ShardCluster`]): every shard
     /// keeps at least `min_shard_rows` rows, and a batch too small to
-    /// split stays on one node.
+    /// split stays on one node.  The serving path passes the cluster's
+    /// **live** slot count (`ShardCluster::heal`'s return), so the plan
+    /// never budgets shards for nodes that are Down.
     pub fn shards_for(&self, rows: usize, nodes: usize) -> usize {
         (rows / self.cfg.min_shard_rows.max(1)).clamp(1, nodes.max(1))
     }

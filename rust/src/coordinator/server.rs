@@ -293,6 +293,7 @@ impl Server {
             threads.push(std::thread::spawn(move || {
                 let mut batcher = Batcher::new(policy).with_encoder(enc);
                 let router = Router::new(RouterConfig::default());
+                cluster.publish_health(&metrics);
                 while let Some(mut batch) = batcher.next_batch(&submit_rx) {
                     metrics.record_batch(batch.real, batch.input.shape()[0]);
                     metrics.record_transport(
@@ -300,9 +301,14 @@ impl Server {
                         batch.input.dense_bits(),
                     );
                     let payload = batch.input.take();
+                    // reconnect pass first (bounded; backoff-gated), so
+                    // the fan-out is planned over the slots that are
+                    // actually live -- a Down node costs shards, not
+                    // failed batches
+                    let live = cluster.heal(Some(&metrics));
                     // real rows drive the fan-out: padding rows are
                     // sidecar-only and not worth extra shard frames
-                    let fan = router.shards_for(batch.real, cluster.nodes());
+                    let fan = router.shards_for(batch.real, live);
                     let result = cluster.infer_on(fan, &payload, Some(&metrics));
                     // a failed batch (node death, mis-sized reply, stage
                     // error) answers every requester with an error
@@ -358,8 +364,19 @@ impl Server {
             arrived,
             reply: tx,
         };
-        // a closed intake only happens after shutdown(); drop silently.
-        let _ = self.submit_tx.send(req);
+        // a closed intake (a request racing shutdown, or a dead batcher
+        // thread) must still answer: the send gives the request back,
+        // and dropping it silently -- as this path once did -- left the
+        // caller blocked on `rx.recv()` with no response ever coming
+        if let Err(send_failed) = self.submit_tx.send(req) {
+            let req = send_failed.0;
+            self.metrics.record_failure();
+            let _ = req.reply.send(Response::failure(
+                req.id,
+                "server intake closed: request not accepted".into(),
+                req.arrived,
+            ));
+        }
         rx
     }
 
@@ -369,5 +386,41 @@ impl Server {
         for t in self.threads {
             let _ = t.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn submit_racing_a_closed_intake_answers_instead_of_hanging() {
+        // a server whose intake receiver is already gone -- exactly the
+        // state a `shutdown`-initiating drop (or a dead batcher thread)
+        // leaves behind for a racing submit
+        let (submit_tx, submit_rx) = channel::<Request>();
+        drop(submit_rx);
+        let seq_len = 8;
+        let server = Server {
+            submit_tx,
+            metrics: Arc::new(Metrics::default()),
+            num_classes: 4,
+            seq_len,
+            next_id: AtomicU64::new(0),
+            threads: Vec::new(),
+        };
+        let clip = vec![0.0f32; 3 * seq_len * NUM_JOINTS];
+        let resp = server
+            .submit(clip)
+            .recv_timeout(Duration::from_secs(5))
+            .expect("an error response must arrive; pre-fix the reply channel just hung");
+        assert!(!resp.is_ok());
+        assert!(
+            resp.error.as_deref().unwrap_or("").contains("intake closed"),
+            "{:?}",
+            resp.error
+        );
+        assert_eq!(server.metrics.failures.load(Ordering::Relaxed), 1);
     }
 }

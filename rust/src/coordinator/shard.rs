@@ -9,18 +9,28 @@
 //! `(hot, mbhot, packed)` data the RFC storage holds, serialized by
 //! [`crate::rfc::wire`] with **no decode/re-encode round trip**.
 //!
-//! Topology: one [`NodeLink`] per worker node.  Two links ship here:
-//! the in-process [`LoopbackLink`] (byte channels between threads) and
-//! the socket-backed [`TcpLink`] (u32-length outer framing + one-shot
-//! version handshake over `std::net::TcpStream`, speaking to a
-//! [`super::node`] agent).  Both carry identical frames -- the loopback
-//! cluster tests double as the TCP conformance suite.
+//! Topology: one supervised [`NodeSlot`] per worker node.  Two links
+//! ship here: the in-process [`LoopbackLink`] (byte channels between
+//! threads) and the socket-backed [`TcpLink`] (u32-length outer framing
+//! + one-shot version handshake over `std::net::TcpStream`, speaking to
+//! a [`super::node`] agent).  Both carry identical frames -- the
+//! loopback cluster tests double as the TCP conformance suite.
+//!
+//! Supervision: a link-level send/recv failure takes its slot
+//! [`SlotState::Down`] instead of leaving a poisoned link in the
+//! rotation forever.  [`ShardCluster::infer_on`] plans shards over the
+//! **live** slots only, so one dead node costs the in-flight batch and
+//! nothing after it, and [`ShardCluster::heal`] re-dials Down TCP slots
+//! on a bounded exponential backoff (see [`ReconnectPolicy`]) so a
+//! restarted node agent rejoins the cluster without a coordinator
+//! restart.  Full policy write-up: `docs/cluster-resilience.md`.
 
 use std::io::{BufReader, BufWriter};
-use std::net::{TcpStream, ToSocketAddrs};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Context, Result};
 
@@ -79,8 +89,19 @@ pub fn loopback_pair() -> (LoopbackLink, LoopbackLink) {
 /// cannot wedge the coordinator thread forever.
 ///
 /// [`Server::connect_sharded`]: super::server::Server::connect_sharded
-pub const DEFAULT_NODE_IO_TIMEOUT: std::time::Duration =
-    std::time::Duration::from_secs(120);
+pub const DEFAULT_NODE_IO_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Resolve a node address once, up front: reconnects re-dial the
+/// resolved set instead of re-resolving (a DNS outage during recovery
+/// should not keep a slot Down that the network would accept).
+fn resolve<A: ToSocketAddrs>(addr: &A) -> Result<Vec<SocketAddr>> {
+    let addrs: Vec<SocketAddr> = addr
+        .to_socket_addrs()
+        .context("resolving node address")?
+        .collect();
+    ensure!(!addrs.is_empty(), "node address resolved to no addresses");
+    Ok(addrs)
+}
 
 /// Socket-backed [`NodeLink`]: the same payload frames the loopback
 /// link carries, delimited on the byte stream by the
@@ -113,21 +134,51 @@ impl TcpLink {
 
     /// [`TcpLink::connect`] with a per-I/O activity timeout: a read or
     /// write that makes no progress for `io_timeout` fails (and
-    /// poisons) the link instead of blocking forever.  This is the
-    /// hung-peer guard -- a network partition with no RST/FIN would
-    /// otherwise park the coordinator in `recv` permanently.
+    /// poisons) the link instead of blocking forever.  The **dial
+    /// itself** is bounded by the same budget: a blackholed peer (SYN
+    /// swallowed, no RST ever) used to hang the plain `connect` for the
+    /// OS default -- minutes -- before the read/write timeouts applied
+    /// at all.
     pub fn connect_timeout<A: ToSocketAddrs>(
         addr: A,
-        io_timeout: Option<std::time::Duration>,
+        io_timeout: Option<Duration>,
     ) -> Result<TcpLink> {
-        let stream = TcpStream::connect(addr).context("connecting node link")?;
-        stream
-            .set_read_timeout(io_timeout)
-            .context("setting link read timeout")?;
-        stream
-            .set_write_timeout(io_timeout)
-            .context("setting link write timeout")?;
-        Self::from_stream(stream)
+        let addrs = resolve(&addr)?;
+        Self::dial(&addrs, io_timeout, io_timeout)
+    }
+
+    /// Dial the resolved addresses in order (first reachable wins, like
+    /// `TcpStream::connect` over a multi-address resolution), bounding
+    /// each attempt by `connect_timeout` when given, then apply the
+    /// per-I/O timeout and run the handshake.
+    fn dial(
+        addrs: &[SocketAddr],
+        connect_timeout: Option<Duration>,
+        io_timeout: Option<Duration>,
+    ) -> Result<TcpLink> {
+        let mut last: Option<std::io::Error> = None;
+        for a in addrs {
+            let connected = match connect_timeout {
+                Some(bound) => TcpStream::connect_timeout(a, bound),
+                None => TcpStream::connect(a),
+            };
+            match connected {
+                Ok(stream) => {
+                    stream
+                        .set_read_timeout(io_timeout)
+                        .context("setting link read timeout")?;
+                    stream
+                        .set_write_timeout(io_timeout)
+                        .context("setting link write timeout")?;
+                    return Self::from_stream(stream);
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(match last {
+            Some(e) => anyhow::Error::from(e).context("connecting node link"),
+            None => anyhow!("connecting node link: no addresses to dial"),
+        })
     }
 
     /// Wrap an already-connected stream (either side: the exchange is
@@ -189,6 +240,134 @@ impl NodeLink for TcpLink {
             self.poison();
         }
         r
+    }
+}
+
+/// Backoff and budget policy for reviving Down TCP slots
+/// ([`ShardCluster::heal`]).
+#[derive(Debug, Clone)]
+pub struct ReconnectPolicy {
+    /// delay before the first reconnect attempt after a failure
+    pub base: Duration,
+    /// backoff ceiling: each consecutive failure doubles the delay,
+    /// saturating here
+    pub cap: Duration,
+    /// bound on each re-dial, so a still-dead peer costs a heal pass
+    /// milliseconds, never a serving stall
+    pub connect_timeout: Duration,
+    /// most re-dial attempts one heal pass pays for (reconnect work is
+    /// amortized across batches instead of front-loaded onto one)
+    pub attempts_per_heal: usize,
+}
+
+impl Default for ReconnectPolicy {
+    fn default() -> Self {
+        ReconnectPolicy {
+            base: Duration::from_millis(50),
+            cap: Duration::from_secs(5),
+            connect_timeout: Duration::from_millis(250),
+            attempts_per_heal: 2,
+        }
+    }
+}
+
+/// The backoff schedule as a pure function of the failure count: delay
+/// before attempt N+1 after N consecutive failures.  Doubles from
+/// `base`, saturates at `cap`; no wall clock involved, so the cap is
+/// unit-testable without sleeping.
+pub fn backoff_delay(consecutive_failures: u32, policy: &ReconnectPolicy) -> Duration {
+    // 2^20 * base already dwarfs any sane cap; clamping the exponent
+    // keeps the shift defined for arbitrarily large failure counts
+    let exp = consecutive_failures.saturating_sub(1).min(20);
+    policy.base.saturating_mul(1u32 << exp).min(policy.cap)
+}
+
+/// Supervision state of one cluster slot.
+#[derive(Debug, Clone, Copy)]
+pub enum SlotState {
+    /// the link is believed healthy and is in the shard rotation
+    Up,
+    /// the link failed; a TCP slot re-dials on the backoff schedule,
+    /// a static (loopback / caller-built) slot stays Down
+    Down {
+        /// when the slot left the rotation
+        since: Instant,
+        /// link failures since it last served (drives the backoff)
+        consecutive_failures: u32,
+    },
+}
+
+impl SlotState {
+    pub fn is_up(&self) -> bool {
+        matches!(self, SlotState::Up)
+    }
+}
+
+/// How a slot's link came to be -- and whether it can be rebuilt.
+enum SlotOrigin {
+    /// dialed by the cluster: remembers the resolved addresses and the
+    /// per-I/O timeout so [`ShardCluster::heal`] can re-dial after a
+    /// failure
+    Tcp {
+        addrs: Vec<SocketAddr>,
+        io_timeout: Option<Duration>,
+    },
+    /// loopback or caller-built link: nothing to re-dial, Down is final
+    Static,
+}
+
+/// One supervised cluster slot: the link (present while Up), its
+/// origin, and the failure/backoff bookkeeping.
+pub struct NodeSlot {
+    link: Option<Box<dyn NodeLink>>,
+    origin: SlotOrigin,
+    state: SlotState,
+    /// earliest instant the next reconnect attempt may run
+    next_attempt: Instant,
+    /// lifetime successful revivals
+    reconnects: u64,
+}
+
+impl NodeSlot {
+    fn up(link: Box<dyn NodeLink>, origin: SlotOrigin) -> NodeSlot {
+        NodeSlot {
+            link: Some(link),
+            origin,
+            state: SlotState::Up,
+            next_attempt: Instant::now(),
+            reconnects: 0,
+        }
+    }
+
+    pub fn state(&self) -> SlotState {
+        self.state
+    }
+
+    /// Lifetime successful reconnects of this slot.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects
+    }
+
+    fn consecutive_failures(&self) -> u32 {
+        match self.state {
+            SlotState::Up => 0,
+            SlotState::Down {
+                consecutive_failures,
+                ..
+            } => consecutive_failures,
+        }
+    }
+
+    /// Diagnostic label: the dialed address, or "static" for slots the
+    /// cluster cannot rebuild.
+    pub fn label(&self) -> String {
+        match &self.origin {
+            SlotOrigin::Tcp { addrs, .. } => addrs
+                .first()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|| "tcp:<unresolved>".into()),
+            SlotOrigin::Static => "static".into(),
+        }
     }
 }
 
@@ -282,12 +461,21 @@ fn slice_payload(p: &Payload, lo: usize, hi: usize) -> Result<Payload> {
     }
 }
 
-/// A cluster of worker nodes behind [`NodeLink`]s, plus the split /
-/// reassemble logic the coordinator runs around them.
+/// A cluster of worker nodes behind supervised [`NodeSlot`]s, plus the
+/// split / reassemble logic the coordinator runs around them.
+///
+/// Failure semantics: a link-level send/recv failure fails the batch in
+/// flight (drain invariant unchanged -- every live link is still
+/// drained) and takes the slot Down; subsequent batches plan over the
+/// live slots only, and [`ShardCluster::heal`] re-dials Down TCP slots
+/// on the [`ReconnectPolicy`] backoff.  An *application* failure (error
+/// frame, mis-shaped reply) fails the batch but leaves the slot Up: the
+/// link itself held.
 pub struct ShardCluster {
-    links: Vec<Box<dyn NodeLink>>,
+    slots: Vec<NodeSlot>,
     workers: Vec<JoinHandle<()>>,
     enc: EncoderConfig,
+    reconnect: ReconnectPolicy,
 }
 
 impl ShardCluster {
@@ -305,17 +493,18 @@ impl ShardCluster {
         compute: PayloadShardFn,
         enc: EncoderConfig,
     ) -> ShardCluster {
-        let mut links: Vec<Box<dyn NodeLink>> = Vec::new();
+        let mut slots = Vec::new();
         let mut workers = Vec::new();
         for i in 0..nodes.max(1) {
             let (coord, node) = loopback_pair();
             workers.push(spawn_worker(node, compute.clone(), enc, format!("node {i}")));
-            links.push(Box::new(coord));
+            slots.push(NodeSlot::up(Box::new(coord), SlotOrigin::Static));
         }
         ShardCluster {
-            links,
+            slots,
             workers,
             enc,
+            reconnect: ReconnectPolicy::default(),
         }
     }
 
@@ -323,7 +512,9 @@ impl ShardCluster {
     /// [`TcpLink`] per address, handshake on connect.  The coordinator
     /// treats the resulting cluster exactly like a loopback one -- same
     /// split/reassemble, same drain-after-failure invariant when a peer
-    /// dies mid-batch.
+    /// dies mid-batch -- and remembers each address, so a slot whose
+    /// peer dies is re-dialed by [`ShardCluster::heal`] instead of
+    /// staying dead for the cluster's lifetime.
     pub fn connect<A: ToSocketAddrs>(
         addrs: &[A],
         enc: EncoderConfig,
@@ -337,55 +528,208 @@ impl ShardCluster {
     pub fn connect_timeout<A: ToSocketAddrs>(
         addrs: &[A],
         enc: EncoderConfig,
-        io_timeout: Option<std::time::Duration>,
+        io_timeout: Option<Duration>,
     ) -> Result<ShardCluster> {
         ensure!(!addrs.is_empty(), "cluster needs at least one node address");
-        let mut links: Vec<Box<dyn NodeLink>> = Vec::with_capacity(addrs.len());
+        let mut slots = Vec::with_capacity(addrs.len());
         for (i, a) in addrs.iter().enumerate() {
-            links.push(Box::new(
-                TcpLink::connect_timeout(a, io_timeout)
-                    .with_context(|| format!("node {i}"))?,
+            let resolved = resolve(a).with_context(|| format!("node {i}"))?;
+            let link = TcpLink::dial(&resolved, io_timeout, io_timeout)
+                .with_context(|| format!("node {i}"))?;
+            slots.push(NodeSlot::up(
+                Box::new(link),
+                SlotOrigin::Tcp {
+                    addrs: resolved,
+                    io_timeout,
+                },
             ));
         }
-        Ok(Self::from_links(links, enc))
+        Ok(ShardCluster {
+            slots,
+            workers: Vec::new(),
+            enc,
+            reconnect: ReconnectPolicy::default(),
+        })
     }
 
     /// A cluster over caller-built links (mixed transports, tests).  The
     /// cluster owns no worker threads for these; whatever serves the far
-    /// end of each link outlives it.
+    /// end of each link outlives it.  Caller-built slots are static: the
+    /// cluster has no recipe to rebuild them, so a failed one stays Down.
     pub fn from_links(
         links: Vec<Box<dyn NodeLink>>,
         enc: EncoderConfig,
     ) -> ShardCluster {
         ShardCluster {
-            links,
+            slots: links
+                .into_iter()
+                .map(|l| NodeSlot::up(l, SlotOrigin::Static))
+                .collect(),
             workers: Vec::new(),
             enc,
+            reconnect: ReconnectPolicy::default(),
         }
     }
 
-    pub fn nodes(&self) -> usize {
-        self.links.len()
+    /// Override the reconnect/backoff policy (chaos tests tighten it;
+    /// the default suits serving).
+    pub fn set_reconnect_policy(&mut self, policy: ReconnectPolicy) {
+        self.reconnect = policy;
     }
 
-    /// Run one batch over every node: split by rows, ship every shard's
-    /// wire frame before collecting any reply (the nodes run
+    /// Total slots, live or not.
+    pub fn nodes(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Slots currently Up: the plannable fan-out ceiling.
+    pub fn live_nodes(&self) -> usize {
+        self.slots.iter().filter(|s| s.state.is_up()).count()
+    }
+
+    /// Supervision snapshot, indexed by slot.
+    pub fn slot_states(&self) -> Vec<SlotState> {
+        self.slots.iter().map(|s| s.state).collect()
+    }
+
+    /// Push every slot's current health into `metrics` (the server does
+    /// this once at startup; transitions update incrementally).
+    pub fn publish_health(&self, metrics: &Metrics) {
+        for (i, s) in self.slots.iter().enumerate() {
+            metrics.set_node_health(
+                i,
+                &s.label(),
+                s.state.is_up(),
+                s.reconnects,
+                s.consecutive_failures() as u64,
+            );
+        }
+    }
+
+    /// Take slot `node` Down after a link-level failure: the link is
+    /// dropped (a poisoned socket is dead anyway) and a TCP slot is
+    /// scheduled for its first re-dial one backoff step from now.
+    fn mark_down(&mut self, node: usize, metrics: Option<&Metrics>) {
+        let failures = self.slots[node].consecutive_failures().saturating_add(1);
+        let slot = &mut self.slots[node];
+        slot.link = None;
+        slot.state = match slot.state {
+            SlotState::Down { since, .. } => SlotState::Down {
+                since,
+                consecutive_failures: failures,
+            },
+            SlotState::Up => SlotState::Down {
+                since: Instant::now(),
+                consecutive_failures: failures,
+            },
+        };
+        slot.next_attempt = Instant::now() + backoff_delay(failures, &self.reconnect);
+        if let Some(m) = metrics {
+            let label = slot.label();
+            m.set_node_health(node, &label, false, slot.reconnects, failures as u64);
+        }
+    }
+
+    /// Bounded reconnect pass: every Down TCP slot whose backoff delay
+    /// has elapsed gets one re-dial (connect + handshake), up to
+    /// [`ReconnectPolicy::attempts_per_heal`] attempts total, each dial
+    /// bounded by [`ReconnectPolicy::connect_timeout`] -- reconnect
+    /// work amortizes across batches and never stalls serving on a
+    /// still-dead peer.  Static slots have nothing to re-dial and stay
+    /// Down.  Returns the live-slot count.
+    ///
+    /// Called automatically at the top of [`ShardCluster::infer_on`];
+    /// callers that need the live count *before* planning fan-out (the
+    /// server does) call it directly -- attempts are gated on the
+    /// backoff clock, so back-to-back passes are near-free.
+    pub fn heal(&mut self, metrics: Option<&Metrics>) -> usize {
+        let mut budget = self.reconnect.attempts_per_heal;
+        for i in 0..self.slots.len() {
+            if budget == 0 {
+                break;
+            }
+            let due = {
+                let s = &self.slots[i];
+                !s.state.is_up()
+                    && matches!(s.origin, SlotOrigin::Tcp { .. })
+                    && Instant::now() >= s.next_attempt
+            };
+            if !due {
+                continue;
+            }
+            budget -= 1;
+            let dialed = {
+                let SlotOrigin::Tcp {
+                    ref addrs,
+                    io_timeout,
+                } = self.slots[i].origin
+                else {
+                    unreachable!("non-TCP slots are never due for re-dial");
+                };
+                TcpLink::dial(addrs, Some(self.reconnect.connect_timeout), io_timeout)
+            };
+            match dialed {
+                Ok(link) => {
+                    let slot = &mut self.slots[i];
+                    slot.link = Some(Box::new(link));
+                    slot.state = SlotState::Up;
+                    slot.reconnects += 1;
+                    slot.next_attempt = Instant::now();
+                    if let Some(m) = metrics {
+                        let label = slot.label();
+                        m.set_node_health(i, &label, true, slot.reconnects, 0);
+                    }
+                }
+                Err(_) => {
+                    let failures =
+                        self.slots[i].consecutive_failures().saturating_add(1);
+                    let slot = &mut self.slots[i];
+                    if let SlotState::Down { since, .. } = slot.state {
+                        slot.state = SlotState::Down {
+                            since,
+                            consecutive_failures: failures,
+                        };
+                    }
+                    slot.next_attempt =
+                        Instant::now() + backoff_delay(failures, &self.reconnect);
+                    if let Some(m) = metrics {
+                        let label = slot.label();
+                        m.set_node_health(
+                            i,
+                            &label,
+                            false,
+                            slot.reconnects,
+                            failures as u64,
+                        );
+                    }
+                }
+            }
+        }
+        self.live_nodes()
+    }
+
+    /// Run one batch over every live node: split by rows, ship every
+    /// shard's wire frame before collecting any reply (the nodes run
     /// concurrently), then reassemble the per-node results in batch
     /// order.  Per-node wire traffic is recorded into `metrics` when
     /// given.
     pub fn infer(&mut self, input: &Payload, metrics: Option<&Metrics>) -> Result<Tensor> {
-        self.infer_on(self.links.len(), input, metrics)
+        self.infer_on(self.slots.len(), input, metrics)
     }
 
     /// [`ShardCluster::infer`] with an explicit fan-out (clamped to the
-    /// node count): the serving path picks it per batch via
+    /// **live** slot count): the serving path picks it per batch via
     /// [`super::router::Router::shards_for`], so tiny batches stay on
     /// one node instead of paying per-shard framing for nothing.
     ///
-    /// Failure handling: the cluster is long-lived, so every node that
-    /// was sent a shard is drained even after an error -- a reply left
-    /// queued on a link would be collected by the *next* batch and
-    /// silently deliver stale results one batch off, forever.
+    /// Down slots are routed around, not fatal: the plan covers live
+    /// slots only, and the call errors only when no slot is live at
+    /// all.  Failure handling: the cluster is long-lived, so every node
+    /// that was sent a shard is drained even after an error -- a reply
+    /// left queued on a link would be collected by the *next* batch and
+    /// silently deliver stale results one batch off, forever.  A
+    /// link-level failure additionally takes that slot Down (see
+    /// [`ShardCluster::heal`]).
     pub fn infer_on(
         &mut self,
         fan_out: usize,
@@ -397,38 +741,98 @@ impl ShardCluster {
             shape.len() >= 2,
             "cluster input needs a batch axis, got {shape:?}"
         );
-        let plan = shard_ranges(shape[0], fan_out.clamp(1, self.links.len()));
+        self.heal(metrics);
+        let live: Vec<usize> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.state.is_up())
+            .map(|(i, _)| i)
+            .collect();
+        ensure!(
+            !live.is_empty(),
+            "no live node slots ({} of {} down)",
+            self.slots.len(),
+            self.slots.len()
+        );
+        let plan = shard_ranges(shape[0], fan_out.clamp(1, live.len()));
         ensure!(!plan.is_empty(), "empty batch (0 rows)");
         let mut failure: Option<anyhow::Error> = None;
         let mut sent = vec![false; plan.len()];
-        for (node, &(lo, hi)) in plan.iter().enumerate() {
-            let result = slice_payload(input, lo, hi).and_then(|part| {
-                let frame = wire::payload_to_bytes(&part)?;
-                let wire_bytes = frame.len() as u64;
-                self.links[node]
-                    .send(frame)
-                    .with_context(|| format!("sending shard to node {node}"))?;
-                // recorded only after the link accepted the frame, so a
-                // dead node cannot inflate its transport stats
-                if let Some(m) = metrics {
-                    m.record_node_tx(node, wire_bytes, part.dense_bits() / 8);
-                }
-                Ok(())
+        for (shard, &(lo, hi)) in plan.iter().enumerate() {
+            let node = live[shard];
+            // slicing/encoding failures are the batch's problem, not the
+            // link's: they must not take the slot down
+            let framed = slice_payload(input, lo, hi).and_then(|part| {
+                let bytes = wire::payload_to_bytes(&part)?;
+                Ok((bytes, part.dense_bits() / 8))
             });
-            match result {
-                Ok(()) => sent[node] = true,
+            let (bytes, dense_bytes) = match framed {
+                Ok(f) => f,
                 Err(e) => {
                     failure.get_or_insert(e);
+                    continue;
+                }
+            };
+            let wire_bytes = bytes.len() as u64;
+            let send = self.slots[node]
+                .link
+                .as_mut()
+                .expect("live slot holds a link")
+                .send(bytes);
+            match send {
+                Ok(()) => {
+                    sent[shard] = true;
+                    // recorded only after the link accepted the frame, so
+                    // a dead node cannot inflate its transport stats
+                    if let Some(m) = metrics {
+                        m.record_node_tx(node, wire_bytes, dense_bytes);
+                    }
+                }
+                Err(e) => {
+                    self.mark_down(node, metrics);
+                    failure
+                        .get_or_insert(e.context(format!("sending shard to node {node}")));
                 }
             }
         }
         let mut parts = Vec::with_capacity(plan.len());
-        for (node, &(lo, hi)) in plan.iter().enumerate() {
-            if !sent[node] {
+        for (shard, &(lo, hi)) in plan.iter().enumerate() {
+            if !sent[shard] {
                 continue; // nothing in flight on this link
             }
-            let result = self.collect_reply(node, hi - lo, metrics);
-            match result {
+            let node = live[shard];
+            // a link-level recv failure downs the slot; a decode error or
+            // row mismatch below is an application failure on a link that
+            // held, so the slot stays in the rotation
+            let frame = match self.slots[node]
+                .link
+                .as_mut()
+                .expect("live slot holds a link")
+                .recv()
+            {
+                Ok(f) => f,
+                Err(e) => {
+                    self.mark_down(node, metrics);
+                    failure.get_or_insert(e.context(format!("collecting node {node}")));
+                    continue;
+                }
+            };
+            let rows = hi - lo;
+            let decoded = (|| -> Result<Tensor> {
+                let reply = wire::payload_from_bytes(&frame)
+                    .with_context(|| format!("node {node} reply"))?;
+                ensure!(
+                    reply.shape().first() == Some(&rows),
+                    "node {node} returned shape {:?} for a {rows}-row shard",
+                    reply.shape()
+                );
+                if let Some(m) = metrics {
+                    m.record_node_rx(node, frame.len() as u64, reply.dense_bits() / 8);
+                }
+                Ok(reply.into_dense(&self.enc))
+            })();
+            match decoded {
                 Ok(t) => parts.push(t),
                 Err(e) => {
                     failure.get_or_insert(e);
@@ -441,32 +845,9 @@ impl ShardCluster {
         Tensor::concat_batch(&parts)
     }
 
-    /// Receive + decode one node's reply for a `rows`-row shard.
-    fn collect_reply(
-        &mut self,
-        node: usize,
-        rows: usize,
-        metrics: Option<&Metrics>,
-    ) -> Result<Tensor> {
-        let frame = self.links[node]
-            .recv()
-            .with_context(|| format!("collecting node {node}"))?;
-        let reply = wire::payload_from_bytes(&frame)
-            .with_context(|| format!("node {node} reply"))?;
-        ensure!(
-            reply.shape().first() == Some(&rows),
-            "node {node} returned shape {:?} for a {rows}-row shard",
-            reply.shape()
-        );
-        if let Some(m) = metrics {
-            m.record_node_rx(node, frame.len() as u64, reply.dense_bits() / 8);
-        }
-        Ok(reply.into_dense(&self.enc))
-    }
-
     /// Hang up every link and join the workers.
     pub fn shutdown(self) {
-        drop(self.links);
+        drop(self.slots);
         for w in self.workers {
             let _ = w.join();
         }
@@ -565,6 +946,28 @@ mod tests {
             }
         }
         assert!(shard_ranges(0, 3).is_empty());
+    }
+
+    #[test]
+    fn reconnect_backoff_doubles_and_caps_without_wall_clock() {
+        let p = ReconnectPolicy {
+            base: Duration::from_millis(100),
+            cap: Duration::from_secs(1),
+            connect_timeout: Duration::from_millis(250),
+            attempts_per_heal: 2,
+        };
+        // failure counts 0 and 1 both wait one base step
+        assert_eq!(backoff_delay(0, &p), Duration::from_millis(100));
+        assert_eq!(backoff_delay(1, &p), Duration::from_millis(100));
+        assert_eq!(backoff_delay(2, &p), Duration::from_millis(200));
+        assert_eq!(backoff_delay(3, &p), Duration::from_millis(400));
+        assert_eq!(backoff_delay(4, &p), Duration::from_millis(800));
+        assert_eq!(backoff_delay(5, &p), Duration::from_secs(1), "capped");
+        assert_eq!(
+            backoff_delay(u32::MAX, &p),
+            Duration::from_secs(1),
+            "arbitrarily large failure counts saturate instead of overflowing"
+        );
     }
 
     #[test]
@@ -699,6 +1102,9 @@ mod tests {
                 format!("{err:#}").contains("synthetic stage failure"),
                 "{transport}: {err:#}"
             );
+            // an error *frame* is an application failure on a healthy
+            // link: the slots must all still be in the rotation
+            assert_eq!(cluster.live_nodes(), 2, "{transport}");
             teardown(cluster, agents);
         }
     }
@@ -785,6 +1191,77 @@ mod tests {
             assert!(
                 cluster.infer(&Payload::Dense(t.clone()), None).is_err(),
                 "{transport}"
+            );
+            // a mis-shaped reply arrived over a healthy link: the slot
+            // stays Up (the model is broken, not the transport)
+            assert_eq!(cluster.live_nodes(), 2, "{transport}");
+            teardown(cluster, agents);
+        }
+    }
+
+    #[test]
+    fn down_slot_is_skipped_not_fatal() {
+        // kill node 1 out of 3, then run another batch: the in-flight
+        // batch fails (link error), the slot goes Down, and the NEXT
+        // batch routes around it over the live slots -- full result,
+        // correct rows, no error.  Loopback kills the worker thread via
+        // a sentinel-triggered panic (its channels close); TCP shuts the
+        // whole agent down.
+        const SENTINEL: f32 = 1.0e9;
+        let reference = synth(4);
+        let t2 = Tensor::random_sparse(vec![6, 3, 4, 25], 0.5, 62);
+        for transport in TRANSPORTS {
+            let inner = synth(4);
+            let killer: ShardFn = Arc::new(move |t: Tensor| {
+                if t.data.contains(&SENTINEL) {
+                    panic!("chaos: worker killed by sentinel shard");
+                }
+                inner(t)
+            });
+            let (mut cluster, mut agents) =
+                dense_cluster_on(transport, 3, killer, enc());
+            // reconnects stay out of this test: a dead TCP agent's port
+            // could be re-dialed, which is the *heal* path -- here we
+            // prove routing-around alone
+            cluster.set_reconnect_policy(ReconnectPolicy {
+                base: Duration::from_secs(3600),
+                ..ReconnectPolicy::default()
+            });
+            let m = Metrics::default();
+            // 6 rows over 3 nodes: rows 2..4 are node 1's shard
+            let mut t1 = Tensor::random_sparse(vec![6, 3, 4, 25], 0.5, 61);
+            match transport {
+                "loopback" => {
+                    let row: usize = t1.shape[1..].iter().product();
+                    t1.data[2 * row] = SENTINEL;
+                }
+                _ => agents.remove(1).shutdown(),
+            }
+            let err = cluster
+                .infer(&Payload::Dense(t1), Some(&m))
+                .unwrap_err();
+            assert!(
+                format!("{err:#}").contains("node 1"),
+                "{transport}: {err:#}"
+            );
+            assert_eq!(cluster.live_nodes(), 2, "{transport}");
+            let health = m.node_health();
+            assert!(!health[1].up, "{transport}");
+            assert_eq!(health[1].consecutive_failures, 1, "{transport}");
+            // the next batch must route around the Down slot
+            let out = cluster
+                .infer(&Payload::Dense(t2.clone()), Some(&m))
+                .unwrap();
+            assert_eq!(out, reference(t2.clone()).unwrap(), "{transport}");
+            // and the Down slot saw no new shard frames (whether the
+            // killed batch's own send was accepted or refused, nothing
+            // beyond that single frame may have been shipped to it)
+            let transport_stats = m.node_transport();
+            assert!(
+                transport_stats[1].shards <= 1,
+                "{transport}: a routed-around slot got a new frame \
+                 ({} shards)",
+                transport_stats[1].shards
             );
             teardown(cluster, agents);
         }

@@ -259,6 +259,20 @@ fn serve(args: &Args) -> Result<()> {
         println!("{ok}/{requests} answered");
     }
     println!("{}", server.metrics.report());
+    // cluster mode: per-node link supervision state, so a degraded
+    // (Down or reconnected) node is visible from the coordinator's exit
+    // summary, not just the node's own logs
+    if args.get("nodes").is_some() {
+        for (i, h) in server.metrics.node_health().iter().enumerate() {
+            println!(
+                "node {i} [{}]: {} reconnects={} consecutive_failures={}",
+                h.label,
+                if h.up { "up" } else { "down" },
+                h.reconnects,
+                h.consecutive_failures,
+            );
+        }
+    }
     server.shutdown();
     Ok(())
 }

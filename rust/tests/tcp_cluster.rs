@@ -11,11 +11,11 @@
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use rfc_hypgcn::coordinator::{
-    dense_entry, spawn_local_agents, BatchPolicy, NodeAgent, Server,
-    ShardCluster, ShardFn, TcpLink,
+    dense_entry, spawn_local_agents, BatchPolicy, Metrics, NodeAgent,
+    ReconnectPolicy, Response, Server, ShardCluster, ShardFn, TcpLink,
 };
 use rfc_hypgcn::model::NUM_JOINTS;
 use rfc_hypgcn::rfc::{wire, EncoderConfig, Payload};
@@ -69,6 +69,62 @@ fn spawn_agents(
     enc: EncoderConfig,
 ) -> (Vec<NodeAgent>, Vec<SocketAddr>) {
     spawn_local_agents(n, dense_entry(model, enc), enc).unwrap()
+}
+
+/// Rebind a just-freed listener address, retrying briefly: the restart
+/// half of the chaos tests needs the *same* port back, and the old
+/// listener's teardown can race the rebind.
+fn bind_retry(addr: SocketAddr) -> TcpListener {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match TcpListener::bind(addr) {
+            Ok(l) => return l,
+            Err(e) => {
+                assert!(Instant::now() < deadline, "rebinding {addr}: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Submit `n` random clips and collect every response (each paired with
+/// its clip so callers can check the answers against the model).
+fn submit_batch(
+    server: &Server,
+    seq_len: usize,
+    n: usize,
+    seed: u64,
+) -> Vec<(Vec<f32>, Response)> {
+    let row = 3 * seq_len * NUM_JOINTS;
+    let clips: Vec<Vec<f32>> = (0..n)
+        .map(|i| Tensor::random_sparse(vec![row], 0.5, seed + i as u64).data)
+        .collect();
+    let rxs: Vec<_> = clips.iter().map(|c| server.submit(c.clone())).collect();
+    clips
+        .into_iter()
+        .zip(rxs)
+        .map(|(c, rx)| {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(30))
+                .expect("response must arrive");
+            (c, resp)
+        })
+        .collect()
+}
+
+/// Every response in `batch` carries the model's logits for its clip.
+fn assert_all_served(
+    batch: &[(Vec<f32>, Response)],
+    model: &ShardFn,
+    seq_len: usize,
+    ctx: &str,
+) {
+    for (i, (clip, resp)) in batch.iter().enumerate() {
+        assert!(resp.is_ok(), "{ctx}: clip {i}: {:?}", resp.error);
+        let t = Tensor::new(vec![1, 3, seq_len, NUM_JOINTS], clip.clone())
+            .unwrap();
+        assert_eq!(resp.logits, model(t).unwrap().data, "{ctx}: clip {i}");
+    }
 }
 
 #[test]
@@ -234,10 +290,227 @@ fn tcp_peer_death_fails_the_batch_then_single_shard_batches_recover() {
     assert!(resp.is_ok(), "{:?}", resp.error);
     let t = Tensor::new(vec![1, 3, seq_len, NUM_JOINTS], clip).unwrap();
     assert_eq!(resp.logits, model(t).unwrap().data);
+    // the failed batch took node 1's slot Down, so a FULL batch -- the
+    // very shape that failed above -- now routes around it and succeeds
+    // on the survivor, no coordinator restart involved
+    let full = submit_batch(&server, seq_len, 4, 7350);
+    assert_all_served(&full, &model, seq_len, "routed-around full batch");
+    assert!(
+        !server.metrics.node_health()[1].up,
+        "the dead slot must be reported Down"
+    );
     server.shutdown();
     for a in agents {
         a.shutdown();
     }
+}
+
+#[test]
+fn chaos_kill_under_load_then_restart_heals_without_coordinator_restart() {
+    // the acceptance scenario: 3 TCP agents under sustained full
+    // batches.  Killing one costs exactly the in-flight batch; every
+    // later batch succeeds on the survivors; restarting the agent on
+    // the SAME address heals the cluster (its slot serves shards again)
+    // with no coordinator restart.
+    const CLASSES: usize = 4;
+    let seq_len = 8;
+    let model = synth_model(CLASSES);
+    let (mut agents, addrs) = spawn_agents(3, model.clone(), enc());
+    // 6-row batches so the router fans over all 3 nodes (2 rows each)
+    let batch_policy = BatchPolicy {
+        batch_size: 6,
+        max_wait: Duration::from_millis(250),
+        seq_len,
+    };
+    let mut cluster = ShardCluster::connect_timeout(
+        &addrs,
+        enc(),
+        Some(Duration::from_secs(5)),
+    )
+    .unwrap();
+    // a tight backoff so the heal lands within the polling budget below
+    cluster.set_reconnect_policy(ReconnectPolicy {
+        base: Duration::from_millis(10),
+        cap: Duration::from_millis(100),
+        connect_timeout: Duration::from_millis(250),
+        attempts_per_heal: 3,
+    });
+    let server = Server::start_cluster(batch_policy, enc(), cluster, CLASSES);
+
+    // healthy baseline: a full batch lands shards on every node
+    let healthy = submit_batch(&server, seq_len, 6, 9000);
+    assert_all_served(&healthy, &model, seq_len, "healthy baseline");
+    assert_eq!(server.metrics.node_transport().len(), 3);
+
+    let dead_addr = addrs[1];
+    agents.remove(1).shutdown();
+
+    // the first post-kill batch is the in-flight loss: it fails whole
+    let in_flight = submit_batch(&server, seq_len, 6, 9010);
+    assert!(
+        in_flight.iter().all(|(_, r)| !r.is_ok()),
+        "the batch in flight across the kill fails with error responses"
+    );
+    // ...and it is the ONLY loss: sustained batches keep succeeding on
+    // the 2 survivors, correct to the model
+    for round in 0..4u64 {
+        let survived = submit_batch(&server, seq_len, 6, 9020 + round * 10);
+        assert_all_served(
+            &survived,
+            &model,
+            seq_len,
+            &format!("survivor round {round}"),
+        );
+    }
+    let health = server.metrics.node_health();
+    assert!(!health[1].up, "killed slot reported Down: {health:?}");
+    assert!(health[0].up && health[2].up, "{health:?}");
+    let shards_at_kill = server.metrics.node_transport()[1].shards;
+
+    // restart on the same address; the coordinator's backoff-gated heal
+    // must re-dial and put the slot back in the rotation
+    let revived = NodeAgent::spawn(
+        bind_retry(dead_addr),
+        dense_entry(model.clone(), enc()),
+        enc(),
+    )
+    .unwrap();
+    let heal_deadline = Instant::now() + Duration::from_secs(20);
+    let mut seed = 9200;
+    loop {
+        // serving never pauses while the heal converges
+        let served = submit_batch(&server, seq_len, 6, seed);
+        assert_all_served(&served, &model, seq_len, "during heal");
+        seed += 10;
+        if server.metrics.node_health()[1].up {
+            break;
+        }
+        assert!(
+            Instant::now() < heal_deadline,
+            "cluster did not heal within 20s of the agent restart: {:?}",
+            server.metrics.node_health()
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    // the healed slot serves shards again
+    let healed = submit_batch(&server, seq_len, 6, seed);
+    assert_all_served(&healed, &model, seq_len, "after heal");
+    let health = server.metrics.node_health();
+    assert!(health[1].reconnects >= 1, "{health:?}");
+    assert!(
+        server.metrics.node_transport()[1].shards > shards_at_kill,
+        "the revived node's slot must carry new shard frames"
+    );
+    server.shutdown();
+    revived.shutdown();
+    for a in agents {
+        a.shutdown();
+    }
+}
+
+#[test]
+fn chaos_flapping_agent_heals_after_every_flap() {
+    // kill/restart the same agent repeatedly at the cluster level: each
+    // flap costs one batch, routes around, heals, and the reconnect
+    // counter grows -- the drain invariant (correct values right after
+    // every failure) holds through all of it.
+    const CLASSES: usize = 3;
+    let model = synth_model(CLASSES);
+    let (mut agents, addrs) = spawn_agents(2, model.clone(), enc());
+    let mut cluster = ShardCluster::connect_timeout(
+        &addrs,
+        enc(),
+        Some(Duration::from_secs(5)),
+    )
+    .unwrap();
+    cluster.set_reconnect_policy(ReconnectPolicy {
+        base: Duration::from_millis(10),
+        cap: Duration::from_millis(100),
+        connect_timeout: Duration::from_millis(250),
+        attempts_per_heal: 4,
+    });
+    let m = Metrics::default();
+    let mut agent1 = Some(agents.remove(1));
+    for cycle in 0..3u64 {
+        let seed = 9500 + cycle * 10;
+        let t_ok = Tensor::random_sparse(vec![4, 3, 8, 25], 0.5, seed);
+        let out = cluster
+            .infer(&Payload::Dense(t_ok.clone()), Some(&m))
+            .unwrap();
+        assert_eq!(out, model(t_ok).unwrap(), "cycle {cycle}: healthy");
+        // kill: exactly the in-flight batch fails...
+        agent1.take().unwrap().shutdown();
+        let t_kill = Tensor::random_sparse(vec![4, 3, 8, 25], 0.5, seed + 1);
+        assert!(
+            cluster.infer(&Payload::Dense(t_kill), Some(&m)).is_err(),
+            "cycle {cycle}: in-flight batch fails"
+        );
+        assert_eq!(cluster.live_nodes(), 1, "cycle {cycle}");
+        // ...and the next one is already correct on the survivor (the
+        // failed batch drained; nothing stale shifts into this one)
+        let t_survive =
+            Tensor::random_sparse(vec![4, 3, 8, 25], 0.5, seed + 2);
+        let out = cluster
+            .infer(&Payload::Dense(t_survive.clone()), Some(&m))
+            .unwrap();
+        assert_eq!(
+            out,
+            model(t_survive).unwrap(),
+            "cycle {cycle}: survivor"
+        );
+        // restart on the same address and wait for the heal
+        agent1 = Some(
+            NodeAgent::spawn(
+                bind_retry(addrs[1]),
+                dense_entry(model.clone(), enc()),
+                enc(),
+            )
+            .unwrap(),
+        );
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while cluster.heal(Some(&m)) < 2 {
+            assert!(
+                Instant::now() < deadline,
+                "cycle {cycle}: no heal within 10s"
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        let t_healed =
+            Tensor::random_sparse(vec![4, 3, 8, 25], 0.5, seed + 3);
+        let out = cluster
+            .infer(&Payload::Dense(t_healed.clone()), Some(&m))
+            .unwrap();
+        assert_eq!(out, model(t_healed).unwrap(), "cycle {cycle}: healed");
+    }
+    let health = m.node_health();
+    assert!(
+        health[1].reconnects >= 3,
+        "one reconnect per flap: {health:?}"
+    );
+    cluster.shutdown();
+    agent1.unwrap().shutdown();
+    for a in agents {
+        a.shutdown();
+    }
+}
+
+#[test]
+fn blackholed_peer_connect_is_bounded_by_the_timeout() {
+    // 240.0.0.1 (class E, never routed): a SYN into the void, no RST
+    // ever.  The old plain `TcpStream::connect` dial hung for the OS
+    // default -- minutes -- before the I/O timeouts even applied; the
+    // dial itself must be bounded now.  (Some sandboxes answer with an
+    // immediate network-unreachable error instead of blackholing; the
+    // bound holds either way.)
+    let start = Instant::now();
+    let result =
+        TcpLink::connect_timeout("240.0.0.1:9", Some(Duration::from_millis(500)));
+    assert!(result.is_err(), "a blackholed peer must not connect");
+    assert!(
+        start.elapsed() < Duration::from_secs(30),
+        "dial took {:?}: connect is not bounded by the io timeout",
+        start.elapsed()
+    );
 }
 
 #[test]
