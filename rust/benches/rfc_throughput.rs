@@ -3,7 +3,7 @@
 //! artifacts).
 //!
 //! Sections (run all, or one via
-//! `-- --section <codec|wire|batch|kernel|node>`):
+//! `-- --section <codec|wire|batch|kernel|node|admission>`):
 //!
 //! * `codec`  -- encode/decode throughput and wire-size ratio vs dense
 //!   transport plus the memcpy baseline;
@@ -15,7 +15,12 @@
 //!   trajectory is recorded run over run (CI uploads it as an artifact);
 //! * `node`   -- shard-cluster batch round-trip over the loopback link
 //!   vs localhost TCP node agents (the socket transport's framing +
-//!   syscall overhead on top of identical wire bytes).
+//!   syscall overhead on top of identical wire bytes);
+//! * `admission` -- the bounded front door under a sustained-rate sweep
+//!   crossing the pipeline's serveable rate: shed/expired fractions and
+//!   per-submit cost at each offered rate, merged into `BENCH_rfc.json`
+//!   as the top-level `admission` object (context for the trajectory;
+//!   the ratchet only reads the kernel `results` rows).
 
 use std::time::Instant;
 
@@ -460,7 +465,208 @@ fn node_section() {
     }
 }
 
-const SECTIONS: [&str; 5] = ["codec", "wire", "batch", "kernel", "node"];
+/// One admission-section measurement row (merged into `BENCH_rfc.json`
+/// under the top-level `admission` object).
+struct AdmissionRow {
+    offered_rps: f64,
+    achieved_rps: f64,
+    served: u64,
+    shed: u64,
+    expired: u64,
+    failed: u64,
+    shed_fraction: f64,
+    submit_mean_s: f64,
+}
+
+fn admission_section() {
+    use rfc_hypgcn::coordinator::{
+        AdmissionPolicy, BatchPolicy, Server, ShardCluster, ShardFn,
+    };
+    use rfc_hypgcn::model::NUM_JOINTS;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    // a pipeline pinned at ~5 ms per batch, so the serveable rate is
+    // known (~batch_size / 5 ms at full batches) and the offered-rate
+    // sweep crosses it
+    const CLASSES: usize = 8;
+    let seq_len = 8usize;
+    let row = 3 * seq_len * NUM_JOINTS;
+    let service = Duration::from_millis(5);
+    let model: ShardFn = Arc::new(move |t| {
+        std::thread::sleep(service);
+        let rows = t.shape[0];
+        let per: usize = t.shape[1..].iter().product();
+        let mut out = vec![0f32; rows * CLASSES];
+        for r in 0..rows {
+            let s: f32 = t.data[r * per..(r + 1) * per].iter().sum();
+            for (c, slot) in
+                out[r * CLASSES..(r + 1) * CLASSES].iter_mut().enumerate()
+            {
+                *slot = s * (c + 1) as f32;
+            }
+        }
+        rfc_hypgcn::runtime::Tensor::new(vec![rows, CLASSES], out)
+    });
+    let enc = serial_cfg();
+    let batch = BatchPolicy {
+        batch_size: 8,
+        max_wait: Duration::from_millis(1),
+        seq_len,
+    };
+    let admission = AdmissionPolicy {
+        capacity: 32,
+        max_queue_wait: Duration::from_millis(50),
+        default_deadline: None,
+    };
+    let clip = sparse_tensor(vec![row], 0.5, 442).data;
+    let n = 160usize;
+
+    println!(
+        "\nadmission front door -- capacity {}, queue bound {:?}, \
+         batch {} @ ~{service:?}/batch, {n} submits per rate",
+        admission.capacity, admission.max_queue_wait, batch.batch_size,
+    );
+    println!(
+        "{:>11}  {:>9}  {:>6}  {:>6}  {:>7}  {:>6}  {:>10}",
+        "offered r/s", "achieved", "served", "shed", "expired", "shed%",
+        "submit us"
+    );
+    let mut rows_out = Vec::new();
+    for rps in [400u64, 1600, 6400] {
+        let cluster = ShardCluster::loopback(2, model.clone(), enc);
+        let server = Server::start_cluster_admitted(
+            batch.clone(),
+            admission.clone(),
+            enc,
+            cluster,
+            CLASSES,
+        );
+        let interval = Duration::from_secs_f64(1.0 / rps as f64);
+        let start = Instant::now();
+        let mut submit_s = 0f64;
+        let mut rxs = Vec::with_capacity(n);
+        for i in 0..n {
+            let due = start + interval * i as u32;
+            let now = Instant::now();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+            let t0 = Instant::now();
+            rxs.push(server.submit(clip.clone()));
+            submit_s += t0.elapsed().as_secs_f64();
+        }
+        let achieved = n as f64 / start.elapsed().as_secs_f64();
+        let (mut served, mut shed, mut expired, mut failed) =
+            (0u64, 0u64, 0u64, 0u64);
+        for rx in rxs {
+            match rx.recv_timeout(Duration::from_secs(30)) {
+                Ok(r) if r.is_ok() => served += 1,
+                Ok(r) if r.is_shed() => shed += 1,
+                Ok(r)
+                    if r.error
+                        .as_deref()
+                        .is_some_and(|e| e.contains("deadline")) =>
+                {
+                    expired += 1
+                }
+                _ => failed += 1,
+            }
+        }
+        server.shutdown();
+        let shed_fraction = shed as f64 / n as f64;
+        let submit_mean_s = submit_s / n as f64;
+        println!(
+            "{:>11.0}  {:>9.0}  {:>6}  {:>6}  {:>7}  {:>5.1}%  {:>10.1}",
+            rps as f64,
+            achieved,
+            served,
+            shed,
+            expired,
+            shed_fraction * 100.0,
+            submit_mean_s * 1e6,
+        );
+        rows_out.push(AdmissionRow {
+            offered_rps: rps as f64,
+            achieved_rps: achieved,
+            served,
+            shed,
+            expired,
+            failed,
+            shed_fraction,
+            submit_mean_s,
+        });
+    }
+    emit_admission_json(
+        admission.capacity,
+        admission.max_queue_wait.as_secs_f64() * 1e3,
+        batch.batch_size,
+        n,
+        &rows_out,
+    );
+}
+
+/// Merge the admission sweep into `BENCH_rfc.json` as the top-level
+/// `admission` object.  The file is produced by [`emit_json`] (kernel
+/// section, which CI runs first); `tools/bench_ratchet` reads only the
+/// top-level `results` rows, so this object is trajectory context, not
+/// a ratcheted metric.
+fn emit_admission_json(
+    capacity: usize,
+    queue_wait_ms: f64,
+    batch_size: usize,
+    submitted: usize,
+    rows: &[AdmissionRow],
+) {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_rfc.json");
+    let mut doc = match Json::from_file(&path) {
+        Ok(Json::Obj(m)) => m,
+        _ => {
+            eprintln!(
+                "note: {} missing or unreadable; run the kernel section \
+                 first -- admission results printed only",
+                path.display()
+            );
+            return;
+        }
+    };
+    let rates: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            obj([
+                ("offered_rps", Json::Num(r.offered_rps)),
+                ("achieved_rps", Json::Num(r.achieved_rps)),
+                ("served", Json::Num(r.served as f64)),
+                ("shed", Json::Num(r.shed as f64)),
+                ("expired", Json::Num(r.expired as f64)),
+                ("failed", Json::Num(r.failed as f64)),
+                ("shed_fraction", Json::Num(r.shed_fraction)),
+                ("submit_mean_s", Json::Num(r.submit_mean_s)),
+            ])
+        })
+        .collect();
+    doc.insert(
+        "admission".to_string(),
+        obj([
+            ("capacity", Json::Num(capacity as f64)),
+            ("max_queue_wait_ms", Json::Num(queue_wait_ms)),
+            ("batch_size", Json::Num(batch_size as f64)),
+            ("submitted_per_rate", Json::Num(submitted as f64)),
+            ("rates", Json::Arr(rates)),
+        ]),
+    );
+    let mut body = Json::Obj(doc).to_string_pretty();
+    body.push('\n');
+    match std::fs::write(&path, body) {
+        Ok(()) => println!("merged admission results into {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}
+
+const SECTIONS: [&str; 6] =
+    ["codec", "wire", "batch", "kernel", "node", "admission"];
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
@@ -493,5 +699,8 @@ fn main() {
     }
     if want("node") {
         node_section();
+    }
+    if want("admission") {
+        admission_section();
     }
 }

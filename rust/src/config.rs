@@ -111,10 +111,20 @@ pub struct ServeConfig {
     pub variant: String,
     pub request_noise: f64,
     pub seed: u64,
+    /// bounded admission queue depth
+    /// ([`crate::coordinator::AdmissionPolicy::capacity`])
+    pub admission_capacity: usize,
+    /// admission queue-residency bound; doubles as the shed responses'
+    /// `retry_after` hint
+    pub max_queue_wait: Duration,
+    /// default end-to-end deadline stamped on requests without one
+    /// (config key `serve.default_deadline_ms`; `0` = no deadline)
+    pub default_deadline: Option<Duration>,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
+        let admission = crate::coordinator::AdmissionPolicy::default();
         ServeConfig {
             artifacts: PathBuf::from("artifacts"),
             batch_wait: Duration::from_millis(20),
@@ -122,6 +132,9 @@ impl Default for ServeConfig {
             variant: "pruned".into(),
             request_noise: 0.02,
             seed: 7,
+            admission_capacity: admission.capacity,
+            max_queue_wait: admission.max_queue_wait,
+            default_deadline: admission.default_deadline,
         }
     }
 }
@@ -135,6 +148,10 @@ impl ServeConfig {
         }
         kv.overlay_env();
         let d = ServeConfig::default();
+        let default_deadline_ms = kv.typed(
+            "serve.default_deadline_ms",
+            d.default_deadline.map(|d| d.as_millis() as u64).unwrap_or(0),
+        )?;
         Ok(ServeConfig {
             artifacts: kv
                 .get("serve.artifacts")
@@ -150,7 +167,24 @@ impl ServeConfig {
                 .to_string(),
             request_noise: kv.typed("serve.request_noise", d.request_noise)?,
             seed: kv.typed("serve.seed", d.seed)?,
+            admission_capacity: kv
+                .typed("serve.admission_capacity", d.admission_capacity)?,
+            max_queue_wait: Duration::from_millis(kv.typed(
+                "serve.max_queue_wait_ms",
+                d.max_queue_wait.as_millis() as u64,
+            )?),
+            default_deadline: (default_deadline_ms > 0)
+                .then(|| Duration::from_millis(default_deadline_ms)),
         })
+    }
+
+    /// The admission policy this configuration resolves to.
+    pub fn admission(&self) -> crate::coordinator::AdmissionPolicy {
+        crate::coordinator::AdmissionPolicy {
+            capacity: self.admission_capacity,
+            max_queue_wait: self.max_queue_wait,
+            default_deadline: self.default_deadline,
+        }
     }
 }
 
@@ -212,5 +246,29 @@ mod tests {
     fn defaults_without_file() {
         let c = ServeConfig::resolve(None).unwrap();
         assert_eq!(c.variant, "pruned");
+        // admission defaults mirror AdmissionPolicy::default()
+        let d = crate::coordinator::AdmissionPolicy::default();
+        assert_eq!(c.admission_capacity, d.capacity);
+        assert_eq!(c.max_queue_wait, d.max_queue_wait);
+        assert_eq!(c.default_deadline, d.default_deadline);
+    }
+
+    #[test]
+    fn admission_keys_resolve_and_zero_deadline_means_none() {
+        let path = std::env::temp_dir().join("rfc_cfg_admission_test.conf");
+        std::fs::write(
+            &path,
+            "[serve]\nadmission_capacity = 16\nmax_queue_wait_ms = 75\n\
+             default_deadline_ms = 200\n",
+        )
+        .unwrap();
+        let c = ServeConfig::resolve(Some(&path)).unwrap();
+        let a = c.admission();
+        assert_eq!(a.capacity, 16);
+        assert_eq!(a.max_queue_wait, Duration::from_millis(75));
+        assert_eq!(a.default_deadline, Some(Duration::from_millis(200)));
+        std::fs::write(&path, "[serve]\ndefault_deadline_ms = 0\n").unwrap();
+        let c = ServeConfig::resolve(Some(&path)).unwrap();
+        assert_eq!(c.default_deadline, None, "0 disables the default deadline");
     }
 }

@@ -1,0 +1,260 @@
+//! Bounded admission control: the front door between [`super::server::Server::submit`]
+//! and the [`super::batcher::Batcher`].
+//!
+//! The intake used to be an unbounded `mpsc::channel`: overload meant
+//! unbounded queue growth, blown latencies, and batches burned on
+//! requests whose callers had long given up.  The gate replaces it with
+//! a `sync_channel(capacity)` offered via `try_send`, so the policy is:
+//!
+//! * **never block the caller** -- `offer` returns immediately, always;
+//! * **shed before the batcher** -- a full queue answers right away with
+//!   a [`Response`] carrying a machine-readable `retry_after` hint
+//!   (see `docs/serving-front-door.md` for the contract);
+//! * **deadlines propagate** -- a request with no caller deadline
+//!   inherits `default_deadline` here, anchored at arrival, so the
+//!   batcher and delivery can drop expired work instead of serving it.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::metrics::Metrics;
+use super::request::{Request, Response};
+
+/// Front-door policy knobs.
+#[derive(Debug, Clone)]
+pub struct AdmissionPolicy {
+    /// bounded intake queue depth; a submit arriving when `capacity`
+    /// requests are already queued is shed, not enqueued
+    pub capacity: usize,
+    /// longest a request may sit in the intake queue before the batcher
+    /// reaps it as expired (an implicit deadline every request carries);
+    /// doubles as the `retry_after` hint on shed responses -- the time
+    /// scale on which a full queue is guaranteed to have turned over
+    pub max_queue_wait: Duration,
+    /// end-to-end deadline stamped on requests that carry none of their
+    /// own (`None`: only `max_queue_wait` bounds them)
+    pub default_deadline: Option<Duration>,
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        // deliberately permissive: deep queue, a residency bound that
+        // only trips when the pipeline is genuinely wedged, no implicit
+        // e2e deadline.  Production front doors set explicit values
+        // (`serve --admission-capacity/--default-deadline-ms`).
+        AdmissionPolicy {
+            capacity: 1024,
+            max_queue_wait: Duration::from_secs(30),
+            default_deadline: None,
+        }
+    }
+}
+
+/// The bounded intake gate.  Owns the sending half of the intake
+/// channel; the batcher drains the receiving half.  Dropping the gate
+/// disconnects the intake (how [`super::server::Server::shutdown`] stops
+/// the batcher).
+pub struct AdmissionGate {
+    tx: SyncSender<Request>,
+    policy: AdmissionPolicy,
+    metrics: Arc<Metrics>,
+}
+
+impl AdmissionGate {
+    /// Build a gate over a fresh bounded intake queue.  Returns the
+    /// batcher-side receiver and the shared shutdown flag: the server
+    /// sets the flag *before* dropping the gate so the batcher can tell
+    /// "drain with shutdown errors" from "intake idle".
+    pub fn new(
+        policy: AdmissionPolicy,
+        metrics: Arc<Metrics>,
+    ) -> (AdmissionGate, Receiver<Request>, Arc<AtomicBool>) {
+        let (tx, rx) = sync_channel(policy.capacity.max(1));
+        let shutting_down = Arc::new(AtomicBool::new(false));
+        (
+            AdmissionGate {
+                tx,
+                policy,
+                metrics,
+            },
+            rx,
+            shutting_down,
+        )
+    }
+
+    /// The queue-residency bound the batcher must enforce.
+    pub fn max_queue_wait(&self) -> Duration {
+        self.policy.max_queue_wait
+    }
+
+    /// Admit or immediately answer one request.  Never blocks: a full
+    /// queue sheds (failure `Response` with `retry_after`), a
+    /// disconnected queue answers with an intake-closed error.  The
+    /// request's deadline is defaulted from the policy first, so every
+    /// admitted request downstream carries whatever deadline it will be
+    /// judged by.
+    pub fn offer(&self, mut req: Request) {
+        if req.deadline.is_none() {
+            req.deadline = self
+                .policy
+                .default_deadline
+                .map(|d| req.arrived + d);
+        }
+        match self.tx.try_send(req) {
+            Ok(()) => self.metrics.record_queue_push(),
+            Err(TrySendError::Full(req)) => {
+                self.metrics.record_shed();
+                self.metrics.record_failure();
+                respond(
+                    &req.reply,
+                    Response::shed(req.id, self.policy.max_queue_wait, req.arrived),
+                    Some(&self.metrics),
+                );
+            }
+            Err(TrySendError::Disconnected(req)) => {
+                self.metrics.record_failure();
+                respond(
+                    &req.reply,
+                    Response::failure(
+                        req.id,
+                        "server intake closed: request not accepted".into(),
+                        req.arrived,
+                    ),
+                    Some(&self.metrics),
+                );
+            }
+        }
+    }
+}
+
+/// Deliver one response, counting an abandoned caller (receiver already
+/// dropped) instead of silently swallowing the send error -- before
+/// this, `let _ = reply.send(..)` made "caller gave up" indistinguishable
+/// from success in the metrics.  Returns whether the response landed.
+pub fn respond(
+    reply: &Sender<Response>,
+    resp: Response,
+    metrics: Option<&Metrics>,
+) -> bool {
+    match reply.send(resp) {
+        Ok(()) => true,
+        Err(_) => {
+            if let Some(m) = metrics {
+                m.record_abandoned();
+            }
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::time::Instant;
+
+    fn req(id: u64, reply: Sender<Response>) -> Request {
+        Request {
+            id,
+            clip: vec![0.0; 4],
+            seq_len: 1,
+            arrived: Instant::now(),
+            deadline: None,
+            reply,
+        }
+    }
+
+    #[test]
+    fn full_queue_sheds_with_retry_after_and_never_blocks() {
+        let metrics = Arc::new(Metrics::default());
+        let policy = AdmissionPolicy {
+            capacity: 2,
+            max_queue_wait: Duration::from_millis(125),
+            default_deadline: None,
+        };
+        let (gate, _rx, _flag) = AdmissionGate::new(policy, metrics.clone());
+        let start = Instant::now();
+        let mut reply_rxs = Vec::new();
+        for i in 0..5u64 {
+            let (tx, rx) = channel();
+            reply_rxs.push(rx);
+            gate.offer(req(i, tx));
+        }
+        // try_send semantics: offering 5 into capacity 2 returns
+        // immediately every time, even with nothing draining the queue
+        assert!(start.elapsed() < Duration::from_secs(1));
+        assert_eq!(metrics.shed.load(Ordering::Relaxed), 3);
+        assert_eq!(metrics.queue_depth.load(Ordering::Relaxed), 2);
+        // the first two were admitted (no response yet)...
+        assert!(reply_rxs[0].try_recv().is_err());
+        assert!(reply_rxs[1].try_recv().is_err());
+        // ...the rest were answered immediately with the retry hint
+        for rx in &reply_rxs[2..] {
+            let resp = rx.try_recv().expect("shed answer is immediate");
+            assert!(!resp.is_ok());
+            assert!(resp.is_shed());
+            assert_eq!(resp.retry_after, Some(Duration::from_millis(125)));
+            assert!(
+                resp.error.as_deref().unwrap().contains("overloaded"),
+                "{:?}",
+                resp.error
+            );
+        }
+    }
+
+    #[test]
+    fn default_deadline_is_stamped_on_admission() {
+        let metrics = Arc::new(Metrics::default());
+        let policy = AdmissionPolicy {
+            capacity: 4,
+            max_queue_wait: Duration::from_secs(1),
+            default_deadline: Some(Duration::from_millis(80)),
+        };
+        let (gate, rx, _flag) = AdmissionGate::new(policy, metrics);
+        let (tx, _reply) = channel();
+        let r = req(1, tx);
+        let arrived = r.arrived;
+        gate.offer(r);
+        let admitted = rx.try_recv().unwrap();
+        assert_eq!(
+            admitted.deadline,
+            Some(arrived + Duration::from_millis(80))
+        );
+        // an explicit deadline wins over the default
+        let (tx, _reply) = channel();
+        let mut r = req(2, tx);
+        r.deadline = Some(arrived + Duration::from_millis(7));
+        gate.offer(r);
+        let admitted = rx.try_recv().unwrap();
+        assert_eq!(admitted.deadline, Some(arrived + Duration::from_millis(7)));
+    }
+
+    #[test]
+    fn disconnected_intake_answers_instead_of_dropping() {
+        let metrics = Arc::new(Metrics::default());
+        let (gate, rx, _flag) =
+            AdmissionGate::new(AdmissionPolicy::default(), metrics.clone());
+        drop(rx);
+        let (tx, reply) = channel();
+        gate.offer(req(9, tx));
+        let resp = reply.try_recv().expect("answered");
+        assert!(!resp.is_ok());
+        assert!(!resp.is_shed(), "a dead intake is not overload");
+        assert!(resp.error.as_deref().unwrap().contains("intake closed"));
+        assert_eq!(metrics.failures.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.shed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn respond_counts_abandoned_callers() {
+        let metrics = Metrics::default();
+        let (tx, rx) = channel();
+        let resp = Response::failure(1, "x".into(), Instant::now());
+        assert!(respond(&tx, resp.clone(), Some(&metrics)));
+        drop(rx);
+        assert!(!respond(&tx, resp, Some(&metrics)));
+        assert_eq!(metrics.abandoned.load(Ordering::Relaxed), 1);
+    }
+}

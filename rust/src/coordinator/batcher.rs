@@ -14,7 +14,9 @@
 //! padding densely.  A full batch of dense clips fails the gate (the
 //! sidecars would cost more than they save) and ships dense.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -24,6 +26,8 @@ use crate::rfc::{CompressedTensor, Payload, BANK_SIDECAR_BITS};
 use crate::runtime::Tensor;
 use crate::sim::rfc::{BANK_WIDTH, ELEM_BITS};
 
+use super::admission::respond;
+use super::metrics::Metrics;
 use super::request::{Batch, Request, Response};
 
 /// Batching policy knobs.
@@ -51,6 +55,17 @@ pub struct Batcher {
     policy: BatchPolicy,
     encoder: crate::rfc::EncoderConfig,
     pending: Vec<Request>,
+    /// serving-path sink for expiry/queue accounting (`None`: the
+    /// standalone test/bench batcher records nothing)
+    metrics: Option<Arc<Metrics>>,
+    /// set by `Server::shutdown` *before* the intake disconnects: drain
+    /// everything still queued with shutdown errors instead of serving
+    /// (or silently dropping) it
+    shutting_down: Option<Arc<AtomicBool>>,
+    /// admission queue-residency bound ([`super::admission::AdmissionPolicy::max_queue_wait`]):
+    /// a request that waited longer than this is reaped as expired even
+    /// if it carries no deadline of its own
+    max_queue_wait: Option<Duration>,
 }
 
 impl Batcher {
@@ -59,6 +74,9 @@ impl Batcher {
             policy,
             encoder: crate::rfc::EncoderConfig::default(),
             pending: Vec::new(),
+            metrics: None,
+            shutting_down: None,
+            max_queue_wait: None,
         }
     }
 
@@ -70,10 +88,41 @@ impl Batcher {
         self
     }
 
+    /// Record expiry/failure/queue-depth events against the serving
+    /// metrics.
+    pub fn with_metrics(mut self, metrics: Arc<Metrics>) -> Self {
+        self.metrics = Some(metrics);
+        self
+    }
+
+    /// Observe the server's shutdown flag (see [`Batcher::next_batch`]'s
+    /// drain semantics).
+    pub fn with_shutdown_flag(mut self, flag: Arc<AtomicBool>) -> Self {
+        self.shutting_down = Some(flag);
+        self
+    }
+
+    /// Enforce the admission queue-residency bound at formation time.
+    pub fn with_queue_bound(mut self, max_queue_wait: Duration) -> Self {
+        self.max_queue_wait = Some(max_queue_wait);
+        self
+    }
+
     /// Blocking: returns the next batch, or `None` when the channel closed
     /// and no pending requests remain.
+    ///
+    /// Expired requests (absolute deadline passed, or queued longer
+    /// than the admission residency bound) are reaped before every
+    /// formation and answered with deadline-exceeded responses -- a
+    /// formed batch never carries an expired request.  Once the
+    /// shutdown flag is up, everything pending or still queued is
+    /// answered with shutdown errors and `None` is returned.
     pub fn next_batch(&mut self, rx: &Receiver<Request>) -> Option<Batch> {
         loop {
+            if self.draining() {
+                return self.drain_shutdown(rx);
+            }
+            self.reap_expired();
             if self.pending.len() >= self.policy.batch_size {
                 return Some(self.form());
             }
@@ -81,6 +130,7 @@ impl Batcher {
                 // nothing pending: block until a request shows up
                 match rx.recv() {
                     Ok(r) => {
+                        self.dequeued();
                         self.admit(r);
                         continue;
                     }
@@ -92,22 +142,121 @@ impl Batcher {
                 deadline.saturating_duration_since(Instant::now())
             };
             if wait.is_zero() {
-                return Some(self.form());
+                if let Some(b) = self.try_form() {
+                    return Some(b);
+                }
+                continue;
             }
             match rx.recv_timeout(wait) {
                 Ok(r) => {
+                    self.dequeued();
                     self.admit(r);
                 }
-                Err(RecvTimeoutError::Timeout) => return Some(self.form()),
-                Err(RecvTimeoutError::Disconnected) => {
-                    return if self.pending.is_empty() {
-                        None
-                    } else {
-                        Some(self.form())
-                    };
+                Err(RecvTimeoutError::Timeout) => {
+                    if let Some(b) = self.try_form() {
+                        return Some(b);
+                    }
+                    // everything pending expired while we waited: back
+                    // to blocking on fresh intake
                 }
+                Err(RecvTimeoutError::Disconnected) => return self.try_form(),
             }
         }
+    }
+
+    /// Reap, then form whatever survived (`None` when expiry emptied
+    /// the pending set -- never an all-padding batch).
+    fn try_form(&mut self) -> Option<Batch> {
+        self.reap_expired();
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(self.form())
+        }
+    }
+
+    fn draining(&self) -> bool {
+        self.shutting_down
+            .as_ref()
+            .is_some_and(|f| f.load(Ordering::SeqCst))
+    }
+
+    /// Shutdown drain: answer everything pending, then everything still
+    /// in the intake queue, with shutdown errors.  The server sets the
+    /// flag before dropping the gate, so the trailing `recv` loop
+    /// terminates on disconnect; requests racing the drain get answered
+    /// here or by the gate's disconnected-intake path -- never silently
+    /// dropped.
+    fn drain_shutdown(&mut self, rx: &Receiver<Request>) -> Option<Batch> {
+        for r in std::mem::take(&mut self.pending) {
+            self.answer_shutdown(r);
+        }
+        while let Ok(r) = rx.recv() {
+            self.dequeued();
+            self.answer_shutdown(r);
+        }
+        None
+    }
+
+    fn answer_shutdown(&self, r: Request) {
+        if let Some(m) = &self.metrics {
+            m.record_failure();
+        }
+        respond(
+            &r.reply,
+            Response::failure(
+                r.id,
+                "server shutting down: request not served".into(),
+                r.arrived,
+            ),
+            self.metrics.as_deref(),
+        );
+    }
+
+    /// One request left the bounded intake queue.
+    fn dequeued(&self) {
+        if let Some(m) = &self.metrics {
+            m.record_queue_pop();
+        }
+    }
+
+    fn is_expired(&self, r: &Request, now: Instant) -> bool {
+        if r.deadline.is_some_and(|d| d <= now) {
+            return true;
+        }
+        self.max_queue_wait
+            .is_some_and(|w| now.duration_since(r.arrived) > w)
+    }
+
+    /// Answer and drop every pending request whose deadline (or queue
+    /// residency bound) has passed: an expired request must never
+    /// occupy a batch slot.
+    fn reap_expired(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let now = Instant::now();
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.is_expired(&self.pending[i], now) {
+                let r = self.pending.remove(i);
+                self.answer_expired(r);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    fn answer_expired(&self, r: Request) {
+        if let Some(m) = &self.metrics {
+            m.record_expired();
+            m.record_failure();
+        }
+        respond(
+            &r.reply,
+            Response::deadline_exceeded(r.id, r.arrived),
+            self.metrics.as_deref(),
+        );
     }
 
     /// Intake gate: a clip that does not match the batch's fixed row
@@ -121,16 +270,29 @@ impl Batcher {
     fn admit(&mut self, r: Request) {
         let want = 3 * self.policy.seq_len * NUM_JOINTS;
         if r.clip.len() != want {
-            let _ = r.reply.send(Response::failure(
-                r.id,
-                format!(
-                    "malformed clip: {} values, batch row wants {want} \
-                     (3 x {} x {NUM_JOINTS})",
-                    r.clip.len(),
-                    self.policy.seq_len
+            if let Some(m) = &self.metrics {
+                m.record_failure();
+            }
+            respond(
+                &r.reply,
+                Response::failure(
+                    r.id,
+                    format!(
+                        "malformed clip: {} values, batch row wants {want} \
+                         (3 x {} x {NUM_JOINTS})",
+                        r.clip.len(),
+                        self.policy.seq_len
+                    ),
+                    r.arrived,
                 ),
-                r.arrived,
-            ));
+                self.metrics.as_deref(),
+            );
+            return;
+        }
+        // a request that expired while queued is answered here, before
+        // it can occupy pending space
+        if self.is_expired(&r, Instant::now()) {
+            self.answer_expired(r);
             return;
         }
         self.pending.push(r);
@@ -257,6 +419,7 @@ mod tests {
                 clip: vec![id as f32; 3 * seq_len * NUM_JOINTS],
                 seq_len,
                 arrived: Instant::now(),
+                deadline: None,
                 reply: tx,
             },
             rx,
@@ -423,6 +586,7 @@ mod tests {
             clip: vec![1.0; 17], // nowhere near 3 * 8 * NUM_JOINTS
             seq_len: 8,
             arrived: Instant::now(),
+            deadline: None,
             reply: bad_tx,
         })
         .unwrap();
@@ -471,6 +635,7 @@ mod tests {
                     clip: clip.clone(),
                     seq_len: 8,
                     arrived: Instant::now(),
+                    deadline: None,
                     reply: tx,
                 }
             })
@@ -499,9 +664,113 @@ mod tests {
             clip: vec![0.0; 5],
             seq_len: 8,
             arrived: Instant::now(),
+            deadline: None,
             reply: tx,
         };
         assert!(Batcher::form_from(&policy, vec![bad]).is_err());
+    }
+
+    #[test]
+    fn expired_requests_are_reaped_at_formation_not_batched() {
+        // two requests, one with a deadline already in the past: the
+        // formed batch must carry only the live one, and the expired
+        // one must be answered deadline-exceeded -- never padded into a
+        // batch slot
+        let policy = BatchPolicy {
+            batch_size: 2,
+            max_wait: Duration::from_millis(5),
+            seq_len: 8,
+        };
+        let metrics = Arc::new(Metrics::default());
+        let (tx, rx) = channel();
+        let (mut dead, dead_rx) = req(1, 8);
+        dead.deadline = Some(Instant::now() - Duration::from_millis(1));
+        tx.send(dead).unwrap();
+        let (live, _live_rx) = req(2, 8);
+        tx.send(live).unwrap();
+        let mut b = Batcher::new(policy).with_metrics(metrics.clone());
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.real, 1, "only the live request forms");
+        assert_eq!(batch.requests[0].id, 2);
+        let resp = dead_rx.try_recv().expect("expired answered at formation");
+        assert!(!resp.is_ok());
+        assert!(resp.error.as_deref().unwrap().contains("deadline exceeded"));
+        assert_eq!(
+            metrics.expired.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+        assert_eq!(
+            metrics.failures.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+    }
+
+    #[test]
+    fn queue_residency_bound_expires_deadlineless_requests() {
+        // no per-request deadline, but the admission residency bound is
+        // tiny: a request that sat longer than the bound is reaped even
+        // though it never asked for a deadline
+        let policy = BatchPolicy {
+            batch_size: 4,
+            max_wait: Duration::from_millis(1),
+            seq_len: 8,
+        };
+        let (tx, rx) = channel();
+        let (mut stale, stale_rx) = req(1, 8);
+        stale.arrived = Instant::now() - Duration::from_millis(50);
+        tx.send(stale).unwrap();
+        let mut b = Batcher::new(policy)
+            .with_queue_bound(Duration::from_millis(10));
+        // the only pending request expires, so next_batch must not form
+        // an all-padding batch from it; close the channel so the call
+        // returns None instead of blocking for fresh intake
+        drop(tx);
+        assert!(b.next_batch(&rx).is_none());
+        let resp = stale_rx.try_recv().expect("stale request answered");
+        assert!(resp.error.as_deref().unwrap().contains("deadline exceeded"));
+    }
+
+    #[test]
+    fn shutdown_flag_drains_pending_and_queued_with_errors() {
+        let policy = BatchPolicy {
+            batch_size: 8,
+            max_wait: Duration::from_secs(10),
+            seq_len: 8,
+        };
+        let metrics = Arc::new(Metrics::default());
+        let flag = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = channel();
+        let mut reply_rxs = Vec::new();
+        for i in 0..3u64 {
+            let (r, rr) = req(i, 8);
+            reply_rxs.push(rr);
+            tx.send(r).unwrap();
+        }
+        let mut b = Batcher::new(policy)
+            .with_metrics(metrics.clone())
+            .with_shutdown_flag(flag.clone());
+        // shutdown ordering contract: flag up, then intake disconnects
+        flag.store(true, Ordering::SeqCst);
+        drop(tx);
+        assert!(
+            b.next_batch(&rx).is_none(),
+            "a draining batcher forms no more batches"
+        );
+        for rr in &reply_rxs {
+            let resp = rr
+                .try_recv()
+                .expect("every queued request answered, none dropped");
+            assert!(!resp.is_ok());
+            assert!(
+                resp.error.as_deref().unwrap().contains("shutting down"),
+                "{:?}",
+                resp.error
+            );
+        }
+        assert_eq!(
+            metrics.failures.load(std::sync::atomic::Ordering::Relaxed),
+            3
+        );
     }
 
     #[test]

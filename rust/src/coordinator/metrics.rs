@@ -62,8 +62,24 @@ pub struct Metrics {
     pub requests_in: AtomicU64,
     pub responses_out: AtomicU64,
     /// requests answered with an error [`super::request::Response`]
-    /// (malformed submission, failed batch) instead of logits
+    /// (malformed submission, failed batch, shed, expired) instead of
+    /// logits
     pub failures: AtomicU64,
+    /// requests shed at the admission gate: the bounded intake queue
+    /// was full, the caller got an immediate retry-after answer and the
+    /// batcher never saw the request
+    pub shed: AtomicU64,
+    /// requests whose deadline (or the admission queue-residency bound)
+    /// passed before delivery: reaped at batch formation or answered
+    /// deadline-exceeded in flight
+    pub expired: AtomicU64,
+    /// responses that could not be delivered because the caller dropped
+    /// its receiver (gave up after shed/timeout) -- counted so an
+    /// abandoned caller is distinguishable from a served one
+    pub abandoned: AtomicU64,
+    /// current depth of the bounded admission queue (gauge: pushed at
+    /// the gate, popped as the batcher dequeues)
+    pub queue_depth: AtomicU64,
     pub batches: AtomicU64,
     pub padded_rows: AtomicU64,
     /// real (non-padding) rows, recorded at batch-formation time --
@@ -107,6 +123,10 @@ impl Default for Metrics {
             requests_in: AtomicU64::new(0),
             responses_out: AtomicU64::new(0),
             failures: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            abandoned: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             padded_rows: AtomicU64::new(0),
             real_rows: AtomicU64::new(0),
@@ -274,6 +294,38 @@ impl Metrics {
         self.failures.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one request shed at the admission gate (queue full).
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one request reaped or answered past its deadline.
+    pub fn record_expired(&self) {
+        self.expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one undeliverable response: the caller's receiver was
+    /// already dropped when delivery tried to answer.
+    pub fn record_abandoned(&self) {
+        self.abandoned.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request entered the bounded admission queue.
+    pub fn record_queue_push(&self) {
+        self.queue_depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request left the admission queue (dequeued by the batcher).
+    /// Saturating at zero: a batcher fed outside a gate (tests, direct
+    /// producers) must not wrap the gauge.
+    pub fn record_queue_pop(&self) {
+        let _ = self.queue_depth.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |d| d.checked_sub(1),
+        );
+    }
+
     /// Completed responses per second since start.
     pub fn throughput_fps(&self) -> f64 {
         let n = self.responses_out.load(Ordering::Relaxed) as f64;
@@ -334,6 +386,22 @@ impl Metrics {
         let failures = self.failures.load(Ordering::Relaxed);
         if failures > 0 {
             s.push_str(&format!(" failures={failures}"));
+        }
+        let shed = self.shed.load(Ordering::Relaxed);
+        if shed > 0 {
+            s.push_str(&format!(" shed={shed}"));
+        }
+        let expired = self.expired.load(Ordering::Relaxed);
+        if expired > 0 {
+            s.push_str(&format!(" expired={expired}"));
+        }
+        let abandoned = self.abandoned.load(Ordering::Relaxed);
+        if abandoned > 0 {
+            s.push_str(&format!(" abandoned={abandoned}"));
+        }
+        let queued = self.queue_depth.load(Ordering::Relaxed);
+        if queued > 0 {
+            s.push_str(&format!(" queue_depth={queued}"));
         }
         let pre = self.gate.pre_rejects.load(Ordering::Relaxed);
         if pre > 0 {
@@ -402,6 +470,35 @@ mod tests {
         assert_eq!(m.failures.load(Ordering::Relaxed), 2);
         assert!(m.report().contains("failures=2"));
         assert!((m.padding_fraction() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn admission_counters_and_queue_gauge() {
+        let m = Metrics::default();
+        // the report stays quiet while the front door is idle
+        let quiet = m.report();
+        assert!(!quiet.contains("shed="));
+        assert!(!quiet.contains("expired="));
+        assert!(!quiet.contains("abandoned="));
+        assert!(!quiet.contains("queue_depth="));
+        m.record_queue_push();
+        m.record_queue_push();
+        m.record_queue_pop();
+        assert_eq!(m.queue_depth.load(Ordering::Relaxed), 1);
+        // popping below zero saturates instead of wrapping the gauge
+        m.record_queue_pop();
+        m.record_queue_pop();
+        assert_eq!(m.queue_depth.load(Ordering::Relaxed), 0);
+        m.record_shed();
+        m.record_shed();
+        m.record_expired();
+        m.record_abandoned();
+        m.record_queue_push();
+        let s = m.report();
+        assert!(s.contains("shed=2"), "{s}");
+        assert!(s.contains("expired=1"), "{s}");
+        assert!(s.contains("abandoned=1"), "{s}");
+        assert!(s.contains("queue_depth=1"), "{s}");
     }
 
     #[test]

@@ -1,8 +1,11 @@
 //! Layer-3 coordinator: the serving-side contribution.
 //!
 //! * [`request`] -- request/response/batch types;
+//! * [`admission`] -- the bounded front door: load shedding with
+//!   retry-after answers, deadline stamping, never-blocking intake
+//!   (see `docs/serving-front-door.md`);
 //! * [`batcher`] -- size-or-timeout dynamic batching to the artifacts'
-//!   fixed batch shape;
+//!   fixed batch shape, reaping expired requests at formation;
 //! * [`pipeline`] -- the layer-pipelined executor over the ten AOT conv
 //!   blocks + head (the software mirror of the paper's on-chip pipeline);
 //! * [`server`] -- intake/delivery threads wiring it together;
@@ -17,6 +20,7 @@
 //! * [`metrics`] -- throughput/latency accounting, including per-node
 //!   shard link traffic.
 
+pub mod admission;
 pub mod batcher;
 pub mod metrics;
 pub mod node;
@@ -26,6 +30,7 @@ pub mod router;
 pub mod server;
 pub mod shard;
 
+pub use admission::{AdmissionGate, AdmissionPolicy};
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::{Metrics, NodeHealth, NodeTransport};
 pub use node::{serve_node, spawn_local_agents, NodeAgent};

@@ -1,7 +1,7 @@
 //! Request/response types flowing through the coordinator.
 
 use std::sync::mpsc::Sender;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::rfc::Payload;
 
@@ -13,6 +13,14 @@ pub struct Request {
     pub clip: Vec<f32>,
     pub seq_len: usize,
     pub arrived: Instant,
+    /// absolute deadline this request is judged by everywhere
+    /// downstream: stamped from the caller's latency budget
+    /// ([`super::router::RouteInfo::deadline`]) or the admission
+    /// policy's default, anchored at arrival.  The batcher reaps an
+    /// expired request at formation time instead of padding a batch
+    /// slot with it; delivery answers one that expired in flight with a
+    /// deadline-exceeded failure instead of a stale result.
+    pub deadline: Option<Instant>,
     /// where to deliver the response
     pub reply: Sender<Response>,
 }
@@ -29,6 +37,13 @@ pub struct Response {
     /// empty then).  A malformed request or a failed batch delivers one
     /// of these instead of silently disconnecting the reply channel.
     pub error: Option<String>,
+    /// machine-readable backoff hint, set **only** on load-shed
+    /// responses (the admission queue was full): retry after this long
+    /// and the queue is guaranteed to have turned over or expired (see
+    /// `docs/serving-front-door.md`).  `None` on every other failure --
+    /// a malformed clip or a dead intake will not get better by
+    /// retrying.
+    pub retry_after: Option<Duration>,
 }
 
 impl Response {
@@ -45,6 +60,7 @@ impl Response {
             predicted,
             latency_s: arrived.elapsed().as_secs_f64(),
             error: None,
+            retry_after: None,
         }
     }
 
@@ -56,12 +72,49 @@ impl Response {
             predicted: 0,
             latency_s: arrived.elapsed().as_secs_f64(),
             error: Some(error),
+            retry_after: None,
         }
+    }
+
+    /// A load-shed answer: the bounded admission queue was full, the
+    /// caller should back off `retry_after` before resubmitting.
+    pub fn shed(id: u64, retry_after: Duration, arrived: Instant) -> Self {
+        Response {
+            retry_after: Some(retry_after),
+            ..Self::failure(
+                id,
+                format!(
+                    "overloaded: admission queue full, retry after {}ms",
+                    retry_after.as_millis()
+                ),
+                arrived,
+            )
+        }
+    }
+
+    /// A deadline-exceeded answer: the request's absolute deadline (or
+    /// the admission queue-residency bound) passed before a result
+    /// could be delivered.
+    pub fn deadline_exceeded(id: u64, arrived: Instant) -> Self {
+        Self::failure(
+            id,
+            format!(
+                "deadline exceeded: request waited {:.0}ms unserved",
+                arrived.elapsed().as_secs_f64() * 1e3
+            ),
+            arrived,
+        )
     }
 
     /// Whether this response carries logits rather than an error.
     pub fn is_ok(&self) -> bool {
         self.error.is_none()
+    }
+
+    /// Whether this is a load-shed rejection (retryable per the
+    /// `retry_after` hint), as opposed to a terminal failure.
+    pub fn is_shed(&self) -> bool {
+        self.retry_after.is_some()
     }
 }
 
@@ -100,8 +153,26 @@ mod tests {
     fn failure_response_carries_the_error() {
         let r = Response::failure(9, "bad clip".into(), Instant::now());
         assert!(!r.is_ok());
+        assert!(!r.is_shed());
         assert_eq!(r.error.as_deref(), Some("bad clip"));
         assert!(r.logits.is_empty());
         assert_eq!(r.id, 9);
+    }
+
+    #[test]
+    fn shed_response_is_a_retryable_failure() {
+        let r = Response::shed(4, Duration::from_millis(250), Instant::now());
+        assert!(!r.is_ok());
+        assert!(r.is_shed());
+        assert_eq!(r.retry_after, Some(Duration::from_millis(250)));
+        assert!(r.error.as_deref().unwrap().contains("retry after 250ms"));
+    }
+
+    #[test]
+    fn deadline_exceeded_is_terminal_not_retryable() {
+        let r = Response::deadline_exceeded(5, Instant::now());
+        assert!(!r.is_ok());
+        assert!(!r.is_shed());
+        assert!(r.error.as_deref().unwrap().contains("deadline exceeded"));
     }
 }

@@ -26,10 +26,22 @@ pub enum Variant {
 pub struct RouteInfo {
     /// frames in the clip
     pub seq_len: usize,
-    /// client latency budget, if any
+    /// client latency budget, if any.  Beyond variant choice, this
+    /// propagates end-to-end: `Server::submit_routed` stamps it on the
+    /// request as an absolute deadline, the batcher reaps it once
+    /// expired, and delivery refuses to answer past it (see
+    /// `docs/serving-front-door.md`).
     pub deadline: Option<Duration>,
     /// client requests reference (unpruned) accuracy
     pub reference_accuracy: bool,
+}
+
+impl RouteInfo {
+    /// The absolute deadline this request carries through the serving
+    /// path, anchored at its arrival instant.
+    pub fn absolute_deadline(&self, arrived: std::time::Instant) -> Option<std::time::Instant> {
+        self.deadline.map(|d| arrived + d)
+    }
 }
 
 /// Router configuration.
@@ -166,6 +178,17 @@ mod tests {
         assert_eq!(r.shards_for(1, 4), 1);
         assert_eq!(r.shards_for(0, 4), 1, "degenerate batch still routes");
         assert_eq!(r.shards_for(100, 0), 1, "no nodes: serve locally");
+    }
+
+    #[test]
+    fn absolute_deadline_anchors_at_arrival() {
+        let arrived = std::time::Instant::now();
+        let with = info(64, Some(30), false);
+        assert_eq!(
+            with.absolute_deadline(arrived),
+            Some(arrived + Duration::from_millis(30))
+        );
+        assert_eq!(info(64, None, false).absolute_deadline(arrived), None);
     }
 
     #[test]

@@ -3,11 +3,11 @@
 //! runtime dependency).
 
 use std::net::ToSocketAddrs;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Result};
 
@@ -16,11 +16,12 @@ use crate::model::NUM_JOINTS;
 use crate::rfc::EncoderConfig;
 use crate::runtime::{Engine, Tensor};
 
+use super::admission::{respond, AdmissionGate, AdmissionPolicy};
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
 use super::pipeline::{Job, Pipeline};
 use super::request::{Batch, Request, Response};
-use super::router::{Router, RouterConfig};
+use super::router::{RouteInfo, Router, RouterConfig};
 use super::shard::ShardCluster;
 
 /// Release-mode delivery contract: the logits a batch is sliced from
@@ -45,6 +46,12 @@ fn check_logits(logits: &Tensor, requests: usize, num_classes: usize) -> Result<
 /// on success, an error [`Response`] to every requester on failure --
 /// submitters get an answer either way instead of a silently
 /// disconnected reply channel.
+///
+/// A request whose deadline passed while its batch was in flight is
+/// recorded expired and answered deadline-exceeded instead of getting a
+/// result it stopped waiting for.  Every send goes through
+/// [`respond`], so a caller that dropped its receiver lands in the
+/// `abandoned` counter instead of passing for a delivery.
 fn deliver(batch: Batch, result: Result<Tensor>, num_classes: usize, metrics: &Metrics) {
     let checked = result.and_then(|logits| {
         check_logits(&logits, batch.requests.len(), num_classes)?;
@@ -52,12 +59,25 @@ fn deliver(batch: Batch, result: Result<Tensor>, num_classes: usize, metrics: &M
     });
     match checked {
         Ok(logits) => {
+            let now = Instant::now();
             for (i, req) in batch.requests.into_iter().enumerate() {
+                if req.deadline.is_some_and(|d| d <= now) {
+                    metrics.record_expired();
+                    metrics.record_failure();
+                    respond(
+                        &req.reply,
+                        Response::deadline_exceeded(req.id, req.arrived),
+                        Some(metrics),
+                    );
+                    continue;
+                }
                 let row = logits.data[i * num_classes..(i + 1) * num_classes]
                     .to_vec();
                 let resp = Response::from_logits(req.id, row, req.arrived);
-                metrics.record_response(resp.latency_s);
-                let _ = req.reply.send(resp);
+                let latency_s = resp.latency_s;
+                if respond(&req.reply, resp, Some(metrics)) {
+                    metrics.record_response(latency_s);
+                }
             }
         }
         Err(e) => {
@@ -65,9 +85,11 @@ fn deliver(batch: Batch, result: Result<Tensor>, num_classes: usize, metrics: &M
             eprintln!("batch delivery failed: {msg}");
             for req in batch.requests {
                 metrics.record_failure();
-                let _ = req
-                    .reply
-                    .send(Response::failure(req.id, msg.clone(), req.arrived));
+                respond(
+                    &req.reply,
+                    Response::failure(req.id, msg.clone(), req.arrived),
+                    Some(metrics),
+                );
             }
         }
     }
@@ -75,11 +97,16 @@ fn deliver(batch: Batch, result: Result<Tensor>, num_classes: usize, metrics: &M
 
 /// Handle to a running server.
 pub struct Server {
-    submit_tx: Sender<Request>,
+    /// bounded front door: sheds when full, never blocks `submit`
+    gate: AdmissionGate,
     pub metrics: Arc<Metrics>,
     pub num_classes: usize,
     seq_len: usize,
     next_id: AtomicU64,
+    /// raised by [`Server::shutdown`] *before* the gate drops, so the
+    /// batcher drains the intake with shutdown errors instead of
+    /// serving (or dropping) what's still queued
+    shutting_down: Arc<AtomicBool>,
     threads: Vec<JoinHandle<()>>,
 }
 
@@ -108,6 +135,9 @@ impl Server {
     /// stages consume compressed payloads through the compressed-domain
     /// kernel (decode elided; see [`crate::runtime::StagePlan`]), and
     /// the kernel / gate counters land in [`Server::metrics`].
+    /// Admission runs with [`AdmissionPolicy::default`] (deep queue, no
+    /// implicit deadline); use [`Server::start_planned_admitted`] to set
+    /// an explicit front-door policy.
     pub fn start_planned(
         engine: &Engine,
         manifest: &Manifest,
@@ -115,10 +145,33 @@ impl Server {
         enc: EncoderConfig,
         plans: Vec<Option<crate::runtime::StagePlan>>,
     ) -> Result<Server> {
+        Self::start_planned_admitted(
+            engine,
+            manifest,
+            policy,
+            AdmissionPolicy::default(),
+            enc,
+            plans,
+        )
+    }
+
+    /// [`Server::start_planned`] behind an explicit admission policy:
+    /// the bounded front door (shed/deadline semantics in
+    /// `docs/serving-front-door.md`) guards the local pipeline path.
+    pub fn start_planned_admitted(
+        engine: &Engine,
+        manifest: &Manifest,
+        policy: BatchPolicy,
+        admission: AdmissionPolicy,
+        enc: EncoderConfig,
+        plans: Vec<Option<crate::runtime::StagePlan>>,
+    ) -> Result<Server> {
         let pipeline =
             Arc::new(Pipeline::load(engine, manifest)?.with_plans(plans)?);
         let metrics = Arc::new(Metrics::default());
-        let (submit_tx, submit_rx) = channel::<Request>();
+        let (gate, submit_rx, shutting_down) =
+            AdmissionGate::new(admission, metrics.clone());
+        let max_queue_wait = gate.max_queue_wait();
         let handle = pipeline.spawn_metered::<Batch>(2, enc, Some(metrics.clone()));
         let mut threads = Vec::new();
 
@@ -129,8 +182,14 @@ impl Server {
             let metrics = metrics.clone();
             let pipe_in = handle.input.clone();
             let policy = policy.clone();
+            let flag = shutting_down.clone();
+            let num_classes = manifest.num_classes;
             threads.push(std::thread::spawn(move || {
-                let mut batcher = Batcher::new(policy).with_encoder(enc);
+                let mut batcher = Batcher::new(policy)
+                    .with_encoder(enc)
+                    .with_metrics(metrics.clone())
+                    .with_shutdown_flag(flag)
+                    .with_queue_bound(max_queue_wait);
                 while let Some(mut batch) = batcher.next_batch(&submit_rx) {
                     metrics.record_batch(batch.real, batch.input.shape()[0]);
                     metrics.record_transport(
@@ -143,7 +202,20 @@ impl Server {
                         payload,
                         entered: Instant::now(),
                     };
-                    if pipe_in.send(job).is_err() {
+                    if let Err(send_failed) = pipe_in.send(job) {
+                        // the pipeline input closed under us (stage
+                        // thread died): the send gives the job back --
+                        // answer its batch with error responses instead
+                        // of silently dropping every reply channel
+                        let job = send_failed.0;
+                        deliver(
+                            job.ctx,
+                            Err(anyhow::anyhow!(
+                                "pipeline input closed: stage threads gone"
+                            )),
+                            num_classes,
+                            &metrics,
+                        );
                         break;
                     }
                 }
@@ -172,11 +244,12 @@ impl Server {
         let _ = handle.input; // dropped here; batcher holds its own clone
 
         Ok(Server {
-            submit_tx,
+            gate,
             metrics,
             num_classes: manifest.num_classes,
             seq_len: manifest.seq_len,
             next_id: AtomicU64::new(0),
+            shutting_down,
             threads,
         })
     }
@@ -222,6 +295,7 @@ impl Server {
         let cluster = ShardCluster::loopback_payload(nodes, compute, enc);
         Ok(Self::start_cluster_with_metrics(
             policy,
+            AdmissionPolicy::default(),
             enc,
             cluster,
             manifest.num_classes,
@@ -242,9 +316,29 @@ impl Server {
         cluster: ShardCluster,
         num_classes: usize,
     ) -> Server {
+        Self::start_cluster_admitted(
+            policy,
+            AdmissionPolicy::default(),
+            enc,
+            cluster,
+            num_classes,
+        )
+    }
+
+    /// [`Server::start_cluster`] behind an explicit admission policy:
+    /// the bounded front door guards the sharded-cluster path exactly
+    /// like the local pipeline path.
+    pub fn start_cluster_admitted(
+        policy: BatchPolicy,
+        admission: AdmissionPolicy,
+        enc: EncoderConfig,
+        cluster: ShardCluster,
+        num_classes: usize,
+    ) -> Server {
         let seq_len = policy.seq_len;
         Self::start_cluster_with_metrics(
             policy,
+            admission,
             enc,
             cluster,
             num_classes,
@@ -265,23 +359,46 @@ impl Server {
         enc: EncoderConfig,
         num_classes: usize,
     ) -> Result<Server> {
+        Self::connect_sharded_admitted(
+            addrs,
+            policy,
+            AdmissionPolicy::default(),
+            enc,
+            num_classes,
+        )
+    }
+
+    /// [`Server::connect_sharded`] behind an explicit admission policy.
+    pub fn connect_sharded_admitted<A: ToSocketAddrs>(
+        addrs: &[A],
+        policy: BatchPolicy,
+        admission: AdmissionPolicy,
+        enc: EncoderConfig,
+        num_classes: usize,
+    ) -> Result<Server> {
         let cluster = ShardCluster::connect_timeout(
             addrs,
             enc,
             Some(super::shard::DEFAULT_NODE_IO_TIMEOUT),
         )?;
-        Ok(Self::start_cluster(policy, enc, cluster, num_classes))
+        Ok(Self::start_cluster_admitted(
+            policy, admission, enc, cluster, num_classes,
+        ))
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn start_cluster_with_metrics(
         policy: BatchPolicy,
+        admission: AdmissionPolicy,
         enc: EncoderConfig,
         mut cluster: ShardCluster,
         num_classes: usize,
         seq_len: usize,
         metrics: Arc<Metrics>,
     ) -> Server {
-        let (submit_tx, submit_rx) = channel::<Request>();
+        let (gate, submit_rx, shutting_down) =
+            AdmissionGate::new(admission, metrics.clone());
+        let max_queue_wait = gate.max_queue_wait();
         let mut threads = Vec::new();
 
         // one coordinator thread: batches form, fan out over the node
@@ -290,8 +407,13 @@ impl Server {
         {
             let metrics = metrics.clone();
             let policy = policy.clone();
+            let flag = shutting_down.clone();
             threads.push(std::thread::spawn(move || {
-                let mut batcher = Batcher::new(policy).with_encoder(enc);
+                let mut batcher = Batcher::new(policy)
+                    .with_encoder(enc)
+                    .with_metrics(metrics.clone())
+                    .with_shutdown_flag(flag)
+                    .with_queue_bound(max_queue_wait);
                 let router = Router::new(RouterConfig::default());
                 cluster.publish_health(&metrics);
                 while let Some(mut batch) = batcher.next_batch(&submit_rx) {
@@ -321,23 +443,46 @@ impl Server {
         }
 
         Server {
-            submit_tx,
+            gate,
             metrics,
             num_classes,
             seq_len,
             next_id: AtomicU64::new(0),
+            shutting_down,
             threads,
         }
     }
 
     /// Submit one clip `(3, T, V)`; returns a receiver for the response.
     ///
-    /// A clip whose length does not match the model's `3 * T * V` frame
-    /// contract is answered immediately with an error [`Response`] --
-    /// it never reaches the batcher, so one malformed submission cannot
-    /// poison a batch or (as it once did, via a release-mode
-    /// `copy_from_slice` panic) wedge the whole server.
+    /// Never blocks: the bounded admission gate answers immediately
+    /// with a shed [`Response`] (carrying `retry_after`) when the
+    /// intake queue is full.  A clip whose length does not match the
+    /// model's `3 * T * V` frame contract is answered immediately with
+    /// an error [`Response`] -- it never reaches the batcher, so one
+    /// malformed submission cannot poison a batch or (as it once did,
+    /// via a release-mode `copy_from_slice` panic) wedge the whole
+    /// server.  The request carries the admission policy's default
+    /// deadline, if any; use [`Server::submit_routed`] for a
+    /// per-request budget.
     pub fn submit(&self, clip: Vec<f32>) -> Receiver<Response> {
+        self.submit_with_deadline(clip, None)
+    }
+
+    /// [`Server::submit`] with routing attributes: the caller's latency
+    /// budget ([`RouteInfo::deadline`]) becomes the request's absolute
+    /// deadline, enforced at batch formation and delivery.
+    pub fn submit_routed(&self, clip: Vec<f32>, info: &RouteInfo) -> Receiver<Response> {
+        self.submit_with_deadline(clip, info.deadline)
+    }
+
+    /// Submit with an explicit relative deadline (`None`: the admission
+    /// policy's default applies).
+    pub fn submit_with_deadline(
+        &self,
+        clip: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Receiver<Response> {
         let (tx, rx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.metrics.record_request();
@@ -362,27 +507,27 @@ impl Server {
             clip,
             seq_len: self.seq_len,
             arrived,
+            deadline: deadline.map(|d| arrived + d),
             reply: tx,
         };
-        // a closed intake (a request racing shutdown, or a dead batcher
-        // thread) must still answer: the send gives the request back,
-        // and dropping it silently -- as this path once did -- left the
-        // caller blocked on `rx.recv()` with no response ever coming
-        if let Err(send_failed) = self.submit_tx.send(req) {
-            let req = send_failed.0;
-            self.metrics.record_failure();
-            let _ = req.reply.send(Response::failure(
-                req.id,
-                "server intake closed: request not accepted".into(),
-                req.arrived,
-            ));
-        }
+        // the gate answers every non-admitted request itself (shed with
+        // retry_after on a full queue, intake-closed on a dead batcher
+        // racing shutdown) -- a submit never blocks and never leaves
+        // the caller hanging on `rx.recv()`
+        self.gate.offer(req);
         rx
     }
 
     /// Stop accepting requests, drain in-flight work, join all threads.
+    ///
+    /// Ordering contract: the shutdown flag goes up *before* the gate
+    /// drops, so the batcher sees the flag and answers everything still
+    /// queued with shutdown errors (then the disconnect ends its drain
+    /// loop) -- an overloaded server shuts down without silently
+    /// dropping a single queued reply channel.
     pub fn shutdown(self) {
-        drop(self.submit_tx);
+        self.shutting_down.store(true, Ordering::SeqCst);
+        drop(self.gate);
         for t in self.threads {
             let _ = t.join();
         }
@@ -394,22 +539,31 @@ mod tests {
     use super::*;
     use std::time::Duration;
 
+    fn bare_server(seq_len: usize) -> (Server, Receiver<Request>) {
+        let metrics = Arc::new(Metrics::default());
+        let (gate, submit_rx, shutting_down) =
+            AdmissionGate::new(AdmissionPolicy::default(), metrics.clone());
+        (
+            Server {
+                gate,
+                metrics,
+                num_classes: 4,
+                seq_len,
+                next_id: AtomicU64::new(0),
+                shutting_down,
+                threads: Vec::new(),
+            },
+            submit_rx,
+        )
+    }
+
     #[test]
     fn submit_racing_a_closed_intake_answers_instead_of_hanging() {
         // a server whose intake receiver is already gone -- exactly the
-        // state a `shutdown`-initiating drop (or a dead batcher thread)
-        // leaves behind for a racing submit
-        let (submit_tx, submit_rx) = channel::<Request>();
-        drop(submit_rx);
+        // state a dead batcher thread leaves behind for a racing submit
         let seq_len = 8;
-        let server = Server {
-            submit_tx,
-            metrics: Arc::new(Metrics::default()),
-            num_classes: 4,
-            seq_len,
-            next_id: AtomicU64::new(0),
-            threads: Vec::new(),
-        };
+        let (server, submit_rx) = bare_server(seq_len);
+        drop(submit_rx);
         let clip = vec![0.0f32; 3 * seq_len * NUM_JOINTS];
         let resp = server
             .submit(clip)
@@ -422,5 +576,24 @@ mod tests {
             resp.error
         );
         assert_eq!(server.metrics.failures.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn submit_routed_stamps_the_absolute_deadline() {
+        let seq_len = 8;
+        let (server, submit_rx) = bare_server(seq_len);
+        let clip = vec![0.0f32; 3 * seq_len * NUM_JOINTS];
+        let info = RouteInfo {
+            seq_len,
+            deadline: Some(Duration::from_millis(40)),
+            reference_accuracy: false,
+        };
+        let _rx = server.submit_routed(clip, &info);
+        let req = submit_rx.try_recv().expect("admitted");
+        let d = req.deadline.expect("deadline propagated");
+        assert_eq!(d, req.arrived + Duration::from_millis(40));
+        // no budget and no policy default: the request carries none
+        let _rx = server.submit(vec![0.0f32; 3 * seq_len * NUM_JOINTS]);
+        assert!(submit_rx.try_recv().unwrap().deadline.is_none());
     }
 }

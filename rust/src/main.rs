@@ -4,6 +4,7 @@
 //! ```text
 //! rfc-hypgcn infer      [--artifacts DIR] [--variant pruned|dense|ck|skip] [--batches N]
 //! rfc-hypgcn serve      [--artifacts DIR] [--requests N] [--rate FPS] [--batch-wait MS]
+//!                       [--admission-capacity N] [--default-deadline-ms MS]
 //!                       [--nodes HOST:PORT,HOST:PORT,...]
 //! rfc-hypgcn serve-node [--artifacts DIR] [--listen HOST:PORT]
 //! rfc-hypgcn simulate   [--table2] [--table4] [--fig11] [--all]
@@ -15,7 +16,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use rfc_hypgcn::coordinator::{BatchPolicy, Server};
+use rfc_hypgcn::coordinator::{AdmissionPolicy, BatchPolicy, Server};
 use rfc_hypgcn::data::{GenConfig, SkeletonGen};
 use rfc_hypgcn::meta::Manifest;
 use rfc_hypgcn::runtime::Engine;
@@ -94,6 +95,8 @@ rfc-hypgcn -- RFC-HyPGCN accelerator reproduction
 USAGE:
   rfc-hypgcn infer      [--artifacts DIR] [--variant pruned|dense|ck|skip|blocks] [--batches N]
   rfc-hypgcn serve      [--artifacts DIR] [--requests N] [--rate FPS] [--batch-wait MS]
+                        [--admission-capacity N] [--default-deadline-ms MS]
+                        (bounded front door: shed over N queued, deadline per request)
                         [--nodes HOST:PORT,...]   (drive remote node agents over TCP)
   rfc-hypgcn serve-node [--artifacts DIR] [--listen HOST:PORT]   (worker-node agent)
   rfc-hypgcn simulate   [--table2|--table4|--fig11|--all]
@@ -212,23 +215,54 @@ fn serve(args: &Args) -> Result<()> {
         max_wait: std::time::Duration::from_millis(wait_ms as u64),
         seq_len: manifest.seq_len,
     };
-    println!("starting coordinator (batch={}, wait={}ms)...",
-             policy.batch_size, wait_ms);
+    // bounded front door: defaults < config file/env < CLI flags
+    let capacity = args.usize("admission-capacity", cfg.admission_capacity)?;
+    let deadline_ms = args.usize(
+        "default-deadline-ms",
+        cfg.default_deadline
+            .map(|d| d.as_millis() as usize)
+            .unwrap_or(0),
+    )?;
+    let admission = AdmissionPolicy {
+        capacity,
+        max_queue_wait: cfg.max_queue_wait,
+        default_deadline: (deadline_ms > 0)
+            .then(|| std::time::Duration::from_millis(deadline_ms as u64)),
+    };
+    println!(
+        "starting coordinator (batch={}, wait={}ms, admission={} slots, \
+         deadline={})...",
+        policy.batch_size,
+        wait_ms,
+        admission.capacity,
+        match admission.default_deadline {
+            Some(d) => format!("{}ms", d.as_millis()),
+            None => "none".into(),
+        },
+    );
     // --nodes addr,addr: the shard cluster spans real machines -- the
     // coordinator connects TCP links to `serve-node` agents and needs
     // no local engine at all (the nodes own the model)
     let server = if let Some(nodes) = args.get("nodes") {
         let addrs: Vec<&str> = nodes.split(',').map(str::trim).collect();
         println!("connecting to {} node agents: {addrs:?}", addrs.len());
-        Server::connect_sharded(
+        Server::connect_sharded_admitted(
             &addrs,
             policy,
+            admission,
             rfc_hypgcn::rfc::EncoderConfig::default(),
             manifest.num_classes,
         )?
     } else {
         let engine = Engine::cpu()?;
-        Server::start(&engine, &manifest, policy)?
+        Server::start_planned_admitted(
+            &engine,
+            &manifest,
+            policy,
+            admission,
+            rfc_hypgcn::rfc::EncoderConfig::default(),
+            Vec::new(),
+        )?
     };
     let mut gen = SkeletonGen::new(
         GenConfig {
@@ -244,17 +278,21 @@ fn serve(args: &Args) -> Result<()> {
         rxs.push(server.submit(clip));
     }
     // failures now arrive as delivered error Responses (not channel
-    // disconnects), so count Response::is_ok, not channel delivery
+    // disconnects), so count Response::is_ok, not channel delivery;
+    // shed answers (retry_after set) are broken out -- they are
+    // backpressure working, not the server failing
     let mut ok = 0;
+    let mut shed = 0;
     let mut failed = 0;
     for rx in rxs {
         match rx.recv() {
             Ok(resp) if resp.is_ok() => ok += 1,
+            Ok(resp) if resp.is_shed() => shed += 1,
             _ => failed += 1,
         }
     }
-    if failed > 0 {
-        println!("{ok}/{requests} answered ({failed} failed)");
+    if shed > 0 || failed > 0 {
+        println!("{ok}/{requests} answered ({shed} shed, {failed} failed)");
     } else {
         println!("{ok}/{requests} answered");
     }

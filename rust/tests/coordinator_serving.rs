@@ -7,13 +7,14 @@
 //! gates go away once artifact export runs in CI).  The shard-cluster
 //! stream tests run a synthetic row-local model and need no artifacts.
 
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use rfc_hypgcn::coordinator::{
-    dense_entry, spawn_local_agents, BatchPolicy, Batcher, Metrics, NodeAgent,
-    Request, Response, Server, ShardCluster, ShardFn,
+    dense_entry, spawn_local_agents, AdmissionPolicy, BatchPolicy, Batcher,
+    Metrics, NodeAgent, Request, Response, Server, ShardCluster, ShardFn,
 };
 use rfc_hypgcn::data::{GenConfig, SkeletonGen};
 use rfc_hypgcn::meta::Manifest;
@@ -127,6 +128,7 @@ fn loopback_cluster_serves_stream_identical_to_single_node() {
                         clip: clip.clone(),
                         seq_len,
                         arrived: Instant::now(),
+                        deadline: None,
                         reply: tx,
                     }
                 })
@@ -210,6 +212,171 @@ fn cluster_output_independent_of_node_count() {
             }
         }
     }
+}
+
+/// [`synth_model`] slowed down per batch call: the deterministic way to
+/// pin the pipeline while the admission queue backs up.
+fn slow_model(classes: usize, delay: Duration) -> ShardFn {
+    let inner = synth_model(classes);
+    Arc::new(move |t: Tensor| {
+        std::thread::sleep(delay);
+        inner(t)
+    })
+}
+
+#[test]
+fn overload_flood_sheds_expires_and_answers_every_caller() {
+    // the front-door acceptance scenario: capacity C, a pipeline slower
+    // than the arrival rate, a 10xC flood.  Submits never block, every
+    // reply channel gets exactly one answer (served, shed-with-
+    // retry_after, or deadline-exceeded), no batch slot carries an
+    // expired request, and the overload is visible in Metrics.
+    const CLASSES: usize = 6;
+    let seq_len = 8;
+    let row = 3 * seq_len * NUM_JOINTS;
+    let policy = BatchPolicy {
+        batch_size: 4,
+        max_wait: Duration::from_millis(1),
+        seq_len,
+    };
+    let enc = EncoderConfig {
+        shards: 1,
+        min_sparsity: 0.10,
+        parallel_threshold: usize::MAX,
+    };
+    let admission = AdmissionPolicy {
+        capacity: 8,
+        max_queue_wait: Duration::from_millis(100),
+        default_deadline: None,
+    };
+    let cluster = ShardCluster::loopback(
+        2,
+        slow_model(CLASSES, Duration::from_millis(150)),
+        enc,
+    );
+    let server =
+        Server::start_cluster_admitted(policy, admission, enc, cluster, CLASSES);
+
+    let n = 80; // 10x admission capacity
+    let clip = vec![0.25f32; row];
+    let flood_started = Instant::now();
+    let rxs: Vec<_> = (0..n).map(|_| server.submit(clip.clone())).collect();
+    let flood = flood_started.elapsed();
+    assert!(
+        flood < Duration::from_secs(2),
+        "submit must never block under overload: flood took {flood:?}"
+    );
+
+    let (mut ok, mut shed, mut expired) = (0usize, 0usize, 0usize);
+    for rx in &rxs {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("every flooded caller gets an answer");
+        if resp.is_ok() {
+            assert_eq!(resp.logits.len(), CLASSES);
+            ok += 1;
+        } else if resp.is_shed() {
+            assert_eq!(
+                resp.retry_after,
+                Some(Duration::from_millis(100)),
+                "shed answers carry the queue-residency bound as retry_after"
+            );
+            shed += 1;
+        } else {
+            let msg = resp.error.as_deref().unwrap_or("");
+            assert!(
+                msg.contains("deadline exceeded"),
+                "only shed / deadline failures expected, got {msg:?}"
+            );
+            expired += 1;
+        }
+    }
+    assert_eq!(ok + shed + expired, n, "answers partition the flood exactly");
+    assert!(ok > 0, "the server kept serving under overload");
+    assert!(shed > 0, "a 10x-capacity flood must shed at the gate");
+    assert!(expired > 0, "queued requests outlived the residency bound");
+
+    let m = &server.metrics;
+    assert_eq!(m.shed.load(Ordering::Relaxed), shed as u64);
+    assert_eq!(m.expired.load(Ordering::Relaxed), expired as u64);
+    assert_eq!(m.responses_out.load(Ordering::Relaxed), ok as u64);
+    // no batch slot carried an expired request: every real row formed
+    // into a batch was delivered as a served response
+    assert_eq!(m.real_rows.load(Ordering::Relaxed), ok as u64);
+    assert_eq!(
+        m.queue_depth.load(Ordering::Relaxed),
+        0,
+        "intake gauge returns to zero once the flood is answered"
+    );
+    let report = m.report();
+    assert!(report.contains("shed="), "{report}");
+    assert!(report.contains("expired="), "{report}");
+    server.shutdown();
+}
+
+#[test]
+fn overload_shutdown_answers_every_queued_request() {
+    // shutdown during overload: the batcher drains the admission queue
+    // with shutdown errors -- no queued reply channel is silently
+    // dropped (the pre-fix behavior) and none is left to serve.
+    const CLASSES: usize = 5;
+    let seq_len = 8;
+    let row = 3 * seq_len * NUM_JOINTS;
+    let policy = BatchPolicy {
+        batch_size: 4,
+        max_wait: Duration::from_millis(1),
+        seq_len,
+    };
+    let enc = EncoderConfig {
+        shards: 1,
+        min_sparsity: 0.10,
+        parallel_threshold: usize::MAX,
+    };
+    let admission = AdmissionPolicy {
+        capacity: 64,
+        max_queue_wait: Duration::from_secs(30),
+        default_deadline: None,
+    };
+    let cluster = ShardCluster::loopback(
+        2,
+        slow_model(CLASSES, Duration::from_millis(200)),
+        enc,
+    );
+    let server =
+        Server::start_cluster_admitted(policy, admission, enc, cluster, CLASSES);
+    let metrics = server.metrics.clone();
+    let clip = vec![0.5f32; row];
+    let n = 12;
+    let rxs: Vec<_> = (0..n).map(|_| server.submit(clip.clone())).collect();
+    server.shutdown(); // joins every thread: all answers are in by now
+
+    let (mut served, mut refused) = (0usize, 0usize);
+    for rx in rxs {
+        let resp = rx.try_recv().expect(
+            "shutdown answers every queued request (pre-fix the reply \
+             channels were dropped silently)",
+        );
+        if resp.is_ok() {
+            served += 1;
+        } else {
+            assert!(
+                resp.error
+                    .as_deref()
+                    .unwrap_or("")
+                    .contains("shutting down"),
+                "{:?}",
+                resp.error
+            );
+            refused += 1;
+        }
+    }
+    assert_eq!(served + refused, n);
+    assert!(
+        refused > 0,
+        "requests queued behind the in-flight batch get shutdown errors"
+    );
+    assert_eq!(metrics.queue_depth.load(Ordering::Relaxed), 0);
+    assert!(metrics.failures.load(Ordering::Relaxed) >= refused as u64);
 }
 
 #[test]

@@ -1,0 +1,249 @@
+//! Deterministic structure-aware fuzz smoke for the wire decoders and
+//! the node agent's frame-service loop: no cargo-fuzz in the offline
+//! build, so a seeded SplitMix64 ([`rfc_hypgcn::util::rng::Rng`])
+//! drives reproducible mutation sweeps over the checked-in corpus
+//! (`tests/wire_corpus/`) plus freshly serialized frames that track the
+//! format as it evolves.
+//!
+//! Contract under fuzz: every decoder call returns `Ok` (of a
+//! structurally valid value) or a clean `Err`; a hostile byte stream at
+//! a node agent costs at most its own connection -- the listener keeps
+//! serving.  A panic anywhere is the bug these tests exist to catch.
+
+use std::io::{BufReader, BufWriter, Cursor, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use rfc_hypgcn::coordinator::{dense_entry, spawn_local_agents, ShardFn};
+use rfc_hypgcn::rfc::{self, wire, EncoderConfig};
+use rfc_hypgcn::runtime::Tensor;
+use rfc_hypgcn::util::rng::Rng;
+
+fn cfg() -> EncoderConfig {
+    EncoderConfig {
+        shards: 2,
+        min_sparsity: 0.0,
+        parallel_threshold: 0,
+    }
+}
+
+/// Mutation seeds: every corpus file (byte-level pins) plus freshly
+/// serialized tensor / payload / error / outer-framed frames, so the
+/// sweep keeps biting as the format evolves.
+fn seed_frames() -> Vec<Vec<u8>> {
+    let mut seeds = Vec::new();
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/wire_corpus");
+    let mut entries: Vec<_> = std::fs::read_dir(&dir)
+        .expect("wire corpus dir")
+        .map(|e| e.unwrap().path())
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.extension().is_some_and(|e| e == "bin") {
+            seeds.push(std::fs::read(&path).unwrap());
+        }
+    }
+    assert!(seeds.len() >= 13, "corpus shrank: only {} seeds", seeds.len());
+    for (shape, sparsity, seed) in [
+        (vec![3, 40], 0.5, 7011u64),
+        (vec![2, 3, 8, 25], 0.7, 7012),
+        (vec![1, 60], 0.0, 7013),
+    ] {
+        let t = Tensor::random_sparse(shape, sparsity, seed);
+        seeds.push(wire::to_bytes(&rfc::encode(&t, &cfg())).unwrap());
+        let p = rfc::Payload::from_tensor(t, &cfg());
+        let inner = wire::payload_to_bytes(&p).unwrap();
+        let mut framed = Vec::new();
+        wire::write_frame(&mut framed, &inner).unwrap();
+        seeds.push(inner);
+        seeds.push(framed);
+    }
+    seeds.push(wire::error_frame("fuzz seed"));
+    seeds
+}
+
+/// One structure-aware mutant: a random seed put through 1-4 of byte
+/// stomp, bit flip, truncate, random extend, aligned-u32 header-field
+/// stomp (with boundary-interesting values), or cross-seed splice.
+fn mutate(rng: &mut Rng, seeds: &[Vec<u8>]) -> Vec<u8> {
+    let mut buf = seeds[rng.below(seeds.len())].clone();
+    for _ in 0..(1 + rng.below(4)) {
+        match rng.below(6) {
+            0 if !buf.is_empty() => {
+                let at = rng.below(buf.len());
+                buf[at] = rng.next_u64() as u8;
+            }
+            1 if !buf.is_empty() => {
+                let at = rng.below(buf.len());
+                buf[at] ^= 1 << rng.below(8);
+            }
+            2 => {
+                let keep = rng.below(buf.len() + 1);
+                buf.truncate(keep);
+            }
+            3 => {
+                for _ in 0..rng.below(9) {
+                    buf.push(rng.next_u64() as u8);
+                }
+            }
+            4 if buf.len() >= 8 => {
+                // header fields are 4-aligned u32s up front: stomp one
+                // with a value that probes the bounds checks
+                let fields = (buf.len() / 4).min(16);
+                let at = rng.below(fields) * 4;
+                let v: u32 = match rng.below(5) {
+                    0 => 0,
+                    1 => 1,
+                    2 => u32::MAX,
+                    3 => wire::MAX_FRAME_LEN + 1,
+                    _ => rng.next_u64() as u32,
+                };
+                buf[at..at + 4].copy_from_slice(&v.to_le_bytes());
+            }
+            5 if !buf.is_empty() => {
+                let other = &seeds[rng.below(seeds.len())];
+                if !other.is_empty() {
+                    let cut = rng.below(buf.len());
+                    let from = rng.below(other.len());
+                    buf.truncate(cut);
+                    buf.extend_from_slice(&other[from..]);
+                }
+            }
+            _ => {}
+        }
+    }
+    buf
+}
+
+#[test]
+fn fuzz_wire_decoders_never_panic() {
+    let seeds = seed_frames();
+    let mut rng = Rng::new(0xDEC0DE);
+    for round in 0..2500u32 {
+        let buf = mutate(&mut rng, &seeds);
+        // tensor frames: Ok must be structurally valid and reserializable
+        if let Ok(ct) = wire::from_bytes(&buf) {
+            ct.validate().unwrap_or_else(|e| {
+                panic!("round {round}: invalid decode accepted: {e:#}")
+            });
+            wire::to_bytes(&ct).unwrap_or_else(|e| {
+                panic!("round {round}: unserializable decode: {e:#}")
+            });
+        }
+        // payload frames: Err or a payload -- never a panic
+        let _ = wire::payload_from_bytes(&buf);
+        // the stream transport's outer framing over the same bytes
+        // (hostile length prefixes, truncated bodies)
+        let _ = wire::read_frame(&mut Cursor::new(&buf));
+    }
+}
+
+#[test]
+fn fuzz_handshake_reader_never_panics() {
+    let mut hs = Vec::new();
+    wire::write_handshake(&mut hs).unwrap();
+    let seeds = vec![hs];
+    let mut rng = Rng::new(0x45C0A7);
+    for _ in 0..500u32 {
+        let buf = mutate(&mut rng, &seeds);
+        let _ = wire::read_handshake(&mut Cursor::new(&buf));
+        let _ = wire::expect_handshake(&mut Cursor::new(&buf));
+    }
+}
+
+#[test]
+fn fuzz_node_agent_frame_loop_survives_hostile_streams() {
+    // a real TCP node agent under three connection-level attack shapes,
+    // round-robined so the fixed seed exercises all of them:
+    //   0: valid handshake, then mutated *inner* frames in honest outer
+    //      framing -- the agent must answer each (error frame or
+    //      result) and keep the connection;
+    //   1: valid handshake, then raw bytes with no honest framing --
+    //      the agent drops that connection only;
+    //   2: garbage instead of a handshake -- dropped at the door.
+    // After the sweep the same listener must still serve a clean
+    // request end-to-end.
+    let enc = cfg();
+    let double: ShardFn = Arc::new(|t: Tensor| {
+        let mut t = t;
+        for v in &mut t.data {
+            *v *= 2.0;
+        }
+        Ok(t)
+    });
+    let (agents, addrs) =
+        spawn_local_agents(1, dense_entry(double, enc), enc).unwrap();
+    let addr = addrs[0];
+    let seeds = seed_frames();
+    let mut rng = Rng::new(0xA6E47);
+
+    for conn in 0..18u32 {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        let mut writer = BufWriter::new(stream.try_clone().unwrap());
+        let mut reader = BufReader::new(stream);
+        match conn % 3 {
+            0 => {
+                let _ = wire::read_handshake(&mut reader);
+                wire::write_handshake(&mut writer).unwrap();
+                for _ in 0..(1 + rng.below(5)) {
+                    let frame = mutate(&mut rng, &seeds);
+                    if wire::write_frame(&mut writer, &frame).is_err() {
+                        break; // mutant outgrew the stream bound
+                    }
+                    // honest framing: the agent always answers (a
+                    // result or an error frame) -- a dropped
+                    // connection here would be the bug
+                    let reply = wire::read_frame(&mut reader)
+                        .expect("agent answers every honestly-framed mutant");
+                    let _ = wire::payload_from_bytes(&reply);
+                }
+            }
+            1 => {
+                let _ = wire::read_handshake(&mut reader);
+                wire::write_handshake(&mut writer).unwrap();
+                let garbage = mutate(&mut rng, &seeds);
+                let _ = writer.write_all(&garbage);
+                let _ = writer.flush();
+            }
+            _ => {
+                let garbage: Vec<u8> =
+                    (0..8).map(|_| rng.next_u64() as u8).collect();
+                let _ = writer.write_all(&garbage);
+                let _ = writer.flush();
+            }
+        }
+        // hang up (drops sever the socket; the agent reaps the handler)
+    }
+
+    // liveness: the listener survived the sweep and still serves
+    let stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut writer = BufWriter::new(stream.try_clone().unwrap());
+    let mut reader = BufReader::new(stream);
+    wire::expect_handshake(&mut reader).expect("agent still handshakes");
+    wire::write_handshake(&mut writer).unwrap();
+    let t = Tensor::random_sparse(vec![2, 3, 8, 25], 0.6, 7099);
+    let inner =
+        wire::payload_to_bytes(&rfc::Payload::from_tensor(t.clone(), &cfg()))
+            .unwrap();
+    wire::write_frame(&mut writer, &inner).unwrap();
+    let reply = wire::read_frame(&mut reader).expect("agent still serves");
+    let out = wire::payload_from_bytes(&reply)
+        .expect("clean request gets a clean payload back")
+        .into_dense(&enc);
+    assert_eq!(out.shape, t.shape);
+    for (got, want) in out.data.iter().zip(&t.data) {
+        assert_eq!(*got, want * 2.0, "compute ran on the surviving agent");
+    }
+    drop((writer, reader));
+    for a in agents {
+        a.shutdown();
+    }
+}

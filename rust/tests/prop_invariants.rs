@@ -182,6 +182,7 @@ fn prop_batch_padding_rows_zero() {
                     clip: vec![1.0; 3 * seq_len * 25],
                     seq_len,
                     arrived: Instant::now(),
+                    deadline: None,
                     reply: tx,
                 }
             })

@@ -14,8 +14,9 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use rfc_hypgcn::coordinator::{
-    dense_entry, spawn_local_agents, BatchPolicy, Metrics, NodeAgent,
-    ReconnectPolicy, Response, Server, ShardCluster, ShardFn, TcpLink,
+    dense_entry, spawn_local_agents, AdmissionPolicy, BatchPolicy, Metrics,
+    NodeAgent, ReconnectPolicy, Response, Server, ShardCluster, ShardFn,
+    TcpLink,
 };
 use rfc_hypgcn::model::NUM_JOINTS;
 use rfc_hypgcn::rfc::{wire, EncoderConfig, Payload};
@@ -489,6 +490,93 @@ fn chaos_flapping_agent_heals_after_every_flap() {
     );
     cluster.shutdown();
     agent1.unwrap().shutdown();
+    for a in agents {
+        a.shutdown();
+    }
+}
+
+#[test]
+fn chaos_overload_flood_over_tcp_sheds_then_serving_recovers() {
+    // the bounded front door on the REAL socket path: TCP node agents
+    // running a deliberately slow model, a flood far past admission
+    // capacity.  Submits stay non-blocking, every caller is answered
+    // (served / shed-with-retry_after / deadline-exceeded), and once
+    // the flood drains the same server serves normally again.
+    const CLASSES: usize = 4;
+    let seq_len = 8;
+    let row = 3 * seq_len * NUM_JOINTS;
+    let model = synth_model(CLASSES);
+    let slow: ShardFn = {
+        let inner = model.clone();
+        Arc::new(move |t: Tensor| {
+            std::thread::sleep(Duration::from_millis(120));
+            inner(t)
+        })
+    };
+    let (agents, addrs) = spawn_agents(2, slow, enc());
+    let admission = AdmissionPolicy {
+        capacity: 4,
+        max_queue_wait: Duration::from_millis(100),
+        default_deadline: None,
+    };
+    let server = Server::connect_sharded_admitted(
+        &addrs,
+        policy(seq_len),
+        admission,
+        enc(),
+        CLASSES,
+    )
+    .unwrap();
+
+    let n = 40; // 10x capacity
+    let clip = Tensor::random_sparse(vec![row], 0.5, 7700).data;
+    let flood_started = Instant::now();
+    let rxs: Vec<_> = (0..n).map(|_| server.submit(clip.clone())).collect();
+    assert!(
+        flood_started.elapsed() < Duration::from_secs(2),
+        "submit blocked under TCP overload: {:?}",
+        flood_started.elapsed()
+    );
+    let (mut ok, mut shed, mut expired) = (0usize, 0usize, 0usize);
+    for rx in rxs {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("every flooded caller answered");
+        if resp.is_ok() {
+            ok += 1;
+        } else if resp.is_shed() {
+            assert_eq!(resp.retry_after, Some(Duration::from_millis(100)));
+            shed += 1;
+        } else {
+            assert!(
+                resp.error
+                    .as_deref()
+                    .unwrap_or("")
+                    .contains("deadline exceeded"),
+                "{:?}",
+                resp.error
+            );
+            expired += 1;
+        }
+    }
+    assert_eq!(ok + shed + expired, n, "answers partition the flood");
+    assert!(shed > 0, "a 10x-capacity flood must shed");
+    assert!(
+        server
+            .metrics
+            .shed
+            .load(std::sync::atomic::Ordering::Relaxed)
+            >= shed as u64
+    );
+    // the overload is over: the same server serves correctly again
+    let recovered = submit_batch(&server, seq_len, 2, 7710);
+    for (i, (clip, resp)) in recovered.iter().enumerate() {
+        assert!(resp.is_ok(), "post-flood clip {i}: {:?}", resp.error);
+        let t = Tensor::new(vec![1, 3, seq_len, NUM_JOINTS], clip.clone())
+            .unwrap();
+        assert_eq!(resp.logits, model(t).unwrap().data, "post-flood clip {i}");
+    }
+    server.shutdown();
     for a in agents {
         a.shutdown();
     }
