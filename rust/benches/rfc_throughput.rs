@@ -15,7 +15,10 @@
 //!   trajectory is recorded run over run (CI uploads it as an artifact);
 //! * `node`   -- shard-cluster batch round-trip over the loopback link
 //!   vs localhost TCP node agents (the socket transport's framing +
-//!   syscall overhead on top of identical wire bytes);
+//!   syscall overhead on top of identical wire bytes), plus batch
+//!   latency under a 1-of-3 node kill with shard retry on vs off (the
+//!   price of masking a fault vs failing the batch), merged into
+//!   `BENCH_rfc.json` as the top-level `node` object;
 //! * `admission` -- the bounded front door under a sustained-rate sweep
 //!   crossing the pipeline's serveable rate: shed/expired fractions and
 //!   per-submit cost at each offered rate, merged into `BENCH_rfc.json`
@@ -397,71 +400,221 @@ fn node_section() {
     use rfc_hypgcn::rfc::Payload;
     use std::sync::Arc;
 
-    // a cheap row-local model, so the measurement is dominated by the
-    // transport (split, frame, ship, reassemble), not the compute
-    let classes = 8usize;
-    let model: ShardFn = Arc::new(move |t| {
-        let rows = t.shape[0];
-        let row: usize = t.shape[1..].iter().product();
-        let mut out = vec![0f32; rows * classes];
-        for r in 0..rows {
-            let s: f32 = t.data[r * row..(r + 1) * row].iter().sum();
-            for (c, slot) in
-                out[r * classes..(r + 1) * classes].iter_mut().enumerate()
-            {
-                *slot = s * (c + 1) as f32;
+    node_transport_subsection();
+    node_failover_subsection();
+
+    fn cheap_model(classes: usize) -> ShardFn {
+        Arc::new(move |t| {
+            let rows = t.shape[0];
+            let row: usize = t.shape[1..].iter().product();
+            let mut out = vec![0f32; rows * classes];
+            for r in 0..rows {
+                let s: f32 = t.data[r * row..(r + 1) * row].iter().sum();
+                for (c, slot) in
+                    out[r * classes..(r + 1) * classes].iter_mut().enumerate()
+                {
+                    *slot = s * (c + 1) as f32;
+                }
             }
-        }
-        rfc_hypgcn::runtime::Tensor::new(vec![rows, classes], out)
-    });
-    let enc = serial_cfg();
-    let shape = vec![8usize, 64, 25, 64];
-    let bytes: usize = shape.iter().product::<usize>() * 4;
-    let nodes = 2usize;
-    let iters = 8;
+            rfc_hypgcn::runtime::Tensor::new(vec![rows, classes], out)
+        })
+    }
 
-    println!(
-        "\nnode transport -- {nodes}-node cluster round trip, shape {shape:?} \
-         ({:.1} MB dense)",
-        bytes as f64 / 1e6
-    );
-    println!(
-        "{:>8}  {:>12}  {:>12}  {:>12}  {:>9}",
-        "sparsity", "frame MB", "loop ms", "tcp ms", "tcp MB/s"
-    );
-    for s10 in [50u64, 90] {
-        let sparsity = s10 as f64 / 100.0;
-        let t = sparse_tensor(shape.clone(), sparsity, 342 + s10);
-        let p = Payload::from_tensor(t, &enc);
-        let frame_mb = p.transport_bits() as f64 / 8.0 / 1e6;
-
-        let mut loopback =
-            ShardCluster::loopback(nodes, model.clone(), enc);
-        let loop_t = time_it(iters, || {
-            std::hint::black_box(loopback.infer(&p, None).unwrap());
-        });
-        loopback.shutdown();
-
-        let (agents, addrs) =
-            spawn_local_agents(nodes, dense_entry(model.clone(), enc), enc)
-                .unwrap();
-        let mut tcp = ShardCluster::connect(&addrs, enc).unwrap();
-        let tcp_t = time_it(iters, || {
-            std::hint::black_box(tcp.infer(&p, None).unwrap());
-        });
-        tcp.shutdown();
-        for a in agents {
-            a.shutdown();
-        }
+    fn node_transport_subsection() {
+        // a cheap row-local model, so the measurement is dominated by
+        // the transport (split, frame, ship, reassemble), not the
+        // compute
+        let model = cheap_model(8);
+        let enc = serial_cfg();
+        let shape = vec![8usize, 64, 25, 64];
+        let bytes: usize = shape.iter().product::<usize>() * 4;
+        let nodes = 2usize;
+        let iters = 8;
 
         println!(
-            "{:>7.0}%  {:>12.2}  {:>12.3}  {:>12.3}  {:>9.1}",
-            sparsity * 100.0,
-            frame_mb,
-            loop_t.mean_s * 1e3,
-            tcp_t.mean_s * 1e3,
-            frame_mb / tcp_t.mean_s,
+            "\nnode transport -- {nodes}-node cluster round trip, shape \
+             {shape:?} ({:.1} MB dense)",
+            bytes as f64 / 1e6
         );
+        println!(
+            "{:>8}  {:>12}  {:>12}  {:>12}  {:>9}",
+            "sparsity", "frame MB", "loop ms", "tcp ms", "tcp MB/s"
+        );
+        for s10 in [50u64, 90] {
+            let sparsity = s10 as f64 / 100.0;
+            let t = sparse_tensor(shape.clone(), sparsity, 342 + s10);
+            let p = Payload::from_tensor(t, &enc);
+            let frame_mb = p.transport_bits() as f64 / 8.0 / 1e6;
+
+            let mut loopback =
+                ShardCluster::loopback(nodes, model.clone(), enc);
+            let loop_t = time_it(iters, || {
+                std::hint::black_box(loopback.infer(&p, None).unwrap());
+            });
+            loopback.shutdown();
+
+            let (agents, addrs) = spawn_local_agents(
+                nodes,
+                dense_entry(model.clone(), enc),
+                enc,
+            )
+            .unwrap();
+            let mut tcp = ShardCluster::connect(&addrs, enc).unwrap();
+            let tcp_t = time_it(iters, || {
+                std::hint::black_box(tcp.infer(&p, None).unwrap());
+            });
+            tcp.shutdown();
+            for a in agents {
+                a.shutdown();
+            }
+
+            println!(
+                "{:>7.0}%  {:>12.2}  {:>12.3}  {:>12.3}  {:>9.1}",
+                sparsity * 100.0,
+                frame_mb,
+                loop_t.mean_s * 1e3,
+                tcp_t.mean_s * 1e3,
+                frame_mb / tcp_t.mean_s,
+            );
+        }
+    }
+
+    fn node_failover_subsection() {
+        use rfc_hypgcn::coordinator::{ReconnectPolicy, RetryPolicy};
+        use std::time::Duration;
+
+        // batch latency under a 1-of-3 node kill: with shard retry on,
+        // the kill-spanning batch succeeds late (one extra shard round
+        // trip); with retry off it fails and only later batches recover.
+        // The cost of masking -- kill-batch latency vs the healthy mean
+        // -- is the number this records.
+        let model = cheap_model(8);
+        let enc = serial_cfg();
+        let shape = vec![12usize, 64, 25, 16];
+        let iters = 8;
+
+        println!(
+            "\nnode failover -- 3-node TCP cluster, 1 killed mid-run, \
+             shape {shape:?}"
+        );
+        println!(
+            "{:>9}  {:>11}  {:>11}  {:>8}  {:>12}",
+            "retry", "healthy ms", "kill ms", "kill ok", "degraded ms"
+        );
+        let mut rows = Vec::new();
+        for retry_on in [true, false] {
+            let t = sparse_tensor(shape.clone(), 0.5, 542);
+            let p = Payload::from_tensor(t, &enc);
+            let (mut agents, addrs) = spawn_local_agents(
+                3,
+                dense_entry(model.clone(), enc),
+                enc,
+            )
+            .unwrap();
+            let mut cluster = ShardCluster::connect(&addrs, enc).unwrap();
+            // the killed node must stay Down for the whole measurement:
+            // a mid-measurement reconnect attempt would pollute the
+            // degraded numbers
+            cluster.set_reconnect_policy(ReconnectPolicy {
+                base: Duration::from_secs(3600),
+                cap: Duration::from_secs(3600),
+                connect_timeout: Duration::from_millis(100),
+                attempts_per_heal: 1,
+                promote_after: Duration::from_secs(3600),
+            });
+            if !retry_on {
+                cluster.set_retry_policy(RetryPolicy::disabled());
+            }
+            let healthy = time_it(iters, || {
+                std::hint::black_box(cluster.infer(&p, None).unwrap());
+            });
+            agents.remove(1).shutdown();
+            // the kill-spanning batch, timed alone
+            let t0 = Instant::now();
+            let kill_result = cluster.infer(&p, None);
+            let kill_s = t0.elapsed().as_secs_f64();
+            let kill_ok = kill_result.is_ok();
+            let degraded = time_it(iters, || {
+                std::hint::black_box(cluster.infer(&p, None).unwrap());
+            });
+            cluster.shutdown();
+            for a in agents {
+                a.shutdown();
+            }
+            println!(
+                "{:>9}  {:>11.3}  {:>11.3}  {:>8}  {:>12.3}",
+                if retry_on { "on" } else { "off" },
+                healthy.mean_s * 1e3,
+                kill_s * 1e3,
+                kill_ok,
+                degraded.mean_s * 1e3,
+            );
+            rows.push(FailoverRow {
+                retry_on,
+                healthy_mean_s: healthy.mean_s,
+                kill_batch_s: kill_s,
+                kill_batch_ok: kill_ok,
+                degraded_mean_s: degraded.mean_s,
+            });
+        }
+        emit_node_json(&rows);
+    }
+}
+
+/// One failover measurement row (merged into `BENCH_rfc.json` under the
+/// top-level `node` object).
+struct FailoverRow {
+    retry_on: bool,
+    healthy_mean_s: f64,
+    kill_batch_s: f64,
+    kill_batch_ok: bool,
+    degraded_mean_s: f64,
+}
+
+/// Merge the failover measurements into `BENCH_rfc.json` as the
+/// top-level `node` object, following the [`emit_admission_json`]
+/// pattern: the ratchet reads only the top-level `results` rows, so
+/// this is trajectory context, never a gate.
+fn emit_node_json(rows: &[FailoverRow]) {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_rfc.json");
+    let mut doc = match Json::from_file(&path) {
+        Ok(Json::Obj(m)) => m,
+        _ => {
+            eprintln!(
+                "note: {} missing or unreadable; run the kernel section \
+                 first -- node results printed only",
+                path.display()
+            );
+            return;
+        }
+    };
+    let failover: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            obj([
+                ("retry_on", Json::Bool(r.retry_on)),
+                ("healthy_mean_s", Json::Num(r.healthy_mean_s)),
+                ("kill_batch_s", Json::Num(r.kill_batch_s)),
+                ("kill_batch_ok", Json::Bool(r.kill_batch_ok)),
+                ("degraded_mean_s", Json::Num(r.degraded_mean_s)),
+            ])
+        })
+        .collect();
+    doc.insert(
+        "node".to_string(),
+        obj([
+            ("nodes", Json::Num(3.0)),
+            ("killed", Json::Num(1.0)),
+            ("failover", Json::Arr(failover)),
+        ]),
+    );
+    let mut body = Json::Obj(doc).to_string_pretty();
+    body.push('\n');
+    match std::fs::write(&path, body) {
+        Ok(()) => println!("merged node results into {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
     }
 }
 

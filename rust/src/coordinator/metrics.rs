@@ -15,6 +15,10 @@ use crate::util::stats::{percentile, Summary};
 pub struct NodeTransport {
     /// shard frames shipped to this node
     pub shards: u64,
+    /// of those, frames that were **re-dispatches** of a shard another
+    /// slot lost to a link failure (fault-masking retry) -- the
+    /// per-slot attempt accounting behind `shard_retries`
+    pub retries: u64,
     /// wire bytes coordinator -> node
     pub tx_wire_bytes: u64,
     /// dense bytes the same shards would have cost
@@ -53,6 +57,9 @@ pub struct NodeHealth {
     pub reconnects: u64,
     /// link failures since the slot last served (0 while up)
     pub consecutive_failures: u64,
+    /// lifetime standby promotions of this slot (each also counts as a
+    /// reconnect)
+    pub promotions: u64,
 }
 
 /// Shared metrics sink (cheap atomics on the hot path, a mutex-guarded
@@ -109,6 +116,12 @@ pub struct Metrics {
     pub kernel_skipped_lanes: AtomicU64,
     /// kernel jobs that finished on a stealing worker
     pub kernel_jobs_stolen: AtomicU64,
+    /// shards re-dispatched onto a surviving slot after a link-level
+    /// loss (fault-masking retry; an expired batch never retries, so
+    /// this stays 0 under pure deadline pressure)
+    pub shard_retries: AtomicU64,
+    /// Down slots promoted to their standby address by `heal`
+    pub standby_promotions: AtomicU64,
     /// per-node shard link traffic (indexed by node id)
     nodes: Mutex<Vec<NodeTransport>>,
     /// per-node link supervision state (indexed by node id)
@@ -138,6 +151,8 @@ impl Default for Metrics {
             kernel_hot_lanes: AtomicU64::new(0),
             kernel_skipped_lanes: AtomicU64::new(0),
             kernel_jobs_stolen: AtomicU64::new(0),
+            shard_retries: AtomicU64::new(0),
+            standby_promotions: AtomicU64::new(0),
             nodes: Mutex::new(Vec::new()),
             health: Mutex::new(Vec::new()),
             latencies_s: Mutex::new(Vec::new()),
@@ -238,6 +253,23 @@ impl Metrics {
         n.rx_dense_bytes += dense_bytes;
     }
 
+    /// Record one shard re-dispatched onto `node` after another slot's
+    /// link-level failure: the global retry counter plus the receiving
+    /// node's per-slot attempt count.
+    pub fn record_shard_retry(&self, node: usize) {
+        self.shard_retries.fetch_add(1, Ordering::Relaxed);
+        let mut nodes = self.nodes.lock().unwrap();
+        if nodes.len() <= node {
+            nodes.resize(node + 1, NodeTransport::default());
+        }
+        nodes[node].retries += 1;
+    }
+
+    /// Record one Down slot promoted to its standby address.
+    pub fn record_standby_promotion(&self) {
+        self.standby_promotions.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Snapshot of per-node shard link traffic (index = node id).
     pub fn node_transport(&self) -> Vec<NodeTransport> {
         self.nodes.lock().unwrap().clone()
@@ -262,6 +294,7 @@ impl Metrics {
         up: bool,
         reconnects: u64,
         consecutive_failures: u64,
+        promotions: u64,
     ) {
         let mut health = self.health.lock().unwrap();
         if health.len() <= node {
@@ -272,6 +305,7 @@ impl Metrics {
             up,
             reconnects,
             consecutive_failures,
+            promotions,
         };
     }
 
@@ -407,6 +441,14 @@ impl Metrics {
         if pre > 0 {
             s.push_str(&format!(" gate_pre_rejects={pre}"));
         }
+        let retries = self.shard_retries.load(Ordering::Relaxed);
+        if retries > 0 {
+            s.push_str(&format!(" shard_retries={retries}"));
+        }
+        let promotions = self.standby_promotions.load(Ordering::Relaxed);
+        if promotions > 0 {
+            s.push_str(&format!(" standby_promotions={promotions}"));
+        }
         let nodes = self.nodes.lock().unwrap();
         if !nodes.is_empty() {
             let saves: Vec<String> = nodes
@@ -415,6 +457,21 @@ impl Metrics {
                 .collect();
             s.push_str(&format!(" node_save=[{}]", saves.join(", ")));
         }
+        // per-slot attempt counts, shown only once a retry happened: a
+        // slot that absorbed re-dispatched shards reads `N(+Kr)`
+        if retries > 0 && !nodes.is_empty() {
+            let attempts: Vec<String> = nodes
+                .iter()
+                .map(|n| {
+                    if n.retries > 0 {
+                        format!("{}(+{}r)", n.shards, n.retries)
+                    } else {
+                        format!("{}", n.shards)
+                    }
+                })
+                .collect();
+            s.push_str(&format!(" node_attempts=[{}]", attempts.join(", ")));
+        }
         let health = self.health.lock().unwrap();
         // an all-up, never-failed cluster stays out of the report line
         if health.iter().any(|h| !h.up || h.reconnects > 0) {
@@ -422,10 +479,10 @@ impl Metrics {
                 .iter()
                 .map(|h| {
                     if h.up {
-                        if h.reconnects > 0 {
-                            format!("up(r{})", h.reconnects)
-                        } else {
-                            "up".into()
+                        match (h.reconnects, h.promotions) {
+                            (0, _) => "up".into(),
+                            (r, 0) => format!("up(r{r})"),
+                            (r, p) => format!("up(r{r},p{p})"),
                         }
                     } else {
                         format!("down(f{})", h.consecutive_failures)
@@ -567,22 +624,50 @@ mod tests {
     fn node_health_tracks_transitions_and_reports_degradation() {
         let m = Metrics::default();
         assert!(m.node_health().is_empty());
-        m.set_node_health(0, "127.0.0.1:7000", true, 0, 0);
-        m.set_node_health(1, "127.0.0.1:7001", true, 0, 0);
+        m.set_node_health(0, "127.0.0.1:7000", true, 0, 0, 0);
+        m.set_node_health(1, "127.0.0.1:7001", true, 0, 0, 0);
         // a fully-healthy cluster stays out of the report line
         assert!(!m.report().contains("node_state"));
         // node 1 fails twice, then heals
-        m.set_node_health(1, "127.0.0.1:7001", false, 0, 2);
+        m.set_node_health(1, "127.0.0.1:7001", false, 0, 2, 0);
         let h = m.node_health();
         assert_eq!(h.len(), 2);
         assert!(h[0].up && !h[1].up);
         assert_eq!(h[1].consecutive_failures, 2);
         assert!(m.report().contains("node_state=[up, down(f2)]"));
-        m.set_node_health(1, "127.0.0.1:7001", true, 1, 0);
+        m.set_node_health(1, "127.0.0.1:7001", true, 1, 0, 0);
         let h = m.node_health();
         assert!(h[1].up);
         assert_eq!(h[1].reconnects, 1);
         // a healed slot keeps its reconnect count visible
         assert!(m.report().contains("node_state=[up, up(r1)]"));
+        // a promotion shows up alongside the reconnect it implies
+        m.set_node_health(1, "127.0.0.1:7002", true, 2, 0, 1);
+        assert!(m.report().contains("node_state=[up, up(r2,p1)]"));
+    }
+
+    #[test]
+    fn retry_and_promotion_counters_report_per_slot_attempts() {
+        let m = Metrics::default();
+        // quiet while nothing failed over
+        let quiet = m.report();
+        assert!(!quiet.contains("shard_retries="));
+        assert!(!quiet.contains("standby_promotions="));
+        assert!(!quiet.contains("node_attempts="));
+        // node 0 served 2 shards, one of them a re-dispatch of node 1's
+        m.record_node_tx(0, 100, 400);
+        m.record_node_tx(1, 100, 400);
+        m.record_node_tx(0, 100, 400);
+        m.record_shard_retry(0);
+        m.record_standby_promotion();
+        assert_eq!(m.shard_retries.load(Ordering::Relaxed), 1);
+        assert_eq!(m.standby_promotions.load(Ordering::Relaxed), 1);
+        let nodes = m.node_transport();
+        assert_eq!(nodes[0].retries, 1);
+        assert_eq!(nodes[1].retries, 0);
+        let s = m.report();
+        assert!(s.contains("shard_retries=1"), "{s}");
+        assert!(s.contains("standby_promotions=1"), "{s}");
+        assert!(s.contains("node_attempts=[2(+1r), 1]"), "{s}");
     }
 }

@@ -12,8 +12,10 @@
 //! * [`shard`] -- multi-node layer: batches split by row shard, shipped
 //!   as RFC wire bytes over [`shard::NodeLink`]s (in-process loopback or
 //!   TCP sockets) to per-node stage workers, results reassembled in the
-//!   coordinator; links live in supervised slots that route around and
-//!   reconnect dead nodes (see `docs/cluster-resilience.md`);
+//!   coordinator; links live in supervised slots that route around,
+//!   reconnect, and eventually standby-promote dead nodes, and a shard
+//!   lost to a link failure is retried on survivors within the batch's
+//!   deadline (see `docs/cluster-resilience.md`);
 //! * [`node`] -- the worker-node agent serving the far end of a
 //!   [`shard::TcpLink`]: handshake, frame-service loop, error-frame
 //!   replies;
@@ -39,6 +41,7 @@ pub use request::{Batch, Request, Response};
 pub use router::{RouteInfo, Router, RouterConfig, Variant};
 pub use server::Server;
 pub use shard::{
-    backoff_delay, dense_entry, LoopbackLink, NodeLink, PayloadShardFn,
-    ReconnectPolicy, ShardCluster, ShardFn, SlotState, TcpLink,
+    backoff_delay, dense_entry, LoopbackLink, NodeLink, NodeSpec,
+    PayloadShardFn, ReconnectPolicy, RetryPolicy, ShardCluster, ShardFn,
+    SlotState, TcpLink,
 };

@@ -117,6 +117,20 @@ impl Router {
         (rows / self.cfg.min_shard_rows.max(1)).clamp(1, nodes.max(1))
     }
 
+    /// [`Router::shards_for`] for a possibly-degraded cluster.  When
+    /// any slot is Down, shard-level retry is in play (see
+    /// `ShardCluster::infer_deadline`): a further link failure
+    /// re-dispatches its shard onto a survivor that already has its own
+    /// shard in flight, so a retry effectively **halves** the capacity
+    /// of whoever absorbs it.  Planning over `ceil(live / 2)` nodes
+    /// while degraded leaves the survivors that headroom -- a retried
+    /// shard lands on an idle slot instead of serializing behind every
+    /// survivor's own work -- at the cost of coarser (cheaper) shards.
+    pub fn shards_for_resilient(&self, rows: usize, live: usize, degraded: bool) -> usize {
+        let effective = if degraded { live.div_ceil(2).max(1) } else { live };
+        self.shards_for(rows, effective)
+    }
+
     /// Fraction routed to each variant (pruned, skip, dense).
     pub fn distribution(&self) -> [f64; 3] {
         let total: u64 = self.routed.iter().sum();
@@ -178,6 +192,21 @@ mod tests {
         assert_eq!(r.shards_for(1, 4), 1);
         assert_eq!(r.shards_for(0, 4), 1, "degenerate batch still routes");
         assert_eq!(r.shards_for(100, 0), 1, "no nodes: serve locally");
+    }
+
+    #[test]
+    fn degraded_fanout_leaves_retry_headroom() {
+        let r = Router::new(RouterConfig::default()); // min_shard_rows: 2
+        // healthy: identical to shards_for
+        assert_eq!(r.shards_for_resilient(16, 4, false), 4);
+        // degraded: plan over ceil(live/2) so a retried shard finds an
+        // idle survivor
+        assert_eq!(r.shards_for_resilient(16, 4, true), 2);
+        assert_eq!(r.shards_for_resilient(16, 3, true), 2);
+        assert_eq!(r.shards_for_resilient(16, 1, true), 1);
+        // row floor still wins over headroom math
+        assert_eq!(r.shards_for_resilient(2, 4, true), 1);
+        assert_eq!(r.shards_for_resilient(0, 0, true), 1);
     }
 
     #[test]

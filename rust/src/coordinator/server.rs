@@ -83,13 +83,21 @@ fn deliver(batch: Batch, result: Result<Tensor>, num_classes: usize, metrics: &M
         Err(e) => {
             let msg = format!("{e:#}");
             eprintln!("batch delivery failed: {msg}");
+            let now = Instant::now();
             for req in batch.requests {
                 metrics.record_failure();
-                respond(
-                    &req.reply,
-                    Response::failure(req.id, msg.clone(), req.arrived),
-                    Some(metrics),
-                );
+                // a request already past its deadline when the batch
+                // failed answers deadline-exceeded -- the truthful
+                // outcome its caller is handling (and the reason the
+                // cluster refused to keep retrying) -- instead of the
+                // batch error
+                let resp = if req.deadline.is_some_and(|d| d <= now) {
+                    metrics.record_expired();
+                    Response::deadline_exceeded(req.id, req.arrived)
+                } else {
+                    Response::failure(req.id, msg.clone(), req.arrived)
+                };
+                respond(&req.reply, resp, Some(metrics));
             }
         }
     }
@@ -429,13 +437,31 @@ impl Server {
                     // failed batches
                     let live = cluster.heal(Some(&metrics));
                     // real rows drive the fan-out: padding rows are
-                    // sidecar-only and not worth extra shard frames
-                    let fan = router.shards_for(batch.real, live);
-                    let result = cluster.infer_on(fan, &payload, Some(&metrics));
-                    // a failed batch (node death, mis-sized reply, stage
+                    // sidecar-only and not worth extra shard frames.  A
+                    // degraded cluster plans coarser shards so a
+                    // retried one lands on an idle survivor
+                    let fan = router.shards_for_resilient(
+                        batch.real,
+                        live,
+                        cluster.is_degraded(),
+                    );
+                    // the batch's earliest request deadline bounds the
+                    // per-shard recv waits and every retry dispatch
+                    let deadline =
+                        batch.requests.iter().filter_map(|r| r.deadline).min();
+                    let result = cluster.infer_deadline(
+                        fan,
+                        &payload,
+                        deadline,
+                        Some(&metrics),
+                    );
+                    // a shard lost to a node death was re-dispatched
+                    // onto survivors inside infer_deadline; a batch
+                    // that still failed (no survivors, deadline, app
                     // error) answers every requester with an error
-                    // response; the cluster drained its live links, so
-                    // the next batch starts clean
+                    // response.  The cluster drained its live links
+                    // after every attempt, so the next batch starts
+                    // clean either way.
                     deliver(batch, result, num_classes, &metrics);
                 }
                 cluster.shutdown();

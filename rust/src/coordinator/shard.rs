@@ -19,15 +19,21 @@
 //! Supervision: a link-level send/recv failure takes its slot
 //! [`SlotState::Down`] instead of leaving a poisoned link in the
 //! rotation forever.  [`ShardCluster::infer_on`] plans shards over the
-//! **live** slots only, so one dead node costs the in-flight batch and
-//! nothing after it, and [`ShardCluster::heal`] re-dials Down TCP slots
-//! on a bounded exponential backoff (see [`ReconnectPolicy`]) so a
-//! restarted node agent rejoins the cluster without a coordinator
-//! restart.  Full policy write-up: `docs/cluster-resilience.md`.
+//! **live** slots only, and a shard lost to a link failure mid-batch is
+//! **re-dispatched onto the survivors** (bounded by [`RetryPolicy`] and
+//! the batch deadline) so a node death is masked from callers instead
+//! of failing every request in the batch.  [`ShardCluster::heal`]
+//! re-dials Down TCP slots on a bounded exponential backoff (see
+//! [`ReconnectPolicy`]), rotating its per-pass budget across Down slots,
+//! and promotes a slot to its standby address once it has been Down
+//! past [`ReconnectPolicy::promote_after`] -- so both a restarted node
+//! agent and a permanently lost machine rejoin the cluster without a
+//! coordinator restart.  Full policy write-up:
+//! `docs/cluster-resilience.md`.
 
 use std::io::{BufReader, BufWriter};
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -47,6 +53,19 @@ pub trait NodeLink: Send {
     fn send(&mut self, frame: Vec<u8>) -> Result<()>;
     /// Block until the node's next reply frame.
     fn recv(&mut self) -> Result<Vec<u8>>;
+    /// [`NodeLink::recv`] bounded by an absolute deadline, when one is
+    /// given: a reply that misses the deadline is a **link-level**
+    /// failure, and the link must arrange that the late frame can never
+    /// surface as a later batch's reply (the TCP impl poisons the
+    /// socket; the loopback impl's channel is dropped by the caller's
+    /// `mark_down`).  This is what converts a hung-but-alive straggler
+    /// node into a retryable shard failure instead of a batch-wide
+    /// stall.  The default ignores the deadline, preserving plain
+    /// blocking-recv semantics for custom links.
+    fn recv_deadline(&mut self, deadline: Option<Instant>) -> Result<Vec<u8>> {
+        let _ = deadline;
+        self.recv()
+    }
 }
 
 /// In-process loopback link: a pair of byte channels.  The production
@@ -64,6 +83,24 @@ impl NodeLink for LoopbackLink {
 
     fn recv(&mut self) -> Result<Vec<u8>> {
         self.rx.recv().map_err(|_| anyhow!("node link closed"))
+    }
+
+    fn recv_deadline(&mut self, deadline: Option<Instant>) -> Result<Vec<u8>> {
+        let Some(d) = deadline else {
+            return self.recv();
+        };
+        let remaining = d.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return Err(anyhow!(
+                "node link: shard deadline passed before the reply"
+            ));
+        }
+        self.rx.recv_timeout(remaining).map_err(|e| match e {
+            RecvTimeoutError::Timeout => {
+                anyhow!("node link: no reply within the shard deadline")
+            }
+            RecvTimeoutError::Disconnected => anyhow!("node link closed"),
+        })
     }
 }
 
@@ -119,6 +156,10 @@ pub struct TcpLink {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
     peer: String,
+    /// the configured per-I/O activity timeout, remembered so a
+    /// deadline-bounded recv can tighten the socket read timeout for
+    /// one frame and then restore it
+    io_timeout: Option<Duration>,
 }
 
 impl TcpLink {
@@ -188,6 +229,9 @@ impl TcpLink {
             .peer_addr()
             .map(|a| a.to_string())
             .unwrap_or_else(|_| "<unknown peer>".into());
+        // whatever activity timeout the dialer applied is the one
+        // deadline-bounded recvs restore afterwards
+        let io_timeout = stream.read_timeout().unwrap_or(None);
         // shard frames are one write / one reply: latency, not batching
         let _ = stream.set_nodelay(true);
         let mut writer = BufWriter::new(
@@ -202,6 +246,7 @@ impl TcpLink {
             reader,
             writer,
             peer,
+            io_timeout,
         })
     }
 
@@ -241,6 +286,40 @@ impl NodeLink for TcpLink {
         }
         r
     }
+
+    fn recv_deadline(&mut self, deadline: Option<Instant>) -> Result<Vec<u8>> {
+        let Some(d) = deadline else {
+            return self.recv();
+        };
+        let remaining = d.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            // a frame may already be in flight toward us; abandoning it
+            // would desynchronize the stream, so the link dies with the
+            // deadline (same contract as any other recv failure)
+            self.poison();
+            return Err(anyhow!(
+                "receiving from node {}: shard deadline passed before the reply",
+                self.peer
+            ));
+        }
+        let effective = match self.io_timeout {
+            Some(t) => t.min(remaining),
+            None => remaining,
+        };
+        // if the socket refuses the tightened timeout, fall back to the
+        // plain recv rather than losing a frame that may still arrive
+        if self
+            .reader
+            .get_ref()
+            .set_read_timeout(Some(effective))
+            .is_err()
+        {
+            return self.recv();
+        }
+        let r = self.recv();
+        let _ = self.reader.get_ref().set_read_timeout(self.io_timeout);
+        r
+    }
 }
 
 /// Backoff and budget policy for reviving Down TCP slots
@@ -258,6 +337,11 @@ pub struct ReconnectPolicy {
     /// most re-dial attempts one heal pass pays for (reconnect work is
     /// amortized across batches instead of front-loaded onto one)
     pub attempts_per_heal: usize,
+    /// how long a slot may stay Down before [`ShardCluster::heal`]
+    /// gives up waiting for the primary and dials the slot's standby
+    /// address instead, promoting it into the slot on success -- the
+    /// self-repair path for a *permanently* lost machine
+    pub promote_after: Duration,
 }
 
 impl Default for ReconnectPolicy {
@@ -267,6 +351,46 @@ impl Default for ReconnectPolicy {
             cap: Duration::from_secs(5),
             connect_timeout: Duration::from_millis(250),
             attempts_per_heal: 2,
+            promote_after: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Bounds on re-dispatching a failed shard onto surviving slots
+/// ([`ShardCluster::infer_deadline`]).  Retry applies **only** to
+/// link-level losses (send/recv failure, slot Down mid-batch, recv
+/// deadline missed); an application failure -- error frame, mis-shaped
+/// reply -- is deterministic and is never retried.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// total dispatch attempts per shard, first try included; 1 means
+    /// fail-the-batch on any shard loss (the pre-retry behavior)
+    pub max_attempts: usize,
+    /// per-shard recv budget, independent of the batch deadline: a node
+    /// that holds a shard longer than this is treated as a straggler
+    /// (link failure, shard retried elsewhere) even on deadline-less
+    /// batches.  `None` leaves only the batch deadline and the link's
+    /// own I/O timeout in force.
+    pub per_shard_timeout: Option<Duration>,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 3,
+            per_shard_timeout: None,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Fail-the-batch on the first shard loss: the pre-retry semantics,
+    /// for tests that prove routing-around / drain behavior in
+    /// isolation.
+    pub fn disabled() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 1,
+            per_shard_timeout: None,
         }
     }
 }
@@ -307,9 +431,12 @@ impl SlotState {
 enum SlotOrigin {
     /// dialed by the cluster: remembers the resolved addresses and the
     /// per-I/O timeout so [`ShardCluster::heal`] can re-dial after a
-    /// failure
+    /// failure, plus any standby addresses the slot may be promoted to
+    /// when the primary stays dead past
+    /// [`ReconnectPolicy::promote_after`]
     Tcp {
         addrs: Vec<SocketAddr>,
+        standbys: Vec<SocketAddr>,
         io_timeout: Option<Duration>,
     },
     /// loopback or caller-built link: nothing to re-dial, Down is final
@@ -326,6 +453,8 @@ pub struct NodeSlot {
     next_attempt: Instant,
     /// lifetime successful revivals
     reconnects: u64,
+    /// lifetime standby promotions (each one also counts a reconnect)
+    promotions: u64,
 }
 
 impl NodeSlot {
@@ -336,6 +465,7 @@ impl NodeSlot {
             state: SlotState::Up,
             next_attempt: Instant::now(),
             reconnects: 0,
+            promotions: 0,
         }
     }
 
@@ -346,6 +476,11 @@ impl NodeSlot {
     /// Lifetime successful reconnects of this slot.
     pub fn reconnects(&self) -> u64 {
         self.reconnects
+    }
+
+    /// Lifetime standby promotions of this slot.
+    pub fn promotions(&self) -> u64 {
+        self.promotions
     }
 
     fn consecutive_failures(&self) -> u32 {
@@ -368,6 +503,47 @@ impl NodeSlot {
                 .unwrap_or_else(|| "tcp:<unresolved>".into()),
             SlotOrigin::Static => "static".into(),
         }
+    }
+}
+
+/// One node's dial plan: the primary address set plus optional standby
+/// addresses [`ShardCluster::heal`] may promote into the slot when the
+/// primary stays Down past [`ReconnectPolicy::promote_after`].  CLI
+/// syntax (`serve --nodes`): `host:port|standby_host:port[|...]` --
+/// everything after the first `|` is a standby.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    /// resolved primary addresses (first reachable wins on dial)
+    pub primary: Vec<SocketAddr>,
+    /// resolved standby addresses, in promotion preference order
+    pub standbys: Vec<SocketAddr>,
+}
+
+impl NodeSpec {
+    /// Parse `host:port[|standby_host:port[|...]]`, resolving every
+    /// address up front (reconnects and promotions re-dial the resolved
+    /// set; a DNS outage during recovery must not keep a slot Down).
+    pub fn parse(spec: &str) -> Result<NodeSpec> {
+        let mut parts = spec.split('|').map(str::trim);
+        let first = parts
+            .next()
+            .filter(|s| !s.is_empty())
+            .ok_or_else(|| anyhow!("node spec {spec:?} has no primary address"))?;
+        let primary = resolve(&first)?;
+        let mut standbys = Vec::new();
+        for p in parts {
+            ensure!(!p.is_empty(), "node spec {spec:?} has an empty standby address");
+            standbys.extend(resolve(&p)?);
+        }
+        Ok(NodeSpec { primary, standbys })
+    }
+
+    /// A spec from already-resolved addresses (tests, embedding).
+    pub fn with_standbys(
+        primary: Vec<SocketAddr>,
+        standbys: Vec<SocketAddr>,
+    ) -> NodeSpec {
+        NodeSpec { primary, standbys }
     }
 }
 
@@ -464,18 +640,30 @@ fn slice_payload(p: &Payload, lo: usize, hi: usize) -> Result<Payload> {
 /// A cluster of worker nodes behind supervised [`NodeSlot`]s, plus the
 /// split / reassemble logic the coordinator runs around them.
 ///
-/// Failure semantics: a link-level send/recv failure fails the batch in
-/// flight (drain invariant unchanged -- every live link is still
-/// drained) and takes the slot Down; subsequent batches plan over the
-/// live slots only, and [`ShardCluster::heal`] re-dials Down TCP slots
-/// on the [`ReconnectPolicy`] backoff.  An *application* failure (error
-/// frame, mis-shaped reply) fails the batch but leaves the slot Up: the
-/// link itself held.
+/// Failure semantics: a link-level send/recv failure takes the slot
+/// Down and the lost shard is **re-dispatched onto surviving slots**
+/// (bounded by [`RetryPolicy`] and the batch deadline), so a node death
+/// is masked from callers while at least one slot survives and
+/// deadlines permit.  The drain invariant is unchanged and holds per
+/// attempt: every link sent a frame is drained before the batch
+/// resolves.  Subsequent batches plan over the live slots only, and
+/// [`ShardCluster::heal`] re-dials Down TCP slots on the
+/// [`ReconnectPolicy`] backoff (promoting to a standby address past
+/// [`ReconnectPolicy::promote_after`]).  An *application* failure
+/// (error frame, mis-shaped reply) fails the batch, leaves the slot Up
+/// (the link itself held), and is never retried -- recomputing a
+/// deterministic failure elsewhere buys nothing.
 pub struct ShardCluster {
     slots: Vec<NodeSlot>,
     workers: Vec<JoinHandle<()>>,
     enc: EncoderConfig,
     reconnect: ReconnectPolicy,
+    retry: RetryPolicy,
+    /// where the next [`ShardCluster::heal`] pass starts scanning: the
+    /// slot after the one that spent the last budget unit, so re-dial
+    /// attempts rotate across Down slots instead of starving the
+    /// highest-indexed ones
+    heal_cursor: usize,
 }
 
 impl ShardCluster {
@@ -505,6 +693,8 @@ impl ShardCluster {
             workers,
             enc,
             reconnect: ReconnectPolicy::default(),
+            retry: RetryPolicy::default(),
+            heal_cursor: 0,
         }
     }
 
@@ -530,16 +720,37 @@ impl ShardCluster {
         enc: EncoderConfig,
         io_timeout: Option<Duration>,
     ) -> Result<ShardCluster> {
-        ensure!(!addrs.is_empty(), "cluster needs at least one node address");
-        let mut slots = Vec::with_capacity(addrs.len());
-        for (i, a) in addrs.iter().enumerate() {
-            let resolved = resolve(a).with_context(|| format!("node {i}"))?;
-            let link = TcpLink::dial(&resolved, io_timeout, io_timeout)
+        let specs = addrs
+            .iter()
+            .enumerate()
+            .map(|(i, a)| {
+                Ok(NodeSpec {
+                    primary: resolve(a).with_context(|| format!("node {i}"))?,
+                    standbys: Vec::new(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Self::connect_specs(&specs, enc, io_timeout)
+    }
+
+    /// [`ShardCluster::connect_timeout`] over full [`NodeSpec`]s: each
+    /// slot dials its primary addresses now and remembers its standbys
+    /// for [`ShardCluster::heal`]'s promotion path.
+    pub fn connect_specs(
+        specs: &[NodeSpec],
+        enc: EncoderConfig,
+        io_timeout: Option<Duration>,
+    ) -> Result<ShardCluster> {
+        ensure!(!specs.is_empty(), "cluster needs at least one node address");
+        let mut slots = Vec::with_capacity(specs.len());
+        for (i, spec) in specs.iter().enumerate() {
+            let link = TcpLink::dial(&spec.primary, io_timeout, io_timeout)
                 .with_context(|| format!("node {i}"))?;
             slots.push(NodeSlot::up(
                 Box::new(link),
                 SlotOrigin::Tcp {
-                    addrs: resolved,
+                    addrs: spec.primary.clone(),
+                    standbys: spec.standbys.clone(),
                     io_timeout,
                 },
             ));
@@ -549,6 +760,8 @@ impl ShardCluster {
             workers: Vec::new(),
             enc,
             reconnect: ReconnectPolicy::default(),
+            retry: RetryPolicy::default(),
+            heal_cursor: 0,
         })
     }
 
@@ -568,6 +781,8 @@ impl ShardCluster {
             workers: Vec::new(),
             enc,
             reconnect: ReconnectPolicy::default(),
+            retry: RetryPolicy::default(),
+            heal_cursor: 0,
         }
     }
 
@@ -575,6 +790,19 @@ impl ShardCluster {
     /// the default suits serving).
     pub fn set_reconnect_policy(&mut self, policy: ReconnectPolicy) {
         self.reconnect = policy;
+    }
+
+    /// Override the shard-retry policy ([`RetryPolicy::disabled`]
+    /// restores fail-the-batch semantics; the default suits serving).
+    pub fn set_retry_policy(&mut self, policy: RetryPolicy) {
+        self.retry = policy;
+    }
+
+    /// True when any slot is Down: the router plans degraded batches
+    /// with retry headroom (see
+    /// [`super::router::Router::shards_for_resilient`]).
+    pub fn is_degraded(&self) -> bool {
+        self.slots.iter().any(|s| !s.state.is_up())
     }
 
     /// Total slots, live or not.
@@ -602,6 +830,7 @@ impl ShardCluster {
                 s.state.is_up(),
                 s.reconnects,
                 s.consecutive_failures() as u64,
+                s.promotions,
             );
         }
     }
@@ -626,7 +855,14 @@ impl ShardCluster {
         slot.next_attempt = Instant::now() + backoff_delay(failures, &self.reconnect);
         if let Some(m) = metrics {
             let label = slot.label();
-            m.set_node_health(node, &label, false, slot.reconnects, failures as u64);
+            m.set_node_health(
+                node,
+                &label,
+                false,
+                slot.reconnects,
+                failures as u64,
+                slot.promotions,
+            );
         }
     }
 
@@ -635,19 +871,33 @@ impl ShardCluster {
     /// [`ReconnectPolicy::attempts_per_heal`] attempts total, each dial
     /// bounded by [`ReconnectPolicy::connect_timeout`] -- reconnect
     /// work amortizes across batches and never stalls serving on a
-    /// still-dead peer.  Static slots have nothing to re-dial and stay
-    /// Down.  Returns the live-slot count.
+    /// still-dead peer.  The scan starts at a **persisted cursor** (the
+    /// slot after the one that spent the last budget unit), so with
+    /// more Down slots than budget the attempts rotate round-robin
+    /// instead of starving the highest-indexed slots.  A slot Down past
+    /// [`ReconnectPolicy::promote_after`] with standby addresses dials
+    /// the standby first and **promotes** it into the slot on success
+    /// (the old primary becomes the standby, so a later death falls
+    /// back the other way); the primary is still tried in the same
+    /// attempt when the standby is unreachable.  Static slots have
+    /// nothing to re-dial and stay Down.  Returns the live-slot count.
     ///
     /// Called automatically at the top of [`ShardCluster::infer_on`];
     /// callers that need the live count *before* planning fan-out (the
     /// server does) call it directly -- attempts are gated on the
     /// backoff clock, so back-to-back passes are near-free.
     pub fn heal(&mut self, metrics: Option<&Metrics>) -> usize {
+        let len = self.slots.len();
+        if len == 0 {
+            return 0;
+        }
         let mut budget = self.reconnect.attempts_per_heal;
-        for i in 0..self.slots.len() {
+        let start = self.heal_cursor % len;
+        for off in 0..len {
             if budget == 0 {
                 break;
             }
+            let i = (start + off) % len;
             let due = {
                 let s = &self.slots[i];
                 !s.state.is_up()
@@ -658,26 +908,71 @@ impl ShardCluster {
                 continue;
             }
             budget -= 1;
-            let dialed = {
+            self.heal_cursor = (i + 1) % len;
+            let (primary, standbys, io_timeout) = {
                 let SlotOrigin::Tcp {
                     ref addrs,
+                    ref standbys,
                     io_timeout,
                 } = self.slots[i].origin
                 else {
                     unreachable!("non-TCP slots are never due for re-dial");
                 };
-                TcpLink::dial(addrs, Some(self.reconnect.connect_timeout), io_timeout)
+                (addrs.clone(), standbys.clone(), io_timeout)
+            };
+            let try_promote = !standbys.is_empty()
+                && matches!(
+                    self.slots[i].state,
+                    SlotState::Down { since, .. }
+                        if since.elapsed() >= self.reconnect.promote_after
+                );
+            let connect = Some(self.reconnect.connect_timeout);
+            let mut promoted = false;
+            let dialed = if try_promote {
+                match TcpLink::dial(&standbys, connect, io_timeout) {
+                    Ok(link) => {
+                        promoted = true;
+                        Ok(link)
+                    }
+                    // unreachable standby: the primary still gets its
+                    // shot this attempt (a restart on the original
+                    // address wins over a dead standby)
+                    Err(_) => TcpLink::dial(&primary, connect, io_timeout),
+                }
+            } else {
+                TcpLink::dial(&primary, connect, io_timeout)
             };
             match dialed {
                 Ok(link) => {
                     let slot = &mut self.slots[i];
+                    if promoted {
+                        // the standby becomes the slot's primary and
+                        // the old primary its standby
+                        if let SlotOrigin::Tcp {
+                            addrs, standbys, ..
+                        } = &mut slot.origin
+                        {
+                            std::mem::swap(addrs, standbys);
+                        }
+                        slot.promotions += 1;
+                        if let Some(m) = metrics {
+                            m.record_standby_promotion();
+                        }
+                    }
                     slot.link = Some(Box::new(link));
                     slot.state = SlotState::Up;
                     slot.reconnects += 1;
                     slot.next_attempt = Instant::now();
                     if let Some(m) = metrics {
                         let label = slot.label();
-                        m.set_node_health(i, &label, true, slot.reconnects, 0);
+                        m.set_node_health(
+                            i,
+                            &label,
+                            true,
+                            slot.reconnects,
+                            0,
+                            slot.promotions,
+                        );
                     }
                 }
                 Err(_) => {
@@ -700,6 +995,7 @@ impl ShardCluster {
                             false,
                             slot.reconnects,
                             failures as u64,
+                            slot.promotions,
                         );
                     }
                 }
@@ -721,19 +1017,49 @@ impl ShardCluster {
     /// **live** slot count): the serving path picks it per batch via
     /// [`super::router::Router::shards_for`], so tiny batches stay on
     /// one node instead of paying per-shard framing for nothing.
-    ///
-    /// Down slots are routed around, not fatal: the plan covers live
-    /// slots only, and the call errors only when no slot is live at
-    /// all.  Failure handling: the cluster is long-lived, so every node
-    /// that was sent a shard is drained even after an error -- a reply
-    /// left queued on a link would be collected by the *next* batch and
-    /// silently deliver stale results one batch off, forever.  A
-    /// link-level failure additionally takes that slot Down (see
-    /// [`ShardCluster::heal`]).
+    /// Equivalent to [`ShardCluster::infer_deadline`] with no deadline.
     pub fn infer_on(
         &mut self,
         fan_out: usize,
         input: &Payload,
+        metrics: Option<&Metrics>,
+    ) -> Result<Tensor> {
+        self.infer_deadline(fan_out, input, None, metrics)
+    }
+
+    /// The fault-masking batch run: split by rows over the live slots,
+    /// ship every shard before collecting any reply, and **re-dispatch
+    /// shards lost to link-level failures onto the survivors** in
+    /// further rounds, bounded by [`RetryPolicy::max_attempts`] and by
+    /// `deadline` (the batch's earliest request deadline -- an expired
+    /// batch is never retried, and an already-expired one never ships a
+    /// frame at all).  A node death mid-batch therefore *delays* the
+    /// batch instead of erroring it, for as long as at least one slot
+    /// survives and deadlines permit.
+    ///
+    /// Per-shard recvs are bounded by `deadline` and by
+    /// [`RetryPolicy::per_shard_timeout`] (via
+    /// [`NodeLink::recv_deadline`]): a hung-but-alive straggler node is
+    /// reclassified as a retryable link failure, not a batch-wide
+    /// stall.
+    ///
+    /// The drain invariant holds **per attempt**: the cluster is
+    /// long-lived, so every link sent a frame in a round is drained
+    /// before the round resolves -- a reply left queued on a link would
+    /// be collected by the *next* batch and silently deliver stale
+    /// results one batch off, forever.  A link-level failure takes the
+    /// slot Down (see [`ShardCluster::heal`]); an application failure
+    /// (error frame, mis-shaped reply) is terminal for the batch and is
+    /// never re-dispatched -- the compute is deterministic, so a retry
+    /// would only recompute the same failure elsewhere.
+    ///
+    /// On failure the error names **every** failed shard with its node
+    /// index and cause, not just the first.
+    pub fn infer_deadline(
+        &mut self,
+        fan_out: usize,
+        input: &Payload,
+        deadline: Option<Instant>,
         metrics: Option<&Metrics>,
     ) -> Result<Tensor> {
         let shape = input.shape();
@@ -742,107 +1068,231 @@ impl ShardCluster {
             "cluster input needs a batch axis, got {shape:?}"
         );
         self.heal(metrics);
-        let live: Vec<usize> = self
-            .slots
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| s.state.is_up())
-            .map(|(i, _)| i)
-            .collect();
+        let live: Vec<usize> = self.live_ids();
         ensure!(
             !live.is_empty(),
             "no live node slots ({} of {} down)",
             self.slots.len(),
             self.slots.len()
         );
+        // an already-expired batch is refused before a single frame
+        // ships: its recv deadlines are all in the past, so dispatching
+        // would poison every healthy link for nothing
+        if let Some(d) = deadline {
+            ensure!(
+                Instant::now() < d,
+                "batch deadline expired before dispatch ({} rows never shipped)",
+                shape[0]
+            );
+        }
         let plan = shard_ranges(shape[0], fan_out.clamp(1, live.len()));
         ensure!(!plan.is_empty(), "empty batch (0 rows)");
-        let mut failure: Option<anyhow::Error> = None;
-        let mut sent = vec![false; plan.len()];
-        for (shard, &(lo, hi)) in plan.iter().enumerate() {
-            let node = live[shard];
-            // slicing/encoding failures are the batch's problem, not the
-            // link's: they must not take the slot down
-            let framed = slice_payload(input, lo, hi).and_then(|part| {
-                let bytes = wire::payload_to_bytes(&part)?;
-                Ok((bytes, part.dense_bits() / 8))
-            });
-            let (bytes, dense_bytes) = match framed {
-                Ok(f) => f,
-                Err(e) => {
-                    failure.get_or_insert(e);
+
+        struct ShardRun {
+            lo: usize,
+            hi: usize,
+            attempts: usize,
+            result: Option<Tensor>,
+            /// per-attempt failure trail: (node, cause), oldest first
+            failures: Vec<(usize, anyhow::Error)>,
+            /// an application failure: no retry can help
+            terminal: bool,
+        }
+        let mut shards: Vec<ShardRun> = plan
+            .iter()
+            .map(|&(lo, hi)| ShardRun {
+                lo,
+                hi,
+                attempts: 0,
+                result: None,
+                failures: Vec::new(),
+                terminal: false,
+            })
+            .collect();
+        let max_attempts = self.retry.max_attempts.max(1);
+
+        let mut round = 0usize;
+        loop {
+            let live = self.live_ids();
+            let pending: Vec<usize> = shards
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| {
+                    s.result.is_none() && !s.terminal && s.attempts < max_attempts
+                })
+                .map(|(i, _)| i)
+                .collect();
+            if pending.is_empty() || live.is_empty() {
+                break;
+            }
+            // every round past the first is a retry: an expired batch
+            // is never retried (its callers already count as failed)
+            if round > 0 && deadline.is_some_and(|d| Instant::now() >= d) {
+                break;
+            }
+
+            // round 0 assigns shard i to the i-th live slot (the plan
+            // geometry the router chose); retry rounds spread the lost
+            // shards round-robin over whoever is still live
+            let mut sent: Vec<(usize, usize)> = Vec::new(); // (shard, node)
+            for (j, &si) in pending.iter().enumerate() {
+                let node = live[j % live.len()];
+                let (lo, hi) = (shards[si].lo, shards[si].hi);
+                // slicing/encoding failures are the batch's problem,
+                // not the link's: terminal, and no slot changes state
+                let framed = slice_payload(input, lo, hi).and_then(|part| {
+                    let bytes = wire::payload_to_bytes(&part)?;
+                    Ok((bytes, part.dense_bits() / 8))
+                });
+                let (bytes, dense_bytes) = match framed {
+                    Ok(f) => f,
+                    Err(e) => {
+                        shards[si].terminal = true;
+                        shards[si].failures.push((node, e));
+                        continue;
+                    }
+                };
+                let wire_bytes = bytes.len() as u64;
+                shards[si].attempts += 1;
+                let Some(link) = self.slots[node].link.as_mut() else {
+                    // the slot was lost earlier in this same round (a
+                    // send for another shard failed): a link-level
+                    // loss, retryable next round
+                    shards[si]
+                        .failures
+                        .push((node, anyhow!("node {node} went down mid-round")));
                     continue;
-                }
-            };
-            let wire_bytes = bytes.len() as u64;
-            let send = self.slots[node]
-                .link
-                .as_mut()
-                .expect("live slot holds a link")
-                .send(bytes);
-            match send {
-                Ok(()) => {
-                    sent[shard] = true;
-                    // recorded only after the link accepted the frame, so
-                    // a dead node cannot inflate its transport stats
-                    if let Some(m) = metrics {
-                        m.record_node_tx(node, wire_bytes, dense_bytes);
+                };
+                match link.send(bytes) {
+                    Ok(()) => {
+                        sent.push((si, node));
+                        // recorded only after the link accepted the
+                        // frame, so a dead node cannot inflate its
+                        // transport stats
+                        if let Some(m) = metrics {
+                            m.record_node_tx(node, wire_bytes, dense_bytes);
+                            if round > 0 {
+                                m.record_shard_retry(node);
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        self.mark_down(node, metrics);
+                        shards[si].failures.push((
+                            node,
+                            e.context(format!("sending shard to node {node}")),
+                        ));
                     }
                 }
-                Err(e) => {
-                    self.mark_down(node, metrics);
-                    failure
-                        .get_or_insert(e.context(format!("sending shard to node {node}")));
+            }
+
+            // drain: every link sent a frame this round gives back
+            // exactly one reply (or dies trying), even after earlier
+            // failures -- the invariant that keeps long-lived links
+            // batch-synchronized.  Per node, recvs run in send order.
+            for (si, node) in sent {
+                // the link can be gone already: a send to this node for
+                // a LATER shard in the same round failed and downed it
+                let Some(link) = self.slots[node].link.as_mut() else {
+                    shards[si].failures.push((
+                        node,
+                        anyhow!("node {node} link lost before its reply"),
+                    ));
+                    continue;
+                };
+                let recv_by = match (deadline, self.retry.per_shard_timeout) {
+                    (Some(d), Some(t)) => Some(d.min(Instant::now() + t)),
+                    (Some(d), None) => Some(d),
+                    (None, Some(t)) => Some(Instant::now() + t),
+                    (None, None) => None,
+                };
+                let frame = match link.recv_deadline(recv_by) {
+                    Ok(f) => f,
+                    Err(e) => {
+                        // straggler conversion lands here too: a recv
+                        // deadline miss is a link failure, and the
+                        // shard is retryable on a survivor
+                        self.mark_down(node, metrics);
+                        shards[si].failures.push((
+                            node,
+                            e.context(format!("collecting node {node}")),
+                        ));
+                        continue;
+                    }
+                };
+                let rows = shards[si].hi - shards[si].lo;
+                // a decode error or row mismatch is an application
+                // failure on a link that held: the slot stays in the
+                // rotation, the shard is not retried
+                let decoded = (|| -> Result<Tensor> {
+                    let reply = wire::payload_from_bytes(&frame)
+                        .with_context(|| format!("node {node} reply"))?;
+                    ensure!(
+                        reply.shape().first() == Some(&rows),
+                        "node {node} returned shape {:?} for a {rows}-row shard",
+                        reply.shape()
+                    );
+                    if let Some(m) = metrics {
+                        m.record_node_rx(
+                            node,
+                            frame.len() as u64,
+                            reply.dense_bits() / 8,
+                        );
+                    }
+                    Ok(reply.into_dense(&self.enc))
+                })();
+                match decoded {
+                    Ok(t) => shards[si].result = Some(t),
+                    Err(e) => {
+                        shards[si].terminal = true;
+                        shards[si].failures.push((node, e));
+                    }
                 }
             }
+            round += 1;
         }
-        let mut parts = Vec::with_capacity(plan.len());
-        for (shard, &(lo, hi)) in plan.iter().enumerate() {
-            if !sent[shard] {
-                continue; // nothing in flight on this link
-            }
-            let node = live[shard];
-            // a link-level recv failure downs the slot; a decode error or
-            // row mismatch below is an application failure on a link that
-            // held, so the slot stays in the rotation
-            let frame = match self.slots[node]
-                .link
-                .as_mut()
-                .expect("live slot holds a link")
-                .recv()
-            {
-                Ok(f) => f,
-                Err(e) => {
-                    self.mark_down(node, metrics);
-                    failure.get_or_insert(e.context(format!("collecting node {node}")));
+
+        let failed = shards.iter().filter(|s| s.result.is_none()).count();
+        if failed > 0 {
+            let mut causes = Vec::new();
+            for (i, s) in shards.iter().enumerate() {
+                if s.result.is_some() {
                     continue;
                 }
-            };
-            let rows = hi - lo;
-            let decoded = (|| -> Result<Tensor> {
-                let reply = wire::payload_from_bytes(&frame)
-                    .with_context(|| format!("node {node} reply"))?;
-                ensure!(
-                    reply.shape().first() == Some(&rows),
-                    "node {node} returned shape {:?} for a {rows}-row shard",
-                    reply.shape()
-                );
-                if let Some(m) = metrics {
-                    m.record_node_rx(node, frame.len() as u64, reply.dense_bits() / 8);
-                }
-                Ok(reply.into_dense(&self.enc))
-            })();
-            match decoded {
-                Ok(t) => parts.push(t),
-                Err(e) => {
-                    failure.get_or_insert(e);
+                for (node, e) in &s.failures {
+                    causes.push(format!(
+                        "shard {i} (rows {}..{}) node {node}: {e:#}",
+                        s.lo, s.hi
+                    ));
                 }
             }
+            let expired = deadline.is_some_and(|d| Instant::now() >= d);
+            let note = if expired {
+                " (batch deadline expired; retries refused)"
+            } else {
+                ""
+            };
+            return Err(anyhow!(
+                "{failed} of {} shards failed{note}: [{}]",
+                shards.len(),
+                causes.join("; ")
+            ));
         }
-        if let Some(e) = failure {
-            return Err(e);
-        }
+        let parts: Vec<Tensor> = shards
+            .into_iter()
+            .map(|s| s.result.expect("unfailed shard holds its result"))
+            .collect();
         Tensor::concat_batch(&parts)
+    }
+
+    /// Indices of the slots currently Up, in slot order.
+    fn live_ids(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.state.is_up())
+            .map(|(i, _)| i)
+            .collect()
     }
 
     /// Hang up every link and join the workers.
@@ -955,6 +1405,7 @@ mod tests {
             cap: Duration::from_secs(1),
             connect_timeout: Duration::from_millis(250),
             attempts_per_heal: 2,
+            promote_after: Duration::from_secs(10),
         };
         // failure counts 0 and 1 both wait one base step
         assert_eq!(backoff_delay(0, &p), Duration::from_millis(100));
@@ -1089,22 +1540,31 @@ mod tests {
 
     #[test]
     fn worker_errors_surface_without_hanging() {
+        use std::sync::atomic::Ordering;
         let failing: ShardFn =
             Arc::new(|_t| Err(anyhow!("synthetic stage failure")));
         let t = Tensor::random_sparse(vec![4, 3, 4, 25], 0.5, 34);
         for transport in TRANSPORTS {
+            let m = Metrics::default();
             let (mut cluster, agents) =
                 dense_cluster_on(transport, 2, failing.clone(), enc());
             let err = cluster
-                .infer(&Payload::Dense(t.clone()), None)
+                .infer(&Payload::Dense(t.clone()), Some(&m))
                 .unwrap_err();
             assert!(
                 format!("{err:#}").contains("synthetic stage failure"),
                 "{transport}: {err:#}"
             );
             // an error *frame* is an application failure on a healthy
-            // link: the slots must all still be in the rotation
+            // link: the slots must all still be in the rotation, and --
+            // even with retry on by default -- the deterministic
+            // failure must never have been re-dispatched
             assert_eq!(cluster.live_nodes(), 2, "{transport}");
+            assert_eq!(
+                m.shard_retries.load(Ordering::Relaxed),
+                0,
+                "{transport}: an application error frame was retried"
+            );
             teardown(cluster, agents);
         }
     }
@@ -1222,11 +1682,15 @@ mod tests {
                 dense_cluster_on(transport, 3, killer, enc());
             // reconnects stay out of this test: a dead TCP agent's port
             // could be re-dialed, which is the *heal* path -- here we
-            // prove routing-around alone
+            // prove routing-around alone.  Retry is off too: the
+            // sentinel shard would cascade-kill every worker it was
+            // re-dispatched to, and this test is about the Down slot
+            // leaving the rotation, not about masking.
             cluster.set_reconnect_policy(ReconnectPolicy {
                 base: Duration::from_secs(3600),
                 ..ReconnectPolicy::default()
             });
+            cluster.set_retry_policy(RetryPolicy::disabled());
             let m = Metrics::default();
             // 6 rows over 3 nodes: rows 2..4 are node 1's shard
             let mut t1 = Tensor::random_sparse(vec![6, 3, 4, 25], 0.5, 61);
@@ -1275,6 +1739,9 @@ mod tests {
         // would be collected by the next batch and deliver wrong rows
         let (mut cluster, mut agents) =
             dense_cluster_on("tcp", 2, synth(4), enc());
+        // retry off: this test proves the drain invariant in isolation
+        // (with masking on, the batch would simply succeed)
+        cluster.set_retry_policy(RetryPolicy::disabled());
         agents.remove(1).shutdown();
         let t1 = Tensor::random_sparse(vec![4, 3, 4, 25], 0.5, 45);
         let err = cluster
@@ -1291,5 +1758,234 @@ mod tests {
             .unwrap();
         assert_eq!(out, synth(4)(t2).unwrap());
         teardown(cluster, agents);
+    }
+
+    #[test]
+    fn retry_masks_a_dead_node_within_one_batch() {
+        // kill node 1 of 3 with no warning, then run a batch: the lost
+        // shard re-dispatches onto a survivor and the caller sees the
+        // full bit-exact result instead of an error
+        use std::sync::atomic::Ordering;
+        let m = Metrics::default();
+        let (mut cluster, mut agents) =
+            dense_cluster_on("tcp", 3, synth(4), enc());
+        cluster.set_reconnect_policy(ReconnectPolicy {
+            base: Duration::from_secs(3600),
+            ..ReconnectPolicy::default()
+        });
+        agents.remove(1).shutdown();
+        let t = Tensor::random_sparse(vec![6, 3, 4, 25], 0.5, 72);
+        let out = cluster
+            .infer(&Payload::Dense(t.clone()), Some(&m))
+            .unwrap();
+        assert_eq!(out, synth(4)(t).unwrap());
+        assert_eq!(cluster.live_nodes(), 2);
+        assert!(m.shard_retries.load(Ordering::Relaxed) >= 1);
+        // the re-dispatch landed on a survivor, visible per slot
+        let nt = m.node_transport();
+        assert!(
+            nt[0].retries + nt[2].retries >= 1,
+            "no survivor recorded the retried shard: {nt:?}"
+        );
+        teardown(cluster, agents);
+    }
+
+    #[test]
+    fn two_dead_nodes_both_appear_in_the_error() {
+        // regression: the old get_or_insert error path silently dropped
+        // every failure after the first -- the aggregated error must
+        // name each failed shard's node and cause
+        let (mut cluster, mut agents) =
+            dense_cluster_on("tcp", 3, synth(4), enc());
+        cluster.set_retry_policy(RetryPolicy::disabled());
+        cluster.set_reconnect_policy(ReconnectPolicy {
+            base: Duration::from_secs(3600),
+            ..ReconnectPolicy::default()
+        });
+        agents.remove(2).shutdown();
+        agents.remove(1).shutdown();
+        let t1 = Tensor::random_sparse(vec![6, 3, 4, 25], 0.5, 74);
+        let err = cluster.infer(&Payload::Dense(t1), None).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("node 1") && msg.contains("node 2"),
+            "one failure hid the other: {msg}"
+        );
+        assert_eq!(cluster.live_nodes(), 1);
+        // node 0 drained: the next batch on the survivor is correct
+        let t2 = Tensor::random_sparse(vec![4, 3, 4, 25], 0.5, 75);
+        let out = cluster
+            .infer_on(1, &Payload::Dense(t2.clone()), None)
+            .unwrap();
+        assert_eq!(out, synth(4)(t2).unwrap());
+        teardown(cluster, agents);
+    }
+
+    #[test]
+    fn expired_deadline_is_refused_before_dispatch() {
+        // an already-expired batch never ships a frame and never
+        // retries: its recv deadlines are all in the past, so
+        // dispatching would poison every healthy link for nothing
+        use std::sync::atomic::Ordering;
+        for transport in TRANSPORTS {
+            let m = Metrics::default();
+            let (mut cluster, agents) =
+                dense_cluster_on(transport, 2, synth(4), enc());
+            let t = Tensor::random_sparse(vec![4, 3, 4, 25], 0.5, 71);
+            let past = Instant::now() - Duration::from_millis(1);
+            let err = cluster
+                .infer_deadline(2, &Payload::Dense(t.clone()), Some(past), Some(&m))
+                .unwrap_err();
+            assert!(
+                format!("{err:#}").contains("deadline"),
+                "{transport}: {err:#}"
+            );
+            assert_eq!(
+                m.shard_retries.load(Ordering::Relaxed),
+                0,
+                "{transport}: an expired batch dispatched a retry"
+            );
+            assert!(
+                m.node_transport().is_empty(),
+                "{transport}: an expired batch shipped a frame"
+            );
+            assert_eq!(cluster.live_nodes(), 2, "{transport}: links poisoned");
+            // the cluster is fully usable for the next, unexpired batch
+            let out = cluster
+                .infer(&Payload::Dense(t.clone()), Some(&m))
+                .unwrap();
+            assert_eq!(out, synth(4)(t).unwrap(), "{transport}");
+            teardown(cluster, agents);
+        }
+    }
+
+    #[test]
+    fn straggler_conversion_retries_a_hung_node_on_a_survivor() {
+        // node 1's worker hangs far past the per-shard budget on its
+        // first shard: the recv deadline reclassifies the straggler as
+        // a link failure, the shard retries on node 0, and the caller
+        // still gets the bit-exact batch -- no batch-wide stall
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        const SLOW: f32 = 7.0e8;
+        let reference = synth(3);
+        for transport in TRANSPORTS {
+            let m = Metrics::default();
+            let inner = synth(3);
+            let slept = Arc::new(AtomicUsize::new(0));
+            let gate = slept.clone();
+            // only the FIRST worker to see the sentinel hangs; the
+            // retried dispatch computes promptly
+            let sleepy: ShardFn = Arc::new(move |t: Tensor| {
+                if t.data.contains(&SLOW)
+                    && gate.fetch_add(1, Ordering::SeqCst) == 0
+                {
+                    std::thread::sleep(Duration::from_millis(800));
+                }
+                inner(t)
+            });
+            let (mut cluster, agents) =
+                dense_cluster_on(transport, 2, sleepy, enc());
+            cluster.set_reconnect_policy(ReconnectPolicy {
+                base: Duration::from_secs(3600),
+                ..ReconnectPolicy::default()
+            });
+            cluster.set_retry_policy(RetryPolicy {
+                max_attempts: 3,
+                per_shard_timeout: Some(Duration::from_millis(150)),
+            });
+            // 4 rows over 2 nodes: rows 2..4 are node 1's shard
+            let mut t = Tensor::random_sparse(vec![4, 3, 4, 25], 0.5, 73);
+            let row: usize = t.shape[1..].iter().product();
+            t.data[2 * row] = SLOW;
+            let expect = reference(t.clone()).unwrap();
+            let out = cluster.infer(&Payload::Dense(t), Some(&m)).unwrap();
+            assert_eq!(out, expect, "{transport}");
+            // the hung node was converted to a Down slot, not waited on
+            assert_eq!(cluster.live_nodes(), 1, "{transport}");
+            assert_eq!(
+                m.shard_retries.load(Ordering::Relaxed),
+                1,
+                "{transport}"
+            );
+            teardown(cluster, agents);
+        }
+    }
+
+    #[test]
+    fn heal_budget_rotates_across_down_slots() {
+        // 3 Down TCP slots all pointing at a closed port, heal budget
+        // 1, zero backoff (every slot is always due again).  Three heal
+        // passes must spread three attempts one per slot -- pre-fix the
+        // scan always started at slot 0 and slots 1/2 starved forever.
+        let closed = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            let a = l.local_addr().unwrap();
+            drop(l);
+            a
+        };
+        let down_slot = || NodeSlot {
+            link: None,
+            origin: SlotOrigin::Tcp {
+                addrs: vec![closed],
+                standbys: Vec::new(),
+                io_timeout: None,
+            },
+            state: SlotState::Down {
+                since: Instant::now(),
+                consecutive_failures: 1,
+            },
+            next_attempt: Instant::now(),
+            reconnects: 0,
+            promotions: 0,
+        };
+        let mut cluster = ShardCluster {
+            slots: vec![down_slot(), down_slot(), down_slot()],
+            workers: Vec::new(),
+            enc: enc(),
+            reconnect: ReconnectPolicy {
+                base: Duration::ZERO,
+                cap: Duration::ZERO,
+                connect_timeout: Duration::from_millis(100),
+                attempts_per_heal: 1,
+                promote_after: Duration::from_secs(3600),
+            },
+            retry: RetryPolicy::default(),
+            heal_cursor: 0,
+        };
+        for pass in 0..3 {
+            assert_eq!(cluster.heal(None), 0, "pass {pass}: nothing revives");
+        }
+        let failures: Vec<u32> = cluster
+            .slots
+            .iter()
+            .map(|s| s.consecutive_failures())
+            .collect();
+        assert_eq!(
+            failures,
+            vec![2, 2, 2],
+            "budget 1 x 3 passes must spend one attempt per slot \
+             (pre-fix slot 0 ate all three)"
+        );
+    }
+
+    #[test]
+    fn node_spec_parses_primary_and_standbys() {
+        let spec =
+            NodeSpec::parse("127.0.0.1:7000|127.0.0.1:7001|127.0.0.1:7002")
+                .unwrap();
+        assert_eq!(spec.primary, vec!["127.0.0.1:7000".parse().unwrap()]);
+        assert_eq!(
+            spec.standbys,
+            vec![
+                "127.0.0.1:7001".parse().unwrap(),
+                "127.0.0.1:7002".parse().unwrap()
+            ]
+        );
+        let bare = NodeSpec::parse(" 127.0.0.1:7000 ").unwrap();
+        assert_eq!(bare.primary.len(), 1);
+        assert!(bare.standbys.is_empty());
+        assert!(NodeSpec::parse("").is_err());
+        assert!(NodeSpec::parse("127.0.0.1:7000|").is_err());
+        assert!(NodeSpec::parse("|127.0.0.1:7000").is_err());
     }
 }

@@ -5,7 +5,8 @@
 //! rfc-hypgcn infer      [--artifacts DIR] [--variant pruned|dense|ck|skip] [--batches N]
 //! rfc-hypgcn serve      [--artifacts DIR] [--requests N] [--rate FPS] [--batch-wait MS]
 //!                       [--admission-capacity N] [--default-deadline-ms MS]
-//!                       [--nodes HOST:PORT,HOST:PORT,...]
+//!                       [--nodes HOST:PORT[|STANDBY:PORT],...]
+//!                       [--retry-attempts N] [--promote-after-ms MS]
 //! rfc-hypgcn serve-node [--artifacts DIR] [--listen HOST:PORT]
 //! rfc-hypgcn simulate   [--table2] [--table4] [--fig11] [--all]
 //! rfc-hypgcn report     [--artifacts DIR]
@@ -16,7 +17,10 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use rfc_hypgcn::coordinator::{AdmissionPolicy, BatchPolicy, Server};
+use rfc_hypgcn::coordinator::{
+    AdmissionPolicy, BatchPolicy, NodeSpec, ReconnectPolicy, RetryPolicy,
+    Server, ShardCluster,
+};
 use rfc_hypgcn::data::{GenConfig, SkeletonGen};
 use rfc_hypgcn::meta::Manifest;
 use rfc_hypgcn::runtime::Engine;
@@ -97,7 +101,14 @@ USAGE:
   rfc-hypgcn serve      [--artifacts DIR] [--requests N] [--rate FPS] [--batch-wait MS]
                         [--admission-capacity N] [--default-deadline-ms MS]
                         (bounded front door: shed over N queued, deadline per request)
-                        [--nodes HOST:PORT,...]   (drive remote node agents over TCP)
+                        [--nodes HOST:PORT[|STANDBY:PORT],...]
+                        (drive remote node agents over TCP; a | suffix names
+                         a standby address promoted into the slot when the
+                         primary stays down past --promote-after-ms)
+                        [--retry-attempts N]    (dispatch attempts per shard,
+                         first try included; 1 disables fault-masking retry)
+                        [--promote-after-ms MS] (Down budget before a slot's
+                         standby is dialed; default 10000)
   rfc-hypgcn serve-node [--artifacts DIR] [--listen HOST:PORT]   (worker-node agent)
   rfc-hypgcn simulate   [--table2|--table4|--fig11|--all]
   rfc-hypgcn report     [--artifacts DIR]";
@@ -240,19 +251,47 @@ fn serve(args: &Args) -> Result<()> {
             None => "none".into(),
         },
     );
-    // --nodes addr,addr: the shard cluster spans real machines -- the
-    // coordinator connects TCP links to `serve-node` agents and needs
-    // no local engine at all (the nodes own the model)
+    // --nodes addr[|standby],addr: the shard cluster spans real
+    // machines -- the coordinator connects TCP links to `serve-node`
+    // agents and needs no local engine at all (the nodes own the
+    // model).  Retry and promotion policy come from the CLI so an
+    // operator can tune fault-masking without a rebuild.
     let server = if let Some(nodes) = args.get("nodes") {
-        let addrs: Vec<&str> = nodes.split(',').map(str::trim).collect();
-        println!("connecting to {} node agents: {addrs:?}", addrs.len());
-        Server::connect_sharded_admitted(
-            &addrs,
+        let specs = nodes
+            .split(',')
+            .map(NodeSpec::parse)
+            .collect::<Result<Vec<_>>>()?;
+        let with_standby = specs.iter().filter(|s| !s.standbys.is_empty()).count();
+        println!(
+            "connecting to {} node agents ({} with standby): {nodes}",
+            specs.len(),
+            with_standby,
+        );
+        let retry_attempts = args.usize("retry-attempts", 3)?.max(1);
+        let promote_after_ms = args.usize("promote-after-ms", 10_000)?;
+        let enc = rfc_hypgcn::rfc::EncoderConfig::default();
+        let mut cluster = ShardCluster::connect_specs(
+            &specs,
+            enc,
+            Some(rfc_hypgcn::coordinator::shard::DEFAULT_NODE_IO_TIMEOUT),
+        )?;
+        cluster.set_retry_policy(RetryPolicy {
+            max_attempts: retry_attempts,
+            per_shard_timeout: None,
+        });
+        cluster.set_reconnect_policy(ReconnectPolicy {
+            promote_after: std::time::Duration::from_millis(
+                promote_after_ms as u64,
+            ),
+            ..ReconnectPolicy::default()
+        });
+        Server::start_cluster_admitted(
             policy,
             admission,
-            rfc_hypgcn::rfc::EncoderConfig::default(),
+            enc,
+            cluster,
             manifest.num_classes,
-        )?
+        )
     } else {
         let engine = Engine::cpu()?;
         Server::start_planned_admitted(
@@ -298,15 +337,26 @@ fn serve(args: &Args) -> Result<()> {
     }
     println!("{}", server.metrics.report());
     // cluster mode: per-node link supervision state, so a degraded
-    // (Down or reconnected) node is visible from the coordinator's exit
-    // summary, not just the node's own logs
+    // (Down, reconnected, or standby-promoted) node is visible from the
+    // coordinator's exit summary, not just the node's own logs --
+    // including how many shards each slot served and how many of those
+    // were retries absorbed from a dead sibling
     if args.get("nodes").is_some() {
+        let transport = server.metrics.node_transport();
         for (i, h) in server.metrics.node_health().iter().enumerate() {
+            let (shards, retried_onto) = transport
+                .get(i)
+                .map(|t| (t.shards, t.retries))
+                .unwrap_or((0, 0));
             println!(
-                "node {i} [{}]: {} reconnects={} consecutive_failures={}",
+                "node {i} [{}]: {} shards={} retried_onto={} reconnects={} \
+                 promotions={} consecutive_failures={}",
                 h.label,
                 if h.up { "up" } else { "down" },
+                shards,
+                retried_onto,
                 h.reconnects,
+                h.promotions,
                 h.consecutive_failures,
             );
         }

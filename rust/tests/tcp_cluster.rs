@@ -15,8 +15,8 @@ use std::time::{Duration, Instant};
 
 use rfc_hypgcn::coordinator::{
     dense_entry, spawn_local_agents, AdmissionPolicy, BatchPolicy, Metrics,
-    NodeAgent, ReconnectPolicy, Response, Server, ShardCluster, ShardFn,
-    TcpLink,
+    NodeAgent, NodeSpec, ReconnectPolicy, Response, RetryPolicy, Server,
+    ShardCluster, ShardFn, TcpLink,
 };
 use rfc_hypgcn::model::NUM_JOINTS;
 use rfc_hypgcn::rfc::{wire, EncoderConfig, Payload};
@@ -266,9 +266,19 @@ fn tcp_peer_death_fails_the_batch_then_single_shard_batches_recover() {
         max_wait: Duration::from_millis(250),
         seq_len,
     };
+    // retry DISABLED: this test pins the fail-the-batch substrate the
+    // fault-masking path is built on (error responses, drain, route
+    // around) -- the masked behavior is proven separately in
+    // chaos_retry_kill_mid_batch_is_masked_from_callers
+    let mut cluster = ShardCluster::connect_timeout(
+        &addrs,
+        enc(),
+        Some(Duration::from_secs(5)),
+    )
+    .unwrap();
+    cluster.set_retry_policy(RetryPolicy::disabled());
     let server =
-        Server::connect_sharded(&addrs, batch_policy, enc(), CLASSES)
-            .unwrap();
+        Server::start_cluster(batch_policy, enc(), cluster, CLASSES);
     // kill node 1 while the server holds live links to both
     agents.remove(1).shutdown();
     // a full batch fans out over both nodes: it must fail with error
@@ -308,11 +318,12 @@ fn tcp_peer_death_fails_the_batch_then_single_shard_batches_recover() {
 
 #[test]
 fn chaos_kill_under_load_then_restart_heals_without_coordinator_restart() {
-    // the acceptance scenario: 3 TCP agents under sustained full
-    // batches.  Killing one costs exactly the in-flight batch; every
-    // later batch succeeds on the survivors; restarting the agent on
-    // the SAME address heals the cluster (its slot serves shards again)
-    // with no coordinator restart.
+    // 3 TCP agents under sustained full batches.  Killing one is masked
+    // by shard retry (the in-flight batch is re-dispatched onto the
+    // survivors, so its callers still get correct answers); every later
+    // batch succeeds on the survivors; restarting the agent on the SAME
+    // address heals the cluster (its slot serves shards again) with no
+    // coordinator restart.
     const CLASSES: usize = 4;
     let seq_len = 8;
     let model = synth_model(CLASSES);
@@ -330,11 +341,13 @@ fn chaos_kill_under_load_then_restart_heals_without_coordinator_restart() {
     )
     .unwrap();
     // a tight backoff so the heal lands within the polling budget below
+    // (no standbys here, so promote_after is inert however it is set)
     cluster.set_reconnect_policy(ReconnectPolicy {
         base: Duration::from_millis(10),
         cap: Duration::from_millis(100),
         connect_timeout: Duration::from_millis(250),
         attempts_per_heal: 3,
+        promote_after: Duration::from_secs(3600),
     });
     let server = Server::start_cluster(batch_policy, enc(), cluster, CLASSES);
 
@@ -346,14 +359,21 @@ fn chaos_kill_under_load_then_restart_heals_without_coordinator_restart() {
     let dead_addr = addrs[1];
     agents.remove(1).shutdown();
 
-    // the first post-kill batch is the in-flight loss: it fails whole
+    // the batch in flight across the kill is MASKED: the lost shard is
+    // re-dispatched onto the survivors, so every caller still gets its
+    // bit-exact answer
     let in_flight = submit_batch(&server, seq_len, 6, 9010);
+    assert_all_served(&in_flight, &model, seq_len, "kill-spanning batch");
     assert!(
-        in_flight.iter().all(|(_, r)| !r.is_ok()),
-        "the batch in flight across the kill fails with error responses"
+        server
+            .metrics
+            .shard_retries
+            .load(std::sync::atomic::Ordering::Relaxed)
+            > 0,
+        "masking must go through the retry path, not dumb luck"
     );
-    // ...and it is the ONLY loss: sustained batches keep succeeding on
-    // the 2 survivors, correct to the model
+    // ...and nothing else is lost either: sustained batches keep
+    // succeeding on the 2 survivors, correct to the model
     for round in 0..4u64 {
         let survived = submit_batch(&server, seq_len, 6, 9020 + round * 10);
         assert_all_served(
@@ -412,9 +432,9 @@ fn chaos_kill_under_load_then_restart_heals_without_coordinator_restart() {
 #[test]
 fn chaos_flapping_agent_heals_after_every_flap() {
     // kill/restart the same agent repeatedly at the cluster level: each
-    // flap costs one batch, routes around, heals, and the reconnect
-    // counter grows -- the drain invariant (correct values right after
-    // every failure) holds through all of it.
+    // flap is masked by retry on the survivor, routes around, heals,
+    // and the reconnect counter grows -- the drain invariant (correct
+    // values right after every failure) holds through all of it.
     const CLASSES: usize = 3;
     let model = synth_model(CLASSES);
     let (mut agents, addrs) = spawn_agents(2, model.clone(), enc());
@@ -429,6 +449,7 @@ fn chaos_flapping_agent_heals_after_every_flap() {
         cap: Duration::from_millis(100),
         connect_timeout: Duration::from_millis(250),
         attempts_per_heal: 4,
+        promote_after: Duration::from_secs(3600),
     });
     let m = Metrics::default();
     let mut agent1 = Some(agents.remove(1));
@@ -439,16 +460,21 @@ fn chaos_flapping_agent_heals_after_every_flap() {
             .infer(&Payload::Dense(t_ok.clone()), Some(&m))
             .unwrap();
         assert_eq!(out, model(t_ok).unwrap(), "cycle {cycle}: healthy");
-        // kill: exactly the in-flight batch fails...
+        // kill: the in-flight batch is retried on the survivor and
+        // masked -- its caller sees correct logits, not an error
         agent1.take().unwrap().shutdown();
         let t_kill = Tensor::random_sparse(vec![4, 3, 8, 25], 0.5, seed + 1);
-        assert!(
-            cluster.infer(&Payload::Dense(t_kill), Some(&m)).is_err(),
-            "cycle {cycle}: in-flight batch fails"
+        let out = cluster
+            .infer(&Payload::Dense(t_kill.clone()), Some(&m))
+            .unwrap();
+        assert_eq!(
+            out,
+            model(t_kill).unwrap(),
+            "cycle {cycle}: kill-spanning batch masked"
         );
         assert_eq!(cluster.live_nodes(), 1, "cycle {cycle}");
-        // ...and the next one is already correct on the survivor (the
-        // failed batch drained; nothing stale shifts into this one)
+        // ...and the next one is also correct on the survivor (the
+        // masked batch drained; nothing stale shifts into this one)
         let t_survive =
             Tensor::random_sparse(vec![4, 3, 8, 25], 0.5, seed + 2);
         let out = cluster
@@ -487,6 +513,10 @@ fn chaos_flapping_agent_heals_after_every_flap() {
     assert!(
         health[1].reconnects >= 3,
         "one reconnect per flap: {health:?}"
+    );
+    assert!(
+        m.shard_retries.load(std::sync::atomic::Ordering::Relaxed) >= 3,
+        "one masking retry per flap"
     );
     cluster.shutdown();
     agent1.unwrap().shutdown();
@@ -767,6 +797,293 @@ fn garbage_inner_frame_gets_an_error_reply_and_the_connection_survives() {
     let payload = wire::payload_from_bytes(&reply).unwrap();
     assert_eq!(payload.into_dense(&enc()), synth_model(3)(t).unwrap());
     drop(link);
+    for a in agents {
+        a.shutdown();
+    }
+}
+
+#[test]
+fn chaos_retry_kill_mid_batch_is_masked_from_callers() {
+    // the fault-masking acceptance scenario: 3 TCP agents under
+    // sustained full batches, one killed mid-stream.  The batch in
+    // flight across the kill is retried on the survivors -- every
+    // caller gets a bit-exact ok answer, `shard_retries` counts the
+    // re-dispatches, and the drain invariant holds through every
+    // later batch.  The killed slot stays Down the whole time (long
+    // reconnect backoff), so nothing below is a lucky heal.
+    const CLASSES: usize = 4;
+    let seq_len = 8;
+    let model = synth_model(CLASSES);
+    let (mut agents, addrs) = spawn_agents(3, model.clone(), enc());
+    let batch_policy = BatchPolicy {
+        batch_size: 6,
+        max_wait: Duration::from_millis(250),
+        seq_len,
+    };
+    let mut cluster = ShardCluster::connect_timeout(
+        &addrs,
+        enc(),
+        Some(Duration::from_secs(5)),
+    )
+    .unwrap();
+    cluster.set_reconnect_policy(ReconnectPolicy {
+        base: Duration::from_secs(3600),
+        cap: Duration::from_secs(3600),
+        connect_timeout: Duration::from_millis(250),
+        attempts_per_heal: 2,
+        promote_after: Duration::from_secs(3600),
+    });
+    let server = Server::start_cluster(batch_policy, enc(), cluster, CLASSES);
+
+    // sustained load before the kill
+    for round in 0..2u64 {
+        let served = submit_batch(&server, seq_len, 6, 9600 + round * 10);
+        assert_all_served(
+            &served,
+            &model,
+            seq_len,
+            &format!("pre-kill round {round}"),
+        );
+    }
+    agents.remove(1).shutdown();
+    // the kill-spanning batch: masked, not failed
+    let masked = submit_batch(&server, seq_len, 6, 9650);
+    assert_all_served(&masked, &model, seq_len, "kill-spanning batch");
+    use std::sync::atomic::Ordering;
+    assert!(
+        server.metrics.shard_retries.load(Ordering::Relaxed) > 0,
+        "masking must go through the retry path"
+    );
+    assert!(
+        !server.metrics.node_health()[1].up,
+        "the killed slot is Down: {:?}",
+        server.metrics.node_health()
+    );
+    // sustained load after the kill: the drain invariant held across
+    // every retry attempt, so nothing stale shifts into these batches
+    for round in 0..3u64 {
+        let served = submit_batch(&server, seq_len, 6, 9700 + round * 10);
+        assert_all_served(
+            &served,
+            &model,
+            seq_len,
+            &format!("post-kill round {round}"),
+        );
+    }
+    // the survivors absorbed the lost shard: per-slot attempt accounting
+    let nt = server.metrics.node_transport();
+    assert!(
+        nt[0].retries + nt[2].retries >= 1,
+        "a survivor carried the re-dispatched shard: {nt:?}"
+    );
+    server.shutdown();
+    for a in agents {
+        a.shutdown();
+    }
+}
+
+#[test]
+fn chaos_retry_expired_batch_gets_deadline_answers_with_zero_retries() {
+    // deadline-bounded recovery, server level: a batch whose requests
+    // expire before the cluster can serve it gets honest
+    // deadline-exceeded answers with ZERO shard dispatches or retries
+    // -- late work for a caller that already gave up is never bought.
+    const CLASSES: usize = 4;
+    let seq_len = 8;
+    let row = 3 * seq_len * NUM_JOINTS;
+    let model = synth_model(CLASSES);
+    // every shard takes 500ms, far past the 150ms request deadlines
+    let slow: ShardFn = {
+        let inner = model.clone();
+        Arc::new(move |t: Tensor| {
+            std::thread::sleep(Duration::from_millis(500));
+            inner(t)
+        })
+    };
+    let (agents, addrs) = spawn_agents(2, slow, enc());
+    let admission = AdmissionPolicy {
+        capacity: 16,
+        max_queue_wait: Duration::from_millis(100),
+        default_deadline: None,
+    };
+    let server = Server::connect_sharded_admitted(
+        &addrs,
+        policy(seq_len),
+        admission,
+        enc(),
+        CLASSES,
+    )
+    .unwrap();
+    // a deadline-less warm request occupies the cluster for 500ms...
+    let warm_clip = Tensor::random_sparse(vec![row], 0.5, 9790).data;
+    let warm_rx = server.submit(warm_clip);
+    // (let it form its own batch before the deadlined ones arrive)
+    std::thread::sleep(Duration::from_millis(25));
+    // ...so these 150ms-deadline requests are long expired by the time
+    // their batch could dispatch: whether the batcher reaps them at
+    // formation or the cluster refuses the expired batch at dispatch,
+    // no shard is ever shipped or retried for them
+    let rxs: Vec<_> = (0..4)
+        .map(|i| {
+            server.submit_with_deadline(
+                Tensor::random_sparse(vec![row], 0.5, 9800 + i).data,
+                Some(Duration::from_millis(150)),
+            )
+        })
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(!resp.is_ok(), "an expired request must not be answered ok");
+        assert!(
+            resp.error
+                .as_deref()
+                .unwrap_or("")
+                .contains("deadline exceeded"),
+            "{:?}",
+            resp.error
+        );
+    }
+    use std::sync::atomic::Ordering;
+    assert_eq!(
+        server.metrics.shard_retries.load(Ordering::Relaxed),
+        0,
+        "an expired batch must never be retried"
+    );
+    assert!(
+        server.metrics.expired.load(Ordering::Relaxed) >= 4,
+        "every expired caller counted"
+    );
+    // the warm request was never at risk
+    let warm = warm_rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert!(warm.is_ok(), "{:?}", warm.error);
+    server.shutdown();
+    for a in agents {
+        a.shutdown();
+    }
+}
+
+#[test]
+fn chaos_retry_in_flight_expiry_refuses_the_retry() {
+    // deadline-bounded recovery, cluster level: a shard lost to a node
+    // death mid-batch is NOT re-dispatched when the batch deadline has
+    // already passed by the time the round resolves -- the error names
+    // the refusal and `shard_retries` stays at zero.
+    const CLASSES: usize = 4;
+    let model = synth_model(CLASSES);
+    // the survivor holds its shard for 300ms, so the 100ms batch
+    // deadline is always spent before the lost shard could be retried
+    let slow: ShardFn = {
+        let inner = model.clone();
+        Arc::new(move |t: Tensor| {
+            std::thread::sleep(Duration::from_millis(300));
+            inner(t)
+        })
+    };
+    let (mut agents, addrs) = spawn_agents(2, slow, enc());
+    let mut cluster = ShardCluster::connect_timeout(
+        &addrs,
+        enc(),
+        Some(Duration::from_secs(5)),
+    )
+    .unwrap();
+    let m = Metrics::default();
+    agents.remove(1).shutdown();
+    let t = Tensor::random_sparse(vec![4, 3, 8, 25], 0.5, 9850);
+    let deadline = Instant::now() + Duration::from_millis(100);
+    let err = cluster
+        .infer_deadline(2, &Payload::Dense(t), Some(deadline), Some(&m))
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("retries refused"), "{msg}");
+    use std::sync::atomic::Ordering;
+    assert_eq!(
+        m.shard_retries.load(Ordering::Relaxed),
+        0,
+        "no retry may dispatch past the deadline"
+    );
+    cluster.shutdown();
+    for a in agents {
+        a.shutdown();
+    }
+}
+
+#[test]
+fn chaos_standby_down_slot_promotes_to_standby_and_serves() {
+    // ROADMAP (d): a slot whose primary stays Down past promote_after
+    // is promoted to its standby address by heal -- no coordinator
+    // restart -- and the promoted node serves subsequent shards.
+    const CLASSES: usize = 4;
+    let model = synth_model(CLASSES);
+    let (mut agents, addrs) = spawn_agents(3, model.clone(), enc());
+    // slot 0: plain primary; slot 1: primary with agent 2 standing by
+    let specs = vec![
+        NodeSpec::with_standbys(vec![addrs[0]], Vec::new()),
+        NodeSpec::with_standbys(vec![addrs[1]], vec![addrs[2]]),
+    ];
+    let mut cluster = ShardCluster::connect_specs(
+        &specs,
+        enc(),
+        Some(Duration::from_secs(5)),
+    )
+    .unwrap();
+    cluster.set_reconnect_policy(ReconnectPolicy {
+        base: Duration::from_millis(10),
+        cap: Duration::from_millis(50),
+        connect_timeout: Duration::from_millis(250),
+        attempts_per_heal: 2,
+        promote_after: Duration::from_millis(100),
+    });
+    let m = Metrics::default();
+    cluster.publish_health(&m);
+    // kill slot 1's PRIMARY for good (the standby agent stays up)
+    agents.remove(1).shutdown();
+    // the kill-spanning batch is masked by retry on slot 0
+    let t = Tensor::random_sparse(vec![4, 3, 8, 25], 0.5, 9900);
+    let out = cluster.infer(&Payload::Dense(t.clone()), Some(&m)).unwrap();
+    assert_eq!(out, model(t).unwrap(), "kill-spanning batch masked");
+    assert_eq!(cluster.live_nodes(), 1);
+    // past promote_after, heal dials the standby and promotes it into
+    // the slot; serving keeps working while the promotion converges
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while cluster.live_nodes() < 2 {
+        assert!(
+            Instant::now() < deadline,
+            "no standby promotion within 10s: {:?}",
+            m.node_health()
+        );
+        let t_during =
+            Tensor::random_sparse(vec![4, 3, 8, 25], 0.5, 9905);
+        let out = cluster
+            .infer(&Payload::Dense(t_during.clone()), Some(&m))
+            .unwrap();
+        assert_eq!(out, model(t_during).unwrap(), "serving during promotion");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    use std::sync::atomic::Ordering;
+    assert_eq!(
+        m.standby_promotions.load(Ordering::Relaxed),
+        1,
+        "exactly one promotion"
+    );
+    let health = m.node_health();
+    assert!(health[1].up, "{health:?}");
+    assert_eq!(health[1].promotions, 1, "{health:?}");
+    assert_eq!(
+        health[1].label,
+        addrs[2].to_string(),
+        "slot 1 now points at the standby: {health:?}"
+    );
+    // the promoted slot serves shards: a fresh batch fans over both
+    let shards_before =
+        m.node_transport().get(1).map(|t| t.shards).unwrap_or(0);
+    let t2 = Tensor::random_sparse(vec![4, 3, 8, 25], 0.5, 9910);
+    let out = cluster.infer(&Payload::Dense(t2.clone()), Some(&m)).unwrap();
+    assert_eq!(out, model(t2).unwrap(), "promoted slot serving");
+    assert!(
+        m.node_transport()[1].shards > shards_before,
+        "the promoted slot must carry shard frames"
+    );
+    cluster.shutdown();
     for a in agents {
         a.shutdown();
     }
