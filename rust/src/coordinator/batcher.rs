@@ -338,6 +338,9 @@ impl Batcher {
             for r in &requests {
                 parts.push(
                     CompressedTensor::encode_slice(&r.clip, row_shape.clone())
+                        // lint: allow(panic): clip.len() == 3*T*V is
+                        // enforced at intake (admit) and by form_from's
+                        // ensure -- exactly encode_slice's requirement
                         .expect("request clip shape"),
                 );
             }
@@ -361,6 +364,9 @@ impl Batcher {
                 }
                 input = Some(Payload::Compressed(
                     CompressedTensor::concat_batch(parts)
+                        // lint: allow(panic): every part was encoded with
+                        // the identical row_shape above, the only
+                        // precondition concat_batch checks
                         .expect("batch concat"),
                 ));
             }
@@ -368,10 +374,14 @@ impl Batcher {
         let input = input.unwrap_or_else(|| {
             let mut data = vec![0f32; n * row];
             for (i, r) in requests.iter().enumerate() {
+                // lint: allow(index): i < requests.len() <= n and data
+                // holds exactly n * row elements, so (i + 1) * row <= len
                 data[i * row..(i + 1) * row].copy_from_slice(&r.clip);
             }
             Payload::Dense(
                 Tensor::new(vec![n, 3, self.policy.seq_len, NUM_JOINTS], data)
+                    // lint: allow(panic): data.len() == n * 3 * T * V by
+                    // the vec! above -- Tensor::new's only failure mode
                     .expect("batch shape"),
             )
         });

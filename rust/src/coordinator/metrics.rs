@@ -4,6 +4,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
+use super::lock_recovered;
 use crate::rfc::GateStats;
 use crate::runtime::StageEntry;
 use crate::util::stats::{percentile, Summary};
@@ -232,7 +233,7 @@ impl Metrics {
 
     /// Record one shard frame shipped coordinator -> `node`.
     pub fn record_node_tx(&self, node: usize, wire_bytes: u64, dense_bytes: u64) {
-        let mut nodes = self.nodes.lock().unwrap();
+        let mut nodes = lock_recovered(&self.nodes);
         if nodes.len() <= node {
             nodes.resize(node + 1, NodeTransport::default());
         }
@@ -244,7 +245,7 @@ impl Metrics {
 
     /// Record one reply frame collected from `node`.
     pub fn record_node_rx(&self, node: usize, wire_bytes: u64, dense_bytes: u64) {
-        let mut nodes = self.nodes.lock().unwrap();
+        let mut nodes = lock_recovered(&self.nodes);
         if nodes.len() <= node {
             nodes.resize(node + 1, NodeTransport::default());
         }
@@ -258,7 +259,7 @@ impl Metrics {
     /// node's per-slot attempt count.
     pub fn record_shard_retry(&self, node: usize) {
         self.shard_retries.fetch_add(1, Ordering::Relaxed);
-        let mut nodes = self.nodes.lock().unwrap();
+        let mut nodes = lock_recovered(&self.nodes);
         if nodes.len() <= node {
             nodes.resize(node + 1, NodeTransport::default());
         }
@@ -272,14 +273,12 @@ impl Metrics {
 
     /// Snapshot of per-node shard link traffic (index = node id).
     pub fn node_transport(&self) -> Vec<NodeTransport> {
-        self.nodes.lock().unwrap().clone()
+        lock_recovered(&self.nodes).clone()
     }
 
     /// [`NodeTransport::saving`] for one node (0.0 if it never saw work).
     pub fn node_transport_saving(&self, node: usize) -> f64 {
-        self.nodes
-            .lock()
-            .unwrap()
+        lock_recovered(&self.nodes)
             .get(node)
             .map(NodeTransport::saving)
             .unwrap_or(0.0)
@@ -296,7 +295,7 @@ impl Metrics {
         consecutive_failures: u64,
         promotions: u64,
     ) {
-        let mut health = self.health.lock().unwrap();
+        let mut health = lock_recovered(&self.health);
         if health.len() <= node {
             health.resize(node + 1, NodeHealth::default());
         }
@@ -312,12 +311,12 @@ impl Metrics {
     /// Snapshot of per-node link supervision state (index = node id;
     /// empty until a cluster publishes).
     pub fn node_health(&self) -> Vec<NodeHealth> {
-        self.health.lock().unwrap().clone()
+        lock_recovered(&self.health).clone()
     }
 
     pub fn record_response(&self, latency_s: f64) {
         self.responses_out.fetch_add(1, Ordering::Relaxed);
-        self.latencies_s.lock().unwrap().push(latency_s);
+        lock_recovered(&self.latencies_s).push(latency_s);
     }
 
     /// Record one request answered with an error response (malformed
@@ -372,11 +371,11 @@ impl Metrics {
     }
 
     pub fn latency_summary(&self) -> Summary {
-        Summary::of(&self.latencies_s.lock().unwrap())
+        Summary::of(&lock_recovered(&self.latencies_s))
     }
 
     pub fn latency_p99_s(&self) -> f64 {
-        percentile(&self.latencies_s.lock().unwrap(), 99.0)
+        percentile(&lock_recovered(&self.latencies_s), 99.0)
     }
 
     /// Fraction of executed rows that were padding (batching
@@ -449,7 +448,7 @@ impl Metrics {
         if promotions > 0 {
             s.push_str(&format!(" standby_promotions={promotions}"));
         }
-        let nodes = self.nodes.lock().unwrap();
+        let nodes = lock_recovered(&self.nodes);
         if !nodes.is_empty() {
             let saves: Vec<String> = nodes
                 .iter()
@@ -472,7 +471,7 @@ impl Metrics {
                 .collect();
             s.push_str(&format!(" node_attempts=[{}]", attempts.join(", ")));
         }
-        let health = self.health.lock().unwrap();
+        let health = lock_recovered(&self.health);
         // an all-up, never-failed cluster stays out of the report line
         if health.iter().any(|h| !h.up || h.reconnects > 0) {
             let states: Vec<String> = health

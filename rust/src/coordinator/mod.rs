@@ -22,6 +22,13 @@
 //! * [`metrics`] -- throughput/latency accounting, including per-node
 //!   shard link traffic.
 
+// Defense-in-depth behind `tools/contract_lint`'s `panic` rule: no
+// non-test code in this module tree may call `unwrap()`. Test modules are
+// exempt (the `not(test)` gate), matching the lint's test-region carve-out.
+#![cfg_attr(not(test), warn(clippy::unwrap_used))]
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
 pub mod admission;
 pub mod batcher;
 pub mod metrics;
@@ -45,3 +52,13 @@ pub use shard::{
     PayloadShardFn, ReconnectPolicy, RetryPolicy, ShardCluster, ShardFn,
     SlotState, TcpLink,
 };
+
+/// Lock a mutex on the serving path, recovering from poisoning instead of
+/// propagating the panic. Every coordinator mutex guards state that stays
+/// internally consistent under a mid-update panic (counter maps, connection
+/// lists -- each update is a single insert/remove/increment), so the data in
+/// a poisoned lock is still valid; answering callers beats wedging the
+/// server because some *other* thread died while holding the lock.
+pub(crate) fn lock_recovered<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}

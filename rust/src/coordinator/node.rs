@@ -30,6 +30,7 @@ use anyhow::{Context, Result};
 
 use crate::rfc::{wire, EncoderConfig};
 
+use super::lock_recovered;
 use super::shard::{run_frame, PayloadShardFn};
 
 /// Serve coordinator connections on `listener` forever (the blocking
@@ -140,7 +141,7 @@ fn handle_conn(
     // close the socket across every dup (the registry holds one), so
     // the coordinator actually observes the drop instead of blocking
     let _ = stream.shutdown(std::net::Shutdown::Both);
-    conns.lock().unwrap().retain(|(cid, _)| *cid != id);
+    lock_recovered(conns).retain(|(cid, _)| *cid != id);
 }
 
 /// Register `clone` as connection `id`'s severing handle.  Returns
@@ -153,7 +154,7 @@ fn register_severing(
 ) -> bool {
     match clone {
         Ok(c) => {
-            conns.lock().unwrap().push((id, c));
+            lock_recovered(conns).push((id, c));
             true
         }
         Err(_) => false,
@@ -288,7 +289,7 @@ impl NodeAgent {
         // drain, so a handler whose registration raced past the drain
         // still observes it (see `handle_conn`)
         self.stop.store(true, Ordering::SeqCst);
-        for (_, c) in self.conns.lock().unwrap().drain(..) {
+        for (_, c) in lock_recovered(&self.conns).drain(..) {
             let _ = c.shutdown(std::net::Shutdown::Both);
         }
         // nudge the blocking accept so it observes the stop flag

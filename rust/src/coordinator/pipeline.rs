@@ -316,10 +316,16 @@ impl Pipeline {
             rxs.push(Some(rx));
         }
         let input = txs[0].clone();
-        let output = rxs[n_compute].take().unwrap();
+        // lint: allow(panic): rxs holds exactly n_compute + 1 fresh
+        // Some(rx) slots built by the loop above, and each index below is
+        // taken exactly once -- spawn-time setup, no request in flight yet
+        let output = rxs[n_compute].take().expect("output channel slot");
         let mut threads = Vec::new();
         for j in 0..n_compute {
-            let rx = rxs[j].take().unwrap();
+            // lint: allow(panic): slot j is taken only by iteration j
+            let rx = rxs[j].take().expect("stage channel slot");
+            // lint: allow(index): txs.len() == n_compute + 1 and
+            // j < n_compute, so j + 1 is in bounds
             let tx = txs[j + 1].clone();
             let is_first = j == 0;
             let is_head = j == n_compute - 1;
@@ -407,8 +413,12 @@ pub fn nctv_to_ntvc(x: &Tensor) -> Result<Tensor> {
             for ti in 0..t {
                 let src = ((ni * c + ci) * t + ti) * v;
                 for vi in 0..v {
-                    out[((ni * t + ti) * v + vi) * c + ci] =
-                        x.data[src + vi];
+                    let dst = ((ni * t + ti) * v + vi) * c + ci;
+                    // lint: allow(index): src + vi and dst are mixed-radix
+                    // encodings of (ni, ci, ti, vi) over n*c*t*v, each
+                    // component strictly below its radix, and out/x.data
+                    // both hold exactly n*c*t*v elements
+                    out[dst] = x.data[src + vi];
                 }
             }
         }

@@ -48,10 +48,14 @@ pub struct Response {
 
 impl Response {
     pub fn from_logits(id: u64, logits: Vec<f32>, arrived: Instant) -> Self {
+        // total_cmp, not partial_cmp().unwrap(): a NaN logit (a bug
+        // upstream, but one that must not take the delivery thread down
+        // with it) orders deterministically instead of panicking -- see
+        // `nan_logits_answer_instead_of_panicking`
         let predicted = logits
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i)
             .unwrap_or(0);
         Response {
@@ -147,6 +151,35 @@ mod tests {
         assert_eq!(r.id, 3);
         assert!(r.latency_s >= 0.0);
         assert!(r.is_ok());
+    }
+
+    // Regression (PR 10 lint sweep): `from_logits` used
+    // `partial_cmp(..).unwrap()`, so a single NaN logit -- producible by
+    // a buggy model artifact -- panicked the delivery thread and wedged
+    // the server exactly like PR 5's debug_assert incident.  The caller
+    // must always get an answer.
+    #[test]
+    fn nan_logits_answer_instead_of_panicking() {
+        let r = Response::from_logits(
+            7,
+            vec![0.5, f32::NAN, 2.0],
+            Instant::now(),
+        );
+        assert!(r.is_ok());
+        assert_eq!(r.id, 7);
+        // total_cmp orders NaN above every finite value, so the NaN slot
+        // itself is the deterministic argmax -- the caller can see the
+        // corrupt logit rather than a silently "plausible" class
+        assert_eq!(r.predicted, 1);
+
+        // all-NaN still answers deterministically
+        let r = Response::from_logits(
+            8,
+            vec![f32::NAN, f32::NAN],
+            Instant::now(),
+        );
+        assert!(r.is_ok());
+        assert_eq!(r.predicted, 1);
     }
 
     #[test]

@@ -71,6 +71,9 @@ fn deliver(batch: Batch, result: Result<Tensor>, num_classes: usize, metrics: &M
                     );
                     continue;
                 }
+                // lint: allow(index): check_logits above proved shape ==
+                // (rows >= requests, num_classes) and Tensor data length
+                // is shape product, so (i + 1) * num_classes <= len
                 let row = logits.data[i * num_classes..(i + 1) * num_classes]
                     .to_vec();
                 let resp = Response::from_logits(req.id, row, req.arrived);
@@ -516,16 +519,24 @@ impl Server {
         let want = 3 * self.seq_len * NUM_JOINTS;
         if clip.len() != want {
             self.metrics.record_failure();
-            let _ = tx.send(Response::failure(
-                id,
-                format!(
-                    "malformed clip: {} values, model wants {want} \
-                     (3 x {} x {NUM_JOINTS})",
-                    clip.len(),
-                    self.seq_len
+            // respond(), not a discarded send: the caller holds `rx`
+            // right here so the send cannot fail today, but routing it
+            // through respond() keeps the abandoned-caller accounting
+            // uniform if this path ever answers asynchronously
+            respond(
+                &tx,
+                Response::failure(
+                    id,
+                    format!(
+                        "malformed clip: {} values, model wants {want} \
+                         (3 x {} x {NUM_JOINTS})",
+                        clip.len(),
+                        self.seq_len
+                    ),
+                    arrived,
                 ),
-                arrived,
-            ));
+                Some(&*self.metrics),
+            );
             return rx;
         }
         let req = Request {

@@ -631,6 +631,9 @@ fn slice_payload(p: &Payload, lo: usize, hi: usize) -> Result<Payload> {
             shape[0] = hi - lo;
             Ok(Payload::Dense(Tensor::new(
                 shape,
+                // lint: allow(index): callers pass lo <= hi <= shape[0]
+                // (Router::shards_for geometry) and data.len() is the
+                // shape product, so hi * row <= len
                 t.data[lo * row..hi * row].to_vec(),
             )?))
         }
@@ -916,6 +919,9 @@ impl ShardCluster {
                     io_timeout,
                 } = self.slots[i].origin
                 else {
+                    // lint: allow(panic): the `due` guard above matched
+                    // SlotOrigin::Tcp on this same slot, with &mut self
+                    // held across both reads -- no other origin can appear
                     unreachable!("non-TCP slots are never due for re-dial");
                 };
                 (addrs.clone(), standbys.clone(), io_timeout)
@@ -1136,6 +1142,8 @@ impl ShardCluster {
             // shards round-robin over whoever is still live
             let mut sent: Vec<(usize, usize)> = Vec::new(); // (shard, node)
             for (j, &si) in pending.iter().enumerate() {
+                // lint: allow(index): live is non-empty (checked at the
+                // top of the round) and j % len is always in bounds
                 let node = live[j % live.len()];
                 let (lo, hi) = (shards[si].lo, shards[si].hi);
                 // slicing/encoding failures are the batch's problem,
@@ -1280,8 +1288,12 @@ impl ShardCluster {
         }
         let parts: Vec<Tensor> = shards
             .into_iter()
-            .map(|s| s.result.expect("unfailed shard holds its result"))
-            .collect();
+            .map(|s| {
+                s.result.ok_or_else(|| {
+                    anyhow!("internal: unfailed shard lost its result")
+                })
+            })
+            .collect::<Result<_>>()?;
         Tensor::concat_batch(&parts)
     }
 

@@ -719,7 +719,12 @@ pub const PANEL_COLS: usize = 512;
 #[inline(always)]
 fn prefetch_read<T>(p: *const T) {
     #[cfg(target_arch = "x86_64")]
-    // SAFETY: PREFETCHT0 is architecturally a hint and cannot fault
+    // SAFETY: PREFETCHT0 is architecturally a hint and cannot fault, so
+    // `p` may be any address -- including one just past the end of a
+    // bank's packed run. Callers derive `p` from
+    // `BankSegment::packed_values` / `BankIter::upcoming_packed`, whose
+    // stride contract (property-tested in prop_invariants.rs) keeps the
+    // pointer inside or one-past the segment's packed buffer.
     unsafe {
         use core::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
         _mm_prefetch::<_MM_HINT_T0>(p.cast::<i8>());
@@ -879,7 +884,13 @@ fn acc_q88_scalar(acc: &mut [i32], xq: i32, wq: &[i16]) {
 }
 
 /// # Safety
-/// Caller must have verified AVX2 support (see [`IsaPath::detect`]).
+/// ISA: caller must have verified AVX2 support ([`IsaPath::detect`] is the
+/// only producer of [`IsaPath::Avx2`]).
+/// Alignment: none required -- every vector access is `_mm256_loadu_*`/
+/// `_mm256_storeu_*` (unaligned), so `out`/`w` may start anywhere; the
+/// `j + 8 <= n` guard keeps each 32-byte access inside the slices.
+/// Stride: `x` streams from `BankSegment::packed_values`, whose contiguous
+/// stride contract is property-tested in `prop_invariants.rs`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn axpy_f32_avx2(out: &mut [f32], x: f32, w: &[f32]) {
@@ -899,7 +910,13 @@ unsafe fn axpy_f32_avx2(out: &mut [f32], x: f32, w: &[f32]) {
 }
 
 /// # Safety
-/// Caller must have verified AVX2 support (see [`IsaPath::detect`]).
+/// ISA: caller must have verified AVX2 support ([`IsaPath::detect`]).
+/// Alignment: none required -- `_mm_loadu_si128`/`_mm256_loadu_si256`/
+/// `_mm256_storeu_si256` are the unaligned forms; the `j + 8 <= n` guard
+/// bounds the 16-byte `wq` read and 32-byte `acc` accesses (`wq` is i16,
+/// so 8 lanes span 16 bytes) inside the slices.
+/// Stride: `xq` streams from `BankSegment::packed_values` (contract
+/// property-tested in `prop_invariants.rs`).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn acc_q88_avx2(acc: &mut [i32], xq: i32, wq: &[i16]) {
@@ -923,7 +940,12 @@ unsafe fn acc_q88_avx2(acc: &mut [i32], xq: i32, wq: &[i16]) {
 }
 
 /// # Safety
-/// NEON is baseline on aarch64; callable from any aarch64 context.
+/// ISA: NEON is baseline on aarch64, so this is callable from any aarch64
+/// context ([`IsaPath::detect`] still gates dispatch for symmetry).
+/// Alignment: none required -- `vld1q_f32`/`vst1q_f32` tolerate unaligned
+/// addresses; the `j + 4 <= n` guard keeps each 16-byte access in-bounds.
+/// Stride: `x` streams from `BankSegment::packed_values` (contract
+/// property-tested in `prop_invariants.rs`).
 #[cfg(target_arch = "aarch64")]
 #[target_feature(enable = "neon")]
 unsafe fn axpy_f32_neon(out: &mut [f32], x: f32, w: &[f32]) {
@@ -944,7 +966,12 @@ unsafe fn axpy_f32_neon(out: &mut [f32], x: f32, w: &[f32]) {
 }
 
 /// # Safety
-/// NEON is baseline on aarch64; callable from any aarch64 context.
+/// ISA: NEON is baseline on aarch64; callable from any aarch64 context.
+/// Alignment: none required -- `vld1_s16`/`vld1q_s32`/`vst1q_s32` tolerate
+/// unaligned addresses; the `j + 4 <= n` guard bounds the 8-byte `wq` read
+/// and 16-byte `acc` accesses inside the slices.
+/// Stride: `xq` streams from `BankSegment::packed_values` (contract
+/// property-tested in `prop_invariants.rs`).
 #[cfg(target_arch = "aarch64")]
 #[target_feature(enable = "neon")]
 unsafe fn acc_q88_neon(acc: &mut [i32], xq: i32, wq: &[i16]) {

@@ -122,6 +122,9 @@ pub fn to_bytes(ct: &CompressedTensor) -> Result<Vec<u8>> {
     put_u32(&mut w, 0);
     for seg in ct.segments() {
         for r in 1..=seg.rows {
+            // lint: allow(index): segment invariant (property-tested):
+            // offsets.len() == rows * row_banks + 1, so r * row_banks is
+            // in bounds for every r <= rows
             put_u32(&mut w, (base + seg.offsets[r * seg.row_banks] as u64) as u32);
         }
         base += seg.packed.len() as u64;
@@ -131,7 +134,14 @@ pub fn to_bytes(ct: &CompressedTensor) -> Result<Vec<u8>> {
             w.extend_from_slice(&v.to_le_bytes());
         }
     }
-    debug_assert_eq!(w.len() as u64, total);
+    // a real check, not a debug_assert: a size-accounting bug here would
+    // ship a frame whose header length lies, and release builds (the PR 5
+    // incident class) must refuse it too
+    ensure!(
+        w.len() as u64 == total,
+        "encoder wrote {} bytes, header promised {total}",
+        w.len()
+    );
     Ok(w)
 }
 
@@ -167,11 +177,13 @@ impl<'a> Reader<'a> {
     }
 
     fn u16(&mut self) -> Result<u16> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
     }
 
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
     fn rest(&self) -> &'a [u8] {
@@ -282,6 +294,9 @@ pub fn from_bytes(buf: &[u8]) -> Result<CompressedTensor> {
         "hot codes name {at} values but {packed_len} are packed"
     );
     for (row, &off) in row_offsets.iter().enumerate() {
+        // lint: allow(index): offsets was built above with exactly
+        // rows * row_banks + 1 entries and row < rows (row_offsets has
+        // `rows` entries, validated against the header), so in bounds
         let expect = offsets[row * row_banks];
         ensure!(
             off == expect,

@@ -31,11 +31,20 @@ pub struct Executable {
     pub name: String,
 }
 
-// The underlying PJRT CPU client/executables are internally synchronized;
-// the raw pointers in the xla crate wrappers are what block auto-derive.
+// SAFETY: `Engine` only holds a PJRT CPU client handle (plus `Mutex`-guarded
+// caches); the PJRT CPU client is internally synchronized and safe to move
+// across threads. The raw pointers inside the xla crate wrappers are what
+// block the auto-derive, not any real thread-affinity.
 unsafe impl Send for Engine {}
+// SAFETY: all mutable state in `Engine` sits behind `Mutex`es and the PJRT
+// client itself is internally synchronized, so `&Engine` is safe to share.
 unsafe impl Sync for Engine {}
+// SAFETY: a loaded PJRT executable is immutable after compilation; execution
+// is re-entrant on the CPU client, so moving the handle between threads is
+// sound.
 unsafe impl Send for Executable {}
+// SAFETY: `Executable` exposes only `&self` execution over an immutable
+// compiled module; concurrent `run*` calls are serialized inside PJRT.
 unsafe impl Sync for Executable {}
 
 impl Engine {

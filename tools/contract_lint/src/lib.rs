@@ -1,0 +1,1212 @@
+//! In-tree static analysis for the repo's correctness contracts.
+//!
+//! A comment-and-string-aware lexer over `rust/src/**` that enforces the
+//! rules prose alone kept failing to (see `docs/static-analysis.md` for
+//! the catalog, motivating incidents, and the allow-pragma policy):
+//!
+//! * `safety` -- every `unsafe` token is justified by an immediately
+//!   preceding `// SAFETY:` comment (or a `/// # Safety` doc section),
+//!   attributes and continuation comment lines allowed in between;
+//! * `fma` -- FMA intrinsics (`*fmadd*`, `vfma*`, `mul_add`) are
+//!   forbidden in `rfc/kernel.rs` and every module it reaches via `use`,
+//!   protecting the lane-ascending separate-multiply-add accumulation
+//!   that keeps SIMD bit-identical to the scalar reference;
+//! * `panic` -- `unwrap()` / `.expect(` / `panic!` / `debug_assert!` /
+//!   `unreachable!` / `todo!` / `unimplemented!` are forbidden on the
+//!   serving path (`coordinator/*`, `rfc/wire.rs`) outside test regions;
+//! * `index` -- bracket indexing whose index expression contains
+//!   arithmetic (`+ - * / %`) is forbidden on the serving path: the
+//!   computed-offset slicing class of panics (a type-blind heuristic;
+//!   plain `x[i]` is left to `clippy::indexing_slicing` if ever wanted);
+//! * `send-discard` -- `let _ = ...send(..)` on the serving path is
+//!   forbidden: a discarded send result hides an abandoned caller;
+//! * `wire-version` -- the `WIRE_VERSION` constants in `rfc/wire.rs` and
+//!   `sim/rfc.rs` and the `contract-lint: wire-version = N` marker in
+//!   the wire-format ADR must all agree.
+//!
+//! Violations are suppressible only via an inline
+//! `// lint: allow(<rule>): <reason>` pragma on the offending line or
+//! immediately above it (attribute lines skipped); pragmas are counted
+//! and reported so exceptions stay auditable. A pragma naming an unknown
+//! rule or missing its reason is itself a finding (rule `pragma`).
+//!
+//! The lexer masks comments, string/char literals, and raw strings to
+//! spaces before any rule runs, so `"unsafe"` in a string or `fmadd` in
+//! a comment can never trip a rule; test regions (`#[cfg(test)]` /
+//! `mod tests`) are tracked by brace depth.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// The public rule names accepted by `lint: allow(...)` pragmas.
+pub const RULES: &[&str] = &[
+    "safety",
+    "fma",
+    "panic",
+    "index",
+    "wire-version",
+    "send-discard",
+];
+
+/// One violation. `line` is 1-based.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: String,
+    pub message: String,
+}
+
+/// One pragma-suppressed would-be violation, kept for the audit report.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Suppression {
+    pub file: String,
+    pub line: usize,
+    pub rule: String,
+    pub reason: String,
+}
+
+/// Everything one lint run produced.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub suppressed: Vec<Suppression>,
+}
+
+impl Report {
+    fn sort(&mut self) {
+        self.findings.sort_by(|a, b| {
+            (&a.file, a.line, &a.rule, &a.message)
+                .cmp(&(&b.file, b.line, &b.rule, &b.message))
+        });
+        self.suppressed.sort_by(|a, b| {
+            (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule))
+        });
+    }
+}
+
+// ------------------------------------------------------------- lexer
+
+fn is_ident_b(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn push_masked(out: &mut String, line: &mut usize, c: char, as_code: bool) {
+    if c == '\n' {
+        out.push('\n');
+        *line += 1;
+    } else if as_code {
+        out.push(c);
+    } else {
+        out.push(' ');
+    }
+}
+
+/// Mask comments, strings, chars, and raw strings to spaces (newlines
+/// kept, so line numbers survive); collect per-line comment text.
+fn mask(src: &str) -> (String, BTreeMap<usize, String>) {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = String::with_capacity(src.len());
+    let mut comments: BTreeMap<usize, String> = BTreeMap::new();
+    let mut line = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        let nxt = if i + 1 < n { chars[i + 1] } else { '\0' };
+        let prev_ident = i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_');
+        // line comment
+        if c == '/' && nxt == '/' {
+            while i < n && chars[i] != '\n' {
+                comments.entry(line).or_default().push(chars[i]);
+                push_masked(&mut out, &mut line, chars[i], false);
+                i += 1;
+            }
+            continue;
+        }
+        // block comment (nestable)
+        if c == '/' && nxt == '*' {
+            let mut depth = 0usize;
+            while i < n {
+                if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    for _ in 0..2 {
+                        comments.entry(line).or_default().push(chars[i]);
+                        push_masked(&mut out, &mut line, chars[i], false);
+                        i += 1;
+                    }
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    for _ in 0..2 {
+                        comments.entry(line).or_default().push(chars[i]);
+                        push_masked(&mut out, &mut line, chars[i], false);
+                        i += 1;
+                    }
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    comments.entry(line).or_default().push(chars[i]);
+                    push_masked(&mut out, &mut line, chars[i], false);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw string: r"..." r#"..."# br"..." (not when r is part of an
+        // identifier)
+        if !prev_ident && (c == 'r' || (c == 'b' && nxt == 'r')) {
+            let mut k = i;
+            if chars[k] == 'b' {
+                k += 1;
+            }
+            // chars[k] == 'r' here
+            let mut h = k + 1;
+            while h < n && chars[h] == '#' {
+                h += 1;
+            }
+            if h < n && chars[h] == '"' {
+                let hashes = h - (k + 1);
+                // scan for closing quote + same number of hashes
+                let mut j = h + 1;
+                let end = loop {
+                    if j >= n {
+                        break n;
+                    }
+                    if chars[j] == '"' {
+                        let mut m = 0usize;
+                        while m < hashes && j + 1 + m < n && chars[j + 1 + m] == '#' {
+                            m += 1;
+                        }
+                        if m == hashes {
+                            break j + 1 + hashes;
+                        }
+                    }
+                    j += 1;
+                };
+                for k2 in i..end {
+                    push_masked(&mut out, &mut line, chars[k2], false);
+                }
+                i = end;
+                continue;
+            }
+            // `r` / `br` not followed by a raw string: fall through
+        }
+        // normal (or byte) string
+        if c == '"' || (c == 'b' && nxt == '"' && !prev_ident) {
+            let mut j = i + if c == 'b' { 2 } else { 1 };
+            while j < n {
+                if chars[j] == '\\' {
+                    j += 2;
+                } else if chars[j] == '"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            let end = j.min(n);
+            for k2 in i..end {
+                push_masked(&mut out, &mut line, chars[k2], false);
+            }
+            i = end;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            if nxt == '\\' {
+                let mut j = i + 2;
+                while j < n && chars[j] != '\'' {
+                    j += 1;
+                }
+                let end = (j + 1).min(n);
+                for k2 in i..end {
+                    push_masked(&mut out, &mut line, chars[k2], false);
+                }
+                i = end;
+                continue;
+            }
+            if i + 2 < n && chars[i + 2] == '\'' && nxt != '\'' {
+                for k2 in i..i + 3 {
+                    push_masked(&mut out, &mut line, chars[k2], false);
+                }
+                i += 3;
+                continue;
+            }
+            // lifetime tick: stays as code
+            push_masked(&mut out, &mut line, c, true);
+            i += 1;
+            continue;
+        }
+        push_masked(&mut out, &mut line, c, true);
+        i += 1;
+    }
+    (out, comments)
+}
+
+// --------------------------------------------------- scanning helpers
+
+fn skip_ws(b: &[u8], mut i: usize) -> usize {
+    while i < b.len() && (b[i] as char).is_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// Byte positions where `word` occurs with non-ident chars on both sides.
+fn word_positions(s: &str, word: &str) -> Vec<usize> {
+    let sb = s.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while from <= s.len() {
+        let rel = match s[from..].find(word) {
+            Some(p) => p,
+            None => break,
+        };
+        let at = from + rel;
+        let before_ok = at == 0 || !is_ident_b(sb[at - 1]);
+        let end = at + word.len();
+        let after_ok = end >= sb.len() || !is_ident_b(sb[end]);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = end;
+    }
+    out
+}
+
+/// Whitespace-stripped copy of a line (for attribute matching).
+fn compact(line: &str) -> String {
+    line.chars().filter(|c| !c.is_whitespace()).collect()
+}
+
+fn has_cfg_test(line: &str) -> bool {
+    compact(line).contains("#[cfg(test)]")
+}
+
+fn has_mod_tests(line: &str) -> bool {
+    let b = line.as_bytes();
+    for at in word_positions(line, "mod") {
+        let j = skip_ws(b, at + 3);
+        if j == at + 3 {
+            continue; // need whitespace between `mod` and the name
+        }
+        if line[j..].starts_with("tests") {
+            let end = j + 5;
+            if end >= b.len() || !is_ident_b(b[end]) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// `(hit position, token name)` for every panic-family token on a line.
+fn panic_hits(line: &str) -> Vec<(usize, &'static str)> {
+    let b = line.as_bytes();
+    let mut hits = Vec::new();
+    for at in word_positions(line, "unwrap") {
+        if at == 0 || b[at - 1] != b'.' {
+            continue;
+        }
+        let j = skip_ws(b, at + 6);
+        if j < b.len() && b[j] == b'(' {
+            let k = skip_ws(b, j + 1);
+            if k < b.len() && b[k] == b')' {
+                hits.push((at, "unwrap()"));
+            }
+        }
+    }
+    for at in word_positions(line, "expect") {
+        if at == 0 || b[at - 1] != b'.' {
+            continue;
+        }
+        let j = skip_ws(b, at + 6);
+        if j < b.len() && b[j] == b'(' {
+            hits.push((at, ".expect("));
+        }
+    }
+    let macros: &[(&str, &'static str)] = &[
+        ("panic", "panic!"),
+        ("debug_assert", "debug_assert!"),
+        ("debug_assert_eq", "debug_assert!"),
+        ("debug_assert_ne", "debug_assert!"),
+        ("unreachable", "unreachable!"),
+        ("todo", "todo!"),
+        ("unimplemented", "unimplemented!"),
+    ];
+    for (word, name) in macros {
+        for at in word_positions(line, word) {
+            let end = at + word.len();
+            if end < b.len() && b[end] == b'!' {
+                hits.push((at, name));
+            }
+        }
+    }
+    hits.sort_by_key(|h| h.0);
+    hits
+}
+
+/// FMA-contract violations on a (masked) line: `fmadd` anywhere,
+/// `vfma`-prefixed intrinsics, or a `mul_add(` call.
+fn fma_hits(line: &str) -> Vec<(usize, String)> {
+    let b = line.as_bytes();
+    let mut hits = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = line[from..].find("fmadd") {
+        let at = from + p;
+        hits.push((at, "fmadd".to_string()));
+        from = at + 5;
+    }
+    from = 0;
+    while let Some(p) = line[from..].find("vfma") {
+        let at = from + p;
+        if at == 0 || !is_ident_b(b[at - 1]) {
+            // extend over the full intrinsic name for the message
+            let mut end = at + 4;
+            while end < b.len() && is_ident_b(b[end]) {
+                end += 1;
+            }
+            hits.push((at, line[at..end].to_string()));
+        }
+        from = at + 4;
+    }
+    for at in word_positions(line, "mul_add") {
+        let j = skip_ws(b, at + 7);
+        if j < b.len() && b[j] == b'(' {
+            hits.push((at, "mul_add(".to_string()));
+        }
+    }
+    hits.sort_by_key(|h| h.0);
+    hits
+}
+
+/// Matching `]` for the `[` at `open`, honoring nested `[]{}()`.
+fn find_matching(masked: &[u8], open: usize) -> Option<usize> {
+    let mut stack: Vec<u8> = Vec::new();
+    let mut i = open;
+    while i < masked.len() {
+        match masked[i] {
+            b'[' => stack.push(b']'),
+            b'(' => stack.push(b')'),
+            b'{' => stack.push(b'}'),
+            c @ (b']' | b')' | b'}') => {
+                if stack.last() == Some(&c) {
+                    stack.pop();
+                    if stack.is_empty() {
+                        return Some(i);
+                    }
+                } else if stack.is_empty() {
+                    return None;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    None
+}
+
+fn line_of(masked: &str, pos: usize) -> usize {
+    masked.as_bytes()[..pos].iter().filter(|&&b| b == b'\n').count()
+}
+
+// ------------------------------------------------------ per-file state
+
+struct FileSrc {
+    rel: String,
+    masked: String,
+    mlines: Vec<String>,
+    comments: BTreeMap<usize, String>,
+    in_test: Vec<bool>,
+    /// line -> (rules named, reason)
+    pragmas: BTreeMap<usize, (Vec<String>, String)>,
+}
+
+/// Which lines sit inside `#[cfg(test)]` / `mod tests` brace regions.
+fn test_lines(mlines: &[String]) -> Vec<bool> {
+    let mut out = Vec::with_capacity(mlines.len());
+    let mut depth = 0i64;
+    let mut pending = false;
+    let mut regions: Vec<i64> = Vec::new();
+    for ln in mlines {
+        let active_at_start = !regions.is_empty();
+        let mut opened_here = false;
+        if has_cfg_test(ln) || has_mod_tests(ln) {
+            pending = true;
+        }
+        for ch in ln.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    if pending {
+                        regions.push(depth);
+                        pending = false;
+                        opened_here = true;
+                    }
+                }
+                '}' => {
+                    if regions.last() == Some(&depth) {
+                        regions.pop();
+                    }
+                    depth -= 1;
+                }
+                ';' => pending = false,
+                _ => {}
+            }
+        }
+        out.push(active_at_start || opened_here);
+    }
+    out
+}
+
+/// Parse a `lint: allow(rule[, rule]): reason` pragma out of one line's
+/// comment text. Returns `(rules, reason)`; the reason may be empty (a
+/// `pragma` finding, but the named rules still suppress -- one finding,
+/// not two).
+fn parse_pragma(text: &str) -> Option<(Vec<String>, String)> {
+    let at = text.find("lint:")?;
+    let rest = &text[at + 5..];
+    let b = rest.as_bytes();
+    let mut i = skip_ws(b, 0);
+    if !rest[i..].starts_with("allow") {
+        return None;
+    }
+    i = skip_ws(b, i + 5);
+    if i >= b.len() || b[i] != b'(' {
+        return None;
+    }
+    let close = rest[i..].find(')')? + i;
+    let rules: Vec<String> = rest[i + 1..close]
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    let mut j = skip_ws(b, close + 1);
+    let mut reason = String::new();
+    if j < b.len() && b[j] == b':' {
+        j = skip_ws(b, j + 1);
+        reason = rest[j..].trim().to_string();
+    }
+    Some((rules, reason))
+}
+
+impl FileSrc {
+    fn new(rel: String, src: &str) -> FileSrc {
+        let (masked, comments) = mask(src);
+        let mlines: Vec<String> = masked.split('\n').map(|s| s.to_string()).collect();
+        let in_test = test_lines(&mlines);
+        let mut pragmas = BTreeMap::new();
+        for (&line, text) in &comments {
+            if let Some(p) = parse_pragma(text) {
+                pragmas.insert(line, p);
+            }
+        }
+        FileSrc {
+            rel,
+            masked,
+            mlines,
+            comments,
+            in_test,
+            pragmas,
+        }
+    }
+
+    fn is_blank_code(&self, i: usize) -> bool {
+        self.mlines[i].trim().is_empty()
+    }
+
+    fn is_attr_only(&self, i: usize) -> bool {
+        self.mlines[i].trim().starts_with('#')
+    }
+
+    /// Lines whose comments may justify or suppress a finding at `line`:
+    /// the line itself, then upward over comment-only lines (attribute
+    /// lines skipped); any other code or a fully blank line stops the
+    /// walk.
+    fn walk_lines(&self, line: usize) -> Vec<usize> {
+        let mut out = vec![line];
+        let mut i = line;
+        while i > 0 {
+            i -= 1;
+            if self.is_blank_code(i) && self.comments.contains_key(&i) {
+                out.push(i);
+            } else if self.is_attr_only(i) {
+                continue;
+            } else {
+                break;
+            }
+        }
+        out
+    }
+
+    fn has_safety(&self, line: usize) -> bool {
+        for i in self.walk_lines(line) {
+            if let Some(t) = self.comments.get(&i) {
+                if t.contains("SAFETY:") || t.contains("# Safety") {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    fn pragma_for(&self, rule: &str, line: usize) -> Option<usize> {
+        for i in self.walk_lines(line) {
+            if let Some((rules, _)) = self.pragmas.get(&i) {
+                if rules.iter().any(|r| r == rule) {
+                    return Some(i);
+                }
+            }
+        }
+        None
+    }
+}
+
+// -------------------------------------------------------- rule driver
+
+struct Sink<'a> {
+    file: &'a FileSrc,
+    report: &'a mut Report,
+}
+
+impl Sink<'_> {
+    /// Record a finding at 0-based `line`, routing through the pragma
+    /// check (a matching pragma turns it into a counted suppression).
+    fn add(&mut self, rule: &str, line: usize, message: String) {
+        if let Some(p) = self.file.pragma_for(rule, line) {
+            let reason = self
+                .file
+                .pragmas
+                .get(&p)
+                .map(|(_, r)| r.clone())
+                .unwrap_or_default();
+            self.report.suppressed.push(Suppression {
+                file: self.file.rel.clone(),
+                line: line + 1,
+                rule: rule.to_string(),
+                reason,
+            });
+        } else {
+            self.report.findings.push(Finding {
+                file: self.file.rel.clone(),
+                line: line + 1,
+                rule: rule.to_string(),
+                message,
+            });
+        }
+    }
+
+    /// Record a finding that no pragma can suppress (pragma hygiene).
+    fn add_raw(&mut self, rule: &str, line: usize, message: String) {
+        self.report.findings.push(Finding {
+            file: self.file.rel.clone(),
+            line: line + 1,
+            rule: rule.to_string(),
+            message,
+        });
+    }
+}
+
+fn lint_one(file: &FileSrc, serving: bool, fma_scope: bool, report: &mut Report) {
+    let mut sink = Sink { file, report };
+    // pragma hygiene: unknown rules and missing reasons are findings
+    for (&line, (rules, reason)) in &file.pragmas {
+        for r in rules {
+            if !RULES.contains(&r.as_str()) {
+                sink.add_raw(
+                    "pragma",
+                    line,
+                    format!("allow pragma names unknown rule `{r}`"),
+                );
+            }
+        }
+        if reason.is_empty() {
+            sink.add_raw(
+                "pragma",
+                line,
+                "allow pragma without a `: <reason>`".to_string(),
+            );
+        }
+    }
+    // safety: every `unsafe` token, everywhere
+    for i in 0..file.mlines.len() {
+        if !word_positions(&file.mlines[i], "unsafe").is_empty() && !file.has_safety(i) {
+            sink.add(
+                "safety",
+                i,
+                "`unsafe` without an immediately preceding `// SAFETY:` comment".to_string(),
+            );
+        }
+    }
+    // fma: kernel reach set only
+    if fma_scope {
+        for i in 0..file.mlines.len() {
+            for (_, tok) in fma_hits(&file.mlines[i]) {
+                sink.add(
+                    "fma",
+                    i,
+                    format!("FMA contract violation: `{tok}` (kernel reach set is no-FMA)"),
+                );
+            }
+        }
+    }
+    if !serving {
+        return;
+    }
+    // panic family, outside test regions
+    for i in 0..file.mlines.len() {
+        if file.in_test[i] {
+            continue;
+        }
+        for (_, tok) in panic_hits(&file.mlines[i]) {
+            sink.add("panic", i, format!("`{tok}` on the serving path"));
+        }
+    }
+    // arithmetic indexing
+    let mb = file.masked.as_bytes();
+    for pos in 0..mb.len() {
+        if mb[pos] != b'[' {
+            continue;
+        }
+        // previous non-whitespace char must end a place expression
+        let mut p = pos;
+        let mut prev = 0u8;
+        while p > 0 {
+            p -= 1;
+            if !(mb[p] as char).is_whitespace() {
+                prev = mb[p];
+                break;
+            }
+        }
+        if !(is_ident_b(prev) || prev == b')' || prev == b']' || prev == b'?') {
+            continue;
+        }
+        let line = line_of(&file.masked, pos);
+        if file.in_test[line] {
+            continue;
+        }
+        let end = match find_matching(mb, pos) {
+            Some(e) => e,
+            None => continue,
+        };
+        let idx = file.masked[pos + 1..end]
+            .replace("->", "")
+            .replace("=>", "");
+        if idx.bytes().any(|b| matches!(b, b'+' | b'-' | b'*' | b'/' | b'%')) {
+            let short: Vec<&str> = idx.split_whitespace().collect();
+            sink.add(
+                "index",
+                line,
+                format!(
+                    "arithmetic index expression `{}` (prove bounds or use get())",
+                    short.join(" ")
+                ),
+            );
+        }
+    }
+    // discarded send results
+    for at in word_positions(&file.masked, "let") {
+        let j = skip_ws(mb, at + 3);
+        if j == at + 3 || j >= mb.len() || mb[j] != b'_' {
+            continue;
+        }
+        if j + 1 < mb.len() && is_ident_b(mb[j + 1]) {
+            continue; // `let _name`, a real binding
+        }
+        let k = skip_ws(mb, j + 1);
+        if k >= mb.len() || mb[k] != b'=' {
+            continue;
+        }
+        let line = line_of(&file.masked, at);
+        if file.in_test[line] {
+            continue;
+        }
+        // statement text: to the `;` at nesting level 0
+        let mut depth = 0i64;
+        let mut i2 = k + 1;
+        while i2 < mb.len() {
+            match mb[i2] {
+                b'(' | b'[' | b'{' => depth += 1,
+                b')' | b']' | b'}' => depth -= 1,
+                b';' if depth <= 0 => break,
+                _ => {}
+            }
+            i2 += 1;
+        }
+        let stmt = &file.masked[k + 1..i2.min(mb.len())];
+        if stmt_has_send(stmt) {
+            sink.add(
+                "send-discard",
+                line,
+                "channel send result discarded with `let _ =` (hides an abandoned caller)"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+fn stmt_has_send(stmt: &str) -> bool {
+    let b = stmt.as_bytes();
+    for word in ["send", "try_send"] {
+        for at in word_positions(stmt, word) {
+            if at == 0 || b[at - 1] != b'.' {
+                continue;
+            }
+            let j = skip_ws(b, at + word.len());
+            if j < b.len() && b[j] == b'(' {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+// --------------------------------------------------------- fma reach
+
+/// `(module dir for children, parent module dir)` of a source file.
+fn module_dirs(root: &Path, file: &Path) -> (PathBuf, PathBuf) {
+    let fdir = file.parent().unwrap_or(root).to_path_buf();
+    let name = file
+        .file_name()
+        .and_then(|s| s.to_str())
+        .unwrap_or("")
+        .to_string();
+    if name == "mod.rs" {
+        let parent = fdir.parent().unwrap_or(root).to_path_buf();
+        (fdir, parent)
+    } else if file == root.join("lib.rs") || file == root.join("main.rs") {
+        (fdir.clone(), fdir)
+    } else {
+        let stem = name.strip_suffix(".rs").unwrap_or(&name).to_string();
+        (fdir.join(stem), fdir)
+    }
+}
+
+fn resolve_use(dir: &Path, segs: &[String]) -> Option<PathBuf> {
+    for k in (1..=segs.len()).rev() {
+        let mut base = dir.to_path_buf();
+        for s in &segs[..k] {
+            base.push(s);
+        }
+        let rs = base.with_extension("rs");
+        if rs.is_file() {
+            return Some(rs);
+        }
+        let m = base.join("mod.rs");
+        if m.is_file() {
+            return Some(m);
+        }
+    }
+    None
+}
+
+/// Files this file's `use` statements resolve to, within the tree.
+fn uses_of(root: &Path, file: &Path, masked: &str) -> Vec<PathBuf> {
+    let (mod_dir, parent) = module_dirs(root, file);
+    let mut out = Vec::new();
+    for at in word_positions(masked, "use") {
+        let after = at + 3;
+        let b = masked.as_bytes();
+        if after >= b.len() || !(b[after] as char).is_whitespace() {
+            continue;
+        }
+        let rest = &masked[after..];
+        let stmt = match rest.find(';') {
+            Some(e) => &rest[..e],
+            None => continue,
+        };
+        let path_part = match stmt.find('{') {
+            Some(p) => &stmt[..p],
+            None => stmt,
+        };
+        let segs: Vec<String> = path_part
+            .split("::")
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        if segs.is_empty() {
+            continue;
+        }
+        let resolved = match segs[0].as_str() {
+            "crate" => resolve_use(root, &segs[1..]),
+            "super" => {
+                let mut d = parent.clone();
+                let mut rest_segs = &segs[1..];
+                while !rest_segs.is_empty() && rest_segs[0] == "super" {
+                    d = d.parent().unwrap_or(root).to_path_buf();
+                    rest_segs = &rest_segs[1..];
+                }
+                resolve_use(&d, rest_segs)
+            }
+            "self" => resolve_use(&mod_dir, &segs[1..]),
+            "std" | "core" | "alloc" | "anyhow" | "xla" => None,
+            _ => resolve_use(&mod_dir, &segs)
+                .or_else(|| resolve_use(&parent, &segs))
+                .or_else(|| resolve_use(root, &segs)),
+        };
+        if let Some(f) = resolved {
+            out.push(f);
+        }
+    }
+    out
+}
+
+// -------------------------------------------------------- tree driver
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn rel_label(root: &Path, file: &Path) -> String {
+    file.strip_prefix(root)
+        .unwrap_or(file)
+        .to_string_lossy()
+        .replace('\\', "/")
+}
+
+fn find_wire_version(masked: &str) -> Option<(String, usize)> {
+    let b = masked.as_bytes();
+    for at in word_positions(masked, "WIRE_VERSION") {
+        let mut i = skip_ws(b, at + 12);
+        if i >= b.len() || b[i] != b':' {
+            continue;
+        }
+        i = skip_ws(b, i + 1);
+        if !masked[i..].starts_with("u16") {
+            continue;
+        }
+        i = skip_ws(b, i + 3);
+        if i >= b.len() || b[i] != b'=' {
+            continue;
+        }
+        i = skip_ws(b, i + 1);
+        let start = i;
+        while i < b.len() && b[i].is_ascii_digit() {
+            i += 1;
+        }
+        if i > start {
+            return Some((masked[start..i].to_string(), line_of(masked, at) + 1));
+        }
+    }
+    None
+}
+
+fn find_doc_version(doc: &str) -> Option<String> {
+    let b = doc.as_bytes();
+    let mut from = 0usize;
+    while let Some(p) = doc[from..].find("contract-lint:") {
+        let at = from + p;
+        let mut i = skip_ws(b, at + 14);
+        if doc[i..].starts_with("wire-version") {
+            i = skip_ws(b, i + 12);
+            if i < b.len() && b[i] == b'=' {
+                i = skip_ws(b, i + 1);
+                let start = i;
+                while i < b.len() && b[i].is_ascii_digit() {
+                    i += 1;
+                }
+                if i > start {
+                    return Some(doc[start..i].to_string());
+                }
+            }
+        }
+        from = at + 14;
+    }
+    None
+}
+
+/// Lint one source string under explicit scoping flags (the corpus tests
+/// drive this directly; `lint_tree` derives the flags from the path).
+pub fn lint_source(label: &str, src: &str, serving: bool, fma_scope: bool) -> Report {
+    let file = FileSrc::new(label.to_string(), src);
+    let mut report = Report::default();
+    lint_one(&file, serving, fma_scope, &mut report);
+    report.sort();
+    report
+}
+
+/// Lint a source tree rooted at `root` (normally `rust/src`). `wire_doc`
+/// is the wire-format ADR checked by the `wire-version` rule (skipped
+/// entirely when the root has no `rfc/wire.rs`).
+pub fn lint_tree(root: &Path, wire_doc: &Path) -> Result<Report> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    let mut parsed: BTreeMap<PathBuf, FileSrc> = BTreeMap::new();
+    for f in &files {
+        let src = std::fs::read_to_string(f)
+            .with_context(|| format!("reading {}", f.display()))?;
+        parsed.insert(f.clone(), FileSrc::new(rel_label(root, f), &src));
+    }
+    // fma reach: BFS over `use` edges from rfc/kernel.rs
+    let kernel = root.join("rfc").join("kernel.rs");
+    let mut reach: BTreeSet<PathBuf> = BTreeSet::new();
+    if parsed.contains_key(&kernel) {
+        let mut frontier = vec![kernel.clone()];
+        reach.insert(kernel);
+        while let Some(f) = frontier.pop() {
+            let masked = parsed.get(&f).map(|p| p.masked.clone()).unwrap_or_default();
+            for dep in uses_of(root, &f, &masked) {
+                if parsed.contains_key(&dep) && !reach.contains(&dep) {
+                    reach.insert(dep.clone());
+                    frontier.push(dep);
+                }
+            }
+        }
+    }
+    let mut report = Report::default();
+    for f in &files {
+        let fs = &parsed[f];
+        let serving = fs.rel.starts_with("coordinator/") || fs.rel == "rfc/wire.rs";
+        lint_one(fs, serving, reach.contains(f), &mut report);
+    }
+    // wire-version agreement
+    let wire = root.join("rfc").join("wire.rs");
+    if let Some(wfs) = parsed.get(&wire) {
+        let wv = find_wire_version(&wfs.masked);
+        let sv = parsed
+            .get(&root.join("sim").join("rfc.rs"))
+            .and_then(|p| find_wire_version(&p.masked));
+        let dv = std::fs::read_to_string(wire_doc)
+            .ok()
+            .and_then(|d| find_doc_version(&d));
+        match wv {
+            None => report.findings.push(Finding {
+                file: wfs.rel.clone(),
+                line: 1,
+                rule: "wire-version".to_string(),
+                message: "no `WIRE_VERSION: u16 = N` constant found".to_string(),
+            }),
+            Some((v, line)) => {
+                let sim_ok = matches!(&sv, Some((s, _)) if *s == v);
+                let doc_ok = matches!(&dv, Some(d) if *d == v);
+                if !sim_ok {
+                    let (got, at) = match &sv {
+                        Some((s, sl)) => (format!("v{s}"), *sl),
+                        None => ("no WIRE_VERSION const".to_string(), 1),
+                    };
+                    report.findings.push(Finding {
+                        file: "sim/rfc.rs".to_string(),
+                        line: at,
+                        rule: "wire-version".to_string(),
+                        message: format!(
+                            "sim mirror declares {got}, rfc/wire.rs declares v{v} \
+                             (bump all three together)"
+                        ),
+                    });
+                } else if !doc_ok {
+                    let got = match &dv {
+                        Some(d) => format!("v{d}"),
+                        None => "no `contract-lint: wire-version` marker".to_string(),
+                    };
+                    report.findings.push(Finding {
+                        file: wfs.rel.clone(),
+                        line,
+                        rule: "wire-version".to_string(),
+                        message: format!(
+                            "{} declares {got}, rfc/wire.rs declares v{v} \
+                             (bump all three together)",
+                            wire_doc.display()
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    report.sort();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masking_strings_and_comments() {
+        let (m, c) = mask("let s = \"unsafe { }\"; // SAFETY: nope\nfmadd();\n");
+        assert!(!m.contains("unsafe"));
+        assert!(m.contains("fmadd"));
+        assert!(c.get(&0).map(|t| t.contains("SAFETY:")).unwrap_or(false));
+        // newlines survive masking
+        assert_eq!(m.matches('\n').count(), 2);
+    }
+
+    #[test]
+    fn masking_raw_strings_and_chars() {
+        let (m, _) = mask("let r = r#\"unwrap() \"# ; let c = '\\n'; let lt: &'a u8;");
+        assert!(!m.contains("unwrap"));
+        assert!(m.contains("&'a u8"));
+    }
+
+    #[test]
+    fn nested_block_comments_mask_fully() {
+        let (m, c) = mask("/* outer /* inner */ still comment */ code();");
+        assert!(m.contains("code()"));
+        assert!(!m.contains("inner"));
+        assert!(c.get(&0).map(|t| t.contains("inner")).unwrap_or(false));
+    }
+
+    #[test]
+    fn panic_tokens_found_and_bounded() {
+        let hits = panic_hits("x.unwrap(); y.unwrap_or(0); z.expect(\"m\"); panic!(\"x\")");
+        let names: Vec<&str> = hits.iter().map(|h| h.1).collect();
+        assert_eq!(names, vec!["unwrap()", ".expect(", "panic!"]);
+        assert!(panic_hits("debug_assert_eq!(a, b);")
+            .iter()
+            .any(|h| h.1 == "debug_assert!"));
+        // expect as a free function (not a method) is not the Option API
+        assert!(panic_hits("wire::expect_handshake(&mut r)?").is_empty());
+    }
+
+    #[test]
+    fn fma_tokens() {
+        assert!(!fma_hits("_mm256_fmadd_ps(a, b, c)").is_empty());
+        assert!(!fma_hits("vfmaq_f32(a, b, c)").is_empty());
+        assert!(!fma_hits("x.mul_add(y, z)").is_empty());
+        assert!(fma_hits("let smul_addr = 3;").is_empty());
+        assert!(fma_hits("vaddq_f32(ov, vmulq_f32(xs, wv))").is_empty());
+    }
+
+    #[test]
+    fn test_region_tracking() {
+        let src = "fn a() { x.unwrap(); }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   fn b() { y.unwrap(); }\n\
+                   }\n\
+                   fn c() { z.unwrap(); }\n";
+        let r = lint_source("coordinator/x.rs", src, true, false);
+        let lines: Vec<usize> = r.findings.iter().map(|f| f.line).collect();
+        assert_eq!(lines, vec![1, 6]);
+    }
+
+    #[test]
+    fn cfg_test_attribute_without_braces_cancelled_by_semicolon() {
+        // `#[cfg(test)] mod tests;` (out-of-line) must not start a region
+        let src = "#[cfg(test)]\nmod tests;\nfn a() { x.unwrap(); }\n";
+        let r = lint_source("coordinator/x.rs", src, true, false);
+        assert_eq!(r.findings.len(), 1);
+        assert_eq!(r.findings[0].line, 3);
+    }
+
+    #[test]
+    fn pragma_suppresses_and_is_counted() {
+        let src = "fn a() {\n\
+                   // lint: allow(panic): provably infallible here\n\
+                   x.unwrap();\n\
+                   }\n";
+        let r = lint_source("coordinator/x.rs", src, true, false);
+        assert!(r.findings.is_empty());
+        assert_eq!(r.suppressed.len(), 1);
+        assert_eq!(r.suppressed[0].rule, "panic");
+        assert!(r.suppressed[0].reason.contains("infallible"));
+    }
+
+    #[test]
+    fn pragma_without_reason_is_a_finding_but_still_suppresses() {
+        let src = "fn a() {\n// lint: allow(panic)\nx.unwrap();\n}\n";
+        let r = lint_source("coordinator/x.rs", src, true, false);
+        assert_eq!(r.findings.len(), 1);
+        assert_eq!(r.findings[0].rule, "pragma");
+        assert_eq!(r.suppressed.len(), 1);
+    }
+
+    #[test]
+    fn pragma_with_unknown_rule_is_a_finding() {
+        let src = "// lint: allow(everything): because\nfn a() {}\n";
+        let r = lint_source("coordinator/x.rs", src, true, false);
+        assert_eq!(r.findings.len(), 1);
+        assert_eq!(r.findings[0].rule, "pragma");
+    }
+
+    #[test]
+    fn safety_walk_skips_attributes() {
+        let src = "// SAFETY: bounds proven by the caller\n\
+                   #[inline]\n\
+                   unsafe fn f() {}\n";
+        let r = lint_source("rfc/kernel.rs", src, false, false);
+        assert!(r.findings.is_empty());
+        // a code line between comment and unsafe breaks the adjacency
+        let src2 = "// SAFETY: stale\nfn other() {}\nunsafe fn f() {}\n";
+        let r2 = lint_source("rfc/kernel.rs", src2, false, false);
+        assert_eq!(r2.findings.len(), 1);
+        assert_eq!(r2.findings[0].rule, "safety");
+    }
+
+    #[test]
+    fn doc_safety_section_counts() {
+        let src = "/// Does things.\n///\n/// # Safety\n/// Caller checks AVX2.\n\
+                   #[target_feature(enable = \"avx2\")]\n\
+                   unsafe fn f() {}\n";
+        let r = lint_source("rfc/kernel.rs", src, false, false);
+        assert!(r.findings.is_empty());
+    }
+
+    #[test]
+    fn index_rule_wants_arithmetic() {
+        let src = "fn f(v: &[u8], i: usize, n: usize) -> u8 {\n\
+                   let a = v[i];\n\
+                   let b = v[i * n + 1];\n\
+                   a + b\n}\n";
+        let r = lint_source("coordinator/x.rs", src, true, false);
+        assert_eq!(r.findings.len(), 1);
+        assert_eq!(r.findings[0].rule, "index");
+        assert_eq!(r.findings[0].line, 3);
+    }
+
+    #[test]
+    fn index_rule_ignores_attrs_macros_and_match_arms() {
+        let src = "#[cfg(feature = \"x\")]\n\
+                   fn f(n: usize) -> Vec<u8> {\n\
+                   let v = vec![0u8; n + 1];\n\
+                   match n { _ => v }\n\
+                   }\n";
+        let r = lint_source("coordinator/x.rs", src, true, false);
+        assert!(r.findings.is_empty());
+    }
+
+    #[test]
+    fn send_discard_found_and_scoped() {
+        let src = "fn f(tx: &S) {\n\
+                   let _ = tx.send(1);\n\
+                   let _ = sock.shutdown(Both);\n\
+                   let _x = tx.send(2);\n\
+                   }\n";
+        let r = lint_source("coordinator/x.rs", src, true, false);
+        assert_eq!(r.findings.len(), 1);
+        assert_eq!(r.findings[0].rule, "send-discard");
+        assert_eq!(r.findings[0].line, 2);
+    }
+
+    #[test]
+    fn wire_version_parsers() {
+        let (m, _) = mask("pub const WIRE_VERSION: u16 = 7;\n");
+        assert_eq!(find_wire_version(&m), Some(("7".to_string(), 1)));
+        assert_eq!(
+            find_doc_version("x\n<!-- contract-lint: wire-version = 7 -->\n"),
+            Some("7".to_string())
+        );
+        assert_eq!(find_doc_version("no marker here"), None);
+    }
+
+    #[test]
+    fn non_serving_files_skip_serving_rules() {
+        let src = "fn f() { x.unwrap(); let _ = tx.send(1); }\n";
+        let r = lint_source("rfc/encoder.rs", src, false, false);
+        assert!(r.findings.is_empty());
+    }
+}

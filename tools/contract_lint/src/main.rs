@@ -1,0 +1,134 @@
+//! CLI for the in-tree contract linter (library: [`contract_lint`]).
+//!
+//! ```text
+//! contract_lint [--wire-doc <path>] [ROOT...]
+//! ```
+//!
+//! Lints every `.rs` file under each ROOT (default: `rust/src`) and
+//! cross-checks the wire-format ADR (default: `docs/wire-format.md`).
+//!
+//! Exit codes, in the `bench_ratchet` mold:
+//! * `0` -- clean (suppressions are reported but do not fail the run);
+//! * `1` -- at least one finding;
+//! * `2` -- usage or I/O error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{bail, ensure, Result};
+use contract_lint::lint_tree;
+
+struct Args {
+    roots: Vec<PathBuf>,
+    wire_doc: PathBuf,
+}
+
+fn parse_args(argv: &[String]) -> Result<Args> {
+    let mut roots: Vec<PathBuf> = Vec::new();
+    let mut wire_doc = PathBuf::from("docs/wire-format.md");
+    let mut i = 0usize;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--wire-doc" => {
+                i += 1;
+                ensure!(i < argv.len(), "--wire-doc needs a path");
+                wire_doc = PathBuf::from(&argv[i]);
+            }
+            "--help" | "-h" => {
+                bail!("usage: contract_lint [--wire-doc <path>] [ROOT...]")
+            }
+            flag if flag.starts_with('-') => {
+                bail!("unknown flag {flag}; usage: contract_lint [--wire-doc <path>] [ROOT...]")
+            }
+            root => roots.push(PathBuf::from(root)),
+        }
+        i += 1;
+    }
+    if roots.is_empty() {
+        roots.push(PathBuf::from("rust/src"));
+    }
+    Ok(Args { roots, wire_doc })
+}
+
+fn run(args: &Args) -> Result<bool> {
+    let mut findings = Vec::new();
+    let mut suppressed = Vec::new();
+    for root in &args.roots {
+        ensure!(root.is_dir(), "{}: not a directory", root.display());
+        let report = lint_tree(root, &args.wire_doc)?;
+        findings.extend(report.findings);
+        suppressed.extend(report.suppressed);
+    }
+    for f in &findings {
+        println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message);
+    }
+    if !suppressed.is_empty() {
+        println!("-- {} suppression(s) via `lint: allow` pragmas:", suppressed.len());
+        for s in &suppressed {
+            println!("   {}:{}: [{}] {}", s.file, s.line, s.rule, s.reason);
+        }
+    }
+    println!(
+        "contract_lint: {} finding(s), {} suppression(s)",
+        findings.len(),
+        suppressed.len()
+    );
+    Ok(findings.is_empty())
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match parse_args(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("contract_lint: {e:#}");
+            return ExitCode::from(2);
+        }
+    };
+    match run(&args) {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::from(1),
+        Err(e) => {
+            eprintln!("contract_lint: {e:#}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_args() {
+        let a = parse_args(&[]).unwrap();
+        assert_eq!(a.roots, vec![PathBuf::from("rust/src")]);
+        assert_eq!(a.wire_doc, PathBuf::from("docs/wire-format.md"));
+    }
+
+    #[test]
+    fn explicit_roots_and_doc() {
+        let argv: Vec<String> = ["--wire-doc", "d.md", "a", "b"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = parse_args(&argv).unwrap();
+        assert_eq!(a.roots, vec![PathBuf::from("a"), PathBuf::from("b")]);
+        assert_eq!(a.wire_doc, PathBuf::from("d.md"));
+    }
+
+    #[test]
+    fn unknown_flag_is_an_error() {
+        let argv = vec!["--frobnicate".to_string()];
+        assert!(parse_args(&argv).is_err());
+    }
+
+    #[test]
+    fn missing_root_is_an_error() {
+        let args = Args {
+            roots: vec![PathBuf::from("/nonexistent/lint/root")],
+            wire_doc: PathBuf::from("docs/wire-format.md"),
+        };
+        assert!(run(&args).is_err());
+    }
+}

@@ -1,0 +1,257 @@
+//! Corpus-driven tests for the contract linter.
+//!
+//! Two layers:
+//!
+//! 1. `lint_source` assertions pin the *exact* `(rule, line)` findings and
+//!    suppressions for every fixture in `tests/lint_corpus/` -- the corpus
+//!    is the executable spec for the lexer's tricky cases (`unsafe` in a
+//!    string literal, SAFETY separated by an attribute, `cfg(test)`
+//!    nesting, pragma hygiene).
+//! 2. Binary tests spawn the real `contract_lint` executable against
+//!    throwaway trees assembled from the same fixtures and pin the exit
+//!    codes: 0 on a clean tree, 1 on every bad fixture, 2 on usage errors.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use contract_lint::{lint_source, Report};
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/lint_corpus")
+        .join(name);
+    fs::read_to_string(&p).unwrap_or_else(|e| panic!("reading {}: {e}", p.display()))
+}
+
+fn hits(r: &Report) -> Vec<(String, usize)> {
+    r.findings.iter().map(|f| (f.rule.clone(), f.line)).collect()
+}
+
+fn quiet(r: &Report) -> Vec<(String, usize)> {
+    r.suppressed.iter().map(|s| (s.rule.clone(), s.line)).collect()
+}
+
+fn pairs(v: &[(&str, usize)]) -> Vec<(String, usize)> {
+    v.iter().map(|(r, l)| (r.to_string(), *l)).collect()
+}
+
+// ------------------------------------------------- exact-finding layer
+
+#[test]
+fn bad_unsafe_no_safety_flags_both_sites() {
+    let r = lint_source("x.rs", &fixture("bad_unsafe_no_safety.rs"), false, false);
+    assert_eq!(hits(&r), pairs(&[("safety", 3), ("safety", 9)]));
+    assert!(quiet(&r).is_empty());
+}
+
+#[test]
+fn good_unsafe_safety_is_clean_under_all_rules() {
+    // Attribute between SAFETY comment and item, `# Safety` doc section,
+    // and `unsafe` inside a string literal: none may fire, even with the
+    // serving and fma scopes both on.
+    let r = lint_source("x.rs", &fixture("good_unsafe_safety.rs"), true, true);
+    assert!(hits(&r).is_empty(), "unexpected findings: {:?}", hits(&r));
+    assert!(quiet(&r).is_empty());
+}
+
+#[test]
+fn bad_fma_flags_intrinsics_and_mul_add() {
+    let r = lint_source("x.rs", &fixture("bad_fma.rs"), false, true);
+    assert_eq!(hits(&r), pairs(&[("fma", 4), ("fma", 8), ("fma", 12)]));
+}
+
+#[test]
+fn fma_outside_the_reach_scope_is_ignored() {
+    let r = lint_source("x.rs", &fixture("bad_fma.rs"), false, false);
+    assert!(hits(&r).is_empty());
+}
+
+#[test]
+fn good_fma_strings_masked_tokens_do_not_count() {
+    let r = lint_source("x.rs", &fixture("good_fma_strings.rs"), true, true);
+    assert!(hits(&r).is_empty(), "unexpected findings: {:?}", hits(&r));
+}
+
+#[test]
+fn bad_panic_serving_flags_every_token_outside_tests() {
+    let r = lint_source("x.rs", &fixture("bad_panic_serving.rs"), true, false);
+    assert_eq!(
+        hits(&r),
+        pairs(&[("panic", 4), ("panic", 5), ("panic", 6), ("panic", 8)])
+    );
+}
+
+#[test]
+fn panic_rule_only_applies_to_serving_files() {
+    let r = lint_source("x.rs", &fixture("bad_panic_serving.rs"), false, false);
+    assert!(hits(&r).is_empty());
+}
+
+#[test]
+fn good_panic_tests_nested_test_modules_are_exempt() {
+    let r = lint_source("x.rs", &fixture("good_panic_tests.rs"), true, false);
+    assert!(hits(&r).is_empty(), "unexpected findings: {:?}", hits(&r));
+}
+
+#[test]
+fn bad_index_arith_flags_computed_offsets() {
+    let r = lint_source("x.rs", &fixture("bad_index_arith.rs"), true, false);
+    assert_eq!(hits(&r), pairs(&[("index", 4)]));
+}
+
+#[test]
+fn good_index_plain_macros_attrs_are_clean() {
+    let r = lint_source("x.rs", &fixture("good_index.rs"), true, false);
+    assert!(hits(&r).is_empty(), "unexpected findings: {:?}", hits(&r));
+}
+
+#[test]
+fn bad_send_discard_flags_the_let_underscore() {
+    let r = lint_source("x.rs", &fixture("bad_send_discard.rs"), true, false);
+    assert_eq!(hits(&r), pairs(&[("send-discard", 6)]));
+}
+
+#[test]
+fn good_send_pragma_suppresses_and_audits() {
+    let r = lint_source("x.rs", &fixture("good_send_pragma.rs"), true, false);
+    assert!(hits(&r).is_empty(), "unexpected findings: {:?}", hits(&r));
+    assert_eq!(quiet(&r), pairs(&[("send-discard", 8)]));
+    assert_eq!(r.suppressed[0].reason, "best-effort shutdown notification");
+}
+
+#[test]
+fn bad_pragma_hygiene_findings_cannot_be_suppressed() {
+    let r = lint_source("x.rs", &fixture("bad_pragma.rs"), true, false);
+    // A reason-less pragma still suppresses (one finding, not two); an
+    // unknown rule name suppresses nothing, so the index below it fires.
+    assert_eq!(
+        hits(&r),
+        pairs(&[("pragma", 4), ("pragma", 9), ("index", 10)])
+    );
+    assert_eq!(quiet(&r), pairs(&[("panic", 5)]));
+}
+
+// --------------------------------------------------- binary exit codes
+
+struct TempTree {
+    root: PathBuf,
+}
+
+impl TempTree {
+    fn new(tag: &str) -> Self {
+        let root = std::env::temp_dir().join(format!(
+            "contract_lint_corpus_{}_{tag}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&root);
+        fs::create_dir_all(&root).unwrap();
+        TempTree { root }
+    }
+
+    fn put(&self, rel: &str, contents: &str) -> &Self {
+        let p = self.root.join(rel);
+        fs::create_dir_all(p.parent().unwrap()).unwrap();
+        fs::write(&p, contents).unwrap();
+        self
+    }
+}
+
+impl Drop for TempTree {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.root);
+    }
+}
+
+fn run_lint(args: &[&std::ffi::OsStr]) -> (i32, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_contract_lint"))
+        .args(args)
+        .output()
+        .expect("spawning contract_lint");
+    let code = out.status.code().unwrap_or(-1);
+    (code, String::from_utf8_lossy(&out.stdout).into_owned())
+}
+
+const WIRE_V1: &str = "pub const WIRE_VERSION: u16 = 1;\n";
+const DOC_V1: &str = "# wire\n\ncontract-lint: wire-version = 1\n";
+
+#[test]
+fn clean_tree_exits_zero_and_reports_suppressions() {
+    let t = TempTree::new("clean");
+    t.put("util.rs", &fixture("good_unsafe_safety.rs"))
+        .put("rfc/kernel.rs", &fixture("good_fma_strings.rs"))
+        .put("rfc/wire.rs", WIRE_V1)
+        .put("sim/rfc.rs", WIRE_V1)
+        .put("coordinator/a.rs", &fixture("good_panic_tests.rs"))
+        .put("coordinator/b.rs", &fixture("good_index.rs"))
+        .put("coordinator/c.rs", &fixture("good_send_pragma.rs"))
+        .put("wire-format.md", DOC_V1);
+    let doc = t.root.join("wire-format.md");
+    let (code, out) = run_lint(&[
+        "--wire-doc".as_ref(),
+        doc.as_os_str(),
+        t.root.as_os_str(),
+    ]);
+    assert_eq!(code, 0, "expected exit 0, output:\n{out}");
+    assert!(out.contains("1 suppression(s)"), "audit missing:\n{out}");
+}
+
+#[test]
+fn every_bad_fixture_exits_one() {
+    // Each bad fixture is planted where its rule applies: fma findings
+    // need the kernel reach set, serving rules need coordinator/*.
+    let cases = [
+        ("bad_unsafe_no_safety.rs", "util.rs"),
+        ("bad_fma.rs", "rfc/kernel.rs"),
+        ("bad_panic_serving.rs", "coordinator/x.rs"),
+        ("bad_index_arith.rs", "coordinator/x.rs"),
+        ("bad_send_discard.rs", "coordinator/x.rs"),
+        ("bad_pragma.rs", "coordinator/x.rs"),
+    ];
+    for (name, dest) in cases {
+        let tag = name.trim_end_matches(".rs");
+        let t = TempTree::new(tag);
+        t.put(dest, &fixture(name));
+        let (code, out) = run_lint(&[t.root.as_os_str()]);
+        assert_eq!(code, 1, "{name} at {dest}: expected exit 1, output:\n{out}");
+    }
+}
+
+#[test]
+fn wire_version_skew_exits_one() {
+    // sim mirror lags the wire implementation
+    let t = TempTree::new("wire_skew");
+    t.put("rfc/wire.rs", "pub const WIRE_VERSION: u16 = 2;\n")
+        .put("sim/rfc.rs", WIRE_V1)
+        .put("wire-format.md", "# wire\n\ncontract-lint: wire-version = 2\n");
+    let doc = t.root.join("wire-format.md");
+    let (code, out) = run_lint(&[
+        "--wire-doc".as_ref(),
+        doc.as_os_str(),
+        t.root.as_os_str(),
+    ]);
+    assert_eq!(code, 1, "expected exit 1, output:\n{out}");
+    assert!(out.contains("[wire-version]"), "wrong rule fired:\n{out}");
+
+    // ADR carries no machine-readable marker at all
+    let t2 = TempTree::new("wire_nodoc");
+    t2.put("rfc/wire.rs", WIRE_V1)
+        .put("sim/rfc.rs", WIRE_V1)
+        .put("wire-format.md", "# wire, no marker\n");
+    let doc2 = t2.root.join("wire-format.md");
+    let (code2, out2) = run_lint(&[
+        "--wire-doc".as_ref(),
+        doc2.as_os_str(),
+        t2.root.as_os_str(),
+    ]);
+    assert_eq!(code2, 1, "expected exit 1, output:\n{out2}");
+    assert!(out2.contains("[wire-version]"), "wrong rule fired:\n{out2}");
+}
+
+#[test]
+fn usage_errors_exit_two() {
+    let (code, _) = run_lint(&["--frobnicate".as_ref()]);
+    assert_eq!(code, 2);
+    let (code, _) = run_lint(&["/nonexistent/contract_lint/root".as_ref()]);
+    assert_eq!(code, 2);
+}

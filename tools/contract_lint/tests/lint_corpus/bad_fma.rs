@@ -1,0 +1,13 @@
+//! Bad corpus: FMA contractions inside the kernel reach set.
+
+pub fn scalar(a: f32, b: f32, c: f32) -> f32 {
+    a.mul_add(b, c)
+}
+
+pub fn avx(x: __m256, y: __m256, z: __m256) -> __m256 {
+    _mm256_fmadd_ps(x, y, z)
+}
+
+pub fn neon(a: float32x4_t, b: float32x4_t, c: float32x4_t) -> float32x4_t {
+    vfmaq_f32(a, b, c)
+}

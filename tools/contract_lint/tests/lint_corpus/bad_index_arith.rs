@@ -1,0 +1,5 @@
+//! Bad corpus: computed-offset indexing on the serving path.
+
+pub fn row(v: &[f32], i: usize, width: usize) -> &[f32] {
+    &v[i * width..(i + 1) * width]
+}

@@ -1,0 +1,19 @@
+//! Bad corpus: panic-family tokens on the serving path.
+
+pub fn handle(v: Option<u32>, n: u64) -> u32 {
+    let x = v.unwrap();
+    let y = v.expect("present");
+    debug_assert!(n > 0);
+    if n == 0 {
+        panic!("zero");
+    }
+    x + y
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn inside_tests_unwrap_is_fine() {
+        super::handle(Some(1), 1).checked_add(1).unwrap();
+    }
+}

@@ -1,0 +1,11 @@
+//! Bad corpus: malformed pragmas are findings themselves.
+
+pub fn a(v: Option<u32>) -> u32 {
+    // lint: allow(panic)
+    v.unwrap()
+}
+
+pub fn b(v: &[u8], i: usize) -> u8 {
+    // lint: allow(bounds-are-fine): trust me
+    v[i + 1]
+}

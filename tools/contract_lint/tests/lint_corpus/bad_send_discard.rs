@@ -1,0 +1,7 @@
+//! Bad corpus: discarded send result on the serving path.
+
+use std::sync::mpsc::Sender;
+
+pub fn reply(tx: &Sender<u32>, v: u32) {
+    let _ = tx.send(v);
+}

@@ -1,0 +1,10 @@
+//! Bad corpus: `unsafe` without a `// SAFETY:` justification.
+
+pub unsafe fn raw_read(p: *const u8) -> u8 {
+    *p
+}
+
+pub fn call(p: *const u8) -> u8 {
+    // not a safety comment, just a comment
+    unsafe { raw_read(p) }
+}

@@ -1,0 +1,12 @@
+//! Good corpus: FMA tokens appear only in comments and strings.
+
+// vfmaq_f32 would contract the rounding step; we deliberately keep
+// separate mul and add so runtime == sim bit-for-bit.
+pub fn label() -> &'static str {
+    "uses _mm256_fmadd_ps? no: separate mul and add, see mul_add ban"
+}
+
+pub fn formula(a: f32, b: f32, c: f32) -> f32 {
+    let simulated = a * b + c;
+    simulated
+}

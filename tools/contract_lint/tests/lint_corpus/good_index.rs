@@ -1,0 +1,17 @@
+//! Good corpus: plain indexing, macros and attributes are not flagged.
+
+#[derive(Clone)]
+pub struct Buf(pub Vec<u8>);
+
+pub fn first(v: &[u8], i: usize) -> u8 {
+    v[i]
+}
+
+pub fn build(n: usize) -> Vec<u8> {
+    vec![0u8; n + 1]
+}
+
+pub fn shifted(v: &[u8], j: usize) -> u8 {
+    let k = j + 1;
+    v[k]
+}

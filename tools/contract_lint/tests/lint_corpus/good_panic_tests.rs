@@ -1,0 +1,22 @@
+//! Good corpus: unwraps only inside (nested) test regions.
+
+pub fn double(n: u32) -> u32 {
+    n.wrapping_mul(2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::double;
+
+    mod nested {
+        #[test]
+        fn inner() {
+            Some(super::super::double(2)).unwrap();
+        }
+    }
+
+    #[test]
+    fn outer() {
+        Some(double(1)).unwrap();
+    }
+}

@@ -1,0 +1,13 @@
+//! Good corpus: an audited send-discard exception, plus a non-send discard.
+
+use std::sync::mpsc::Sender;
+
+pub fn best_effort(tx: &Sender<u32>, v: u32) {
+    // receiver death during shutdown is an acceptable outcome here
+    // lint: allow(send-discard): best-effort shutdown notification
+    let _ = tx.send(v);
+}
+
+pub fn not_a_send(f: std::fs::File) {
+    let _ = f.sync_all();
+}

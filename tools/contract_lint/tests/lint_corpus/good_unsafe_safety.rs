@@ -1,0 +1,26 @@
+//! Good corpus: every `unsafe` is justified; decoys must not count.
+
+// SAFETY: the caller upholds p's validity; attribute lines between
+// the comment and the item are allowed by the walk.
+#[inline]
+pub unsafe fn raw_read(p: *const u8) -> u8 {
+    *p
+}
+
+/// Reads a byte.
+///
+/// # Safety
+/// `p` must be valid for reads.
+#[inline]
+pub unsafe fn doc_read(p: *const u8) -> u8 {
+    *p
+}
+
+pub fn decoy() -> &'static str {
+    "unsafe { inside a string literal does not count }"
+}
+
+pub fn call(p: *const u8) -> u8 {
+    // SAFETY: p comes from a live &u8 in the caller.
+    unsafe { raw_read(p) }
+}
